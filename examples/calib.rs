@@ -1,0 +1,35 @@
+//! Cost-model calibration probe: prints the per-strategy iteration
+//! breakdown (aggregate / update / overhead / launches) on representative
+//! datasets — the tool used to calibrate gpusim against the paper's
+//! reported ratios (EXPERIMENTS.md per-figure deltas).
+use adaptgear::coordinator::*;
+use adaptgear::graph::datasets::DATASETS;
+use adaptgear::gpusim::A100;
+use adaptgear::partition::{Propagation, Reorder};
+fn main() {
+    for name in ["pubmed", "artist", "Yeast"] {
+        let spec = DATASETS.iter().find(|d| d.name == name).unwrap();
+        let scale = (60_000.0 / spec.vertices as f64).min(1.0);
+        let g = spec.build_scaled(scale, 42).graph;
+        for model in [ModelKind::Gcn, ModelKind::Gin] {
+            let prop = match model { ModelKind::Gcn => Propagation::GcnNormalized, _ => Propagation::PlainAdjacency };
+            let dims = ModelDims::new(model, spec.features.min(512), 32, spec.classes.min(64));
+            println!("\n== {name} {} n={} e={} ==", model.as_str(), g.n, g.directed_edge_count());
+            for (label, strat, tile) in [
+                ("DGL", Strategy::Dgl, 0usize), ("PyG", Strategy::Pyg, 0),
+                ("GNNA", Strategy::GnnAdvisorMetis, 0), ("PCGCN", Strategy::Pcgcn, 16),
+                ("O1", Strategy::AdaptGearO1, 0), ("O2", Strategy::AdaptGearO2, 0),
+                ("OURS", Strategy::AdaptGear, 0),
+            ] {
+                let perm = strat.reorder().order(&g, 16, 42);
+                let rg = g.relabel(&perm);
+                let matrix = match prop { Propagation::GcnNormalized => adaptgear::graph::Csr::gcn_normalized(&rg), _ => adaptgear::graph::Csr::adjacency(&rg) };
+                let (intra, inter) = matrix.split_block_diagonal(16);
+                let d = adaptgear::partition::Decomposition { graph: rg, perm, intra, inter, community: 16 };
+                let it = forward_cost(strat, &d, &dims, &A100, tile);
+                println!("{label:<6} total {:>10.1}us  agg {:>10.1} upd {:>8.1} ovh {:>8.1} launches {:>5} (intra nnz {} inter {})",
+                    it.total_us(), it.aggregate_us, it.update_us, it.overhead_us, it.kernel_launches, d.intra.nnz(), d.inter.nnz());
+            }
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Format explorer — the Sec. 2 motivation study as an interactive tool.
+//!
+//! Generates an RMAT graph at a chosen density, decomposes it, and prints
+//! (a) simulated V100/A100 costs for every kernel candidate on each
+//! subgraph and (b) REAL PJRT wall times of the Pallas kernel artifacts,
+//! so you can watch the adaptive choice flip as density moves.
+//!
+//! ```text
+//! cargo run --release --example format_explorer -- --vertices 512 --avg-degree 8
+//! ```
+
+use adaptgear::graph::generate::rmat;
+use adaptgear::gpusim::{kernel_cost, A100, V100};
+use adaptgear::kernels::pack;
+use adaptgear::kernels::{KernelKind, INTER_CANDIDATES, INTRA_CANDIDATES};
+use adaptgear::partition::{Decomposition, Propagation, Reorder};
+use adaptgear::runtime::{Engine, Manifest};
+use adaptgear::util::cli::Args;
+use adaptgear::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("vertices", 512);
+    let avg_degree = args.get_f64("avg-degree", 8.0);
+    let seed = args.get_u64("seed", 1);
+
+    let mut rng = Rng::new(seed);
+    let g = rmat(n, (n as f64 * avg_degree / 2.0) as usize, &mut rng);
+    println!(
+        "RMAT: {} vertices, {} directed edges, density {:.2e}",
+        g.n,
+        g.directed_edge_count(),
+        g.density()
+    );
+
+    let d = Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, seed);
+    println!(
+        "decomposed: intra nnz {} / inter nnz {}",
+        d.intra.nnz(),
+        d.inter.nnz()
+    );
+
+    // -- simulated costs on both GPUs
+    let f = 32;
+    println!("\nsimulated aggregate cost (f={f}):");
+    println!("{:<10} {:<14} {:>12} {:>12}", "subgraph", "kernel", "V100 (us)", "A100 (us)");
+    for kind in INTRA_CANDIDATES {
+        let v = kernel_cost(kind, &d.intra, f, 16, &V100).time_us;
+        let a = kernel_cost(kind, &d.intra, f, 16, &A100).time_us;
+        println!("{:<10} {:<14} {v:>12.2} {a:>12.2}", "intra", kind.as_str());
+    }
+    for kind in INTER_CANDIDATES {
+        let v = kernel_cost(kind, &d.inter, f, 16, &V100).time_us;
+        let a = kernel_cost(kind, &d.inter, f, 16, &A100).time_us;
+        println!("{:<10} {:<14} {v:>12.2} {a:>12.2}", "inter", kind.as_str());
+    }
+    let whole = d.whole();
+    for kind in [KernelKind::CsrInter, KernelKind::Coo, KernelKind::DenseFull] {
+        let v = kernel_cost(kind, &whole, f, 16, &V100).time_us;
+        let a = kernel_cost(kind, &whole, f, 16, &A100).time_us;
+        println!("{:<10} {:<14} {v:>12.2} {a:>12.2}", "full", kind.as_str());
+    }
+
+    // -- real PJRT wall times of the Pallas artifacts
+    let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
+    let Some(bucket) = engine.manifest.fit_bucket(n, d.intra.nnz().max(d.inter.nnz())) else {
+        println!("\n(no AOT bucket fits this size; shrink --vertices for the PJRT half)");
+        return Ok(());
+    };
+    let bucket = bucket.clone();
+    let x: Vec<f32> = (0..n * bucket.features).map(|_| rng.normal_f32()).collect();
+    let xp = pack::pack_features(&x, n, bucket.features, &bucket)?;
+
+    println!("\nreal PJRT (CPU) wall time per launch, bucket {}:", bucket.name);
+    for (role, kinds, matrix) in [
+        ("intra", &INTRA_CANDIDATES[..], &d.intra),
+        ("inter", &INTER_CANDIDATES[..], &d.inter),
+    ] {
+        for &kind in kinds {
+            let name = Manifest::kernel_name(kind.as_str(), &bucket.name);
+            let mut ops = pack::pack_kernel_operands(kind, matrix, 16, &bucket)?;
+            ops.push(xp.clone());
+            engine.run(&name, &ops)?; // warm (compile)
+            let t0 = std::time::Instant::now();
+            let reps = 10;
+            for _ in 0..reps {
+                engine.run(&name, &ops)?;
+            }
+            println!(
+                "{role:<10} {:<14} {:>12.1} us",
+                kind.as_str(),
+                t0.elapsed().as_secs_f64() * 1e6 / reps as f64
+            );
+        }
+    }
+    println!("\n(PJRT CPU wall time validates numerics + relative kernel structure;\n GPU time comes from the gpusim columns above — see DESIGN.md Sec. 2)");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""Differentiable subgraph aggregation: custom VJPs over the Pallas kernels.
+
+``pallas_call`` has no automatic transpose rule, so each kernel is wrapped
+in a ``jax.custom_vjp`` whose backward pass is *another aggregation*:
+
+    y = A @ x        =>       dL/dx = A.T @ dL/dy
+
+For the CSR kernels the propagation matrices AdaptGear trains with (GCN's
+D^-1/2 (A+I) D^-1/2, GIN's A for an undirected graph) are symmetric, and
+the intra (block-diagonal) / inter (off-diagonal) splits of a symmetric
+matrix are themselves symmetric, so backward reuses the forward kernel
+unchanged.  COO and dense-block have exact cheap transposes (swap src/dst;
+transpose each block) and use them, so those two kernels are correct for
+asymmetric adjacencies too.
+
+Graph-topology operands receive symbolic-zero cotangents (``float0`` for
+integer arrays) — gradients flow only through the feature path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.coo_scatter import coo_aggregate
+from .kernels.csr_inter import csr_inter_aggregate
+from .kernels.csr_intra import csr_intra_aggregate
+from .kernels.dense_block import dense_block_aggregate
+
+INTRA_NONE = "none"
+
+
+def _int_zero(a):
+    return np.zeros(np.shape(a), dtype=jax.dtypes.float0)
+
+
+# -- CSR inter ---------------------------------------------------------------
+
+@jax.custom_vjp
+def csr_inter(row_ptr, col_idx, val, x):
+    return csr_inter_aggregate(row_ptr, col_idx, val, x)
+
+
+def _csr_inter_fwd(row_ptr, col_idx, val, x):
+    return csr_inter_aggregate(row_ptr, col_idx, val, x), (row_ptr, col_idx, val)
+
+
+def _csr_inter_bwd(res, dy):
+    row_ptr, col_idx, val = res
+    # symmetric adjacency: A.T @ dy == A @ dy
+    return (_int_zero(row_ptr), _int_zero(col_idx), jnp.zeros_like(val),
+            csr_inter_aggregate(row_ptr, col_idx, val, dy))
+
+
+csr_inter.defvjp(_csr_inter_fwd, _csr_inter_bwd)
+
+
+# -- CSR intra ---------------------------------------------------------------
+
+@jax.custom_vjp
+def csr_intra(row_ptr, col_local, val, x):
+    return csr_intra_aggregate(row_ptr, col_local, val, x)
+
+
+def _csr_intra_fwd(row_ptr, col_local, val, x):
+    return csr_intra_aggregate(row_ptr, col_local, val, x), (row_ptr, col_local, val)
+
+
+def _csr_intra_bwd(res, dy):
+    row_ptr, col_local, val = res
+    return (_int_zero(row_ptr), _int_zero(col_local), jnp.zeros_like(val),
+            csr_intra_aggregate(row_ptr, col_local, val, dy))
+
+
+csr_intra.defvjp(_csr_intra_fwd, _csr_intra_bwd)
+
+
+# -- COO ---------------------------------------------------------------------
+
+@jax.custom_vjp
+def coo(src, dst, val, x):
+    return coo_aggregate(src, dst, val, x)
+
+
+def _coo_fwd(src, dst, val, x):
+    return coo_aggregate(src, dst, val, x), (src, dst, val)
+
+
+def _coo_bwd(res, dy):
+    src, dst, val = res
+    # exact transpose: swap src/dst
+    return (_int_zero(src), _int_zero(dst), jnp.zeros_like(val),
+            coo_aggregate(dst, src, val, dy))
+
+
+coo.defvjp(_coo_fwd, _coo_bwd)
+
+
+# -- dense block -------------------------------------------------------------
+
+@jax.custom_vjp
+def dense_block(blocks, x):
+    return dense_block_aggregate(blocks, x)
+
+
+def _dense_fwd(blocks, x):
+    return dense_block_aggregate(blocks, x), blocks
+
+
+def _dense_bwd(blocks, dy):
+    # exact transpose: per-block transposition
+    return (jnp.zeros_like(blocks),
+            dense_block_aggregate(jnp.swapaxes(blocks, 1, 2), dy))
+
+
+dense_block.defvjp(_dense_fwd, _dense_bwd)
+
+
+# -- dispatcher ----------------------------------------------------------------
+
+#: operand arity per kernel kind (excluding the feature operand).
+KERNEL_ARITY = {"csr_inter": 3, "csr_intra": 3, "coo": 3, "dense_block": 1, INTRA_NONE: 0}
+
+_DISPATCH = {
+    "csr_inter": csr_inter,
+    "csr_intra": csr_intra,
+    "coo": coo,
+    "dense_block": dense_block,
+}
+
+
+def aggregate(kind, ops, x):
+    """Run one subgraph aggregation: ``kind`` over operand tuple ``ops``."""
+    if kind == INTRA_NONE:
+        raise ValueError("aggregate() called with kind='none'")
+    return _DISPATCH[kind](*ops, x)
+
+
+def aggregate_combined(intra_kind, inter_kind, intra_ops, inter_ops, x):
+    """Full-graph propagation: intra-subgraph + inter-subgraph partials.
+
+    With ``intra_kind == 'none'`` the whole graph is expected in the inter
+    operands (full-graph-level baselines, AdaptGear O1).
+    """
+    y = aggregate(inter_kind, inter_ops, x)
+    if intra_kind != INTRA_NONE:
+        y = y + aggregate(intra_kind, intra_ops, x)
+    return y

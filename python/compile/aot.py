@@ -1,0 +1,219 @@
+"""AOT driver: lower every kernel/model variant to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` through PJRT and Python never appears on the
+request path again.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts emitted per shape bucket:
+  kernel_{kind}_{bucket}           one aggregation kernel in isolation
+                                   (selector timing + kernel parity tests)
+  fwd_{model}_{intra}_{inter}_{b}  forward pass -> logits (serving)
+  train_{model}_{intra}_{inter}_{b} fused fwd+bwd+SGD step (training)
+
+plus ``manifest.json`` describing every artifact's operand layout.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .aggregate import INTRA_NONE
+from .buckets import BUCKETS, COMMUNITY, INTER_KERNELS, INTRA_KERNELS, MODELS
+from .model import build_forward, build_kernel_only, build_train_step, param_shapes
+
+F32, I32 = "f32", "i32"
+
+
+def intra_operands(kind, bucket):
+    """(name, shape, dtype) triples for an intra-subgraph operand set."""
+    v, e, nb = bucket.vertices, bucket.edges, bucket.blocks
+    if kind == "csr_intra":
+        return [("intra_row_ptr", (v + 1,), I32),
+                ("intra_col", (e,), I32),
+                ("intra_val", (e,), F32)]
+    if kind == "dense_block":
+        return [("intra_blocks", (nb, COMMUNITY, COMMUNITY), F32)]
+    if kind == INTRA_NONE:
+        return []
+    raise ValueError(kind)
+
+
+def inter_operands(kind, bucket):
+    """(name, shape, dtype) triples for an inter-subgraph operand set."""
+    v, e = bucket.vertices, bucket.edges
+    if kind == "csr_inter":
+        return [("inter_row_ptr", (v + 1,), I32),
+                ("inter_col", (e,), I32),
+                ("inter_val", (e,), F32)]
+    if kind == "coo":
+        return [("inter_src", (e,), I32),
+                ("inter_dst", (e,), I32),
+                ("inter_val", (e,), F32)]
+    raise ValueError(kind)
+
+
+def kernel_operands(kind, bucket):
+    """Operands for a kernel-only artifact (kind may be intra or inter)."""
+    if kind in ("csr_intra", "dense_block"):
+        return intra_operands(kind, bucket)
+    return inter_operands(kind, bucket)
+
+
+def param_operands(model, bucket):
+    return [(n, s, F32) for n, s in param_shapes(model, bucket).items()]
+
+
+def _avals(operands):
+    dt = {F32: jax.numpy.float32, I32: jax.numpy.int32}
+    return [jax.ShapeDtypeStruct(shape, dt[d]) for _, shape, d in operands]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, operands):
+    return to_hlo_text(jax.jit(fn).lower(*_avals(operands)))
+
+
+def _entry(name, kind, bucket, inputs, outputs, **extra):
+    e = {
+        "name": name,
+        "path": f"{name}.hlo.txt",
+        "kind": kind,
+        "bucket": bucket.name,
+        "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs],
+        "outputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in outputs],
+    }
+    e.update(extra)
+    return e
+
+
+def build_all(out_dir, quick=False, verbose=True):
+    """Lower every variant into ``out_dir``; returns the manifest dict."""
+    buckets = BUCKETS[:1] if quick else BUCKETS
+    entries = []
+    t_start = time.time()
+
+    def emit(name, fn, inputs, kind, bucket, outputs, **extra):
+        t0 = time.time()
+        text = lower_variant(fn, inputs)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        entries.append(_entry(name, kind, bucket, inputs, outputs, **extra))
+        if verbose:
+            print(f"  [{time.time()-t0:5.1f}s] {name} ({len(text)} chars)", flush=True)
+
+    for bucket in buckets:
+        v, f = bucket.vertices, bucket.features
+
+        # --- kernel-only artifacts (selector timing + parity tests)
+        for kind in INTRA_KERNELS + INTER_KERNELS:
+            ops = kernel_operands(kind, bucket)
+            fn = build_kernel_only(kind, len(ops))
+            inputs = ops + [("x", (v, f), F32)]
+            emit(f"kernel_{kind}_{bucket.name}", fn, inputs,
+                 "kernel", bucket, [("y", (v, f), F32)], kernel=kind)
+
+        # --- model variants
+        for model in MODELS:
+            params = param_operands(model, bucket)
+            for intra in INTRA_KERNELS + (INTRA_NONE,):
+                for inter in INTER_KERNELS:
+                    iops = intra_operands(intra, bucket)
+                    jops = inter_operands(inter, bucket)
+                    common = params + iops + jops
+                    tag = f"{model}_{intra}_{inter}_{bucket.name}"
+
+                    fwd = build_forward(model, intra, inter,
+                                        len(params), len(iops), len(jops))
+                    emit(f"fwd_{tag}", fwd, common + [("x", (v, f), F32)],
+                         "forward", bucket,
+                         [("logits", (v, bucket.classes), F32)],
+                         model=model, intra=intra, inter=inter)
+
+                    step = build_train_step(model, intra, inter,
+                                            len(params), len(iops), len(jops))
+                    emit(f"train_{tag}", step,
+                         common + [("x", (v, f), F32),
+                                   ("labels", (v,), I32),
+                                   ("mask", (v,), F32),
+                                   ("lr", (), F32)],
+                         "train_step", bucket,
+                         [p for p in params] + [("loss", (), F32)],
+                         model=model, intra=intra, inter=inter)
+
+    manifest = {
+        "version": 1,
+        "community": COMMUNITY,
+        "generated_by": "python/compile/aot.py",
+        "buckets": {
+            b.name: {
+                "vertices": b.vertices, "edges": b.edges, "features": b.features,
+                "hidden": b.hidden, "classes": b.classes, "blocks": b.blocks,
+            }
+            for b in buckets
+        },
+        "artifacts": entries,
+    }
+    if verbose:
+        print(f"lowered {len(entries)} artifacts in {time.time()-t_start:.1f}s")
+    return manifest
+
+
+def source_digest():
+    """Digest of the compile package — embedded in the manifest so `make`
+    can skip rebuilds when nothing changed."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    for root, _dirs, files in os.walk(pkg):
+        for name in sorted(files):
+            if name.endswith(".py"):
+                with open(os.path.join(root, name), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest bucket only (CI smoke)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    digest = source_digest()
+    stamp = os.path.join(args.out, "manifest.json")
+    if os.path.exists(stamp):
+        try:
+            with open(stamp) as fh:
+                if json.load(fh).get("source_digest") == digest:
+                    print(f"artifacts up to date (digest {digest}); skipping")
+                    return
+        except (ValueError, OSError):
+            pass
+
+    manifest = build_all(args.out, quick=args.quick)
+    manifest["source_digest"] = digest
+    with open(stamp, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote {stamp}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

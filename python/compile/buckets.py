@@ -1,0 +1,62 @@
+"""Static shape buckets for AOT compilation.
+
+HLO artifacts have static shapes, but graphs do not.  AdaptGear's Rust
+coordinator pads every (sub)graph into the smallest fitting bucket; zero
+padding is exact for aggregate-sum (padding edges carry weight 0, padding
+rows are masked out of the loss).
+
+Bucket geometry mirrors the paper's setup: community size 16 (METIS
+community size used throughout the evaluation, Sec. 5), hidden dim per the
+GCN/GIN defaults.
+"""
+
+from dataclasses import dataclass
+
+
+COMMUNITY = 16  # paper's METIS community size (Sec. 5 / Fig. 4)
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One static-shape compilation bucket.
+
+    Attributes:
+      name:      manifest key (appears in artifact filenames).
+      vertices:  padded vertex count (multiple of COMMUNITY).
+      edges:     padded edge capacity for EACH of the intra / inter
+                 subgraph operand sets.
+      features:  padded input feature width.
+      hidden:    hidden width of both GNN models.
+      classes:   padded class count.
+    """
+
+    name: str
+    vertices: int
+    edges: int
+    features: int
+    hidden: int
+    classes: int
+
+    @property
+    def blocks(self) -> int:
+        """Number of diagonal community blocks."""
+        return self.vertices // COMMUNITY
+
+
+# Kept deliberately small: this session runs Pallas in interpret mode on a
+# single-core CPU PJRT client, so these buckets bound the *numerics* path.
+# Full-scale datasets run through the native Rust kernels + gpusim for the
+# performance figures (see DESIGN.md Sec. 6).
+BUCKETS = [
+    Bucket(name="b256", vertices=256, edges=1024, features=32, hidden=32, classes=8),
+    Bucket(name="b1024", vertices=1024, edges=4096, features=32, hidden=32, classes=8),
+]
+
+BUCKETS_BY_NAME = {b.name: b for b in BUCKETS}
+
+# Kernel identifiers.  Intra-community candidates exploit the dense diagonal
+# blocks; inter-community candidates handle the sparse remainder.  "none"
+# means the model consumes only the inter operands (full-graph baselines).
+INTRA_KERNELS = ("csr_intra", "dense_block")
+INTER_KERNELS = ("csr_inter", "coo")
+MODELS = ("gcn", "gin")

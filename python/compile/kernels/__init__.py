@@ -1,0 +1,31 @@
+"""Layer-1 Pallas kernels: density-specialized subgraph aggregation.
+
+Every kernel computes the same contract — ``Y = A @ X`` for its subgraph's
+(weighted) adjacency ``A`` — but with a compute/memory schedule specialized
+to a density regime, mirroring AdaptGear Sec. 3.2:
+
+============  ======================  =====================================
+kernel        paper analogue          schedule
+============  ======================  =====================================
+csr_inter     CSR inter-community     vertex-parallel row blocks; neighbor
+              kernel (CTA -> rows)    features gathered from the full
+                                      feature array ("global memory")
+csr_intra     CSR intra-community     CTA -> community; the community's
+              kernel (shared-memory   feature tile is block-resident in
+              resident)               VMEM via BlockSpec and reused
+coo           COO edge-parallel       edge-parallel scatter-accumulate
+              atomic kernel           (TPU adaptation of atomicAdd)
+dense_block   batched-GEMM Tensor-    dense per-community matmul on the
+              Core kernel             MXU (``jnp.dot`` per block)
+============  ======================  =====================================
+
+All kernels run with ``interpret=True`` so they lower to portable HLO the
+CPU PJRT client can execute (real-TPU Mosaic lowering is compile-only in
+this environment — see DESIGN.md Sec. 1).
+"""
+
+from . import ref  # noqa: F401
+from .coo_scatter import coo_aggregate  # noqa: F401
+from .csr_inter import csr_inter_aggregate  # noqa: F401
+from .csr_intra import csr_intra_aggregate  # noqa: F401
+from .dense_block import dense_block_aggregate  # noqa: F401

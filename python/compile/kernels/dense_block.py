@@ -1,0 +1,71 @@
+"""Dense block-diagonal batched-GEMM aggregation kernel.
+
+Paper analogue (Sec. 3.2 "Dense-based kernel"): store each community's
+adjacency block densely and run a batched GEMM against the community's
+feature tile — on the A100 this rides the Tensor Cores.  The TPU
+re-expression is direct and *more* natural: each community block becomes
+one MXU ``dot`` (the systolic array is exactly the "dense wins at high
+density" engine), tiled by BlockSpec so a (C, C) adjacency tile and a
+(C, F) feature tile are VMEM-resident per grid step.
+
+Operand contract:
+  blocks [nB, C, C] f32 (block-diagonal adjacency),
+  x [V, F] f32 reshaped by the caller to [nB, C, F]   ->  y [nB, C, F]
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..buckets import COMMUNITY
+
+
+# Communities fused per grid step: a (16,16) block underfills the 128x128
+# MXU, so each step feeds a batch of community blocks through one systolic
+# pass (DESIGN.md Sec. 7). Perf pass iteration 1: 1 -> 16 blocks/step.
+BLOCK_BATCH = 16
+
+
+def _dense_kernel(a_ref, x_ref, o_ref):
+    # preferred_element_type pins the MXU accumulator to f32.
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...],
+        x_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),  # batched matmul
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dense_block_aggregate(blocks, x, community=COMMUNITY):
+    """Aggregate-sum over a dense block-diagonal adjacency.
+
+    Accepts ``x`` as ``[V, F]`` and returns ``[V, F]``; internally runs a
+    batch of community blocks through the MXU per grid step.
+    """
+    v, f = x.shape
+    nb = blocks.shape[0]
+    if blocks.shape[1:] != (community, community):
+        raise ValueError(f"blocks must be [nB,{community},{community}], got {blocks.shape}")
+    if v != nb * community:
+        raise ValueError(f"x rows {v} != nB*C {nb * community}")
+    bb = min(BLOCK_BATCH, nb)
+    if nb % bb != 0:
+        raise ValueError(f"block count {nb} not a multiple of batch {bb}")
+    xb = x.reshape(nb, community, f)
+    out = pl.pallas_call(
+        _dense_kernel,
+        grid=(nb // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, community, community), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, community, f), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, community, f), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, community, f), jnp.float32),
+        interpret=True,
+    )(blocks, xb)
+    return out.reshape(v, f)
+
+
+def dense_block_aggregate_t(blocks, x, community=COMMUNITY):
+    """Exact transpose ``A.T @ x`` via per-block transposition."""
+    return dense_block_aggregate(jnp.swapaxes(blocks, 1, 2), x, community)

@@ -1,0 +1,83 @@
+"""Aggregate-max and aggregate-mean (paper Sec. 2.1's other reducers).
+
+GCN/GIN train on aggregate-sum, but the paper's operator taxonomy (and
+GraphSAGE-style models a downstream user would add) needs ``max`` and
+``mean`` too:
+
+* ``mean`` needs NO new kernel: it is aggregate-sum with per-edge weights
+  ``1/deg(dst)``, which the Rust packer materializes in the ``val``
+  operand (`rust/src/kernels/pack.rs` consumers, see
+  `graph::csr::Csr::row_mean_normalized`).
+* ``max`` needs a dedicated schedule because it is not linear: this module
+  provides the vertex-parallel CSR max kernel (neighbors only; empty
+  neighborhoods yield 0, matching DGL's copy-free semantics).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 16
+
+_NEG = -3.0e38  # effectively -inf for f32 without inf-propagation risk
+
+
+def _make_max_kernel(row_block):
+    def kernel(rp_ref, ci_ref, x_ref, o_ref):
+        blk = pl.program_id(0)
+        f = o_ref.shape[1]
+
+        def row_body(r, carry):
+            row = blk * row_block + r
+            start = rp_ref[row]
+            end = rp_ref[row + 1]
+
+            def nz(i, acc):
+                c = ci_ref[i]
+                return jnp.maximum(acc, x_ref[c, :])
+
+            acc = jax.lax.fori_loop(start, end, nz, jnp.full((f,), _NEG, jnp.float32))
+            # empty neighborhoods -> 0 (no neighbor signal)
+            acc = jnp.where(end > start, acc, jnp.zeros((f,), jnp.float32))
+            o_ref[r, :] = acc
+            return carry
+
+        jax.lax.fori_loop(0, row_block, row_body, 0)
+
+    return kernel
+
+
+def csr_max_aggregate(row_ptr, col_idx, x):
+    """Aggregate-max over a padded CSR topology: ``y[v] = max_u x[u]``."""
+    v, f = x.shape
+    e = col_idx.shape[0]
+    rb = min(ROW_BLOCK, v)
+    if v % rb != 0:
+        raise ValueError(f"padded vertex count {v} not a multiple of {rb}")
+    return pl.pallas_call(
+        _make_max_kernel(rb),
+        grid=(v // rb,),
+        in_specs=[
+            pl.BlockSpec((v + 1,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((v, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, f), jnp.float32),
+        interpret=True,
+    )(row_ptr, col_idx, x)
+
+
+def mean_weights(row_ptr, n_edges_padded):
+    """Edge weights that turn the SUM kernels into MEAN aggregation:
+    ``w = 1/deg(dst)`` per edge, zero padding preserved."""
+    import numpy as np
+
+    row_ptr = np.asarray(row_ptr)
+    vals = np.zeros(n_edges_padded, np.float32)
+    n = row_ptr.shape[0] - 1
+    for r in range(n):
+        deg = int(row_ptr[r + 1]) - int(row_ptr[r])
+        if deg:
+            vals[int(row_ptr[r]) : int(row_ptr[r + 1])] = 1.0 / deg
+    return vals

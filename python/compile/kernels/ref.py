@@ -1,0 +1,105 @@
+"""Pure-jnp correctness oracles for every subgraph kernel format.
+
+Each oracle reconstructs the dense adjacency implied by a padded operand
+set and computes ``A @ X`` directly.  The Pallas kernels (and, through the
+parity fixtures exported by the Rust test suite, the native Rust kernels)
+must match these to float32 tolerance.
+
+Padding semantics (shared contract with rust/src/kernels/spec.rs):
+  * CSR    — ``row_ptr`` has ``V+1`` entries and is exact; the tail of
+             ``col_idx``/``vals`` up to the padded edge capacity carries
+             ``col=0, val=0.0``.
+  * COO    — padding edges are ``(src=0, dst=0, val=0.0)``.
+  * dense  — block-diagonal ``[nB, C, C]`` array; padding is literal zeros.
+  * intra  — column indices are LOCAL to the community (0..C).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_from_csr(row_ptr, col_idx, vals, n_cols):
+    """Dense [V, n_cols] matrix from a (padded) CSR triplet."""
+    row_ptr = np.asarray(row_ptr)
+    col_idx = np.asarray(col_idx)
+    vals = np.asarray(vals)
+    n_rows = row_ptr.shape[0] - 1
+    a = np.zeros((n_rows, n_cols), dtype=np.float32)
+    for r in range(n_rows):
+        for i in range(int(row_ptr[r]), int(row_ptr[r + 1])):
+            a[r, int(col_idx[i])] += float(vals[i])
+    return a
+
+
+def dense_from_coo(src, dst, vals, n):
+    """Dense [n, n] matrix from padded COO edges (dst row, src col)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    vals = np.asarray(vals)
+    a = np.zeros((n, n), dtype=np.float32)
+    for s, d, v in zip(src, dst, vals):
+        a[int(d), int(s)] += float(v)
+    return a
+
+
+def dense_from_blocks(blocks):
+    """Dense [V, V] block-diagonal matrix from [nB, C, C] blocks."""
+    blocks = np.asarray(blocks)
+    nb, c, _ = blocks.shape
+    a = np.zeros((nb * c, nb * c), dtype=np.float32)
+    for b in range(nb):
+        a[b * c : (b + 1) * c, b * c : (b + 1) * c] = blocks[b]
+    return a
+
+
+def dense_from_csr_intra(row_ptr, col_idx_local, vals, community):
+    """Dense [V, V] matrix from the intra-community local-CSR format."""
+    row_ptr = np.asarray(row_ptr)
+    col_idx_local = np.asarray(col_idx_local)
+    vals = np.asarray(vals)
+    n = row_ptr.shape[0] - 1
+    a = np.zeros((n, n), dtype=np.float32)
+    for r in range(n):
+        base = (r // community) * community
+        for i in range(int(row_ptr[r]), int(row_ptr[r + 1])):
+            a[r, base + int(col_idx_local[i])] += float(vals[i])
+    return a
+
+
+def aggregate_ref(a_dense, x):
+    """The single shared contract: aggregate-sum == A @ X."""
+    return jnp.asarray(a_dense, dtype=jnp.float32) @ jnp.asarray(x, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Model-level oracles (pure jnp, no Pallas) used by python/tests/test_model.py
+# ---------------------------------------------------------------------------
+
+
+def gcn_forward_ref(params, a_hat, x):
+    """2-layer GCN: logits = A_hat relu(A_hat (X W1) + b1) W2 + b2."""
+    w1, b1, w2, b2 = params
+    h = aggregate_ref(a_hat, x @ w1) + b1
+    h = jnp.maximum(h, 0.0)
+    return aggregate_ref(a_hat, h @ w2) + b2
+
+
+def gin_forward_ref(params, a_plain, x):
+    """2-layer GIN with 2-layer MLPs and a linear classifier."""
+    (eps1, w1a, b1a, w1b, b1b, eps2, w2a, b2a, w2b, b2b, wc, bc) = params
+    h = (1.0 + eps1) * x + aggregate_ref(a_plain, x)
+    h = jnp.maximum(h @ w1a + b1a, 0.0) @ w1b + b1b
+    h = jnp.maximum(h, 0.0)
+    h = (1.0 + eps2) * h + aggregate_ref(a_plain, h)
+    h = jnp.maximum(h @ w2a + b2a, 0.0) @ w2b + b2b
+    h = jnp.maximum(h, 0.0)
+    return h @ wc + bc
+
+
+def masked_ce_ref(logits, labels, mask):
+    """Mean masked softmax cross-entropy (matches model.masked_ce)."""
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0] - logz
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / denom

@@ -1,0 +1,156 @@
+"""Layer-2 JAX models: GCN and GIN over adaptive subgraph kernels.
+
+Mirrors the paper's benchmarks (Sec. 5): 2-layer GCN [Kipf & Welling] and
+2-layer GIN [Xu et al.] with the default hidden sizes, where every
+neighborhood aggregation routes through one of the Layer-1 Pallas kernels
+chosen per subgraph (intra / inter).  ``build_train_step`` returns the
+jitted fwd+bwd+SGD function that ``aot.py`` lowers to a single HLO module —
+one artifact per (model, intra-kernel, inter-kernel, bucket) variant, so
+the Rust selector can swap kernels by swapping executables with identical
+operand layouts.
+
+All functions take FLAT argument lists (no pytrees) so the HLO parameter
+order is trivially documented in the artifact manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .aggregate import INTRA_NONE, aggregate_combined
+
+GCN_PARAM_NAMES = ("w1", "b1", "w2", "b2")
+GIN_PARAM_NAMES = (
+    "eps1", "w1a", "b1a", "w1b", "b1b",
+    "eps2", "w2a", "b2a", "w2b", "b2b",
+    "wc", "bc",
+)
+
+
+def param_names(model):
+    return {"gcn": GCN_PARAM_NAMES, "gin": GIN_PARAM_NAMES}[model]
+
+
+def param_shapes(model, bucket):
+    """Shapes of each trainable parameter, in manifest order."""
+    f, h, c = bucket.features, bucket.hidden, bucket.classes
+    if model == "gcn":
+        return {"w1": (f, h), "b1": (h,), "w2": (h, c), "b2": (c,)}
+    if model == "gin":
+        return {
+            "eps1": (), "w1a": (f, h), "b1a": (h,), "w1b": (h, h), "b1b": (h,),
+            "eps2": (), "w2a": (h, h), "b2a": (h,), "w2b": (h, h), "b2b": (h,),
+            "wc": (h, c), "bc": (c,),
+        }
+    raise ValueError(f"unknown model {model!r}")
+
+
+def init_params(model, bucket, seed=0):
+    """Glorot-ish init, deterministic; mirrored by rust/src/coordinator."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_shapes(model, bucket).items():
+        key, sub = jax.random.split(key)
+        if not shape:  # eps scalars start at 0
+            out.append(jnp.zeros((), jnp.float32))
+        elif len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan = shape[0] + shape[1]
+            scale = jnp.sqrt(6.0 / fan)
+            out.append(jax.random.uniform(sub, shape, jnp.float32, -scale, scale))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def gcn_forward(params, intra_kind, inter_kind, intra_ops, inter_ops, x):
+    """logits = A_hat relu(A_hat (X W1) + b1) W2 + b2 (transform-then-aggregate)."""
+    w1, b1, w2, b2 = params
+    agg = lambda t: aggregate_combined(intra_kind, inter_kind, intra_ops, inter_ops, t)
+    h = agg(x @ w1) + b1
+    h = jnp.maximum(h, 0.0)
+    return agg(h @ w2) + b2
+
+
+def gin_forward(params, intra_kind, inter_kind, intra_ops, inter_ops, x):
+    """GIN-0 style: h <- MLP((1+eps) h + sum-aggregate(h)); linear classifier."""
+    (eps1, w1a, b1a, w1b, b1b, eps2, w2a, b2a, w2b, b2b, wc, bc) = params
+    agg = lambda t: aggregate_combined(intra_kind, inter_kind, intra_ops, inter_ops, t)
+    h = (1.0 + eps1) * x + agg(x)
+    h = jnp.maximum(h @ w1a + b1a, 0.0) @ w1b + b1b
+    h = jnp.maximum(h, 0.0)
+    h = (1.0 + eps2) * h + agg(h)
+    h = jnp.maximum(h @ w2a + b2a, 0.0) @ w2b + b2b
+    h = jnp.maximum(h, 0.0)
+    return h @ wc + bc
+
+
+_FORWARD = {"gcn": gcn_forward, "gin": gin_forward}
+
+
+def masked_ce(logits, labels, mask):
+    """Mean masked softmax cross-entropy; padding rows carry mask 0."""
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0] - logz
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / denom
+
+
+# ---------------------------------------------------------------------------
+# variant builders (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def build_forward(model, intra_kind, inter_kind, n_params, n_intra_ops, n_inter_ops):
+    """Flat-arg forward: (params..., intra_ops..., inter_ops..., x) -> logits."""
+    fwd = _FORWARD[model]
+
+    def f(*args):
+        params = args[:n_params]
+        intra_ops = args[n_params : n_params + n_intra_ops]
+        inter_ops = args[n_params + n_intra_ops : n_params + n_intra_ops + n_inter_ops]
+        x = args[-1]
+        return (fwd(params, intra_kind, inter_kind, intra_ops, inter_ops, x),)
+
+    return f
+
+
+def build_train_step(model, intra_kind, inter_kind, n_params, n_intra_ops, n_inter_ops):
+    """Flat-arg SGD step.
+
+    args = (params..., intra_ops..., inter_ops..., x, labels, mask, lr)
+    returns (updated params..., loss)
+    """
+    fwd = _FORWARD[model]
+
+    def step(*args):
+        params = args[:n_params]
+        intra_ops = args[n_params : n_params + n_intra_ops]
+        inter_ops = args[n_params + n_intra_ops : n_params + n_intra_ops + n_inter_ops]
+        x, labels, mask, lr = args[-4:]
+
+        def loss_fn(params):
+            logits = fwd(params, intra_kind, inter_kind, intra_ops, inter_ops, x)
+            return masked_ce(logits, labels, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params = tuple(p - lr * g for p, g in zip(params, grads))
+        return new_params + (loss,)
+
+    return step
+
+
+def build_kernel_only(kind, n_ops):
+    """Flat-arg single-kernel aggregate: (ops..., x) -> y.  Used by the Rust
+    adaptive selector to time each candidate kernel in isolation and by the
+    kernel-parity integration tests."""
+    from .aggregate import aggregate
+
+    def f(*args):
+        return (aggregate(kind, args[:n_ops], args[-1]),)
+
+    return f

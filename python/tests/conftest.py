@@ -1,0 +1,105 @@
+"""Shared fixtures: random padded subgraph generators in every format.
+
+These generators are the python twin of rust/src/graph — they produce the
+same padded operand layouts the Rust coordinator packs, so a kernel that
+passes here is guaranteed to agree with the runtime path.
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest  # noqa: F401
+
+COMMUNITY = 16
+
+
+def random_symmetric_dense(rng, n, density, scale=1.0):
+    """Symmetric matrix with ~density fraction of nonzeros."""
+    m = rng.random((n, n)) < density
+    m = np.triu(m)
+    m = m | m.T
+    vals = rng.standard_normal((n, n)).astype(np.float32) * scale
+    vals = np.triu(vals) + np.triu(vals, 1).T
+    return np.where(m, vals, 0.0).astype(np.float32)
+
+
+def block_diagonal_mask(n, community=COMMUNITY):
+    mask = np.zeros((n, n), dtype=bool)
+    for b in range(n // community):
+        lo, hi = b * community, (b + 1) * community
+        mask[lo:hi, lo:hi] = True
+    return mask
+
+
+def split_intra_inter(a, community=COMMUNITY):
+    """AdaptGear Sec. 3.3 decomposition: diagonal blocks vs remainder."""
+    mask = block_diagonal_mask(a.shape[0], community)
+    return np.where(mask, a, 0.0), np.where(mask, 0.0, a)
+
+
+def to_csr(a, e_pad):
+    """Padded CSR (row_ptr exact; col/val tails zero)."""
+    n = a.shape[0]
+    rp = np.zeros(n + 1, np.int32)
+    cols, vals = [], []
+    for r in range(n):
+        nz = np.nonzero(a[r])[0]
+        rp[r + 1] = rp[r] + len(nz)
+        cols.extend(nz.tolist())
+        vals.extend(a[r, nz].tolist())
+    assert len(cols) <= e_pad, f"{len(cols)} edges exceed pad {e_pad}"
+    ci = np.zeros(e_pad, np.int32)
+    vv = np.zeros(e_pad, np.float32)
+    ci[: len(cols)] = cols
+    vv[: len(vals)] = vals
+    return rp, ci, vv
+
+
+def to_csr_intra(a_intra, e_pad, community=COMMUNITY):
+    """Padded local-CSR for a block-diagonal matrix (cols local to block)."""
+    n = a_intra.shape[0]
+    rp = np.zeros(n + 1, np.int32)
+    cols, vals = [], []
+    for r in range(n):
+        base = (r // community) * community
+        nz = np.nonzero(a_intra[r])[0]
+        assert all(base <= c < base + community for c in nz), "edge escapes block"
+        rp[r + 1] = rp[r] + len(nz)
+        cols.extend((nz - base).tolist())
+        vals.extend(a_intra[r, nz].tolist())
+    ci = np.zeros(e_pad, np.int32)
+    vv = np.zeros(e_pad, np.float32)
+    ci[: len(cols)] = cols
+    vv[: len(vals)] = vals
+    return rp, ci, vv
+
+
+def to_coo(a, e_pad):
+    """Padded COO (padding edges 0,0,0.0)."""
+    dsts, srcs = np.nonzero(a)
+    assert len(dsts) <= e_pad
+    src = np.zeros(e_pad, np.int32)
+    dst = np.zeros(e_pad, np.int32)
+    val = np.zeros(e_pad, np.float32)
+    src[: len(srcs)] = srcs
+    dst[: len(dsts)] = dsts
+    val[: len(dsts)] = a[dsts, srcs]
+    return src, dst, val
+
+
+def to_blocks(a_intra, community=COMMUNITY):
+    """Dense [nB, C, C] blocks of a block-diagonal matrix."""
+    n = a_intra.shape[0]
+    nb = n // community
+    blocks = np.zeros((nb, community, community), np.float32)
+    for b in range(nb):
+        lo, hi = b * community, (b + 1) * community
+        blocks[b] = a_intra[lo:hi, lo:hi]
+    return blocks
+
+
+def pad_edges(n_edges, multiple=256):
+    return max(multiple, ((n_edges + multiple - 1) // multiple) * multiple)

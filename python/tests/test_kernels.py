@@ -1,0 +1,220 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps graph sizes and densities for every kernel format and
+asserts allclose against the dense reference (ref.py).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import (
+    COMMUNITY,
+    pad_edges,
+    random_symmetric_dense,
+    split_intra_inter,
+    to_blocks,
+    to_coo,
+    to_csr,
+    to_csr_intra,
+)
+from compile.kernels import (
+    coo_aggregate,
+    csr_inter_aggregate,
+    csr_intra_aggregate,
+    dense_block_aggregate,
+    ref,
+)
+from compile.kernels.coo_scatter import coo_aggregate_t
+from compile.kernels.dense_block import dense_block_aggregate_t
+
+ATOL = 2e-4
+
+
+def _features(rng, n, f):
+    return rng.standard_normal((n, f)).astype(np.float32)
+
+
+# -- deterministic smoke -----------------------------------------------------
+
+
+def test_coo_identity():
+    n = 32
+    src = np.arange(n, dtype=np.int32)
+    dst = np.arange(n, dtype=np.int32)
+    val = np.ones(n, np.float32)
+    x = np.eye(n, 8, dtype=np.float32)
+    y = np.asarray(coo_aggregate(src, dst, val, x))
+    np.testing.assert_allclose(y, x, atol=ATOL)
+
+
+def test_csr_inter_empty_graph():
+    n, e, f = 32, 256, 8
+    rp = np.zeros(n + 1, np.int32)
+    ci = np.zeros(e, np.int32)
+    vv = np.zeros(e, np.float32)
+    rng = np.random.default_rng(0)
+    x = _features(rng, n, f)
+    y = np.asarray(csr_inter_aggregate(rp, ci, vv, x))
+    np.testing.assert_allclose(y, np.zeros_like(x), atol=ATOL)
+
+
+def test_dense_block_zero_blocks():
+    n, f = 32, 8
+    nb = n // COMMUNITY
+    blocks = np.zeros((nb, COMMUNITY, COMMUNITY), np.float32)
+    rng = np.random.default_rng(0)
+    x = _features(rng, n, f)
+    y = np.asarray(dense_block_aggregate(blocks, x))
+    np.testing.assert_allclose(y, np.zeros_like(x), atol=ATOL)
+
+
+def test_coo_duplicate_edges_accumulate():
+    """Duplicate (src,dst) pairs must sum — atomicAdd semantics."""
+    n, f = 16, 4
+    src = np.array([3, 3, 3, 0] + [0] * 12, np.int32)
+    dst = np.array([5, 5, 5, 0] + [0] * 12, np.int32)
+    val = np.array([1.0, 2.0, 3.0, 0.0] + [0.0] * 12, np.float32)
+    rng = np.random.default_rng(1)
+    x = _features(rng, n, f)
+    y = np.asarray(coo_aggregate(src, dst, val, x))
+    np.testing.assert_allclose(y[5], 6.0 * x[3], atol=ATOL)
+
+
+# -- property sweeps ----------------------------------------------------------
+
+sizes = st.sampled_from([16, 32, 64, 128])
+feats = st.sampled_from([4, 8, 32])
+densities = st.floats(min_value=0.0, max_value=0.4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, f=feats, density=densities, seed=st.integers(0, 2**31 - 1))
+def test_coo_matches_ref(n, f, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_symmetric_dense(rng, n, density)
+    e = pad_edges(int((a != 0).sum()))
+    src, dst, val = to_coo(a, e)
+    x = _features(rng, n, f)
+    expect = ref.aggregate_ref(ref.dense_from_coo(src, dst, val, n), x)
+    got = coo_aggregate(src, dst, val, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, f=feats, density=densities, seed=st.integers(0, 2**31 - 1))
+def test_csr_inter_matches_ref(n, f, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_symmetric_dense(rng, n, density)
+    e = pad_edges(int((a != 0).sum()))
+    rp, ci, vv = to_csr(a, e)
+    x = _features(rng, n, f)
+    expect = ref.aggregate_ref(ref.dense_from_csr(rp, ci, vv, n), x)
+    got = csr_inter_aggregate(rp, ci, vv, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, f=feats, density=st.floats(0.0, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_csr_intra_matches_ref(n, f, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_symmetric_dense(rng, n, density)
+    intra, _ = split_intra_inter(a)
+    e = pad_edges(int((intra != 0).sum()))
+    rp, ci, vv = to_csr_intra(intra, e)
+    x = _features(rng, n, f)
+    expect = ref.aggregate_ref(
+        ref.dense_from_csr_intra(rp, ci, vv, COMMUNITY), x
+    )
+    got = csr_intra_aggregate(rp, ci, vv, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, f=feats, density=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_dense_block_matches_ref(n, f, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_symmetric_dense(rng, n, density)
+    intra, _ = split_intra_inter(a)
+    blocks = to_blocks(intra)
+    x = _features(rng, n, f)
+    expect = ref.aggregate_ref(ref.dense_from_blocks(blocks), x)
+    got = dense_block_aggregate(blocks, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=sizes, f=feats, density=densities, seed=st.integers(0, 2**31 - 1))
+def test_all_formats_agree_on_same_graph(n, f, density, seed):
+    """The four kernels compute ONE contract: identical results on the
+    same decomposed graph, summed across intra+inter partials."""
+    rng = np.random.default_rng(seed)
+    a = random_symmetric_dense(rng, n, density)
+    intra, inter = split_intra_inter(a)
+    e = pad_edges(int(max((intra != 0).sum(), (inter != 0).sum())))
+    x = _features(rng, n, f)
+
+    expect = ref.aggregate_ref(a, x)
+
+    # combo 1: csr_intra + csr_inter
+    rp_i, ci_i, vv_i = to_csr_intra(intra, e)
+    rp_j, ci_j, vv_j = to_csr(inter, e)
+    got1 = np.asarray(csr_intra_aggregate(rp_i, ci_i, vv_i, x)) + np.asarray(
+        csr_inter_aggregate(rp_j, ci_j, vv_j, x)
+    )
+    np.testing.assert_allclose(got1, np.asarray(expect), atol=ATOL)
+
+    # combo 2: dense_block + coo
+    blocks = to_blocks(intra)
+    src, dst, val = to_coo(inter, e)
+    got2 = np.asarray(dense_block_aggregate(blocks, x)) + np.asarray(
+        coo_aggregate(src, dst, val, x)
+    )
+    np.testing.assert_allclose(got2, np.asarray(expect), atol=ATOL)
+
+
+# -- transpose variants -------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=sizes, f=feats, seed=st.integers(0, 2**31 - 1))
+def test_coo_transpose_exact(n, f, seed):
+    """coo_aggregate_t must equal A.T @ x even for ASYMMETRIC A."""
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < 0.2).astype(np.float32) * rng.standard_normal((n, n)).astype(np.float32)
+    e = pad_edges(int((a != 0).sum()))
+    src, dst, val = to_coo(a, e)
+    x = _features(rng, n, f)
+    expect = ref.aggregate_ref(ref.dense_from_coo(src, dst, val, n).T, x)
+    got = coo_aggregate_t(src, dst, val, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=ATOL)
+
+
+def test_dense_block_transpose_exact():
+    rng = np.random.default_rng(7)
+    n, f = 64, 8
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    intra, _ = split_intra_inter(a)  # asymmetric blocks
+    blocks = to_blocks(intra)
+    x = _features(rng, n, f)
+    expect = ref.aggregate_ref(ref.dense_from_blocks(blocks).T, x)
+    got = dense_block_aggregate_t(blocks, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=ATOL)
+
+
+# -- shape validation ---------------------------------------------------------
+
+
+def test_coo_rejects_ragged_edge_block():
+    with pytest.raises(ValueError):
+        coo_aggregate(
+            np.zeros(300, np.int32), np.zeros(300, np.int32),
+            np.zeros(300, np.float32), np.zeros((16, 4), np.float32),
+        )
+
+
+def test_dense_block_rejects_bad_block_shape():
+    with pytest.raises(ValueError):
+        dense_block_aggregate(
+            np.zeros((2, 8, 8), np.float32), np.zeros((32, 4), np.float32)
+        )

@@ -1,0 +1,88 @@
+"""Aggregate-max / aggregate-mean vs numpy oracles."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import pad_edges, random_symmetric_dense, to_csr
+from compile.kernels.csr_inter import csr_inter_aggregate
+from compile.kernels.reduce_ops import csr_max_aggregate, mean_weights
+
+ATOL = 2e-4
+
+
+def max_ref(a, x):
+    n = a.shape[0]
+    y = np.zeros((n, x.shape[1]), np.float32)
+    for r in range(n):
+        nz = np.nonzero(a[r])[0]
+        if len(nz):
+            y[r] = x[nz].max(axis=0)
+    return y
+
+
+def mean_ref(a, x):
+    n = a.shape[0]
+    y = np.zeros((n, x.shape[1]), np.float32)
+    for r in range(n):
+        nz = np.nonzero(a[r])[0]
+        if len(nz):
+            y[r] = x[nz].mean(axis=0)
+    return y
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([16, 32, 64]),
+    f=st.sampled_from([4, 8]),
+    density=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_max_matches_ref(n, f, density, seed):
+    rng = np.random.default_rng(seed)
+    a = (random_symmetric_dense(rng, n, density) != 0).astype(np.float32)
+    e = pad_edges(int(a.sum()))
+    rp, ci, _ = to_csr(a, e)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    got = np.asarray(csr_max_aggregate(rp, ci, x))
+    np.testing.assert_allclose(got, max_ref(a, x), atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([16, 32, 64]),
+    f=st.sampled_from([4, 8]),
+    density=st.floats(0.0, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mean_is_weighted_sum(n, f, density, seed):
+    """mean == the SUM kernel fed 1/deg edge weights — no new kernel."""
+    rng = np.random.default_rng(seed)
+    a = (random_symmetric_dense(rng, n, density) != 0).astype(np.float32)
+    e = pad_edges(int(a.sum()))
+    rp, ci, _ = to_csr(a, e)
+    w = mean_weights(rp, e)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    got = np.asarray(csr_inter_aggregate(rp, ci, w, x))
+    np.testing.assert_allclose(got, mean_ref(a, x), atol=ATOL)
+
+
+def test_max_empty_rows_are_zero():
+    n, e, f = 32, 256, 4
+    rp = np.zeros(n + 1, np.int32)
+    ci = np.zeros(e, np.int32)
+    x = np.full((n, f), -5.0, np.float32)
+    got = np.asarray(csr_max_aggregate(rp, ci, x))
+    np.testing.assert_allclose(got, np.zeros((n, f)), atol=0)
+
+
+def test_max_handles_all_negative_features():
+    # a real max kernel must return negatives (not clamp at 0) when
+    # neighborhoods are non-empty
+    n, f = 16, 4
+    a = np.zeros((n, n), np.float32)
+    a[0, 1] = 1.0
+    e = pad_edges(1)
+    rp, ci, _ = to_csr(a, e)
+    x = np.full((n, f), -2.0, np.float32)
+    got = np.asarray(csr_max_aggregate(rp, ci, x))
+    np.testing.assert_allclose(got[0], [-2.0] * f, atol=ATOL)

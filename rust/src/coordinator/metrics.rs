@@ -1,0 +1,105 @@
+//! Training-memory accounting — the Fig. 12 "Topo. Tensor" overhead study
+//! and the Sec. 6.3 runtime-overhead bookkeeping.
+
+use crate::partition::Decomposition;
+
+use super::modeldims::ModelDims;
+
+/// Peak-memory breakdown of one training run (bytes).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryReport {
+    /// Input vertex features `[n, f]`.
+    pub feature_bytes: usize,
+    /// Forward activations kept for backward (per-layer outputs).
+    pub activation_bytes: usize,
+    /// Parameters + their gradients + optimizer state (SGD: grads only).
+    pub param_bytes: usize,
+    /// Topology storage for BOTH subgraphs (decomposed form).
+    pub topo_bytes: usize,
+    /// Extra topology bytes versus a single full-graph CSR.
+    pub topo_extra_bytes: usize,
+}
+
+impl MemoryReport {
+    pub fn total(&self) -> usize {
+        self.feature_bytes + self.activation_bytes + self.param_bytes + self.topo_bytes
+    }
+
+    /// Fig. 12's metric: share of peak memory spent on subgraph topology.
+    pub fn topo_fraction(&self) -> f64 {
+        self.topo_bytes as f64 / self.total().max(1) as f64
+    }
+}
+
+/// Estimate the training-memory breakdown for a model over a decomposed
+/// graph (f32 everywhere, SGD optimizer — matching the AOT train step).
+pub fn memory_breakdown(d: &Decomposition, dims: &ModelDims) -> MemoryReport {
+    let n = d.graph.n;
+    let feature_bytes = n * dims.features * 4;
+
+    // activations stashed for backward: aggregate outputs + post-MLP
+    // activations per layer, both widths, fwd+bwd copies
+    let act_elems: usize = dims
+        .aggregate_widths()
+        .iter()
+        .map(|w| n * w * 2)
+        .sum::<usize>()
+        + dims.update_gemms().iter().map(|&(_, out)| n * out).sum::<usize>();
+    let activation_bytes = act_elems * 4 * 2; // + gradient mirror
+
+    let param_elems: usize = dims
+        .update_gemms()
+        .iter()
+        .map(|&(k, out)| k * out + out)
+        .sum();
+    let param_bytes = param_elems * 4 * 2; // params + grads
+
+    MemoryReport {
+        feature_bytes,
+        activation_bytes,
+        param_bytes,
+        topo_bytes: d.topology_bytes(),
+        topo_extra_bytes: d.extra_topology_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::modeldims::ModelKind;
+    use crate::graph::generate::planted_partition;
+    use crate::partition::{Propagation, Reorder};
+    use crate::util::rng::Rng;
+
+    fn decomp(n: usize) -> Decomposition {
+        let mut rng = Rng::new(1);
+        let g = planted_partition(n, 16, 0.4, 0.02, &mut rng);
+        Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, 0)
+    }
+
+    #[test]
+    fn topology_is_small_fraction_with_real_features() {
+        // the Fig. 12 claim: features/activations dominate
+        let d = decomp(512);
+        let dims = ModelDims::new(ModelKind::Gcn, 500, 32, 8); // pubmed-ish widths
+        let m = memory_breakdown(&d, &dims);
+        assert!(m.topo_fraction() < 0.15, "topo fraction {}", m.topo_fraction());
+        assert!(m.total() > m.topo_bytes);
+    }
+
+    #[test]
+    fn narrow_features_raise_topo_share() {
+        let d = decomp(512);
+        let wide = memory_breakdown(&d, &ModelDims::new(ModelKind::Gcn, 1433, 32, 8));
+        let narrow = memory_breakdown(&d, &ModelDims::new(ModelKind::Gcn, 29, 32, 8));
+        assert!(narrow.topo_fraction() > wide.topo_fraction());
+    }
+
+    #[test]
+    fn gin_activations_exceed_gcn() {
+        let d = decomp(256);
+        let gcn = memory_breakdown(&d, &ModelDims::new(ModelKind::Gcn, 64, 32, 8));
+        let gin = memory_breakdown(&d, &ModelDims::new(ModelKind::Gin, 64, 32, 8));
+        assert!(gin.activation_bytes > gcn.activation_bytes);
+    }
+}

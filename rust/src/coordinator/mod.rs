@@ -1,0 +1,20 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! * [`selector`]: feedback-driven adaptive kernel selection (Sec. 3.3).
+//! * [`strategy`]: AdaptGear O1/O2/O3 and every baseline (Table 2) as
+//!   iteration-cost assemblies over gpusim.
+//! * [`trainer`]: the real PJRT training loop (monitor → locked steps).
+//! * [`pipeline`]: dataset → preprocess → select → train, end to end.
+//! * [`metrics`]: memory/overhead accounting (Fig. 12, Sec. 6.3).
+
+pub mod metrics;
+pub mod modeldims;
+pub mod pipeline;
+pub mod selector;
+pub mod strategy;
+pub mod trainer;
+
+pub use modeldims::{ModelDims, ModelKind};
+pub use selector::{select, KernelTimer, Role, SelectorReport};
+pub use strategy::{best_adaptive_pair, forward_cost, preprocess, PreprocessTimes, Strategy};
+pub use trainer::{train, Clock, TrainConfig, TrainReport};

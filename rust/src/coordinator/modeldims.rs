@@ -1,0 +1,90 @@
+//! Model shape descriptions used by both the simulated strategies and the
+//! real PJRT trainer.
+
+/// Which GNN benchmark (Sec. 5: GCN and GIN with their default configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Gcn,
+    Gin,
+}
+
+impl ModelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Gin => "gin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" => Some(ModelKind::Gcn),
+            "gin" => Some(ModelKind::Gin),
+            _ => None,
+        }
+    }
+}
+
+/// Layer dimensions of a 2-layer model instance.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDims {
+    pub kind: ModelKind,
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl ModelDims {
+    pub fn new(kind: ModelKind, features: usize, hidden: usize, classes: usize) -> ModelDims {
+        ModelDims { kind, features, hidden, classes }
+    }
+
+    /// Feature widths at which neighborhood aggregation runs.
+    ///
+    /// GCN transforms-then-aggregates: `A_hat (X W1)` then `A_hat (H W2)`
+    /// — widths `[hidden, classes]`. GIN aggregates raw features first:
+    /// widths `[features, hidden]`. This is why GIN spends a larger share
+    /// on graph operations (Sec. 6.1's explanation of its bigger speedup).
+    pub fn aggregate_widths(&self) -> [usize; 2] {
+        match self.kind {
+            ModelKind::Gcn => [self.hidden, self.classes],
+            ModelKind::Gin => [self.features, self.hidden],
+        }
+    }
+
+    /// Dense (update-phase) GEMMs per forward pass as `(m_rows_factor,
+    /// k, n)` — `m` is the vertex count, filled in by the caller.
+    pub fn update_gemms(&self) -> Vec<(usize, usize)> {
+        match self.kind {
+            ModelKind::Gcn => vec![(self.features, self.hidden), (self.hidden, self.classes)],
+            ModelKind::Gin => vec![
+                (self.features, self.hidden),
+                (self.hidden, self.hidden),
+                (self.hidden, self.hidden),
+                (self.hidden, self.hidden),
+                (self.hidden, self.classes),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gin_aggregates_wider_than_gcn() {
+        let gcn = ModelDims::new(ModelKind::Gcn, 128, 32, 8);
+        let gin = ModelDims::new(ModelKind::Gin, 128, 32, 8);
+        let gcn_w: usize = gcn.aggregate_widths().iter().sum();
+        let gin_w: usize = gin.aggregate_widths().iter().sum();
+        assert!(gin_w > gcn_w);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(ModelKind::parse("GCN"), Some(ModelKind::Gcn));
+        assert_eq!(ModelKind::parse("gin"), Some(ModelKind::Gin));
+        assert_eq!(ModelKind::parse("mlp"), None);
+    }
+}

@@ -1,0 +1,119 @@
+//! End-to-end pipeline (Fig. 7's user flow): load dataset → reorder +
+//! decompose → adaptive selection → train through PJRT.
+
+use anyhow::Result;
+
+use crate::graph::datasets::{Dataset, DatasetSpec};
+use crate::partition::{Decomposition, Propagation};
+use crate::runtime::Engine;
+
+use super::modeldims::ModelKind;
+use super::strategy::{preprocess, PreprocessTimes, Strategy};
+use super::trainer::{train, TrainConfig, TrainReport};
+
+/// End-to-end run summary.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub dataset: &'static str,
+    pub scale: f64,
+    pub vertices: usize,
+    pub edges: usize,
+    pub preprocess: PreprocessTimes,
+    pub train: TrainReport,
+}
+
+/// Choose a dataset scale that fits the largest AOT bucket: both vertex
+/// count and the per-subgraph edge capacity must fit.
+pub fn auto_scale(spec: &DatasetSpec, engine: &Engine) -> f64 {
+    let max_v = engine.manifest.buckets.values().map(|b| b.vertices).max().unwrap_or(0);
+    let max_e = engine.manifest.buckets.values().map(|b| b.edges).max().unwrap_or(0);
+    if max_v == 0 {
+        return 1.0;
+    }
+    // GCN-normalized nnz = directed edges + n; leave 15% headroom for
+    // the randomness of the generator.
+    let v_scale = max_v as f64 / spec.vertices as f64;
+    let e_scale = (max_e as f64 * 0.85 - max_v as f64 * 0.3) / spec.edges as f64;
+    v_scale.min(e_scale).min(1.0).max(1e-6)
+}
+
+/// Propagation matrix per model (GCN normalizes; GIN aggregates raw).
+pub fn propagation_for(model: ModelKind) -> Propagation {
+    match model {
+        ModelKind::Gcn => Propagation::GcnNormalized,
+        ModelKind::Gin => Propagation::PlainAdjacency,
+    }
+}
+
+/// Materialize a dataset (auto-scaled), preprocess it the AdaptGear way,
+/// and train for `cfg.steps` through PJRT.
+pub fn run(
+    engine: &Engine,
+    spec: &DatasetSpec,
+    cfg: &TrainConfig,
+    scale_override: Option<f64>,
+) -> Result<PipelineReport> {
+    let scale = scale_override.unwrap_or_else(|| auto_scale(spec, engine));
+    let data = spec.build_scaled(scale, cfg.seed);
+    let (d, times) = preprocess(
+        Strategy::AdaptGear,
+        &data.graph,
+        propagation_for(cfg.model),
+        engine.manifest.community,
+        cfg.seed,
+    );
+    let report = train_decomposition(engine, &data, &d, cfg)?;
+    Ok(PipelineReport {
+        dataset: spec.name,
+        scale,
+        vertices: data.graph.n,
+        edges: data.graph.directed_edge_count(),
+        preprocess: times,
+        train: report,
+    })
+}
+
+/// Train an already-decomposed dataset (features/labels re-derived from
+/// the ORIGINAL vertex order must be permuted to the reordered ids).
+pub fn train_decomposition(
+    engine: &Engine,
+    data: &Dataset,
+    d: &Decomposition,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let f_data = engine
+        .manifest
+        .buckets
+        .values()
+        .map(|b| b.features)
+        .max()
+        .unwrap_or(32);
+    let x0 = data.features(f_data);
+    let labels0 = data.labels();
+    // permute rows into the decomposition's vertex order
+    let n = d.graph.n;
+    let mut x = vec![0.0f32; n * f_data];
+    let mut labels = vec![0i32; n];
+    for old in 0..n {
+        let new = d.perm[old] as usize;
+        x[new * f_data..(new + 1) * f_data]
+            .copy_from_slice(&x0[old * f_data..(old + 1) * f_data]);
+        labels[new] = labels0[old];
+    }
+    train(engine, d, &x, f_data, &labels, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    #[test]
+    fn auto_scale_bounded() {
+        // without an engine we can still sanity check the math by hand
+        let spec = datasets::find("cora").unwrap();
+        // v_scale for a 1024 bucket = 1024/2708 ≈ 0.378
+        let v_scale = 1024.0 / spec.vertices as f64;
+        assert!(v_scale < 1.0 && v_scale > 0.3);
+    }
+}

@@ -1,0 +1,153 @@
+//! The adaptive selector (Sec. 3.3): feedback-driven per-subgraph kernel
+//! choice.
+//!
+//! GNN training runs hundreds of iterations over a *static* topology, so
+//! AdaptGear spends the first few iterations monitoring each candidate
+//! kernel's measured time and locks the per-subgraph winner for the rest.
+//! The timing source is pluggable: the real PJRT wall clock (`--clock
+//! wall`) or the gpusim surface (`--clock sim`, deterministic — used by
+//! the figure benches).
+
+use std::collections::BTreeMap;
+
+use crate::kernels::{KernelKind, KernelPair, INTER_CANDIDATES, INTRA_CANDIDATES};
+
+/// Which subgraph a kernel candidate serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Intra,
+    Inter,
+}
+
+/// A pluggable kernel timer. Implementations: gpusim cost (deterministic)
+/// and PJRT wall-clock (see `trainer.rs`).
+pub trait KernelTimer {
+    /// Measured time (microseconds) of one launch of `kind` on the `role`
+    /// subgraph at aggregate width `width`.
+    fn time_us(&mut self, role: Role, kind: KernelKind, width: usize) -> f64;
+}
+
+/// Outcome of the monitoring phase.
+#[derive(Debug, Clone)]
+pub struct SelectorReport {
+    /// Mean measured time per candidate, per aggregate width.
+    pub intra_times: BTreeMap<&'static str, f64>,
+    pub inter_times: BTreeMap<&'static str, f64>,
+    pub chosen: KernelPair,
+    /// Monitoring iterations consumed (the Sec. 6.3 overhead).
+    pub monitor_iters: usize,
+    /// Total monitoring time (us) beyond what the winning kernels would
+    /// have cost — the selector's runtime overhead.
+    pub monitor_overhead_us: f64,
+}
+
+/// Run the feedback loop: `repeats` timed iterations per candidate (the
+/// paper's "first few iterations"), averaged over every aggregate width
+/// the model uses.
+pub fn select(
+    timer: &mut dyn KernelTimer,
+    widths: &[usize],
+    repeats: usize,
+) -> SelectorReport {
+    let repeats = repeats.max(1);
+    let mut intra_times: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut inter_times: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut total_monitor_us = 0.0;
+
+    let mut measure = |role: Role, kind: KernelKind, out: &mut BTreeMap<&'static str, f64>| {
+        let mut acc = 0.0;
+        for _ in 0..repeats {
+            for &w in widths {
+                acc += timer.time_us(role, kind, w);
+            }
+        }
+        let mean = acc / (repeats * widths.len().max(1)) as f64;
+        out.insert(kind.as_str(), mean);
+        acc
+    };
+
+    for kind in INTRA_CANDIDATES {
+        total_monitor_us += measure(Role::Intra, kind, &mut intra_times);
+    }
+    for kind in INTER_CANDIDATES {
+        total_monitor_us += measure(Role::Inter, kind, &mut inter_times);
+    }
+
+    let pick = |times: &BTreeMap<&'static str, f64>, candidates: &[KernelKind]| {
+        candidates
+            .iter()
+            .copied()
+            .min_by(|a, b| times[a.as_str()].partial_cmp(&times[b.as_str()]).unwrap())
+            .unwrap()
+    };
+    let intra = pick(&intra_times, &INTRA_CANDIDATES);
+    let inter = pick(&inter_times, &INTER_CANDIDATES);
+
+    // overhead = monitoring minus what the winners would have cost anyway
+    let winner_us = (intra_times[intra.as_str()] + inter_times[inter.as_str()])
+        * (repeats * widths.len().max(1)) as f64;
+    SelectorReport {
+        chosen: KernelPair::new(intra, inter),
+        intra_times,
+        inter_times,
+        monitor_iters: repeats * (INTRA_CANDIDATES.len() + INTER_CANDIDATES.len()),
+        monitor_overhead_us: (total_monitor_us - winner_us).max(0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scripted timer for unit tests.
+    struct Fake(BTreeMap<(&'static str, usize), f64>);
+
+    impl KernelTimer for Fake {
+        fn time_us(&mut self, _role: Role, kind: KernelKind, width: usize) -> f64 {
+            *self.0.get(&(kind.as_str(), width)).unwrap_or(&1.0)
+        }
+    }
+
+    #[test]
+    fn picks_fastest_per_subgraph() {
+        let mut m = BTreeMap::new();
+        m.insert(("csr_intra", 32), 5.0);
+        m.insert(("dense_block", 32), 2.0);
+        m.insert(("csr_inter", 32), 3.0);
+        m.insert(("coo", 32), 9.0);
+        let mut t = Fake(m);
+        let r = select(&mut t, &[32], 3);
+        assert_eq!(r.chosen, KernelPair::new(KernelKind::DenseBlock, KernelKind::CsrInter));
+        assert_eq!(r.monitor_iters, 12);
+    }
+
+    #[test]
+    fn averages_across_widths() {
+        // dense wins at width 8, csr_intra wins at width 64; averages decide
+        let mut m = BTreeMap::new();
+        m.insert(("dense_block", 8), 1.0);
+        m.insert(("dense_block", 64), 10.0);
+        m.insert(("csr_intra", 8), 4.0);
+        m.insert(("csr_intra", 64), 4.0);
+        m.insert(("csr_inter", 8), 1.0);
+        m.insert(("csr_inter", 64), 1.0);
+        m.insert(("coo", 8), 2.0);
+        m.insert(("coo", 64), 2.0);
+        let mut t = Fake(m);
+        let r = select(&mut t, &[8, 64], 1);
+        assert_eq!(r.chosen.intra, Some(KernelKind::CsrIntra));
+    }
+
+    #[test]
+    fn overhead_is_nonnegative_and_reflects_losers() {
+        let mut m = BTreeMap::new();
+        m.insert(("csr_intra", 32), 1.0);
+        m.insert(("dense_block", 32), 100.0);
+        m.insert(("csr_inter", 32), 1.0);
+        m.insert(("coo", 32), 100.0);
+        let mut t = Fake(m);
+        let r = select(&mut t, &[32], 2);
+        // losers cost 200 us each over 2 repeats => overhead ~400
+        assert!(r.monitor_overhead_us > 300.0);
+    }
+}

@@ -1,0 +1,441 @@
+//! Execution strategies: AdaptGear's three optimization levels and every
+//! baseline the paper compares against (Table 2 / Sec. 6), expressed as
+//! iteration-cost assemblies over the gpusim surface.
+//!
+//! Baselines are reimplemented as *strategies over the same substrate*,
+//! each keeping the property the paper contrasts: kernel-mapping
+//! granularity × format policy × runtime overhead (DESIGN.md Sec. 2).
+
+use std::collections::HashMap;
+
+use crate::graph::{Csr, Graph};
+use crate::gpusim::{elementwise_us, gemm_us, kernel_cost, GpuModel, IterationCost, KernelCost};
+use crate::kernels::{KernelKind, KernelPair};
+use crate::partition::{Decomposition, Propagation, Reorder};
+
+use super::modeldims::ModelDims;
+
+/// Every comparable system in the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// DGL (framework baseline): full-graph CSR, per-op framework
+    /// dispatch, unfused elementwise ops.
+    Dgl,
+    /// PyG (framework baseline): full-graph COO with edge-message
+    /// materialization.
+    Pyg,
+    /// GNNAdvisor with rabbit-order preprocessing: tuned full-graph CSR.
+    GnnAdvisorRabbit,
+    /// GNNAdvisor with METIS preprocessing.
+    GnnAdvisorMetis,
+    /// PCGCN: block-level per-tile format choice with per-block launches
+    /// and result merging. Tile size swept externally (Fig. 10).
+    Pcgcn,
+    /// AdaptGear O1: full-graph-level static CSR kernel (Fig. 11).
+    AdaptGearO1,
+    /// AdaptGear O2: static subgraph kernels (CSR intra + COO inter).
+    AdaptGearO2,
+    /// AdaptGear O3: subgraph-level adaptive kernels (the full system).
+    AdaptGear,
+}
+
+pub const FIG8_BASELINES: [Strategy; 2] = [Strategy::Dgl, Strategy::Pyg];
+
+/// Slowdown of generic framework aggregation kernels (cuSPARSE csrmm /
+/// torch-scatter) relative to hand-tuned GNN kernels — the 2-4x gap the
+/// GNNAdvisor and GE-SpMM papers measure.
+const FRAMEWORK_KERNEL_QUALITY: f64 = 1.8;
+
+impl Strategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Strategy::Dgl => "DGL",
+            Strategy::Pyg => "PyG",
+            Strategy::GnnAdvisorRabbit => "GNNA-Rabbit",
+            Strategy::GnnAdvisorMetis => "GNNA-Metis",
+            Strategy::Pcgcn => "PCGCN",
+            Strategy::AdaptGearO1 => "AdaptGear-O1",
+            Strategy::AdaptGearO2 => "AdaptGear-O2",
+            Strategy::AdaptGear => "AdaptGear",
+        }
+    }
+
+    /// Preprocessing each system applies before training.
+    pub fn reorder(&self) -> Reorder {
+        match self {
+            Strategy::Dgl | Strategy::Pyg => Reorder::Identity,
+            Strategy::GnnAdvisorRabbit => Reorder::Rabbit,
+            _ => Reorder::Metis,
+        }
+    }
+}
+
+/// Simulated cost of ONE forward pass's graph+update operators.
+/// (Training iterations scale this uniformly; see IterationCost::scaled.)
+pub fn forward_cost(
+    strategy: Strategy,
+    d: &Decomposition,
+    model: &ModelDims,
+    gpu: &GpuModel,
+    pcgcn_tile: usize,
+) -> IterationCost {
+    let mut it = IterationCost::default();
+    let n = d.graph.n;
+    let community = d.community;
+
+    // -- aggregation phase: one launch set per aggregate width
+    for &w in &model.aggregate_widths() {
+        match strategy {
+            Strategy::Dgl => {
+                // generic cuSPARSE-style SpMM: ~2.5x off hand-tuned
+                // kernels (the gap GNNAdvisor/GE-SpMM report), plus per-op
+                // framework dispatch around the SpMM
+                let whole = d.whole();
+                let mut c = kernel_cost(KernelKind::CsrInter, &whole, w, community, gpu);
+                c.compute_us *= FRAMEWORK_KERNEL_QUALITY;
+                c.memory_us *= FRAMEWORK_KERNEL_QUALITY;
+                c.time_us = c.launch_us + c.compute_us.max(c.memory_us);
+                it.add_kernel(&c);
+                it.add_overhead(gpu.framework_op_us * 2.0);
+            }
+            Strategy::Pyg => {
+                let whole = d.whole();
+                let mut c = kernel_cost(KernelKind::Coo, &whole, w, community, gpu);
+                // PyG materializes per-edge messages: an extra E*w*4-byte
+                // round trip through HBM, on top of generic scatter kernels
+                let msg_bytes = (whole.nnz() * w * 4) as f64;
+                c.compute_us *= FRAMEWORK_KERNEL_QUALITY;
+                c.memory_us = c.memory_us * FRAMEWORK_KERNEL_QUALITY + gpu.stream_us(msg_bytes);
+                c.time_us = c.launch_us + c.compute_us.max(c.memory_us);
+                it.add_kernel(&c);
+                it.add_overhead(gpu.framework_op_us * 2.0);
+            }
+            Strategy::GnnAdvisorRabbit | Strategy::GnnAdvisorMetis => {
+                // neighbor grouping + dimension workers bound the warp
+                // imbalance GNNAdvisor exists to fix
+                let whole = d.whole();
+                it.add_kernel(&crate::gpusim::kernel_cost::csr_inter_cost_with_imb(
+                    &whole, w, gpu, Some(1.15),
+                ));
+            }
+            Strategy::Pcgcn => {
+                pcgcn_cost(d, w, pcgcn_tile, gpu, &mut it);
+            }
+            Strategy::AdaptGearO1 => {
+                // O1 = our tuned CSR kernel at full-graph granularity —
+                // operationally the same point as GNNA-Metis (Table 2).
+                let whole = d.whole();
+                it.add_kernel(&crate::gpusim::kernel_cost::csr_inter_cost_with_imb(
+                    &whole, w, gpu, Some(1.15),
+                ));
+            }
+            Strategy::AdaptGearO2 => {
+                let (ic, jc) = crate::gpusim::kernel_cost::subgraph_pair_cost(
+                    KernelKind::CsrIntra,
+                    KernelKind::Coo,
+                    &d.intra,
+                    &d.inter,
+                    w,
+                    community,
+                    gpu,
+                );
+                it.add_kernel(&ic);
+                it.add_kernel(&jc);
+            }
+            Strategy::AdaptGear => {
+                let pair = best_adaptive_pair(d, w, gpu);
+                let (ic, jc) = crate::gpusim::kernel_cost::subgraph_pair_cost(
+                    pair.intra.unwrap(),
+                    pair.inter,
+                    &d.intra,
+                    &d.inter,
+                    w,
+                    community,
+                    gpu,
+                );
+                it.add_kernel(&ic);
+                it.add_kernel(&jc);
+            }
+        }
+    }
+
+    // -- update phase (identical shape for all strategies)
+    for (k, out) in model.update_gemms() {
+        it.add_update(gemm_us(n, k, out, gpu));
+        it.add_update(elementwise_us(n * out, gpu)); // bias + activation
+        if matches!(strategy, Strategy::Dgl | Strategy::Pyg) {
+            it.add_overhead(gpu.framework_op_us * 2.0);
+        }
+    }
+    it
+}
+
+/// Pick the simulated-fastest kernel per subgraph (what the runtime
+/// selector converges to when driven by the sim clock). Inter candidates
+/// are timed against the warm L2 the intra kernel leaves behind, matching
+/// how the runtime selector measures them back to back.
+pub fn best_adaptive_pair(d: &Decomposition, width: usize, gpu: &GpuModel) -> KernelPair {
+    use crate::gpusim::kernel_cost::subgraph_pair_cost;
+    let intra = crate::kernels::INTRA_CANDIDATES
+        .into_iter()
+        .min_by(|&a, &b| {
+            let ca = kernel_cost(a, &d.intra, width, d.community, gpu).time_us;
+            let cb = kernel_cost(b, &d.intra, width, d.community, gpu).time_us;
+            ca.partial_cmp(&cb).unwrap()
+        })
+        .unwrap();
+    let inter = crate::kernels::INTER_CANDIDATES
+        .into_iter()
+        .min_by(|&a, &b| {
+            let ca = subgraph_pair_cost(intra, a, &d.intra, &d.inter, width, d.community, gpu)
+                .1
+                .time_us;
+            let cb = subgraph_pair_cost(intra, b, &d.intra, &d.inter, width, d.community, gpu)
+                .1
+                .time_us;
+            ca.partial_cmp(&cb).unwrap()
+        })
+        .unwrap();
+    KernelPair::new(intra, inter)
+}
+
+/// Aggregate-only cost of GNNAdvisor at a given width (the paper's Fig. 3b
+/// profiles the first-layer aggregate at the dataset's raw feature width).
+pub fn gnnadvisor_aggregate_cost(d: &Decomposition, width: usize, gpu: &GpuModel) -> IterationCost {
+    let mut it = IterationCost::default();
+    let whole = d.whole();
+    it.add_kernel(&crate::gpusim::kernel_cost::csr_inter_cost_with_imb(
+        &whole, width, gpu, Some(1.15),
+    ));
+    it
+}
+
+/// Aggregate-only cost of PCGCN at a given width (Fig. 3b twin).
+pub fn pcgcn_aggregate_cost(
+    d: &Decomposition,
+    width: usize,
+    tile: usize,
+    gpu: &GpuModel,
+) -> IterationCost {
+    let mut it = IterationCost::default();
+    pcgcn_cost(d, width, tile, gpu, &mut it);
+    it
+}
+
+/// PCGCN's block-level mapping: the adjacency is tiled `tile x tile`; each
+/// nonempty tile is launched as its own kernel (dense if locally dense,
+/// sparse otherwise) and each tile-row's partials are merged — the extra
+/// accumulation the paper blames for PCGCN's overhead (Sec. 2.2, Fig. 3b).
+fn pcgcn_cost(d: &Decomposition, w: usize, tile: usize, gpu: &GpuModel, it: &mut IterationCost) {
+    let whole = d.whole();
+    let n = d.graph.n;
+    let tile = tile.max(2);
+
+    // occupancy map: edges per tile
+    let mut tiles: HashMap<(u32, u32), u32> = HashMap::new();
+    for (r, c, _) in whole.to_triplets() {
+        *tiles.entry(((r as usize / tile) as u32, (c as usize / tile) as u32)).or_insert(0) += 1;
+    }
+
+    // PCGCN fuses each execution mode into ONE kernel (dense pass + sparse
+    // pass) with per-tile CTAs; the overhead the paper measures is CTA
+    // scheduling per tile plus the partial-result merges.
+    const DENSE_THRESHOLD: f64 = 0.10;
+    const TILE_SCHED_US: f64 = 0.02; // CTA setup per nonempty tile
+    let mut dense_pass = KernelCost::noop(KernelKind::DenseBlock, gpu);
+    let mut sparse_pass = KernelCost::noop(KernelKind::CsrInter, gpu);
+    let mut row_tiles: HashMap<u32, u32> = HashMap::new();
+    for (&(bi, _bj), &cnt) in &tiles {
+        *row_tiles.entry(bi).or_insert(0) += 1;
+        let density = cnt as f64 / (tile * tile) as f64;
+        let rows = tile.min(n);
+        if density >= DENSE_THRESHOLD {
+            // dense tile GEMM: (tile x tile) @ (tile x w)
+            let flops = (rows * rows * w * 2) as f64;
+            let bytes = ((rows * rows + 2 * rows * w) * 4) as f64;
+            dense_pass.compute_us += gpu.dense_us(flops) + TILE_SCHED_US;
+            dense_pass.memory_us += gpu.stream_us(bytes);
+            dense_pass.flops += flops;
+            dense_pass.bytes += bytes;
+            dense_pass.l2_hits += rows as u64; // tile-resident locality
+            dense_pass.l2_accesses += rows as u64 + 1;
+        } else {
+            // sparse tile: CSR over its cnt edges; within-tile locality
+            // decays as tiles grow past the L2-friendly range
+            let locality = if tile <= 64 {
+                0.92
+            } else if tile <= 512 {
+                0.85
+            } else {
+                0.6
+            };
+            let flops = (cnt as usize * w * 2) as f64;
+            let bytes = (cnt as usize * (8 + w * 4)) as f64 + (rows * 4) as f64;
+            sparse_pass.compute_us += gpu.fp32_us(flops) + TILE_SCHED_US;
+            sparse_pass.memory_us +=
+                gpu.gather_us(bytes * (1.0 - locality)) + gpu.stream_us(bytes * locality) / 2.0;
+            sparse_pass.flops += flops;
+            sparse_pass.bytes += bytes;
+            sparse_pass.l2_hits += (cnt as f64 * locality) as u64;
+            sparse_pass.l2_accesses += cnt as u64;
+        }
+    }
+    for mut pass in [dense_pass, sparse_pass] {
+        pass.time_us = gpu.launch_us + pass.compute_us.max(pass.memory_us);
+        it.add_kernel(&pass);
+    }
+    // merge partial results: one accumulation kernel that reads every
+    // extra per-tile partial and folds it into the output (read partial +
+    // read acc + write acc = 12 B/element)
+    let mut merge_bytes = 0f64;
+    for (_bi, cnt) in row_tiles {
+        if cnt > 1 {
+            merge_bytes += (cnt - 1) as f64 * (tile.min(n) * w * 12) as f64;
+        }
+    }
+    if merge_bytes > 0.0 {
+        it.add_overhead(gpu.launch_us + gpu.stream_us(merge_bytes));
+    }
+}
+
+/// Preprocess a graph the way `strategy` would (reorder + decompose) and
+/// report wall time spent, mirroring the Sec. 6.3 overhead study.
+pub fn preprocess(
+    strategy: Strategy,
+    g: &Graph,
+    propagation: Propagation,
+    community: usize,
+    seed: u64,
+) -> (Decomposition, PreprocessTimes) {
+    let t0 = std::time::Instant::now();
+    let reorder = strategy.reorder();
+    let perm = reorder.order(g, community, seed);
+    let reorder_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let graph = g.relabel(&perm);
+    let matrix = match propagation {
+        Propagation::GcnNormalized => Csr::gcn_normalized(&graph),
+        Propagation::PlainAdjacency => Csr::adjacency(&graph),
+    };
+    let (intra, inter) = matrix.split_block_diagonal(community);
+    let decompose_secs = t1.elapsed().as_secs_f64();
+
+    (
+        Decomposition { graph, perm, intra, inter, community },
+        PreprocessTimes { reorder_secs, decompose_secs },
+    )
+}
+
+/// Wall time spent in the two preprocessing stages (Sec. 6.3).
+#[derive(Debug, Clone, Copy)]
+pub struct PreprocessTimes {
+    pub reorder_secs: f64,
+    pub decompose_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::gpusim::A100;
+    use crate::coordinator::modeldims::ModelKind;
+    use crate::util::rng::Rng;
+
+    fn decomp(n: usize, seed: u64) -> Decomposition {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition(n, 16, 0.5, 0.01, &mut rng);
+        let mut sh: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut sh);
+        let (d, _) = preprocess(Strategy::AdaptGear, &g.relabel(&sh), Propagation::GcnNormalized, 16, 1);
+        d
+    }
+
+    fn dims() -> ModelDims {
+        ModelDims::new(ModelKind::Gcn, 64, 32, 8)
+    }
+
+    #[test]
+    fn adaptgear_beats_frameworks() {
+        let d = decomp(2048, 1);
+        let ours = forward_cost(Strategy::AdaptGear, &d, &dims(), &A100, 64).total_us();
+        let dgl = forward_cost(Strategy::Dgl, &d, &dims(), &A100, 64).total_us();
+        let pyg = forward_cost(Strategy::Pyg, &d, &dims(), &A100, 64).total_us();
+        assert!(ours < dgl, "ours {ours} dgl {dgl}");
+        assert!(ours < pyg, "ours {ours} pyg {pyg}");
+    }
+
+    #[test]
+    fn ablation_o3_never_loses_to_o2() {
+        // O3 picks the per-subgraph minimum over a candidate set that
+        // includes O2's static choice, so it can never be slower.
+        for seed in 1..5 {
+            let d = decomp(2048, seed);
+            let o2 = forward_cost(Strategy::AdaptGearO2, &d, &dims(), &A100, 64).total_us();
+            let o3 = forward_cost(Strategy::AdaptGear, &d, &dims(), &A100, 64).total_us();
+            assert!(o3 <= o2 * 1.001, "o3 {o3} vs o2 {o2} (seed {seed})");
+        }
+    }
+
+    #[test]
+    fn ablation_o3_beats_o1_beyond_l2() {
+        // subgraph-level wins once the aggregate working set exceeds L2
+        // (paper regime); V100's 6 MB L2 with wide GIN-style aggregates,
+        // on a genuinely community-heavy graph (cf. Fig. 4's affinities —
+        // the molecule collections are ~0.9 intra)
+        let mut rng = Rng::new(2);
+        let g = planted_partition(8192, 16, 0.6, 0.0002, &mut rng);
+        let mut sh: Vec<u32> = (0..8192).collect();
+        rng.shuffle(&mut sh);
+        let (d, _) =
+            preprocess(Strategy::AdaptGear, &g.relabel(&sh), Propagation::GcnNormalized, 16, 1);
+        let dims = ModelDims::new(ModelKind::Gin, 512, 64, 8);
+        let o1 = forward_cost(Strategy::AdaptGearO1, &d, &dims, &crate::gpusim::V100, 0).total_us();
+        let o3 = forward_cost(Strategy::AdaptGear, &d, &dims, &crate::gpusim::V100, 0).total_us();
+        assert!(o3 < o1, "o3 {o3} vs o1 {o1}");
+    }
+
+    #[test]
+    fn pcgcn_higher_hit_rate_but_slower() {
+        // Fig. 3b's tension, in its regime: first-layer aggregate at the
+        // raw feature width, working set larger than L2
+        let d = decomp(4096, 3);
+        let width = 1024;
+        let pcgcn = super::pcgcn_aggregate_cost(&d, width, 16, &crate::gpusim::V100);
+        let gnna = super::gnnadvisor_aggregate_cost(&d, width, &crate::gpusim::V100);
+        assert!(pcgcn.l2_hit_rate() > gnna.l2_hit_rate(),
+            "pcgcn hit {} vs gnna {}", pcgcn.l2_hit_rate(), gnna.l2_hit_rate());
+        assert!(pcgcn.kernel_launches > gnna.kernel_launches);
+        assert!(pcgcn.total_us() > gnna.total_us(),
+            "pcgcn {} vs gnna {}", pcgcn.total_us(), gnna.total_us());
+    }
+
+    #[test]
+    fn adaptgear_beats_pcgcn_at_any_tile() {
+        let d = decomp(8192, 4);
+        let dims = ModelDims::new(ModelKind::Gin, 256, 64, 8);
+        let gpu = &crate::gpusim::V100;
+        let ours = forward_cost(Strategy::AdaptGear, &d, &dims, gpu, 0).total_us();
+        let best_pcgcn = [16usize, 64, 256, 1024]
+            .iter()
+            .map(|&t| forward_cost(Strategy::Pcgcn, &d, &dims, gpu, t).total_us())
+            .fold(f64::INFINITY, f64::min);
+        assert!(ours < best_pcgcn, "ours {ours} vs pcgcn {best_pcgcn}");
+    }
+
+    #[test]
+    fn preprocess_measures_both_stages() {
+        let mut rng = Rng::new(5);
+        let g = planted_partition(512, 16, 0.4, 0.01, &mut rng);
+        let (d, t) = preprocess(Strategy::AdaptGear, &g, Propagation::GcnNormalized, 16, 1);
+        assert!(t.reorder_secs >= 0.0 && t.decompose_secs > 0.0);
+        assert_eq!(d.graph.n, 512);
+    }
+
+    #[test]
+    fn strategy_reorders() {
+        assert_eq!(Strategy::Dgl.reorder(), Reorder::Identity);
+        assert_eq!(Strategy::GnnAdvisorRabbit.reorder(), Reorder::Rabbit);
+        assert_eq!(Strategy::AdaptGear.reorder(), Reorder::Metis);
+    }
+}

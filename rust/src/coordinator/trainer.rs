@@ -1,0 +1,323 @@
+//! The PJRT training loop: monitor (adaptive selector) then locked
+//! steady-state training, entirely in Rust over AOT artifacts.
+//!
+//! Hot-loop discipline: graph operands and feature/label literals are
+//! packed once; each step feeds the previous step's decomposed output
+//! literals straight back as parameters, so steady state performs no
+//! host-side tensor packing at all.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gpusim::{kernel_cost, GpuModel};
+use crate::kernels::pack::{pack_features, pack_kernel_operands, pack_labels_mask};
+use crate::kernels::{KernelKind, KernelPair};
+use crate::partition::Decomposition;
+use crate::runtime::{literal_scalar_f32, BucketInfo, Engine, Manifest, Tensor};
+use crate::util::rng::Rng;
+
+use super::modeldims::ModelKind;
+use super::selector::{select, KernelTimer, Role, SelectorReport};
+
+/// Timing source for the adaptive selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// Deterministic gpusim surface (figure benches; no GPU here).
+    Sim,
+    /// Real PJRT wall time of the kernel-only artifacts.
+    Wall,
+}
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: ModelKind,
+    pub steps: usize,
+    pub lr: f32,
+    /// Timed repeats per candidate during monitoring.
+    pub monitor_repeats: usize,
+    pub clock: Clock,
+    /// GPU model driving the Sim clock.
+    pub gpu: &'static GpuModel,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: ModelKind::Gcn,
+            steps: 100,
+            lr: 0.05,
+            monitor_repeats: 3,
+            clock: Clock::Sim,
+            gpu: &crate::gpusim::A100,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub bucket: String,
+    pub chosen: KernelPair,
+    pub selector: SelectorReport,
+    pub losses: Vec<f32>,
+    pub step_secs: Vec<f64>,
+    pub compile_secs: f64,
+    pub pack_secs: f64,
+    /// Trained parameters (host copies) for reuse with [`forward`].
+    pub params: Vec<Tensor>,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+    pub fn mean_step_secs(&self) -> f64 {
+        crate::util::stats::mean(&self.step_secs)
+    }
+}
+
+/// Selector timer driven by the gpusim cost model.
+struct SimTimer<'a> {
+    d: &'a Decomposition,
+    gpu: &'static GpuModel,
+}
+
+impl KernelTimer for SimTimer<'_> {
+    fn time_us(&mut self, role: Role, kind: KernelKind, width: usize) -> f64 {
+        let m = match role {
+            Role::Intra => &self.d.intra,
+            Role::Inter => &self.d.inter,
+        };
+        kernel_cost(kind, m, width, self.d.community, self.gpu).time_us
+    }
+}
+
+/// Selector timer that executes kernel-only artifacts through PJRT.
+///
+/// Perf note (EXPERIMENTS.md §Perf L3-1): the first call per candidate
+/// warms the executable (XLA compile + first run) OUTSIDE the timed
+/// window, so the monitor measures steady-state kernel time — on the real
+/// system compile happens once per topology, not per training run.
+struct PjrtTimer<'a> {
+    engine: &'a Engine,
+    bucket: BucketInfo,
+    ops: HashMap<KernelKind, Vec<Tensor>>,
+    x: Tensor,
+    warmed: std::collections::HashSet<KernelKind>,
+}
+
+impl KernelTimer for PjrtTimer<'_> {
+    fn time_us(&mut self, _role: Role, kind: KernelKind, _width: usize) -> f64 {
+        let name = Manifest::kernel_name(kind.as_str(), &self.bucket.name);
+        let mut args: Vec<Tensor> = self.ops[&kind].clone();
+        args.push(self.x.clone());
+        if self.warmed.insert(kind) && self.engine.run(&name, &args).is_err() {
+            return f64::INFINITY; // unrunnable candidate never wins
+        }
+        let t0 = Instant::now();
+        match self.engine.run(&name, &args) {
+            Ok(_) => t0.elapsed().as_secs_f64() * 1e6,
+            Err(_) => f64::INFINITY,
+        }
+    }
+}
+
+/// Train a decomposed graph end to end. `x` is `[n, f_data]` row-major.
+pub fn train(
+    engine: &Engine,
+    d: &Decomposition,
+    x: &[f32],
+    f_data: usize,
+    labels: &[i32],
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let n = d.graph.n;
+    let needed_edges = d.intra.nnz().max(d.inter.nnz());
+    let bucket = engine
+        .manifest
+        .fit_bucket(n, needed_edges)
+        .with_context(|| {
+            format!("no AOT bucket fits n={n}, edges={needed_edges}; scale the dataset down")
+        })?
+        .clone();
+    if engine.manifest.community != d.community {
+        bail!(
+            "decomposition community {} != AOT community {}",
+            d.community,
+            engine.manifest.community
+        );
+    }
+
+    // ---- pack static operands once
+    let t_pack = Instant::now();
+    let mut ops: HashMap<KernelKind, Vec<Tensor>> = HashMap::new();
+    for kind in crate::kernels::INTRA_CANDIDATES {
+        ops.insert(kind, pack_kernel_operands(kind, &d.intra, d.community, &bucket)?);
+    }
+    for kind in crate::kernels::INTER_CANDIDATES {
+        ops.insert(kind, pack_kernel_operands(kind, &d.inter, d.community, &bucket)?);
+    }
+    let x_packed = pack_features(x, n, f_data, &bucket)?;
+    let (labels_t, mask_t) = pack_labels_mask(labels, &bucket)?;
+    let pack_secs = t_pack.elapsed().as_secs_f64();
+
+    // ---- monitoring phase (adaptive selector)
+    let widths = [bucket.features, bucket.hidden];
+    let selector = match cfg.clock {
+        Clock::Sim => {
+            let mut t = SimTimer { d, gpu: cfg.gpu };
+            select(&mut t, &widths, cfg.monitor_repeats)
+        }
+        Clock::Wall => {
+            let mut t = PjrtTimer {
+                engine,
+                bucket: bucket.clone(),
+                ops: ops.clone(),
+                x: x_packed.clone(),
+                warmed: std::collections::HashSet::new(),
+            };
+            select(&mut t, &widths, cfg.monitor_repeats)
+        }
+    };
+    let chosen = selector.chosen;
+
+    // ---- load the winning train-step artifact
+    let name = Manifest::train_name(
+        cfg.model.as_str(),
+        chosen.intra_str(),
+        &chosen.inter.to_string(),
+        &bucket.name,
+    );
+    let meta = engine.manifest.get(&name)?.clone();
+    let t_compile = Instant::now();
+    let loaded = engine.load(&name)?;
+    let compile_secs = t_compile.elapsed().as_secs_f64();
+
+    // ---- initialize parameters from the manifest's operand specs
+    let graph_arg_start = meta
+        .inputs
+        .iter()
+        .position(|s| {
+            s.name.starts_with("intra_") || s.name.starts_with("inter_") || s.name == "x"
+        })
+        .unwrap_or(meta.inputs.len());
+    let mut rng = Rng::new(cfg.seed ^ 0x9a9a);
+    let mut params: Vec<xla::Literal> = Vec::new();
+    for spec in &meta.inputs[..graph_arg_start] {
+        params.push(init_param(&spec.shape, &mut rng)?.to_literal()?);
+    }
+    let n_params = params.len();
+
+    // ---- pack static (non-parameter) literals once
+    let mut static_lits: Vec<xla::Literal> = Vec::new();
+    let intra_ops = chosen.intra.map(|k| &ops[&k]);
+    if let Some(iops) = intra_ops {
+        for t in iops {
+            static_lits.push(t.to_literal()?);
+        }
+    }
+    for t in &ops[&chosen.inter] {
+        static_lits.push(t.to_literal()?);
+    }
+    static_lits.push(x_packed.to_literal()?);
+    static_lits.push(labels_t.to_literal()?);
+    static_lits.push(mask_t.to_literal()?);
+    static_lits.push(Tensor::scalar_f32(cfg.lr).to_literal()?);
+    if n_params + static_lits.len() != meta.inputs.len() {
+        bail!(
+            "operand mismatch for {name}: {} params + {} statics != {} inputs",
+            n_params,
+            static_lits.len(),
+            meta.inputs.len()
+        );
+    }
+
+    // ---- training hot loop: outputs feed back as parameters
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut step_secs = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        let t0 = Instant::now();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(meta.inputs.len());
+        args.extend(params.iter());
+        args.extend(static_lits.iter());
+        let mut outputs = engine.run_literals(&loaded, &args, meta.outputs.len())?;
+        let loss = outputs.pop().expect("train_step returns params + loss");
+        losses.push(literal_scalar_f32(&loss)?);
+        params = outputs;
+        step_secs.push(t0.elapsed().as_secs_f64());
+    }
+
+    let params = literals_to_tensors(&params, &meta.inputs[..n_params])?;
+    Ok(TrainReport {
+        bucket: bucket.name.clone(),
+        chosen,
+        selector,
+        losses,
+        step_secs,
+        compile_secs,
+        pack_secs,
+        params,
+    })
+}
+
+/// Glorot-uniform for matrices, zeros for vectors/scalars — mirrors
+/// `python/compile/model.py::init_params`.
+fn init_param(shape: &[usize], rng: &mut Rng) -> Result<Tensor> {
+    let count: usize = shape.iter().product();
+    let data = if shape.len() == 2 {
+        let scale = (6.0 / (shape[0] + shape[1]) as f64).sqrt() as f32;
+        (0..count).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+    } else {
+        vec![0.0f32; count]
+    };
+    Ok(Tensor::f32(data, shape))
+}
+
+/// Run a forward (inference) pass with trained parameters.
+pub fn forward(
+    engine: &Engine,
+    d: &Decomposition,
+    chosen: KernelPair,
+    model: ModelKind,
+    params: &[Tensor],
+    x: &[f32],
+    f_data: usize,
+) -> Result<Vec<f32>> {
+    let n = d.graph.n;
+    let needed_edges = d.intra.nnz().max(d.inter.nnz());
+    let bucket = engine
+        .manifest
+        .fit_bucket(n, needed_edges)
+        .context("no bucket fits")?
+        .clone();
+    let name = Manifest::fwd_name(
+        model.as_str(),
+        chosen.intra_str(),
+        &chosen.inter.to_string(),
+        &bucket.name,
+    );
+    let mut args: Vec<Tensor> = params.to_vec();
+    if let Some(ik) = chosen.intra {
+        args.extend(pack_kernel_operands(ik, &d.intra, d.community, &bucket)?);
+        args.extend(pack_kernel_operands(chosen.inter, &d.inter, d.community, &bucket)?);
+    } else {
+        args.extend(pack_kernel_operands(chosen.inter, &d.whole(), d.community, &bucket)?);
+    }
+    args.push(pack_features(x, n, f_data, &bucket)?);
+    let out = engine.run(&name, &args)?;
+    Ok(out[0].to_vec::<f32>()?)
+}
+
+/// Extract trained parameters from a report-producing run for reuse in
+/// `forward` (params come back as literals; convert to host tensors).
+pub fn literals_to_tensors(lits: &[xla::Literal], specs: &[crate::runtime::TensorSpec]) -> Result<Vec<Tensor>> {
+    lits.iter()
+        .zip(specs)
+        .map(|(l, s)| Ok(Tensor::f32(l.to_vec::<f32>()?, &s.shape)))
+        .collect()
+}

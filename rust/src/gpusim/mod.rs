@@ -1,0 +1,18 @@
+//! GPU cost simulator — the performance surface standing in for the
+//! paper's V100/A100 testbeds (DESIGN.md Sec. 1-2).
+//!
+//! Numerics run for real through PJRT; *time* for the evaluation figures
+//! comes from this module: hardware models ([`model`]), a set-associative
+//! L2 simulator ([`cache`]), per-kernel roofline costs with trace-driven
+//! gather modeling ([`kernel_cost`]), and iteration assembly
+//! ([`timeline`]).
+
+pub mod cache;
+pub mod kernel_cost;
+pub mod model;
+pub mod timeline;
+
+pub use cache::CacheSim;
+pub use kernel_cost::{kernel_cost, KernelCost};
+pub use model::{GpuModel, A100, V100};
+pub use timeline::{elementwise_us, gemm_us, merge_us, IterationCost};

@@ -1,0 +1,127 @@
+//! GPU hardware models (Table 3's two testbeds).
+//!
+//! No GPU exists in this environment, so kernel "time" for the figures
+//! comes from an analytic roofline + simulated L2 model (DESIGN.md Sec. 2).
+//! Constants below are public datasheet numbers for the Tesla V100 and the
+//! Ampere A100; the *relative* behaviour (who wins at which density, V100
+//! vs A100 gaps) is what the reproduction validates, not absolute time.
+
+/// One GPU configuration.
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub name: &'static str,
+    pub sm_count: usize,
+    pub clock_ghz: f64,
+    /// L2 capacity in bytes (V100 6 MiB, A100 40 MiB).
+    pub l2_bytes: usize,
+    /// HBM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Effective bandwidth fraction for non-coalesced (gather) traffic.
+    pub gather_efficiency: f64,
+    /// FP32 vector throughput, TFLOP/s (CUDA cores).
+    pub fp32_tflops: f64,
+    /// Dense-engine throughput for the dense-block kernel, TFLOP/s:
+    /// A100 rides TF32 tensor cores, the V100 falls back to CUDA cores
+    /// for f32 (paper Sec. 3.2, "Dense-based kernel").
+    pub dense_tflops: f64,
+    /// Kernel launch overhead, microseconds.
+    pub launch_us: f64,
+    /// Extra per-edge atomic-update cost, nanoseconds (COO kernel).
+    pub atomic_ns: f64,
+    /// Fixed per-operator framework overhead, microseconds (used by the
+    /// DGL/PyG baseline strategies).
+    pub framework_op_us: f64,
+}
+
+/// Tesla V100 (80 SMs) — Table 3, left column.
+pub const V100: GpuModel = GpuModel {
+    name: "V100",
+    sm_count: 80,
+    clock_ghz: 1.53,
+    l2_bytes: 6 * 1024 * 1024,
+    mem_bw_gbps: 900.0,
+    gather_efficiency: 0.25,
+    fp32_tflops: 15.7,
+    dense_tflops: 15.7, // no f32 tensor-core path before Ampere
+    launch_us: 6.0,
+    atomic_ns: 0.25,
+    framework_op_us: 7.0,
+};
+
+/// Ampere A100 (108 SMs) — Table 3, right column.
+pub const A100: GpuModel = GpuModel {
+    name: "A100",
+    sm_count: 108,
+    clock_ghz: 1.41,
+    l2_bytes: 40 * 1024 * 1024,
+    mem_bw_gbps: 1555.0,
+    gather_efficiency: 0.28,
+    fp32_tflops: 19.5,
+    dense_tflops: 156.0, // TF32 tensor cores
+    launch_us: 5.0,
+    atomic_ns: 0.15,
+    framework_op_us: 6.0,
+};
+
+impl GpuModel {
+    pub fn by_name(name: &str) -> Option<&'static GpuModel> {
+        match name.to_ascii_lowercase().as_str() {
+            "v100" => Some(&V100),
+            "a100" => Some(&A100),
+            _ => None,
+        }
+    }
+
+    /// Time to stream `bytes` at full (coalesced) bandwidth, microseconds.
+    pub fn stream_us(&self, bytes: f64) -> f64 {
+        bytes / (self.mem_bw_gbps * 1e3)
+    }
+
+    /// Time to gather `bytes` with scattered accesses that *miss* L2.
+    pub fn gather_us(&self, bytes: f64) -> f64 {
+        bytes / (self.mem_bw_gbps * 1e3 * self.gather_efficiency)
+    }
+
+    /// Time for `flops` on the vector pipeline, microseconds.
+    pub fn fp32_us(&self, flops: f64) -> f64 {
+        flops / (self.fp32_tflops * 1e6)
+    }
+
+    /// Time for `flops` on the dense engine, microseconds.
+    pub fn dense_us(&self, flops: f64) -> f64 {
+        flops / (self.dense_tflops * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuModel::by_name("a100").unwrap().sm_count, 108);
+        assert_eq!(GpuModel::by_name("V100").unwrap().sm_count, 80);
+        assert!(GpuModel::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn a100_dense_engine_dominates_v100() {
+        // the architectural fact the paper leans on for the dense kernel
+        assert!(A100.dense_tflops / V100.dense_tflops > 5.0);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        // 1555 GB/s -> 1 GB in ~643 us
+        let us = A100.stream_us(1e9);
+        assert!((us - 643.0).abs() < 2.0, "{us}");
+        // 156 TFLOPs -> 1 GFLOP in ~6.4 us
+        let us = A100.dense_us(1e9);
+        assert!((us - 6.41).abs() < 0.1, "{us}");
+    }
+
+    #[test]
+    fn gather_slower_than_stream() {
+        assert!(V100.gather_us(1e6) > V100.stream_us(1e6) * 3.0);
+    }
+}

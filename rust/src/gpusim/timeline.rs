@@ -1,0 +1,116 @@
+//! Iteration timeline assembly: compose kernel launches, dense update
+//! GEMMs, result merges, and framework overheads into one training
+//! iteration's simulated time.
+
+use super::kernel_cost::KernelCost;
+use super::model::GpuModel;
+
+/// Cost of a dense GEMM `[m,k] @ [k,n]` on the vector pipeline (the
+/// Update/MLP phase — identical across strategies, so it is modeled on the
+/// same fp32 path for everyone).
+pub fn gemm_us(m: usize, k: usize, n: usize, gpu: &GpuModel) -> f64 {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let bytes = ((m * k + k * n + m * n) * 4) as f64;
+    gpu.launch_us + gpu.fp32_us(flops).max(gpu.stream_us(bytes))
+}
+
+/// Cost of an elementwise op over `elems` f32 values (bias/ReLU/etc.).
+pub fn elementwise_us(elems: usize, gpu: &GpuModel) -> f64 {
+    let bytes = (elems * 8) as f64; // read + write
+    gpu.launch_us + gpu.stream_us(bytes)
+}
+
+/// Cost of merging partial aggregate results (PCGCN-style block-level
+/// accumulation): one extra read+write of the output per merge.
+pub fn merge_us(rows: usize, f: usize, gpu: &GpuModel) -> f64 {
+    gpu.launch_us + gpu.stream_us((rows * f * 12) as f64) // 2 reads + 1 write
+}
+
+/// Accumulated cost of one training iteration.
+#[derive(Debug, Clone, Default)]
+pub struct IterationCost {
+    pub aggregate_us: f64,
+    pub update_us: f64,
+    pub overhead_us: f64,
+    pub l2_hits: u64,
+    pub l2_accesses: u64,
+    pub kernel_launches: usize,
+}
+
+impl IterationCost {
+    pub fn add_kernel(&mut self, c: &KernelCost) {
+        self.aggregate_us += c.time_us;
+        self.l2_hits += c.l2_hits;
+        self.l2_accesses += c.l2_accesses;
+        self.kernel_launches += 1;
+    }
+
+    pub fn add_update(&mut self, us: f64) {
+        self.update_us += us;
+    }
+
+    pub fn add_overhead(&mut self, us: f64) {
+        self.overhead_us += us;
+    }
+
+    pub fn total_us(&self) -> f64 {
+        self.aggregate_us + self.update_us + self.overhead_us
+    }
+
+    pub fn l2_hit_rate(&self) -> f64 {
+        if self.l2_accesses == 0 {
+            1.0
+        } else {
+            self.l2_hits as f64 / self.l2_accesses as f64
+        }
+    }
+
+    /// Training uses forward + backward; the backward aggregate re-runs
+    /// the same kernels on the transposed (symmetric) matrix and the
+    /// update GEMMs roughly double. `scale(2.x)` models that uniformly so
+    /// strategy *ratios* are preserved.
+    pub fn scaled(&self, factor: f64) -> IterationCost {
+        IterationCost {
+            aggregate_us: self.aggregate_us * factor,
+            update_us: self.update_us * factor,
+            overhead_us: self.overhead_us * factor,
+            ..*self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::model::A100;
+    use crate::kernels::KernelKind;
+
+    #[test]
+    fn gemm_cost_scales() {
+        let small = gemm_us(256, 32, 32, &A100);
+        let big = gemm_us(4096, 512, 512, &A100);
+        assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn iteration_accumulates() {
+        let mut it = IterationCost::default();
+        it.add_kernel(&KernelCost::noop(KernelKind::Coo, &A100));
+        it.add_kernel(&KernelCost::noop(KernelKind::CsrIntra, &A100));
+        it.add_update(gemm_us(64, 8, 8, &A100));
+        it.add_overhead(3.0);
+        assert_eq!(it.kernel_launches, 2);
+        assert!(it.total_us() > 2.0 * A100.launch_us + 3.0);
+    }
+
+    #[test]
+    fn scaling_preserves_ratio() {
+        let mut a = IterationCost::default();
+        a.add_update(10.0);
+        let mut b = IterationCost::default();
+        b.add_update(20.0);
+        let r0 = b.total_us() / a.total_us();
+        let r1 = b.scaled(2.5).total_us() / a.scaled(2.5).total_us();
+        assert!((r0 - r1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,384 @@
+//! Weighted CSR matrix — the workhorse execution format.
+//!
+//! Rows are destinations, columns are sources (`y = A @ x` aggregates
+//! neighbor features into each destination row), matching the kernel
+//! contract in `python/compile/kernels/ref.py`.
+
+use super::Graph;
+
+/// Compressed sparse row matrix over `n x m` (square for adjacencies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from directed weighted triplets `(dst, src, w)`.
+    /// Duplicate coordinates are summed.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: impl IntoIterator<Item = (u32, u32, f32)>,
+    ) -> Csr {
+        let mut items: Vec<(u32, u32, f32)> = triplets.into_iter().collect();
+        items.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // coalesce duplicates
+        let mut coalesced: Vec<(u32, u32, f32)> = Vec::with_capacity(items.len());
+        for (r, c, w) in items {
+            debug_assert!((r as usize) < n_rows && (c as usize) < n_cols);
+            match coalesced.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += w,
+                _ => coalesced.push((r, c, w)),
+            }
+        }
+        let mut row_ptr = vec![0u32; n_rows + 1];
+        for &(r, _, _) in &coalesced {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..n_rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr {
+            n_rows,
+            n_cols,
+            row_ptr,
+            col_idx: coalesced.iter().map(|&(_, c, _)| c).collect(),
+            vals: coalesced.iter().map(|&(_, _, w)| w).collect(),
+        }
+    }
+
+    /// Symmetric unweighted adjacency of an undirected graph (no loops).
+    pub fn adjacency(g: &Graph) -> Csr {
+        Csr::from_triplets(
+            g.n,
+            g.n,
+            g.edges()
+                .iter()
+                .flat_map(|&(u, v)| [(u, v, 1.0f32), (v, u, 1.0f32)]),
+        )
+    }
+
+    /// GCN propagation matrix `D^-1/2 (A + I) D^-1/2` (symmetric).
+    pub fn gcn_normalized(g: &Graph) -> Csr {
+        let mut deg = vec![1.0f64; g.n]; // +1 for the self loop
+        for &(u, v) in g.edges() {
+            deg[u as usize] += 1.0;
+            deg[v as usize] += 1.0;
+        }
+        let inv_sqrt: Vec<f64> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+        let w = |a: u32, b: u32| (inv_sqrt[a as usize] * inv_sqrt[b as usize]) as f32;
+        let loops = (0..g.n as u32).map(|i| (i, i, w(i, i)));
+        let edges = g
+            .edges()
+            .iter()
+            .flat_map(|&(u, v)| [(u, v, w(u, v)), (v, u, w(v, u))]);
+        Csr::from_triplets(g.n, g.n, loops.chain(edges))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Dense materialization (tests / small oracles only).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut out = vec![vec![0.0f32; self.n_cols]; self.n_rows];
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &w) in cols.iter().zip(vals) {
+                out[r][c as usize] += w;
+            }
+        }
+        out
+    }
+
+    /// `y = A @ x` where x is row-major `[n_cols, f]` — serial reference.
+    pub fn spmm(&self, x: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_cols * f);
+        let mut y = vec![0.0f32; self.n_rows * f];
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            let out = &mut y[r * f..(r + 1) * f];
+            for (&c, &w) in cols.iter().zip(vals) {
+                let src = &x[c as usize * f..(c as usize + 1) * f];
+                for (o, s) in out.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+        }
+        y
+    }
+
+    /// Exact transpose.
+    pub fn transpose(&self) -> Csr {
+        let mut trips = Vec::with_capacity(self.nnz());
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &w) in cols.iter().zip(vals) {
+                trips.push((c, r as u32, w));
+            }
+        }
+        Csr::from_triplets(self.n_cols, self.n_rows, trips)
+    }
+
+    /// True if `A == A.T` up to `tol` on values.
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.row_ptr != self.row_ptr || t.col_idx != self.col_idx {
+            return false;
+        }
+        self.vals
+            .iter()
+            .zip(&t.vals)
+            .all(|(a, b)| (a - b).abs() <= tol)
+    }
+
+    /// Replace each row's weights with `1/deg(row)` — turns the SUM
+    /// kernels into MEAN aggregation (GraphSAGE-mean style) without a new
+    /// kernel (see python/compile/kernels/reduce_ops.py).
+    pub fn row_mean_normalized(&self) -> Csr {
+        let mut out = self.clone();
+        for r in 0..self.n_rows {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            let deg = (hi - lo) as f32;
+            if deg > 0.0 {
+                for v in &mut out.vals[lo..hi] {
+                    *v = 1.0 / deg;
+                }
+            }
+        }
+        out
+    }
+
+    /// Aggregate-max reference: `y[r] = max over neighbors c of x[c]`,
+    /// zeros for empty neighborhoods (native twin of the Pallas
+    /// `csr_max_aggregate` kernel).
+    pub fn spmm_max(&self, x: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_cols * f);
+        let mut y = vec![0.0f32; self.n_rows * f];
+        for r in 0..self.n_rows {
+            let (cols, _) = self.row(r);
+            if cols.is_empty() {
+                continue;
+            }
+            let out = &mut y[r * f..(r + 1) * f];
+            out.fill(f32::NEG_INFINITY);
+            for &c in cols {
+                let src = &x[c as usize * f..(c as usize + 1) * f];
+                for (o, s) in out.iter_mut().zip(src) {
+                    *o = o.max(*s);
+                }
+            }
+        }
+        y
+    }
+
+    /// COO triplets `(dst, src, w)` in row order.
+    pub fn to_triplets(&self) -> Vec<(u32, u32, f32)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &w) in cols.iter().zip(vals) {
+                out.push((r as u32, c, w));
+            }
+        }
+        out
+    }
+
+    /// Split into (intra, inter) by diagonal blocks of width `community`
+    /// — AdaptGear Sec. 3.3: an edge whose endpoints share a block index
+    /// is intra-community, everything else is inter-community.
+    pub fn split_block_diagonal(&self, community: usize) -> (Csr, Csr) {
+        assert_eq!(self.n_rows, self.n_cols);
+        let mut intra = Vec::new();
+        let mut inter = Vec::new();
+        for (r, c, w) in self.to_triplets() {
+            if (r as usize) / community == (c as usize) / community {
+                intra.push((r, c, w));
+            } else {
+                inter.push((r, c, w));
+            }
+        }
+        (
+            Csr::from_triplets(self.n_rows, self.n_cols, intra),
+            Csr::from_triplets(self.n_rows, self.n_cols, inter),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn sample_graph(rng: &mut Rng, max_n: usize) -> Graph {
+        let n = rng.usize_below(max_n - 2) + 2;
+        let m = rng.usize_below(3 * n);
+        Graph::from_edges(
+            n,
+            (0..m).map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32)),
+        )
+    }
+
+    #[test]
+    fn from_triplets_coalesces() {
+        let c = Csr::from_triplets(2, 2, vec![(0, 1, 1.0), (0, 1, 2.0), (1, 0, 5.0)]);
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.row(0), (&[1u32][..], &[3.0f32][..]));
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        prop::check("adjacency symmetric", 30, |rng| {
+            let g = sample_graph(rng, 64);
+            prop::require(Csr::adjacency(&g).is_symmetric(0.0), "A != A.T")
+        });
+    }
+
+    #[test]
+    fn gcn_normalized_is_symmetric_with_loops() {
+        prop::check("gcn norm symmetric", 30, |rng| {
+            let g = sample_graph(rng, 64);
+            let a = Csr::gcn_normalized(&g);
+            prop::require(a.is_symmetric(1e-6), "A_hat != A_hat.T")?;
+            prop::require(a.nnz() == g.directed_edge_count() + g.n, "nnz = 2E + N")
+        });
+    }
+
+    #[test]
+    fn gcn_normalized_rows_bounded() {
+        // every entry of A_hat is in (0, 1]
+        let g = Graph::from_edges(5, vec![(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)]);
+        let a = Csr::gcn_normalized(&g);
+        assert!(a.vals.iter().all(|&v| v > 0.0 && v <= 1.0));
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        prop::check("spmm vs dense", 20, |rng| {
+            let g = sample_graph(rng, 32);
+            let a = Csr::gcn_normalized(&g);
+            let f = 3;
+            let x: Vec<f32> = (0..g.n * f).map(|_| rng.normal_f32()).collect();
+            let y = a.spmm(&x, f);
+            let dense = a.to_dense();
+            for r in 0..g.n {
+                for j in 0..f {
+                    let mut expect = 0.0f32;
+                    for c in 0..g.n {
+                        expect += dense[r][c] * x[c * f + j];
+                    }
+                    prop::require_close(
+                        y[r * f + j] as f64,
+                        expect as f64,
+                        1e-4,
+                        "spmm element",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop::check("transpose twice = id", 20, |rng| {
+            let g = sample_graph(rng, 48);
+            let a = Csr::gcn_normalized(&g);
+            prop::require(a.transpose().transpose() == a, "(A.T).T != A")
+        });
+    }
+
+    #[test]
+    fn split_preserves_all_edges() {
+        prop::check("split partitions nnz", 20, |rng| {
+            let g = sample_graph(rng, 64);
+            let a = Csr::gcn_normalized(&g);
+            let (intra, inter) = a.split_block_diagonal(16);
+            prop::require(intra.nnz() + inter.nnz() == a.nnz(), "nnz conserved")?;
+            // intra strictly block diagonal, inter strictly off-diagonal
+            for (r, c, _) in intra.to_triplets() {
+                prop::require(r as usize / 16 == c as usize / 16, "intra on diagonal")?;
+            }
+            for (r, c, _) in inter.to_triplets() {
+                prop::require(r as usize / 16 != c as usize / 16, "inter off diagonal")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_normalization_rows_sum_to_one() {
+        prop::check("mean rows sum to 1", 15, |rng| {
+            let g = sample_graph(rng, 48);
+            let m = Csr::adjacency(&g).row_mean_normalized();
+            for r in 0..m.n_rows {
+                let (_, vals) = m.row(r);
+                if !vals.is_empty() {
+                    let s: f32 = vals.iter().sum();
+                    prop::require_close(s as f64, 1.0, 1e-5, "row sum")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spmm_max_matches_bruteforce() {
+        prop::check("max aggregate vs dense", 15, |rng| {
+            let g = sample_graph(rng, 32);
+            let a = Csr::adjacency(&g);
+            let f = 3;
+            let x: Vec<f32> = (0..g.n * f).map(|_| rng.normal_f32()).collect();
+            let y = a.spmm_max(&x, f);
+            let dense = a.to_dense();
+            for r in 0..g.n {
+                for j in 0..f {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut any = false;
+                    for c in 0..g.n {
+                        if dense[r][c] != 0.0 {
+                            best = best.max(x[c * f + j]);
+                            any = true;
+                        }
+                    }
+                    let expect = if any { best } else { 0.0 };
+                    prop::require_close(y[r * f + j] as f64, expect as f64, 1e-6, "max elem")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_sums_back_to_whole() {
+        let g = Graph::from_edges(40, (0..39u32).map(|i| (i, i + 1)));
+        let a = Csr::gcn_normalized(&g);
+        let (intra, inter) = a.split_block_diagonal(16);
+        let x: Vec<f32> = (0..40 * 2).map(|i| i as f32 * 0.1).collect();
+        let whole = a.spmm(&x, 2);
+        let parts: Vec<f32> = intra
+            .spmm(&x, 2)
+            .iter()
+            .zip(inter.spmm(&x, 2))
+            .map(|(a, b)| a + b)
+            .collect();
+        for (w, p) in whole.iter().zip(&parts) {
+            assert!((w - p).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Table 1 dataset registry.
+//!
+//! The paper evaluates on 15 public graph datasets. This environment has
+//! no network access, so each dataset is *synthesized* to the same scale
+//! (#vertices, #edges, #features, #classes — Table 1) with a planted
+//! community structure whose intra/inter density split matches the
+//! qualitative regime the paper reports in Fig. 4 (DESIGN.md Sec. 2 lists
+//! this substitution). Vertex ids are shuffled after generation so the
+//! community structure is latent — exactly what METIS-style reordering
+//! must re-discover (Fig. 3a).
+
+use super::generate::planted_partition;
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Community width used throughout the evaluation (paper Sec. 5).
+pub const COMMUNITY: usize = 16;
+
+/// Static description of one Table 1 dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetSpec {
+    /// Full dataset name as in Table 1.
+    pub name: &'static str,
+    /// Two-letter code used on the paper's figure x-axes.
+    pub code: &'static str,
+    pub vertices: usize,
+    /// Directed edge count as reported in Table 1 (2x undirected).
+    pub edges: usize,
+    pub features: usize,
+    pub classes: usize,
+    /// Fraction of edges that fall inside communities under the planted
+    /// ordering — citation graphs are community-heavy, social graphs less
+    /// so, and molecule collections (Yeast/SW/OV/TW/DD/PROTEINS) are
+    /// near-block-diagonal unions of small graphs.
+    pub affinity: f64,
+}
+
+impl DatasetSpec {
+    /// Average density of the full adjacency matrix (Fig. 4's "full").
+    pub fn density(&self) -> f64 {
+        self.edges as f64 / (self.vertices as f64 * self.vertices as f64)
+    }
+
+    /// Synthesize the graph at full Table 1 scale.
+    pub fn build(&self, seed: u64) -> Dataset {
+        self.build_scaled(1.0, seed)
+    }
+
+    /// Synthesize with vertex count scaled by `scale` (edges scale with
+    /// the planted probabilities). Used to keep interpret-mode runs inside
+    /// an AOT bucket while retaining the density regime.
+    pub fn build_scaled(&self, scale: f64, seed: u64) -> Dataset {
+        assert!(scale > 0.0 && scale <= 1.0);
+        let n = ((self.vertices as f64 * scale) as usize).max(2 * COMMUNITY);
+        let n = n.div_ceil(COMMUNITY) * COMMUNITY; // multiple of community
+        let e_und = (self.edges as f64 * scale / 2.0).max(1.0);
+
+        // translate (edge budget, affinity) into planted probabilities
+        let intra_target = e_und * self.affinity;
+        let inter_target = e_und - intra_target;
+        let intra_pairs = (n / COMMUNITY) as f64 * (COMMUNITY * (COMMUNITY - 1) / 2) as f64;
+        let total_pairs = (n as f64) * (n as f64 - 1.0) / 2.0;
+        let inter_pairs = (total_pairs - intra_pairs).max(1.0);
+        let p_intra = (intra_target / intra_pairs).min(0.95);
+        let p_inter = (inter_target / inter_pairs).min(0.95);
+
+        let mut rng = Rng::new(seed ^ fxhash(self.name));
+        let planted = planted_partition(n, COMMUNITY, p_intra, p_inter, &mut rng);
+
+        // hide the structure behind a random relabeling
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+        let graph = planted.relabel(&perm);
+
+        Dataset { spec: *self, graph, seed }
+    }
+}
+
+/// A materialized dataset: topology + deterministic feature/label synth.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub graph: Graph,
+    seed: u64,
+}
+
+impl Dataset {
+    /// Node features `[n, f]` row-major: a noisy class-indicative signal
+    /// so that GNN training has something learnable to fit.
+    pub fn features(&self, f: usize) -> Vec<f32> {
+        let labels = self.labels();
+        let mut rng = Rng::new(self.seed ^ 0xfea7);
+        let n = self.graph.n;
+        let mut x = vec![0.0f32; n * f];
+        for v in 0..n {
+            let c = labels[v] as usize;
+            for j in 0..f {
+                let signal = if j % self.spec.classes == c { 1.0 } else { 0.0 };
+                x[v * f + j] = signal + 0.35 * rng.normal_f32();
+            }
+        }
+        x
+    }
+
+    /// Labels in `0..classes`, correlated with latent community (so
+    /// aggregation genuinely helps — mirrors homophilous real datasets).
+    pub fn labels(&self) -> Vec<i32> {
+        let n = self.graph.n;
+        let mut rng = Rng::new(self.seed ^ 0x1ab5);
+        // recover latent community from the generation seed path: labels
+        // are assigned per-vertex with community-block correlation before
+        // the relabeling is applied, so we re-derive them the same way.
+        // Simpler and equivalent: assign by connected neighborhoods via a
+        // hash of the vertex's sorted adjacency; here we use a majority
+        // propagation from a random seeding, which yields homophilous
+        // labels on ANY topology.
+        let classes = self.spec.classes.max(2);
+        let mut labels: Vec<i32> = (0..n).map(|_| rng.below(classes as u64) as i32).collect();
+        let adj = self.graph.adjacency();
+        // two sweeps of majority label propagation => homophily
+        for _ in 0..2 {
+            for v in 0..n {
+                if adj[v].is_empty() {
+                    continue;
+                }
+                let mut counts = vec![0u32; classes];
+                for &u in &adj[v] {
+                    counts[labels[u as usize] as usize] += 1;
+                }
+                let best = counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(_, c)| *c)
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                labels[v] = best;
+            }
+        }
+        labels
+    }
+
+    /// Train mask: all real vertices participate (padding handled later).
+    pub fn full_mask(&self) -> Vec<f32> {
+        vec![1.0; self.graph.n]
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+/// The 15 evaluation datasets (Table 1), with affinity per DESIGN.md.
+pub const DATASETS: &[DatasetSpec] = &[
+    DatasetSpec { name: "cora", code: "CO", vertices: 2708, edges: 10556, features: 1433, classes: 7, affinity: 0.62 },
+    DatasetSpec { name: "citeseer", code: "CI", vertices: 3327, edges: 9228, features: 3703, classes: 6, affinity: 0.65 },
+    DatasetSpec { name: "pubmed", code: "PU", vertices: 19717, edges: 99203, features: 500, classes: 3, affinity: 0.52 },
+    DatasetSpec { name: "PROTEINS_full", code: "PR", vertices: 43466, edges: 162088, features: 29, classes: 2, affinity: 0.88 },
+    DatasetSpec { name: "artist", code: "AR", vertices: 50515, edges: 1638396, features: 100, classes: 12, affinity: 0.30 },
+    DatasetSpec { name: "ppi", code: "PP", vertices: 56944, edges: 818716, features: 50, classes: 121, affinity: 0.35 },
+    DatasetSpec { name: "soc-BlogCatalog", code: "SB", vertices: 88784, edges: 2093195, features: 128, classes: 39, affinity: 0.25 },
+    DatasetSpec { name: "com-amazon", code: "CA", vertices: 334863, edges: 1851744, features: 96, classes: 22, affinity: 0.70 },
+    DatasetSpec { name: "DD", code: "DD", vertices: 334925, edges: 1686092, features: 89, classes: 2, affinity: 0.90 },
+    DatasetSpec { name: "amazon0601", code: "AM06", vertices: 403394, edges: 3387388, features: 96, classes: 22, affinity: 0.66 },
+    DatasetSpec { name: "amazon0505", code: "AM05", vertices: 410236, edges: 4878874, features: 96, classes: 22, affinity: 0.64 },
+    DatasetSpec { name: "TWITTER-Real-Graph-Partial", code: "TW", vertices: 580768, edges: 1435116, features: 1323, classes: 2, affinity: 0.92 },
+    DatasetSpec { name: "Yeast", code: "YE", vertices: 1710902, edges: 3636546, features: 74, classes: 2, affinity: 0.94 },
+    DatasetSpec { name: "SW-620H", code: "SW", vertices: 1888584, edges: 3944206, features: 66, classes: 2, affinity: 0.94 },
+    DatasetSpec { name: "OVCAR-8H", code: "OV", vertices: 1889542, edges: 3946402, features: 66, classes: 2, affinity: 0.94 },
+];
+
+/// Look up a dataset by name or figure code (case-insensitive).
+pub fn find(name: &str) -> Option<&'static DatasetSpec> {
+    let lower = name.to_ascii_lowercase();
+    DATASETS
+        .iter()
+        .find(|d| d.name.to_ascii_lowercase() == lower || d.code.to_ascii_lowercase() == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table1_scale() {
+        assert_eq!(DATASETS.len(), 15);
+        let cora = find("cora").unwrap();
+        assert_eq!(cora.vertices, 2708);
+        assert_eq!(cora.edges, 10556);
+        let ov = find("OV").unwrap();
+        assert_eq!(ov.vertices, 1889542);
+    }
+
+    #[test]
+    fn build_scaled_hits_edge_budget() {
+        let d = find("pubmed").unwrap().build_scaled(0.05, 7);
+        let n = d.graph.n;
+        assert!(n >= 32 && n % COMMUNITY == 0);
+        // directed edges should be within 2x of the scaled Table 1 target
+        let target = 99203.0 * 0.05;
+        let got = d.graph.directed_edge_count() as f64;
+        assert!(got > target * 0.4 && got < target * 2.2, "got {got}, target {target}");
+    }
+
+    #[test]
+    fn shuffling_hides_block_structure() {
+        // without reordering, the intra-block edge fraction should be far
+        // below the planted affinity
+        let d = find("citeseer").unwrap().build_scaled(0.2, 3);
+        let intra = d
+            .graph
+            .edges()
+            .iter()
+            .filter(|&&(u, v)| u as usize / COMMUNITY == v as usize / COMMUNITY)
+            .count();
+        let frac = intra as f64 / d.graph.edge_count().max(1) as f64;
+        assert!(frac < 0.2, "planted structure leaked: intra frac {frac}");
+    }
+
+    #[test]
+    fn labels_are_homophilous() {
+        let d = find("cora").unwrap().build_scaled(0.2, 5);
+        let labels = d.labels();
+        let mut same = 0usize;
+        for &(u, v) in d.graph.edges() {
+            if labels[u as usize] == labels[v as usize] {
+                same += 1;
+            }
+        }
+        let frac = same as f64 / d.graph.edge_count().max(1) as f64;
+        assert!(frac > 0.5, "homophily too weak: {frac}");
+    }
+
+    #[test]
+    fn features_are_class_indicative() {
+        let d = find("cora").unwrap().build_scaled(0.1, 6);
+        let labels = d.labels();
+        let f = 14;
+        let x = d.features(f);
+        // mean activation on the label-aligned column should dominate
+        let mut aligned = 0.0f64;
+        let mut other = 0.0f64;
+        let mut na = 0usize;
+        let mut no = 0usize;
+        for v in 0..d.graph.n {
+            for j in 0..f {
+                if j % d.spec.classes == labels[v] as usize {
+                    aligned += x[v * f + j] as f64;
+                    na += 1;
+                } else {
+                    other += x[v * f + j] as f64;
+                    no += 1;
+                }
+            }
+        }
+        assert!(aligned / na as f64 > other / no as f64 + 0.5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = find("cora").unwrap().build_scaled(0.1, 9);
+        let b = find("cora").unwrap().build_scaled(0.1, 9);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.labels(), b.labels());
+    }
+}

@@ -1,0 +1,122 @@
+//! Block-diagonal dense storage for intra-community subgraphs — the
+//! operand format of the dense/MXU kernel (paper Sec. 3.2, "Dense-based
+//! kernel").
+
+use super::csr::Csr;
+
+/// `[n_blocks, c, c]` row-major dense blocks along the diagonal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseBlocks {
+    pub n_blocks: usize,
+    pub community: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseBlocks {
+    pub fn zeros(n_blocks: usize, community: usize) -> DenseBlocks {
+        DenseBlocks { n_blocks, community, data: vec![0.0; n_blocks * community * community] }
+    }
+
+    /// Densify a block-diagonal CSR (panics if any entry escapes its
+    /// diagonal block — callers split first).
+    pub fn from_block_diagonal_csr(a: &Csr, community: usize) -> DenseBlocks {
+        assert_eq!(a.n_rows % community, 0, "rows not a multiple of community");
+        let n_blocks = a.n_rows / community;
+        let mut out = DenseBlocks::zeros(n_blocks, community);
+        for (r, c, w) in a.to_triplets() {
+            let (r, c) = (r as usize, c as usize);
+            let b = r / community;
+            assert_eq!(b, c / community, "entry ({r},{c}) escapes its diagonal block");
+            let lr = r % community;
+            let lc = c % community;
+            out.data[(b * community + lr) * community + lc] += w;
+        }
+        out
+    }
+
+    #[inline]
+    pub fn block(&self, b: usize) -> &[f32] {
+        let sz = self.community * self.community;
+        &self.data[b * sz..(b + 1) * sz]
+    }
+
+    /// Number of stored scalars (the paper's dense-format memory cost).
+    pub fn stored_elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Nonzero count (for density accounting).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// `y = A @ x`, x row-major `[n, f]` — serial reference.
+    pub fn spmm(&self, x: &[f32], f: usize) -> Vec<f32> {
+        let n = self.n_blocks * self.community;
+        assert_eq!(x.len(), n * f);
+        let c = self.community;
+        let mut y = vec![0.0f32; n * f];
+        for b in 0..self.n_blocks {
+            let blk = self.block(b);
+            for lr in 0..c {
+                let out = &mut y[(b * c + lr) * f..(b * c + lr + 1) * f];
+                for lc in 0..c {
+                    let w = blk[lr * c + lc];
+                    if w != 0.0 {
+                        let src = &x[(b * c + lc) * f..(b * c + lc + 1) * f];
+                        for (o, s) in out.iter_mut().zip(src) {
+                            *o += w * s;
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_matches_csr_spmm() {
+        prop::check("dense block spmm == csr spmm", 20, |rng: &mut Rng| {
+            let n = (rng.usize_below(4) + 1) * 16;
+            let m = rng.usize_below(3 * n);
+            let g = Graph::from_edges(
+                n,
+                (0..m).map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32)),
+            );
+            let a = Csr::gcn_normalized(&g);
+            let (intra, _) = a.split_block_diagonal(16);
+            let blocks = DenseBlocks::from_block_diagonal_csr(&intra, 16);
+            let f = 2;
+            let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+            let y1 = intra.spmm(&x, f);
+            let y2 = blocks.spmm(&x, f);
+            for (a, b) in y1.iter().zip(&y2) {
+                prop::require_close(*a as f64, *b as f64, 1e-4, "spmm elem")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "escapes its diagonal block")]
+    fn rejects_off_diagonal_entries() {
+        let a = Csr::from_triplets(32, 32, vec![(0, 20, 1.0)]);
+        DenseBlocks::from_block_diagonal_csr(&a, 16);
+    }
+
+    #[test]
+    fn stored_vs_nnz() {
+        let a = Csr::from_triplets(32, 32, vec![(0, 1, 1.0), (17, 16, 2.0)]);
+        let b = DenseBlocks::from_block_diagonal_csr(&a, 16);
+        assert_eq!(b.stored_elements(), 2 * 16 * 16);
+        assert_eq!(b.nnz(), 2);
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic graph generators.
+//!
+//! * [`rmat`] — the R-MAT recursive generator the paper uses for the
+//!   density sweep in Fig. 2b.
+//! * [`planted_partition`] — community-structured graphs whose intra /
+//!   inter densities are directly controlled; used to synthesize the
+//!   Table 1 dataset stand-ins with Fig. 4's density split.
+//! * [`erdos_renyi`] — unstructured baseline noise.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// R-MAT (Chakrabarti et al., 2004) with the canonical (a,b,c,d) =
+/// (0.57, 0.19, 0.19, 0.05) skew. Generates `m` directed samples and
+/// keeps the resulting simple undirected graph (duplicates collapse, as
+/// in the paper's RMAT workloads).
+pub fn rmat(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    rmat_with_skew(n, m, (0.57, 0.19, 0.19), rng)
+}
+
+pub fn rmat_with_skew(n: usize, m: usize, (a, b, c): (f64, f64, f64), rng: &mut Rng) -> Graph {
+    assert!(n.is_power_of_two() || n > 0);
+    let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
+    let mut pairs = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..levels {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u < n && v < n {
+            pairs.push((u as u32, v as u32));
+        }
+    }
+    Graph::from_edges(n, pairs)
+}
+
+/// Planted-partition model: `n` vertices in communities of `community`
+/// contiguous vertices; each intra-community pair is an edge with
+/// probability `p_intra`, each inter-community pair with `p_inter`.
+///
+/// Sampling is O(edges) (geometric skipping), so million-vertex Table 1
+/// stand-ins generate in milliseconds.
+pub fn planted_partition(
+    n: usize,
+    community: usize,
+    p_intra: f64,
+    p_inter: f64,
+    rng: &mut Rng,
+) -> Graph {
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+
+    // Intra-community edges: iterate pairs inside each block via skipping.
+    let block_pairs = community * (community - 1) / 2;
+    for b in 0..n.div_ceil(community) {
+        let base = b * community;
+        let width = community.min(n - base);
+        let local_pairs = width * (width - 1) / 2;
+        sample_pairs(local_pairs.min(block_pairs), p_intra, rng, |k| {
+            let (i, j) = unrank_pair(k);
+            pairs.push(((base + i) as u32, (base + j) as u32));
+        });
+    }
+
+    // Inter-community edges: sample over all n*(n-1)/2 pairs, reject intra.
+    let total_pairs = n * (n - 1) / 2;
+    sample_pairs(total_pairs, p_inter, rng, |k| {
+        let (i, j) = unrank_pair(k);
+        if i / community != j / community {
+            pairs.push((i as u32, j as u32));
+        }
+    });
+
+    Graph::from_edges(n, pairs)
+}
+
+/// Erdős–Rényi G(n, p) via geometric skipping.
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+    let mut pairs = Vec::new();
+    sample_pairs(n * (n - 1) / 2, p, rng, |k| {
+        let (i, j) = unrank_pair(k);
+        pairs.push((i as u32, j as u32));
+    });
+    Graph::from_edges(n, pairs)
+}
+
+/// Visit each of `total` slots independently with probability `p`,
+/// in O(expected hits) via geometric jumps.
+fn sample_pairs(total: usize, p: f64, rng: &mut Rng, mut visit: impl FnMut(usize)) {
+    if p <= 0.0 || total == 0 {
+        return;
+    }
+    if p >= 1.0 {
+        for k in 0..total {
+            visit(k);
+        }
+        return;
+    }
+    let log1mp = (1.0 - p).ln();
+    let mut k: f64 = 0.0;
+    loop {
+        let u = rng.f64().max(1e-300);
+        k += (u.ln() / log1mp).floor() + 1.0;
+        if k > total as f64 {
+            break;
+        }
+        visit(k as usize - 1);
+    }
+}
+
+/// Inverse of `k = j*(j-1)/2 + i` for `i < j` — ranks all unordered pairs.
+fn unrank_pair(k: usize) -> (usize, usize) {
+    // j = floor((1 + sqrt(1 + 8k)) / 2)
+    let j = ((1.0 + (1.0 + 8.0 * k as f64).sqrt()) / 2.0).floor() as usize;
+    let i = k - j * (j - 1) / 2;
+    (i, j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn unrank_is_bijective_prefix() {
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..1000 {
+            let (i, j) = unrank_pair(k);
+            assert!(i < j, "k={k} -> ({i},{j})");
+            assert!(seen.insert((i, j)));
+        }
+    }
+
+    #[test]
+    fn rmat_respects_bounds() {
+        let mut rng = Rng::new(1);
+        let g = rmat(256, 2048, &mut rng);
+        assert_eq!(g.n, 256);
+        assert!(g.edge_count() > 0);
+        assert!(g.edges().iter().all(|&(u, v)| (u as usize) < 256 && (v as usize) < 256));
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        // with the canonical skew, low-id vertices should be denser
+        let mut rng = Rng::new(2);
+        let g = rmat(1024, 16384, &mut rng);
+        let deg = g.degrees();
+        let head: u32 = deg[..128].iter().sum();
+        let tail: u32 = deg[896..].iter().sum();
+        assert!(head > tail * 2, "head {head} vs tail {tail}");
+    }
+
+    #[test]
+    fn planted_partition_density_split() {
+        let mut rng = Rng::new(3);
+        let g = planted_partition(512, 16, 0.5, 0.005, &mut rng);
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for &(u, v) in g.edges() {
+            if u / 16 == v / 16 {
+                intra += 1;
+            } else {
+                inter += 1;
+            }
+        }
+        // 32 blocks * C(16,2)=120 pairs * 0.5 ≈ 1920 intra edges
+        assert!(intra > 1500 && intra < 2400, "intra {intra}");
+        // inter pairs ≈ 512*511/2 - 32*120 ≈ 127k, * 0.005 ≈ 635
+        assert!(inter > 400 && inter < 900, "inter {inter}");
+    }
+
+    #[test]
+    fn er_density_close_to_p() {
+        prop::check("ER density ~ p", 5, |rng| {
+            let n = 300;
+            let p = 0.02;
+            let g = erdos_renyi(n, p, rng);
+            let expect = p * (n * (n - 1) / 2) as f64;
+            let got = g.edge_count() as f64;
+            prop::require(
+                (got - expect).abs() < expect * 0.35 + 10.0,
+                &format!("edges {got} vs expected {expect}"),
+            )
+        });
+    }
+
+    #[test]
+    fn zero_probability_yields_empty() {
+        let mut rng = Rng::new(4);
+        let g = planted_partition(128, 16, 0.0, 0.0, &mut rng);
+        assert_eq!(g.edge_count(), 0);
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let g1 = rmat(128, 512, &mut Rng::new(9));
+        let g2 = rmat(128, 512, &mut Rng::new(9));
+        assert_eq!(g1, g2);
+    }
+}

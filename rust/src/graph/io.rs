@@ -1,0 +1,152 @@
+//! Graph IO: whitespace edge-list text (the common public-dataset format)
+//! and a compact binary cache for large synthesized graphs.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Graph;
+
+/// Read a whitespace/comment edge list (`# comments`, `src dst` per line).
+/// Vertex count is `max id + 1` unless a `# nodes: N` header is present.
+pub fn read_edge_list(path: impl AsRef<Path>) -> Result<Graph> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    parse_edge_list(BufReader::new(file))
+}
+
+pub fn parse_edge_list(reader: impl BufRead) -> Result<Graph> {
+    let mut pairs = Vec::new();
+    let mut n_hint: Option<usize> = None;
+    let mut max_id = 0u32;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix("nodes:") {
+                n_hint = Some(v.trim().parse().context("bad '# nodes:' header")?);
+            }
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            bail!("line {}: expected 'src dst'", lineno + 1);
+        };
+        let u: u32 = a.parse().with_context(|| format!("line {}: bad id {a:?}", lineno + 1))?;
+        let v: u32 = b.parse().with_context(|| format!("line {}: bad id {b:?}", lineno + 1))?;
+        max_id = max_id.max(u).max(v);
+        pairs.push((u, v));
+    }
+    let n = n_hint.unwrap_or(max_id as usize + 1);
+    if n <= max_id as usize {
+        bail!("'# nodes: {n}' smaller than max id {max_id}");
+    }
+    Ok(Graph::from_edges(n, pairs))
+}
+
+/// Write edge-list text with a `# nodes:` header (round-trips exactly).
+pub fn write_edge_list(g: &Graph, path: impl AsRef<Path>) -> Result<()> {
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# nodes: {}", g.n)?;
+    for &(u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+const MAGIC: &[u8; 8] = b"ADGGRPH1";
+
+/// Compact little-endian binary format: magic, n, m, then m (u32,u32) pairs.
+pub fn write_binary(g: &Graph, path: impl AsRef<Path>) -> Result<()> {
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.n as u64).to_le_bytes())?;
+    w.write_all(&(g.edge_count() as u64).to_le_bytes())?;
+    for &(u, v) in g.edges() {
+        w.write_all(&u.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_binary(path: impl AsRef<Path>) -> Result<Graph> {
+    let mut file = std::fs::File::open(path.as_ref())?;
+    let mut header = [0u8; 24];
+    file.read_exact(&mut header)?;
+    if &header[..8] != MAGIC {
+        bail!("not an AdaptGear binary graph (bad magic)");
+    }
+    let n = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+    let m = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; m * 8];
+    file.read_exact(&mut buf)?;
+    let pairs = buf.chunks_exact(8).map(|c| {
+        (
+            u32::from_le_bytes(c[0..4].try_into().unwrap()),
+            u32::from_le_bytes(c[4..8].try_into().unwrap()),
+        )
+    });
+    Ok(Graph::from_edges(n, pairs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_edge_list_with_comments() {
+        let text = "# a comment\n# nodes: 6\n0 1\n2 3\n\n4 5\n";
+        let g = parse_edge_list(Cursor::new(text)).unwrap();
+        assert_eq!(g.n, 6);
+        assert_eq!(g.edge_count(), 3);
+    }
+
+    #[test]
+    fn infers_node_count() {
+        let g = parse_edge_list(Cursor::new("0 9\n")).unwrap();
+        assert_eq!(g.n, 10);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_edge_list(Cursor::new("0\n")).is_err());
+        assert!(parse_edge_list(Cursor::new("a b\n")).is_err());
+        assert!(parse_edge_list(Cursor::new("# nodes: 2\n0 5\n")).is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let g = Graph::from_edges(8, vec![(0, 1), (2, 7), (3, 4)]);
+        let dir = std::env::temp_dir().join("adaptgear_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        write_edge_list(&g, &path).unwrap();
+        assert_eq!(read_edge_list(&path).unwrap(), g);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = Graph::from_edges(100, (0..99u32).map(|i| (i, i + 1)));
+        let dir = std::env::temp_dir().join("adaptgear_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.bin");
+        write_binary(&g, &path).unwrap();
+        assert_eq!(read_binary(&path).unwrap(), g);
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let dir = std::env::temp_dir().join("adaptgear_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"definitely not a graph file").unwrap();
+        assert!(read_binary(&path).is_err());
+    }
+}

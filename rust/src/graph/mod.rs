@@ -1,0 +1,175 @@
+//! Graph substrate: formats, generators, datasets, statistics, IO.
+//!
+//! The canonical in-memory form is [`Graph`] — an undirected simple graph
+//! as a deduplicated edge set. Execution formats (CSR / COO / dense
+//! blocks) are materialized on demand, mirroring the storage formats the
+//! paper contrasts in Fig. 2a.
+
+pub mod csr;
+pub mod datasets;
+pub mod dense_block;
+pub mod generate;
+pub mod io;
+pub mod stats;
+
+pub use csr::Csr;
+pub use dense_block::DenseBlocks;
+
+/// Undirected simple graph: `n` vertices, unique `(min, max)` edge pairs,
+/// no self-loops (self-loops enter through GCN normalization instead).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub n: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl Graph {
+    /// Build from arbitrary pairs: normalizes orientation, drops
+    /// self-loops and duplicates.
+    pub fn from_edges(n: usize, pairs: impl IntoIterator<Item = (u32, u32)>) -> Graph {
+        let mut edges: Vec<(u32, u32)> = pairs
+            .into_iter()
+            .filter(|&(u, v)| u != v)
+            .map(|(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        if let Some(&(_, vmax)) = edges.iter().max_by_key(|&&(_, v)| v) {
+            assert!((vmax as usize) < n, "edge endpoint {vmax} out of range (n={n})");
+        }
+        Graph { n, edges }
+    }
+
+    pub fn empty(n: usize) -> Graph {
+        Graph { n, edges: Vec::new() }
+    }
+
+    /// Undirected edge count (each pair counted once).
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Directed edge count (both orientations), as reported in Table 1.
+    pub fn directed_edge_count(&self) -> usize {
+        self.edges.len() * 2
+    }
+
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Density of the full adjacency matrix: nnz / n^2 (symmetric, no
+    /// self-loops), matching the paper's Fig. 4 metric.
+    pub fn density(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.directed_edge_count() as f64 / (self.n as f64 * self.n as f64)
+    }
+
+    /// Per-vertex degree (undirected).
+    pub fn degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n];
+        for &(u, v) in &self.edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        deg
+    }
+
+    /// Apply a vertex relabeling: vertex `v` becomes `perm[v]`.
+    /// `perm` must be a permutation of `0..n`.
+    pub fn relabel(&self, perm: &[u32]) -> Graph {
+        assert_eq!(perm.len(), self.n);
+        debug_assert!(is_permutation(perm));
+        Graph::from_edges(
+            self.n,
+            self.edges.iter().map(|&(u, v)| (perm[u as usize], perm[v as usize])),
+        )
+    }
+
+    /// Restrict to the first `k` vertices of the current ordering (used to
+    /// downsample large datasets into an AOT shape bucket).
+    pub fn induced_prefix(&self, k: usize) -> Graph {
+        assert!(k <= self.n);
+        Graph {
+            n: k,
+            edges: self
+                .edges
+                .iter()
+                .copied()
+                .filter(|&(u, v)| (u as usize) < k && (v as usize) < k)
+                .collect(),
+        }
+    }
+
+    /// Adjacency lists (symmetric).
+    pub fn adjacency(&self) -> Vec<Vec<u32>> {
+        let mut adj = vec![Vec::new(); self.n];
+        for &(u, v) in &self.edges {
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        adj
+    }
+}
+
+pub(crate) fn is_permutation(perm: &[u32]) -> bool {
+    let mut seen = vec![false; perm.len()];
+    for &p in perm {
+        let p = p as usize;
+        if p >= perm.len() || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedups_and_orients() {
+        let g = Graph::from_edges(4, vec![(1, 0), (0, 1), (2, 2), (3, 1)]);
+        assert_eq!(g.edges(), &[(0, 1), (1, 3)]);
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(g.directed_edge_count(), 4);
+    }
+
+    #[test]
+    fn degrees_symmetric() {
+        let g = Graph::from_edges(4, vec![(0, 1), (1, 2), (1, 3)]);
+        assert_eq!(g.degrees(), vec![1, 3, 1, 1]);
+    }
+
+    #[test]
+    fn density_matches_hand_count() {
+        let g = Graph::from_edges(4, vec![(0, 1), (2, 3)]);
+        assert!((g.density() - 4.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let g = Graph::from_edges(4, vec![(0, 1), (1, 2)]);
+        let perm = vec![3, 2, 1, 0];
+        let r = g.relabel(&perm);
+        assert_eq!(r.edges(), &[(1, 2), (2, 3)]);
+        assert_eq!(r.edge_count(), g.edge_count());
+    }
+
+    #[test]
+    fn induced_prefix_drops_outside_edges() {
+        let g = Graph::from_edges(5, vec![(0, 1), (1, 4), (2, 3)]);
+        let s = g.induced_prefix(4);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.edges(), &[(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        Graph::from_edges(2, vec![(0, 5)]);
+    }
+}

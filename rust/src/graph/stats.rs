@@ -1,0 +1,148 @@
+//! Density statistics over (sub)graphs — the measurements behind Fig. 3a
+//! (reordering heat-grid) and Fig. 4 (full/intra/inter density bars).
+
+use super::Graph;
+
+/// Density triple for a decomposed graph under a given ordering.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DensitySplit {
+    /// nnz / n^2 over the full matrix.
+    pub full: f64,
+    /// intra-community nnz / intra-block capacity.
+    pub intra: f64,
+    /// inter-community nnz / off-diagonal capacity.
+    pub inter: f64,
+    pub intra_edges: usize,
+    pub inter_edges: usize,
+}
+
+/// Compute the Fig. 4 density split for `g` under its CURRENT ordering
+/// with diagonal blocks of width `community`.
+pub fn density_split(g: &Graph, community: usize) -> DensitySplit {
+    let n = g.n;
+    let mut intra = 0usize;
+    let mut inter = 0usize;
+    for &(u, v) in g.edges() {
+        if (u as usize) / community == (v as usize) / community {
+            intra += 1;
+        } else {
+            inter += 1;
+        }
+    }
+    let blocks = n.div_ceil(community);
+    let intra_capacity = (blocks * community * community).min(n * n) as f64;
+    let total = (n * n) as f64;
+    DensitySplit {
+        full: g.directed_edge_count() as f64 / total,
+        intra: 2.0 * intra as f64 / intra_capacity,
+        inter: 2.0 * inter as f64 / (total - intra_capacity).max(1.0),
+        intra_edges: intra,
+        inter_edges: inter,
+    }
+}
+
+/// Coarse heat-grid of the adjacency matrix: nnz per `grid x grid` cell,
+/// normalized to [0,1]. Drives the Fig. 3a visualization.
+pub fn adjacency_heat_grid(g: &Graph, grid: usize) -> Vec<Vec<f64>> {
+    let mut cells = vec![vec![0usize; grid]; grid];
+    let n = g.n.max(1);
+    for &(u, v) in g.edges() {
+        let i = (u as usize * grid) / n;
+        let j = (v as usize * grid) / n;
+        cells[i][j] += 1;
+        cells[j][i] += 1;
+    }
+    let max = cells.iter().flatten().copied().max().unwrap_or(1).max(1) as f64;
+    cells
+        .iter()
+        .map(|row| row.iter().map(|&c| c as f64 / max).collect())
+        .collect()
+}
+
+/// Render a heat grid as ASCII (for figure output in the bench harness).
+pub fn render_heat_grid(cells: &[Vec<f64>]) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut out = String::new();
+    for row in cells {
+        for &v in row {
+            let idx = ((v * (RAMP.len() - 1) as f64).round() as usize).min(RAMP.len() - 1);
+            out.push(RAMP[idx] as char);
+            out.push(RAMP[idx] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Degree distribution summary (min/mean/max) — dataset characterization.
+pub fn degree_summary(g: &Graph) -> (u32, f64, u32) {
+    let deg = g.degrees();
+    let min = deg.iter().copied().min().unwrap_or(0);
+    let max = deg.iter().copied().max().unwrap_or(0);
+    let mean = if g.n == 0 { 0.0 } else { deg.iter().map(|&d| d as f64).sum::<f64>() / g.n as f64 };
+    (min, mean, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_split_pure_intra() {
+        // a path inside one 16-block: all edges intra
+        let g = Graph::from_edges(32, (0..15u32).map(|i| (i, i + 1)));
+        let s = density_split(&g, 16);
+        assert_eq!(s.intra_edges, 15);
+        assert_eq!(s.inter_edges, 0);
+        assert!(s.intra > 0.0 && s.inter == 0.0);
+    }
+
+    #[test]
+    fn density_split_pure_inter() {
+        let g = Graph::from_edges(32, vec![(0, 16), (1, 17), (2, 31)]);
+        let s = density_split(&g, 16);
+        assert_eq!(s.intra_edges, 0);
+        assert_eq!(s.inter_edges, 3);
+    }
+
+    #[test]
+    fn split_edges_sum_to_total() {
+        let g = Graph::from_edges(64, (0..63u32).map(|i| (i, i + 1)));
+        let s = density_split(&g, 16);
+        assert_eq!(s.intra_edges + s.inter_edges, g.edge_count());
+    }
+
+    #[test]
+    fn heat_grid_diagonal_for_block_graph() {
+        // dense blocks on the diagonal produce a hot diagonal
+        let mut edges = Vec::new();
+        for b in 0..4u32 {
+            for i in 0..8 {
+                for j in (i + 1)..8 {
+                    edges.push((b * 8 + i, b * 8 + j));
+                }
+            }
+        }
+        let g = Graph::from_edges(32, edges);
+        let cells = adjacency_heat_grid(&g, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    assert!(cells[i][j] > 0.9);
+                } else {
+                    assert_eq!(cells[i][j], 0.0);
+                }
+            }
+        }
+        let art = render_heat_grid(&cells);
+        assert_eq!(art.lines().count(), 4);
+    }
+
+    #[test]
+    fn degree_summary_path() {
+        let g = Graph::from_edges(4, vec![(0, 1), (1, 2), (2, 3)]);
+        let (min, mean, max) = degree_summary(&g);
+        assert_eq!((min, max), (1, 2));
+        assert!((mean - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Subgraph-level kernels: taxonomy ([`spec`]), native CPU executions
+//! mirroring the GPU schedules ([`native`]), and AOT operand packing
+//! ([`pack`]).
+
+pub mod native;
+pub mod pack;
+pub mod spec;
+
+pub use spec::{KernelKind, KernelPair, INTER_CANDIDATES, INTRA_CANDIDATES};

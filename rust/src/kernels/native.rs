@@ -1,0 +1,164 @@
+//! Native (CPU) executions of the four kernel schedules.
+//!
+//! Each function walks memory in the same order its GPU/Pallas twin does,
+//! so (a) the figure benches can run full Table 1 scales that do not fit
+//! an AOT bucket, and (b) `gpusim` replays the identical access pattern
+//! when estimating cache behaviour. Numerical parity with the Pallas
+//! kernels is enforced by `rust/tests/kernel_parity.rs` through the PJRT
+//! path.
+
+use crate::graph::{Csr, DenseBlocks};
+
+/// Vertex-parallel CSR aggregate (inter-community schedule): row blocks of
+/// 16, each row walks its neighbor list and gathers feature rows.
+pub fn csr_inter_spmm(a: &Csr, x: &[f32], f: usize) -> Vec<f32> {
+    assert_eq!(x.len(), a.n_cols * f);
+    let mut y = vec![0.0f32; a.n_rows * f];
+    for block_start in (0..a.n_rows).step_by(16) {
+        for r in block_start..(block_start + 16).min(a.n_rows) {
+            let (cols, vals) = a.row(r);
+            let out = &mut y[r * f..(r + 1) * f];
+            for (&c, &w) in cols.iter().zip(vals) {
+                let src = &x[c as usize * f..(c as usize + 1) * f];
+                for (o, s) in out.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Community-resident CSR aggregate (intra-community schedule): per
+/// community, copy the feature tile once ("shared memory"), then serve all
+/// of the community's rows from the tile. `a` must be block-diagonal.
+pub fn csr_intra_spmm(a: &Csr, x: &[f32], f: usize, community: usize) -> Vec<f32> {
+    assert_eq!(x.len(), a.n_cols * f);
+    assert_eq!(a.n_rows % community, 0);
+    let mut y = vec![0.0f32; a.n_rows * f];
+    let mut tile = vec![0.0f32; community * f];
+    for b in 0..a.n_rows / community {
+        let base = b * community;
+        // stage the community tile (the shared-memory preload)
+        tile.copy_from_slice(&x[base * f..(base + community) * f]);
+        for lr in 0..community {
+            let r = base + lr;
+            let (cols, vals) = a.row(r);
+            let out = &mut y[r * f..(r + 1) * f];
+            for (&c, &w) in cols.iter().zip(vals) {
+                let lc = c as usize - base; // panics if an edge escapes: contract violation
+                let src = &tile[lc * f..(lc + 1) * f];
+                for (o, s) in out.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Edge-parallel COO aggregate: scatter-accumulate per edge (the CPU twin
+/// of per-edge atomicAdd).
+pub fn coo_spmm(n: usize, edges: &[(u32, u32, f32)], x: &[f32], f: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * f);
+    let mut y = vec![0.0f32; n * f];
+    for &(dst, src, w) in edges {
+        let s = &x[src as usize * f..(src as usize + 1) * f];
+        let o = &mut y[dst as usize * f..(dst as usize + 1) * f];
+        for (oo, ss) in o.iter_mut().zip(s) {
+            *oo += w * ss;
+        }
+    }
+    y
+}
+
+/// Dense block-diagonal batched GEMM (MXU schedule): per community a dense
+/// (C,C)x(C,F) product including the zeros — the "invalid computation" the
+/// paper trades for regularity at high density.
+pub fn dense_block_spmm(blocks: &DenseBlocks, x: &[f32], f: usize) -> Vec<f32> {
+    blocks.spmm(x, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::graph::Graph;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng) -> (Csr, Csr, Vec<f32>, usize, usize) {
+        let n = (rng.usize_below(6) + 2) * 16;
+        let g = planted_partition(n, 16, 0.4, 0.03, rng);
+        let a = Csr::gcn_normalized(&g);
+        let (intra, inter) = a.split_block_diagonal(16);
+        let f = rng.usize_below(6) + 2;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+        (intra, inter, x, n, f)
+    }
+
+    #[test]
+    fn all_schedules_agree_with_reference() {
+        prop::check("native kernels == Csr::spmm", 15, |rng| {
+            let (intra, inter, x, n, f) = setup(rng);
+
+            let ref_inter = inter.spmm(&x, f);
+            let ref_intra = intra.spmm(&x, f);
+
+            let got_inter_csr = csr_inter_spmm(&inter, &x, f);
+            let got_inter_coo = coo_spmm(n, &inter.to_triplets(), &x, f);
+            let got_intra_csr = csr_intra_spmm(&intra, &x, f, 16);
+            let blocks = DenseBlocks::from_block_diagonal_csr(&intra, 16);
+            let got_intra_dense = dense_block_spmm(&blocks, &x, f);
+
+            for (name, got, expect) in [
+                ("csr_inter", &got_inter_csr, &ref_inter),
+                ("coo", &got_inter_coo, &ref_inter),
+                ("csr_intra", &got_intra_csr, &ref_intra),
+                ("dense_block", &got_intra_dense, &ref_intra),
+            ] {
+                for (a, b) in got.iter().zip(expect) {
+                    prop::require_close(*a as f64, *b as f64, 1e-4, name)?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn intra_and_inter_compose_to_whole() {
+        let mut rng = Rng::new(2);
+        let (intra, inter, x, n, f) = setup(&mut rng);
+        let whole = {
+            let mut t = intra.to_triplets();
+            t.extend(inter.to_triplets());
+            Csr::from_triplets(n, n, t)
+        };
+        let expect = whole.spmm(&x, f);
+        let got: Vec<f32> = csr_intra_spmm(&intra, &x, f, 16)
+            .iter()
+            .zip(csr_inter_spmm(&inter, &x, f))
+            .map(|(a, b)| a + b)
+            .collect();
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn intra_schedule_rejects_escaping_edges() {
+        let a = Csr::from_triplets(32, 32, vec![(0, 20, 1.0)]);
+        let x = vec![0.0f32; 32 * 2];
+        csr_intra_spmm(&a, &x, 2, 16);
+    }
+
+    #[test]
+    fn empty_graph_zero_output() {
+        let g = Graph::empty(32);
+        let a = Csr::adjacency(&g);
+        let x = vec![1.0f32; 32 * 3];
+        assert!(csr_inter_spmm(&a, &x, 3).iter().all(|&v| v == 0.0));
+        assert!(coo_spmm(32, &[], &x, 3).iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,288 @@
+//! Bucket packing: translate a [`Decomposition`] into the padded operand
+//! tensors an AOT artifact expects (the contract documented in
+//! `python/compile/kernels/ref.py`).
+//!
+//! Zero padding is exact for aggregate-sum: padded CSR rows are empty
+//! (row_ptr is exact), padded COO edges carry weight 0, padded vertices
+//! are masked out of the loss.
+
+use anyhow::{bail, Result};
+
+use crate::graph::Csr;
+use crate::partition::Decomposition;
+use crate::runtime::{BucketInfo, Tensor};
+
+use super::spec::KernelKind;
+
+/// Pack the intra/inter subgraph for `kind` into operand tensors, padded
+/// to `bucket`. The CSR must fit the bucket's vertex and edge capacity.
+pub fn pack_kernel_operands(
+    kind: KernelKind,
+    matrix: &Csr,
+    community: usize,
+    bucket: &BucketInfo,
+) -> Result<Vec<Tensor>> {
+    match kind {
+        KernelKind::CsrInter => pack_csr_global(matrix, bucket),
+        KernelKind::CsrIntra => pack_csr_local(matrix, community, bucket),
+        KernelKind::Coo => pack_coo(matrix, bucket),
+        KernelKind::DenseBlock => pack_dense_blocks(matrix, community, bucket),
+        KernelKind::DenseFull => bail!("dense_full has no AOT operand packing (Fig. 2b only)"),
+    }
+}
+
+fn check_capacity(matrix: &Csr, bucket: &BucketInfo) -> Result<()> {
+    if matrix.n_rows > bucket.vertices {
+        bail!("graph has {} vertices, bucket {} holds {}", matrix.n_rows, bucket.name, bucket.vertices);
+    }
+    if matrix.nnz() > bucket.edges {
+        bail!("subgraph has {} nnz, bucket {} holds {}", matrix.nnz(), bucket.name, bucket.edges);
+    }
+    Ok(())
+}
+
+/// Padded global CSR: row_ptr [V+1] exact, col/val tails zero.
+fn pack_csr_global(matrix: &Csr, bucket: &BucketInfo) -> Result<Vec<Tensor>> {
+    check_capacity(matrix, bucket)?;
+    let v = bucket.vertices;
+    let e = bucket.edges;
+    let mut row_ptr = vec![0i32; v + 1];
+    for r in 0..matrix.n_rows {
+        row_ptr[r + 1] = matrix.row_ptr[r + 1] as i32;
+    }
+    let last = matrix.row_ptr[matrix.n_rows] as i32;
+    for r in matrix.n_rows..v {
+        row_ptr[r + 1] = last;
+    }
+    let mut col = vec![0i32; e];
+    let mut val = vec![0f32; e];
+    for (i, (&c, &w)) in matrix.col_idx.iter().zip(&matrix.vals).enumerate() {
+        col[i] = c as i32;
+        val[i] = w;
+    }
+    Ok(vec![
+        Tensor::i32(row_ptr, &[v + 1]),
+        Tensor::i32(col, &[e]),
+        Tensor::f32(val, &[e]),
+    ])
+}
+
+/// Padded local CSR for a block-diagonal matrix: columns are local to the
+/// community (0..C).
+fn pack_csr_local(matrix: &Csr, community: usize, bucket: &BucketInfo) -> Result<Vec<Tensor>> {
+    check_capacity(matrix, bucket)?;
+    let v = bucket.vertices;
+    let e = bucket.edges;
+    let mut row_ptr = vec![0i32; v + 1];
+    let mut col = vec![0i32; e];
+    let mut val = vec![0f32; e];
+    let mut k = 0usize;
+    for r in 0..matrix.n_rows {
+        let base = (r / community) * community;
+        let (cols, vals) = matrix.row(r);
+        for (&c, &w) in cols.iter().zip(vals) {
+            let c = c as usize;
+            if c / community != r / community {
+                bail!("entry ({r},{c}) is not block-diagonal; split first");
+            }
+            col[k] = (c - base) as i32;
+            val[k] = w;
+            k += 1;
+        }
+        row_ptr[r + 1] = k as i32;
+    }
+    for r in matrix.n_rows..v {
+        row_ptr[r + 1] = k as i32;
+    }
+    Ok(vec![
+        Tensor::i32(row_ptr, &[v + 1]),
+        Tensor::i32(col, &[e]),
+        Tensor::f32(val, &[e]),
+    ])
+}
+
+/// Padded COO `(src, dst, val)` with zero padding edges.
+fn pack_coo(matrix: &Csr, bucket: &BucketInfo) -> Result<Vec<Tensor>> {
+    check_capacity(matrix, bucket)?;
+    let e = bucket.edges;
+    let mut src = vec![0i32; e];
+    let mut dst = vec![0i32; e];
+    let mut val = vec![0f32; e];
+    for (i, (d, s, w)) in matrix.to_triplets().into_iter().enumerate() {
+        src[i] = s as i32;
+        dst[i] = d as i32;
+        val[i] = w;
+    }
+    Ok(vec![
+        Tensor::i32(src, &[e]),
+        Tensor::i32(dst, &[e]),
+        Tensor::f32(val, &[e]),
+    ])
+}
+
+/// Dense `[nB, C, C]` diagonal blocks.
+fn pack_dense_blocks(matrix: &Csr, community: usize, bucket: &BucketInfo) -> Result<Vec<Tensor>> {
+    if matrix.n_rows > bucket.vertices {
+        bail!("graph exceeds bucket vertex capacity");
+    }
+    let nb = bucket.blocks;
+    let c = community;
+    let mut data = vec![0f32; nb * c * c];
+    for (r, cc, w) in matrix.to_triplets() {
+        let (r, cc) = (r as usize, cc as usize);
+        if r / c != cc / c {
+            bail!("entry ({r},{cc}) is not block-diagonal; split first");
+        }
+        let b = r / c;
+        data[(b * c + r % c) * c + cc % c] += w;
+    }
+    Ok(vec![Tensor::f32(data, &[nb, c, c])])
+}
+
+/// Pad features `[n, f_data]` into the bucket's `[V, F]` (truncating or
+/// zero-extending the feature dimension).
+pub fn pack_features(x: &[f32], n: usize, f_data: usize, bucket: &BucketInfo) -> Result<Tensor> {
+    if x.len() != n * f_data {
+        bail!("feature length {} != n*f {}", x.len(), n * f_data);
+    }
+    if n > bucket.vertices {
+        bail!("features exceed bucket vertex capacity");
+    }
+    let (v, f) = (bucket.vertices, bucket.features);
+    let mut out = vec![0f32; v * f];
+    let copy_f = f_data.min(f);
+    for r in 0..n {
+        out[r * f..r * f + copy_f].copy_from_slice(&x[r * f_data..r * f_data + copy_f]);
+    }
+    Ok(Tensor::f32(out, &[v, f]))
+}
+
+/// Pad labels to `[V]` (clamping into the bucket's class range) and build
+/// the matching mask (1.0 for real vertices, 0.0 for padding).
+pub fn pack_labels_mask(labels: &[i32], bucket: &BucketInfo) -> Result<(Tensor, Tensor)> {
+    if labels.len() > bucket.vertices {
+        bail!("labels exceed bucket vertex capacity");
+    }
+    let v = bucket.vertices;
+    let mut lab = vec![0i32; v];
+    let mut mask = vec![0f32; v];
+    for (i, &l) in labels.iter().enumerate() {
+        lab[i] = l.rem_euclid(bucket.classes as i32);
+        mask[i] = 1.0;
+    }
+    Ok((Tensor::i32(lab, &[v]), Tensor::f32(mask, &[v])))
+}
+
+/// Pack both subgraphs of a decomposition for a kernel pair; full-graph
+/// pairs (intra=None) pack the recombined whole matrix as "inter".
+pub fn pack_pair(
+    d: &Decomposition,
+    intra: Option<KernelKind>,
+    inter: KernelKind,
+    bucket: &BucketInfo,
+) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    match intra {
+        Some(ik) => Ok((
+            pack_kernel_operands(ik, &d.intra, d.community, bucket)?,
+            pack_kernel_operands(inter, &d.inter, d.community, bucket)?,
+        )),
+        None => Ok((
+            Vec::new(),
+            pack_kernel_operands(inter, &d.whole(), d.community, bucket)?,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::partition::{Propagation, Reorder};
+    use crate::util::rng::Rng;
+
+    fn bucket() -> BucketInfo {
+        BucketInfo { name: "t".into(), vertices: 64, edges: 512, features: 8, hidden: 8, classes: 4, blocks: 4 }
+    }
+
+    fn decomp() -> Decomposition {
+        let mut rng = Rng::new(1);
+        let g = planted_partition(48, 16, 0.4, 0.03, &mut rng);
+        Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 16, 0)
+    }
+
+    #[test]
+    fn csr_global_padding_shape() {
+        let d = decomp();
+        let b = bucket();
+        let ops = pack_csr_global(&d.inter, &b).unwrap();
+        assert_eq!(ops[0].shape(), &[65]);
+        assert_eq!(ops[1].shape(), &[512]);
+        // row_ptr monotone, final rows flat
+        let rp = ops[0].as_i32().unwrap();
+        assert!(rp.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(rp[48], rp[64]);
+    }
+
+    #[test]
+    fn csr_local_columns_in_range() {
+        let d = decomp();
+        let ops = pack_csr_local(&d.intra, 16, &bucket()).unwrap();
+        let col = ops[1].as_i32().unwrap();
+        assert!(col.iter().all(|&c| (0..16).contains(&c)));
+    }
+
+    #[test]
+    fn coo_padding_is_zero_weight() {
+        let d = decomp();
+        let ops = pack_coo(&d.inter, &bucket()).unwrap();
+        let val = ops[2].as_f32().unwrap();
+        let nnz = d.inter.nnz();
+        assert!(val[nnz..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dense_blocks_shape() {
+        let d = decomp();
+        let ops = pack_dense_blocks(&d.intra, 16, &bucket()).unwrap();
+        assert_eq!(ops[0].shape(), &[4, 16, 16]);
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        let mut rng = Rng::new(2);
+        let g = planted_partition(128, 16, 0.5, 0.05, &mut rng);
+        let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 16, 0);
+        assert!(pack_csr_global(&d.inter, &bucket()).is_err());
+    }
+
+    #[test]
+    fn features_pad_and_truncate() {
+        let b = bucket();
+        let x: Vec<f32> = (0..10 * 12).map(|i| i as f32).collect();
+        let t = pack_features(&x, 10, 12, &b).unwrap(); // truncate 12 -> 8
+        assert_eq!(t.shape(), &[64, 8]);
+        assert_eq!(t.as_f32().unwrap()[0..8], x[0..8]);
+        let t2 = pack_features(&x[..10 * 4], 10, 4, &b).unwrap(); // extend 4 -> 8
+        assert_eq!(t2.as_f32().unwrap()[4..8], [0.0; 4]);
+    }
+
+    #[test]
+    fn labels_clamped_and_masked() {
+        let b = bucket();
+        let (lab, mask) = pack_labels_mask(&[0, 5, -1], &b).unwrap();
+        let l = lab.as_i32().unwrap();
+        assert_eq!(&l[..3], &[0, 1, 3]); // 5 % 4 = 1, -1 -> 3
+        let m = mask.as_f32().unwrap();
+        assert_eq!(&m[..4], &[1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_pair_full_graph_mode() {
+        let d = decomp();
+        let (iops, jops) = pack_pair(&d, None, KernelKind::CsrInter, &bucket()).unwrap();
+        assert!(iops.is_empty());
+        // whole matrix nnz = intra + inter
+        let rp = jops[0].as_i32().unwrap();
+        assert_eq!(rp[64] as usize, d.intra.nnz() + d.inter.nnz());
+    }
+}

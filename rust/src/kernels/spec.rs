@@ -1,0 +1,132 @@
+//! Kernel taxonomy: the subgraph-level kernel candidates of Sec. 3.2 and
+//! which subgraph role each may serve.
+
+use std::fmt;
+
+/// The four density-specialized kernels (plus the full-graph dense format
+/// used only by the Fig. 2b format study).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Vertex-parallel CSR — low/irregular density (inter default).
+    CsrInter,
+    /// Community-resident CSR ("shared-memory" tile reuse) — intra.
+    CsrIntra,
+    /// Edge-parallel COO with atomic scatter — extremely low density.
+    Coo,
+    /// Dense block-diagonal batched GEMM (MXU / Tensor Core) — intra.
+    DenseBlock,
+    /// Full dense adjacency GEMM — Fig. 2b's "Dense" format curve only.
+    DenseFull,
+}
+
+impl KernelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelKind::CsrInter => "csr_inter",
+            KernelKind::CsrIntra => "csr_intra",
+            KernelKind::Coo => "coo",
+            KernelKind::DenseBlock => "dense_block",
+            KernelKind::DenseFull => "dense_full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "csr_inter" => Some(KernelKind::CsrInter),
+            "csr_intra" => Some(KernelKind::CsrIntra),
+            "coo" => Some(KernelKind::Coo),
+            "dense_block" => Some(KernelKind::DenseBlock),
+            "dense_full" => Some(KernelKind::DenseFull),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Candidate kernels for the intra-community subgraph (Sec. 3.3: "two for
+/// intra-subgraph").
+pub const INTRA_CANDIDATES: [KernelKind; 2] = [KernelKind::CsrIntra, KernelKind::DenseBlock];
+
+/// Candidate kernels for the inter-community subgraph ("two for
+/// inter-subgraph").
+pub const INTER_CANDIDATES: [KernelKind; 2] = [KernelKind::CsrInter, KernelKind::Coo];
+
+/// A (intra, inter) kernel assignment — one point in AdaptGear's strategy
+/// space. `intra == None` encodes the full-graph-level baselines where the
+/// whole propagation matrix runs through the inter kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelPair {
+    pub intra: Option<KernelKind>,
+    pub inter: KernelKind,
+}
+
+impl KernelPair {
+    pub fn new(intra: KernelKind, inter: KernelKind) -> KernelPair {
+        KernelPair { intra: Some(intra), inter }
+    }
+
+    pub fn full_graph(inter: KernelKind) -> KernelPair {
+        KernelPair { intra: None, inter }
+    }
+
+    /// The manifest token for the intra slot ("none" for full-graph).
+    pub fn intra_str(&self) -> &'static str {
+        self.intra.map(|k| k.as_str()).unwrap_or("none")
+    }
+
+    /// All four adaptive combinations the selector explores.
+    pub fn all_adaptive() -> Vec<KernelPair> {
+        let mut out = Vec::new();
+        for i in INTRA_CANDIDATES {
+            for j in INTER_CANDIDATES {
+                out.push(KernelPair::new(i, j));
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for KernelPair {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}+{}", self.intra_str(), self.inter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_names() {
+        for k in [
+            KernelKind::CsrInter,
+            KernelKind::CsrIntra,
+            KernelKind::Coo,
+            KernelKind::DenseBlock,
+            KernelKind::DenseFull,
+        ] {
+            assert_eq!(KernelKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn adaptive_space_is_2x2() {
+        let all = KernelPair::all_adaptive();
+        assert_eq!(all.len(), 4);
+        let uniq: std::collections::HashSet<_> = all.iter().collect();
+        assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn full_graph_prints_none() {
+        let p = KernelPair::full_graph(KernelKind::CsrInter);
+        assert_eq!(p.to_string(), "none+csr_inter");
+        assert_eq!(p.intra_str(), "none");
+    }
+}

@@ -1,0 +1,25 @@
+//! # AdaptGear
+//!
+//! Reproduction of *AdaptGear: Accelerating GNN Training via Adaptive
+//! Subgraph-Level Kernels on GPUs* (Zhou et al., CF '23) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): density-specialized Pallas
+//!   aggregation kernels (CSR inter, CSR intra, COO scatter, dense block).
+//! * **Layer 2** (`python/compile/model.py`): GCN/GIN forward + fused
+//!   training step, AOT-lowered to HLO text per kernel combination.
+//! * **Layer 3** (this crate): the paper's system contribution — graph
+//!   decomposition, subgraph-level kernel mapping, and the feedback-driven
+//!   adaptive selector — plus every substrate it needs (graph formats,
+//!   METIS-like partitioner, GPU cost simulator, PJRT runtime).
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod coordinator;
+pub mod graph;
+pub mod gpusim;
+pub mod kernels;
+pub mod partition;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,230 @@
+//! AdaptGear CLI — the leader entrypoint.
+//!
+//! ```text
+//! adaptgear datasets                         # Table 1 registry + measured stats
+//! adaptgear decompose --dataset cora         # reorder + split, print density report
+//! adaptgear train --dataset cora --model gcn --steps 200 [--clock wall|sim]
+//! adaptgear selftest                         # artifact <-> runtime smoke check
+//! ```
+//!
+//! Figure regeneration lives in the bench harness: `cargo bench --bench
+//! figures -- <fig2b|fig3a|...|all>`.
+
+use anyhow::{bail, Context, Result};
+
+use adaptgear::coordinator::{pipeline, Clock, ModelKind, Strategy, TrainConfig};
+use adaptgear::graph::{datasets, stats};
+use adaptgear::gpusim::GpuModel;
+use adaptgear::partition::Propagation;
+use adaptgear::runtime::Engine;
+use adaptgear::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "datasets" => cmd_datasets(&args),
+        "decompose" => cmd_decompose(&args),
+        "train" => cmd_train(&args),
+        "selftest" => cmd_selftest(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "adaptgear — adaptive subgraph-level GNN training (CF'23 reproduction)\n\n\
+         USAGE: adaptgear <command> [options]\n\n\
+         COMMANDS:\n\
+         \x20 datasets                          list the Table 1 registry\n\
+         \x20 decompose --dataset NAME [--scale S] [--community C]\n\
+         \x20                                   reorder + split; print density report\n\
+         \x20 train --dataset NAME [--model gcn|gin] [--steps N] [--lr F]\n\
+         \x20       [--clock sim|wall] [--gpu a100|v100] [--scale S] [--seed N]\n\
+         \x20 selftest                          verify artifacts + runtime numerics\n\n\
+         Figures: cargo bench --bench figures -- <fig2b|fig3a|fig3b|fig4|fig8|\n\
+         \x20        fig9|fig10|fig11|fig12|table2|overhead|all>"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn cmd_datasets(_args: &Args) -> Result<()> {
+    println!(
+        "{:<28} {:>9} {:>9} {:>6} {:>7} {:>10}",
+        "dataset", "#Vertex", "#Edge", "#Feat", "#Class", "density"
+    );
+    for d in datasets::DATASETS {
+        println!(
+            "{:<28} {:>9} {:>9} {:>6} {:>7} {:>10.2e}",
+            d.name, d.vertices, d.edges, d.features, d.classes, d.density()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_decompose(args: &Args) -> Result<()> {
+    let name = args.get("dataset").context("--dataset required")?;
+    let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
+    let scale = args.get_f64("scale", f64::min(0.05, 20_000.0 / spec.vertices as f64));
+    let community = args.get_usize("community", 16);
+    let seed = args.get_u64("seed", 0);
+
+    let data = spec.build_scaled(scale, seed);
+    println!(
+        "dataset={} scale={:.4} vertices={} edges={}",
+        spec.name,
+        scale,
+        data.graph.n,
+        data.graph.directed_edge_count()
+    );
+
+    let before = stats::density_split(&data.graph, community);
+    let (d, times) = adaptgear::coordinator::preprocess(
+        Strategy::AdaptGear,
+        &data.graph,
+        Propagation::GcnNormalized,
+        community,
+        seed,
+    );
+    let after = stats::density_split(&d.graph, community);
+
+    println!("reorder: {:.3}s  decompose: {:.3}s", times.reorder_secs, times.decompose_secs);
+    println!(
+        "density   before: full={:.2e} intra={:.2e} inter={:.2e}",
+        before.full, before.intra, before.inter
+    );
+    println!(
+        "density   after:  full={:.2e} intra={:.2e} inter={:.2e}  (intra edges {} -> {})",
+        after.full, after.intra, after.inter, before.intra_edges, after.intra_edges
+    );
+    println!("\nadjacency heat map after reordering (dark = dense):");
+    print!("{}", stats::render_heat_grid(&stats::adjacency_heat_grid(&d.graph, 24)));
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("cora");
+    let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
+    let model = ModelKind::parse(args.get_or("model", "gcn")).context("--model gcn|gin")?;
+    let clock = match args.get_or("clock", "sim") {
+        "sim" => Clock::Sim,
+        "wall" => Clock::Wall,
+        other => bail!("--clock must be sim or wall, got {other}"),
+    };
+    let gpu = GpuModel::by_name(args.get_or("gpu", "a100")).context("--gpu a100|v100")?;
+    let cfg = TrainConfig {
+        model,
+        steps: args.get_usize("steps", 200),
+        lr: args.get_f64("lr", 0.05) as f32,
+        monitor_repeats: args.get_usize("monitor-repeats", 3),
+        clock,
+        gpu,
+        seed: args.get_u64("seed", 0),
+    };
+    let scale = args.get("scale").map(|s| s.parse::<f64>()).transpose()?;
+
+    let engine = Engine::new(artifacts_dir(args))?;
+    println!("platform={} artifacts={}", engine.platform(), engine.manifest.artifacts.len());
+
+    let report = pipeline::run(&engine, spec, &cfg, scale)?;
+    println!(
+        "dataset={} scale={:.4} vertices={} edges={} bucket={}",
+        report.dataset, report.scale, report.vertices, report.edges, report.train.bucket
+    );
+    println!(
+        "preprocess: reorder {:.3}s decompose {:.3}s | selector: chose {} after {} monitor iters ({:.1}us overhead)",
+        report.preprocess.reorder_secs,
+        report.preprocess.decompose_secs,
+        report.train.chosen,
+        report.train.selector.monitor_iters,
+        report.train.selector.monitor_overhead_us,
+    );
+    let losses = &report.train.losses;
+    let every = (losses.len() / 10).max(1);
+    for (i, l) in losses.iter().enumerate() {
+        if i % every == 0 || i + 1 == losses.len() {
+            println!("step {i:>5}  loss {l:.5}");
+        }
+    }
+    println!(
+        "final loss {:.5} (from {:.5}) | mean step {:.2}ms | compile {:.2}s pack {:.3}s",
+        report.train.final_loss(),
+        losses.first().copied().unwrap_or(f32::NAN),
+        report.train.mean_step_secs() * 1e3,
+        report.train.compile_secs,
+        report.train.pack_secs,
+    );
+    Ok(())
+}
+
+/// Smoke check: every kernel artifact computes the same aggregate as the
+/// native Rust kernels on a random decomposed graph.
+fn cmd_selftest(args: &Args) -> Result<()> {
+    use adaptgear::graph::generate::planted_partition;
+    use adaptgear::kernels::pack;
+    use adaptgear::kernels::KernelKind;
+    use adaptgear::util::rng::Rng;
+
+    let engine = Engine::new(artifacts_dir(args))?;
+    println!("platform={}", engine.platform());
+    let bucket = engine
+        .manifest
+        .buckets
+        .values()
+        .min_by_key(|b| b.vertices)
+        .context("no buckets in manifest")?
+        .clone();
+
+    let mut rng = Rng::new(7);
+    let g = planted_partition(bucket.vertices / 2, engine.manifest.community, 0.3, 0.02, &mut rng);
+    let d = adaptgear::partition::Decomposition::build(
+        &g,
+        adaptgear::partition::Reorder::Metis,
+        Propagation::GcnNormalized,
+        engine.manifest.community,
+        1,
+    );
+    let f = bucket.features;
+    let x: Vec<f32> = (0..d.graph.n * f).map(|_| rng.normal_f32()).collect();
+    let x_packed = pack::pack_features(&x, d.graph.n, f, &bucket)?;
+
+    for (kind, matrix) in [
+        (KernelKind::CsrIntra, &d.intra),
+        (KernelKind::DenseBlock, &d.intra),
+        (KernelKind::CsrInter, &d.inter),
+        (KernelKind::Coo, &d.inter),
+    ] {
+        let name = adaptgear::runtime::Manifest::kernel_name(kind.as_str(), &bucket.name);
+        let mut ops = pack::pack_kernel_operands(kind, matrix, d.community, &bucket)?;
+        ops.push(x_packed.clone());
+        let out = engine.run(&name, &ops)?;
+        let y: Vec<f32> = out[0].to_vec()?;
+        let expect = matrix.spmm(&x, f);
+        let mut max_err = 0f32;
+        for r in 0..d.graph.n {
+            for j in 0..f {
+                max_err = max_err.max((y[r * f + j] - expect[r * f + j]).abs());
+            }
+        }
+        println!("{name:<28} max_err={max_err:.2e}");
+        if max_err > 1e-3 {
+            bail!("{name} disagrees with native kernel (max_err {max_err})");
+        }
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,306 @@
+//! METIS-like multilevel graph partitioner / community orderer.
+//!
+//! The paper preprocesses every graph with METIS (community size 16).
+//! METIS is not available offline, so this module implements the same
+//! algorithmic recipe (Karypis & Kumar): multilevel *recursive bisection* —
+//!
+//! 1. **Coarsen** by heavy-edge matching until the graph is small,
+//! 2. **Initial bisection** by greedy BFS region growing from a
+//!    pseudo-peripheral seed,
+//! 3. **Refine** with Fiduccia–Mattheyses-style boundary passes while
+//!    projecting back through the levels,
+//!
+//! recursing until parts reach the requested community size. The recursion
+//! order doubles as the vertex *ordering*: left subtrees take lower ids,
+//! so communities land contiguously — which is all AdaptGear needs from
+//! METIS (Fig. 3a).
+
+use super::WorkGraph;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Compute a community ordering: returns `perm` with `perm[old] = new`.
+/// Vertices are relabeled so each `community`-sized block is one
+/// discovered community.
+pub fn metis_order(g: &Graph, community: usize, seed: u64) -> Vec<u32> {
+    assert!(community >= 2, "community size must be >= 2");
+    let wg = WorkGraph::from_graph(g);
+    let ids: Vec<u32> = (0..g.n as u32).collect();
+    let mut order: Vec<u32> = Vec::with_capacity(g.n);
+    let mut rng = Rng::new(seed);
+    bisect_recurse(&wg, ids, community, &mut rng, &mut order);
+    // order[i] = old vertex placed at new position i  =>  invert
+    let mut perm = vec![0u32; g.n];
+    for (new, &old) in order.iter().enumerate() {
+        perm[old as usize] = new as u32;
+    }
+    perm
+}
+
+/// K-way assignment (part id per vertex) — used by the quality metrics
+/// and the PCGCN baseline's tile decision.
+pub fn metis_parts(g: &Graph, community: usize, seed: u64) -> Vec<u32> {
+    let perm = metis_order(g, community, seed);
+    perm.iter().map(|&p| p / community as u32).collect()
+}
+
+fn bisect_recurse(
+    wg: &WorkGraph,
+    ids: Vec<u32>,
+    community: usize,
+    rng: &mut Rng,
+    out: &mut Vec<u32>,
+) {
+    if ids.len() <= community {
+        out.extend(ids);
+        return;
+    }
+    let side = bisect(wg, rng);
+    debug_assert_eq!(side.len(), wg.len());
+    let mut left_ids = Vec::with_capacity(ids.len() / 2 + 1);
+    let mut right_ids = Vec::with_capacity(ids.len() / 2 + 1);
+    let mut left_keep = Vec::new();
+    let mut right_keep = Vec::new();
+    for (local, &orig) in ids.iter().enumerate() {
+        if side[local] {
+            right_ids.push(orig);
+            right_keep.push(local as u32);
+        } else {
+            left_ids.push(orig);
+            left_keep.push(local as u32);
+        }
+    }
+    // Degenerate bisection (disconnected or tiny): fall back to halving.
+    if left_ids.is_empty() || right_ids.is_empty() {
+        let mid = ids.len() / 2;
+        let (l, r) = ids.split_at(mid);
+        let (lw, lids) = (wg.induced(&(0..mid as u32).collect::<Vec<_>>()), l.to_vec());
+        let rkeep: Vec<u32> = (mid as u32..ids.len() as u32).collect();
+        let (rw, rids) = (wg.induced(&rkeep), r.to_vec());
+        bisect_recurse(&lw, lids, community, rng, out);
+        bisect_recurse(&rw, rids, community, rng, out);
+        return;
+    }
+    let lw = wg.induced(&left_keep);
+    let rw = wg.induced(&right_keep);
+    bisect_recurse(&lw, left_ids, community, rng, out);
+    bisect_recurse(&rw, right_ids, community, rng, out);
+}
+
+/// Balanced bisection of a working graph. Returns `side[v]` (false=left).
+fn bisect(wg: &WorkGraph, rng: &mut Rng) -> Vec<bool> {
+    const COARSE_TARGET: usize = 128;
+    if wg.len() <= COARSE_TARGET {
+        let mut side = initial_bisection(wg, rng);
+        refine(wg, &mut side, 4);
+        return side;
+    }
+    // Coarsen one level by heavy-edge matching, solve recursively, project.
+    let (coarse, map) = wg.coarsen_hem(rng);
+    // If matching stalls (star graphs), avoid infinite recursion.
+    if coarse.len() >= wg.len() {
+        let mut side = initial_bisection(wg, rng);
+        refine(wg, &mut side, 4);
+        return side;
+    }
+    let coarse_side = bisect(&coarse, rng);
+    let mut side: Vec<bool> = map.iter().map(|&c| coarse_side[c as usize]).collect();
+    refine(wg, &mut side, 2);
+    side
+}
+
+/// Greedy BFS region growing from a pseudo-peripheral vertex until half
+/// the total vertex weight is absorbed.
+fn initial_bisection(wg: &WorkGraph, rng: &mut Rng) -> Vec<bool> {
+    let n = wg.len();
+    let total: u64 = wg.vw.iter().sum();
+    let target = total / 2;
+    let seed = pseudo_peripheral(wg, rng.usize_below(n));
+
+    let mut side = vec![true; n]; // true = right (not yet absorbed)
+    let mut absorbed = 0u64;
+    let mut frontier = std::collections::VecDeque::new();
+    frontier.push_back(seed as u32);
+    side[seed] = false;
+    absorbed += wg.vw[seed];
+    while absorbed < target {
+        let Some(v) = frontier.pop_front() else {
+            // disconnected: absorb the lightest unvisited vertex
+            match (0..n).find(|&u| side[u]) {
+                Some(u) => {
+                    side[u] = false;
+                    absorbed += wg.vw[u];
+                    frontier.push_back(u as u32);
+                    continue;
+                }
+                None => break,
+            }
+        };
+        for &(u, _) in &wg.adj[v as usize] {
+            if side[u as usize] {
+                side[u as usize] = false;
+                absorbed += wg.vw[u as usize];
+                frontier.push_back(u);
+                if absorbed >= target {
+                    break;
+                }
+            }
+        }
+    }
+    side
+}
+
+/// Approximate pseudo-peripheral vertex: BFS twice from `start`.
+fn pseudo_peripheral(wg: &WorkGraph, start: usize) -> usize {
+    let far = bfs_farthest(wg, start);
+    bfs_farthest(wg, far)
+}
+
+fn bfs_farthest(wg: &WorkGraph, start: usize) -> usize {
+    let n = wg.len();
+    let mut dist = vec![u32::MAX; n];
+    let mut q = std::collections::VecDeque::new();
+    dist[start] = 0;
+    q.push_back(start as u32);
+    let mut last = start;
+    while let Some(v) = q.pop_front() {
+        last = v as usize;
+        for &(u, _) in &wg.adj[v as usize] {
+            if dist[u as usize] == u32::MAX {
+                dist[u as usize] = dist[v as usize] + 1;
+                q.push_back(u);
+            }
+        }
+    }
+    last
+}
+
+/// FM-style refinement: repeatedly move the boundary vertex with the best
+/// cut-gain that keeps balance within 15%.
+fn refine(wg: &WorkGraph, side: &mut [bool], passes: usize) {
+    let n = wg.len();
+    let total: u64 = wg.vw.iter().sum();
+    let max_side = total * 115 / 200; // 57.5% cap per side
+
+    for _ in 0..passes {
+        let mut weight_right: u64 =
+            (0..n).filter(|&v| side[v]).map(|v| wg.vw[v]).sum();
+        let mut weight_left = total - weight_right;
+        let mut moved_any = false;
+
+        // gain of moving v to the other side = cut-reduction
+        let gain = |v: usize, side: &[bool]| -> f32 {
+            let mut internal = 0.0f32;
+            let mut external = 0.0f32;
+            for &(u, w) in &wg.adj[v] {
+                if side[u as usize] == side[v] {
+                    internal += w;
+                } else {
+                    external += w;
+                }
+            }
+            external - internal
+        };
+
+        // one sweep over vertices in a deterministic order
+        for v in 0..n {
+            let g = gain(v, side);
+            if g <= 0.0 {
+                continue;
+            }
+            let vw = wg.vw[v];
+            let (src, dst) = if side[v] {
+                (&mut weight_right, &mut weight_left)
+            } else {
+                (&mut weight_left, &mut weight_right)
+            };
+            if *dst + vw > max_side {
+                continue; // would unbalance
+            }
+            side[v] = !side[v];
+            *src -= vw;
+            *dst += vw;
+            moved_any = true;
+        }
+        if !moved_any {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::graph::{is_permutation, stats};
+    use crate::util::prop;
+
+    #[test]
+    fn order_is_permutation() {
+        prop::check("metis order is a permutation", 10, |rng| {
+            let n = (rng.usize_below(10) + 2) * 16;
+            let g = planted_partition(n, 16, 0.4, 0.02, rng);
+            let perm = metis_order(&g, 16, 42);
+            prop::require(is_permutation(&perm), "not a permutation")
+        });
+    }
+
+    #[test]
+    fn recovers_planted_communities() {
+        // generate planted structure, shuffle it away, re-discover it
+        let mut rng = Rng::new(5);
+        let g = planted_partition(256, 16, 0.6, 0.004, &mut rng);
+        let mut shuffle: Vec<u32> = (0..256).collect();
+        rng.shuffle(&mut shuffle);
+        let hidden = g.relabel(&shuffle);
+
+        let before = stats::density_split(&hidden, 16);
+        let perm = metis_order(&hidden, 16, 7);
+        let reordered = hidden.relabel(&perm);
+        let after = stats::density_split(&reordered, 16);
+
+        assert!(
+            after.intra_edges > before.intra_edges * 3,
+            "reordering should concentrate edges on the diagonal: {} -> {}",
+            before.intra_edges,
+            after.intra_edges
+        );
+        assert!(after.intra > after.inter * 10.0, "intra {} inter {}", after.intra, after.inter);
+    }
+
+    #[test]
+    fn handles_disconnected_graphs() {
+        let g = Graph::from_edges(64, vec![(0, 1), (30, 31), (62, 63)]);
+        let perm = metis_order(&g, 16, 1);
+        assert!(is_permutation(&perm));
+    }
+
+    #[test]
+    fn handles_empty_and_tiny() {
+        let g = Graph::empty(8);
+        let perm = metis_order(&g, 16, 1);
+        assert!(is_permutation(&perm));
+        let g = Graph::from_edges(2, vec![(0, 1)]);
+        assert!(is_permutation(&metis_order(&g, 16, 1)));
+    }
+
+    #[test]
+    fn parts_have_bounded_size() {
+        let mut rng = Rng::new(6);
+        let g = planted_partition(320, 16, 0.4, 0.01, &mut rng);
+        let parts = metis_parts(&g, 16, 11);
+        let k = *parts.iter().max().unwrap() as usize + 1;
+        let mut sizes = vec![0usize; k];
+        for &p in &parts {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s <= 16), "part sizes {sizes:?}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut rng = Rng::new(8);
+        let g = planted_partition(128, 16, 0.4, 0.02, &mut rng);
+        assert_eq!(metis_order(&g, 16, 3), metis_order(&g, 16, 3));
+    }
+}

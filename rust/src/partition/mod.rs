@@ -1,0 +1,16 @@
+//! Community reordering and graph decomposition substrate.
+//!
+//! The paper's preprocessing stage (Sec. 3.3 / 4.2): a METIS-like
+//! multilevel partitioner, a rabbit-order-like modularity orderer, and the
+//! intra/inter decomposition both feed.
+
+pub mod decompose;
+pub mod metis_like;
+pub mod quality;
+pub mod rabbit_like;
+mod work_graph;
+
+pub use decompose::{Decomposition, Propagation, Reorder};
+pub use metis_like::{metis_order, metis_parts};
+pub use rabbit_like::rabbit_order;
+pub use work_graph::WorkGraph;

@@ -1,0 +1,93 @@
+//! Partition/ordering quality metrics: edge cut, intra fraction,
+//! modularity. Used by the partition benches and the Fig. 4 pipeline.
+
+use crate::graph::Graph;
+
+/// Number of edges whose endpoints land in different parts.
+pub fn edge_cut(g: &Graph, parts: &[u32]) -> usize {
+    g.edges()
+        .iter()
+        .filter(|&&(u, v)| parts[u as usize] != parts[v as usize])
+        .count()
+}
+
+/// Fraction of edges inside a part (1 - normalized cut).
+pub fn intra_fraction(g: &Graph, parts: &[u32]) -> f64 {
+    let m = g.edge_count();
+    if m == 0 {
+        return 1.0;
+    }
+    1.0 - edge_cut(g, parts) as f64 / m as f64
+}
+
+/// Newman modularity Q of a partition.
+pub fn modularity(g: &Graph, parts: &[u32]) -> f64 {
+    let m = g.edge_count() as f64;
+    if m == 0.0 {
+        return 0.0;
+    }
+    let k = parts.iter().copied().max().map(|x| x as usize + 1).unwrap_or(0);
+    let mut intra = vec![0.0f64; k];
+    let mut deg = vec![0.0f64; k];
+    for &(u, v) in g.edges() {
+        let (pu, pv) = (parts[u as usize] as usize, parts[v as usize] as usize);
+        if pu == pv {
+            intra[pu] += 1.0;
+        }
+        deg[pu] += 1.0;
+        deg[pv] += 1.0;
+    }
+    (0..k)
+        .map(|c| intra[c] / m - (deg[c] / (2.0 * m)).powi(2))
+        .sum()
+}
+
+/// Derive block parts from an ordering (`perm[old] = new`).
+pub fn parts_from_order(perm: &[u32], community: usize) -> Vec<u32> {
+    perm.iter().map(|&p| p / community as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_cliques() -> (Graph, Vec<u32>) {
+        let mut edges = Vec::new();
+        for base in [0u32, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    edges.push((base + i, base + j));
+                }
+            }
+        }
+        edges.push((0, 4)); // one cut edge
+        let parts = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        (Graph::from_edges(8, edges), parts)
+    }
+
+    #[test]
+    fn cut_counts_crossings() {
+        let (g, parts) = two_cliques();
+        assert_eq!(edge_cut(&g, &parts), 1);
+        assert!((intra_fraction(&g, &parts) - 12.0 / 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn modularity_prefers_true_communities() {
+        let (g, good) = two_cliques();
+        let bad = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        assert!(modularity(&g, &good) > modularity(&g, &bad));
+        assert!(modularity(&g, &good) > 0.3);
+    }
+
+    #[test]
+    fn modularity_empty_graph_is_zero() {
+        assert_eq!(modularity(&Graph::empty(4), &[0, 0, 1, 1]), 0.0);
+    }
+
+    #[test]
+    fn parts_from_order_blocks() {
+        let perm = vec![0, 1, 16, 17];
+        assert_eq!(parts_from_order(&perm, 16), vec![0, 0, 1, 1]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Rabbit-order-like community ordering (the GNNA-Rabbit baseline's
+//! preprocessing, Fig. 9).
+//!
+//! Rabbit Order (Arai et al., IPDPS'16) builds communities by incremental
+//! modularity-maximizing merges and emits a locality-preserving ordering
+//! from the resulting dendrogram. This stand-in follows the same recipe:
+//! greedy single-pass modularity merging into bounded-size communities,
+//! then hierarchical relabeling (communities in discovery order, members
+//! contiguous). Quality differs from the multilevel partitioner — exactly
+//! the contrast the paper's GNNA-Rabbit vs GNNA-Metis comparison needs.
+
+use crate::graph::Graph;
+
+/// Compute a rabbit-style ordering: `perm[old] = new`.
+pub fn rabbit_order(g: &Graph, max_community: usize) -> Vec<u32> {
+    let n = g.n;
+    if n == 0 {
+        return Vec::new();
+    }
+    let two_m = g.directed_edge_count().max(1) as f64;
+    let deg: Vec<f64> = g.degrees().iter().map(|&d| d as f64).collect();
+
+    // union-find over community merges
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut size: Vec<u32> = vec![1; n];
+    let mut comm_deg: Vec<f64> = deg.clone();
+
+    fn find(parent: &mut [u32], mut v: u32) -> u32 {
+        while parent[v as usize] != v {
+            parent[v as usize] = parent[parent[v as usize] as usize];
+            v = parent[v as usize];
+        }
+        v
+    }
+
+    // visit vertices in increasing degree order (rabbit heuristic: leaves
+    // merge into hubs)
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_by(|&a, &b| {
+        deg[a as usize]
+            .partial_cmp(&deg[b as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    let adj = g.adjacency();
+    for &v in &by_degree {
+        let cv = find(&mut parent, v);
+        // modularity gain of merging community(v) with community(u):
+        // dQ ∝ w(cv,cu)/m - deg(cv)*deg(cu)/(2m^2); we compare across
+        // candidate neighbors, so the shared constants drop out.
+        let mut best: Option<(u32, f64)> = None;
+        // BTreeMap => deterministic candidate iteration (ties broken by id)
+        let mut w_to: std::collections::BTreeMap<u32, f64> = std::collections::BTreeMap::new();
+        for &u in &adj[v as usize] {
+            let cu = find(&mut parent, u);
+            if cu != cv {
+                *w_to.entry(cu).or_insert(0.0) += 1.0;
+            }
+        }
+        for (&cu, &w) in &w_to {
+            if size[cu as usize] + size[cv as usize] > max_community as u32 {
+                continue;
+            }
+            let dq = w / two_m
+                - comm_deg[cv as usize] * comm_deg[cu as usize] / (two_m * two_m);
+            if dq > 0.0 && best.map(|(_, b)| dq > b).unwrap_or(true) {
+                best = Some((cu, dq));
+            }
+        }
+        if let Some((cu, _)) = best {
+            // merge cv into cu
+            parent[cv as usize] = cu;
+            size[cu as usize] += size[cv as usize];
+            comm_deg[cu as usize] += comm_deg[cv as usize];
+        }
+    }
+
+    // emit ordering: communities in order of their smallest member,
+    // members in original order within the community
+    let mut members: std::collections::BTreeMap<u32, Vec<u32>> = std::collections::BTreeMap::new();
+    for v in 0..n as u32 {
+        let c = find(&mut parent, v);
+        members.entry(c).or_default().push(v);
+    }
+    let mut groups: Vec<Vec<u32>> = members.into_values().collect();
+    groups.sort_by_key(|g| g[0]);
+
+    let mut perm = vec![0u32; n];
+    let mut next = 0u32;
+    for group in groups {
+        for v in group {
+            perm[v as usize] = next;
+            next += 1;
+        }
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::graph::{is_permutation, stats};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn produces_permutation() {
+        let mut rng = Rng::new(1);
+        let g = planted_partition(160, 16, 0.5, 0.02, &mut rng);
+        assert!(is_permutation(&rabbit_order(&g, 16)));
+    }
+
+    #[test]
+    fn improves_diagonal_density_on_hidden_communities() {
+        let mut rng = Rng::new(2);
+        let g = planted_partition(256, 16, 0.6, 0.004, &mut rng);
+        let mut shuffle: Vec<u32> = (0..256).collect();
+        rng.shuffle(&mut shuffle);
+        let hidden = g.relabel(&shuffle);
+        let before = stats::density_split(&hidden, 16);
+        let reordered = hidden.relabel(&rabbit_order(&hidden, 16));
+        let after = stats::density_split(&reordered, 16);
+        assert!(
+            after.intra_edges > before.intra_edges * 2,
+            "{} -> {}",
+            before.intra_edges,
+            after.intra_edges
+        );
+    }
+
+    #[test]
+    fn respects_community_cap() {
+        let mut rng = Rng::new(3);
+        let g = planted_partition(160, 16, 0.5, 0.03, &mut rng);
+        let perm = rabbit_order(&g, 16);
+        // cap guarantees no merged community exceeded 16, which we can't
+        // see directly from perm; at minimum the permutation is valid and
+        // deterministic
+        assert_eq!(perm, rabbit_order(&g, 16));
+    }
+
+    #[test]
+    fn handles_edgeless_graph() {
+        let g = Graph::empty(10);
+        let perm = rabbit_order(&g, 16);
+        assert!(is_permutation(&perm));
+    }
+}

@@ -1,0 +1,166 @@
+//! Weighted working graph shared by the partitioners: supports induced
+//! subgraphs (recursion) and heavy-edge-matching coarsening (multilevel).
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Adjacency-list graph with vertex weights (coarse vertices carry the
+/// number of fine vertices they absorb) and edge weights (merged
+/// multiplicities).
+#[derive(Debug, Clone)]
+pub struct WorkGraph {
+    pub vw: Vec<u64>,
+    pub adj: Vec<Vec<(u32, f32)>>,
+}
+
+impl WorkGraph {
+    pub fn from_graph(g: &Graph) -> WorkGraph {
+        let mut adj = vec![Vec::new(); g.n];
+        for &(u, v) in g.edges() {
+            adj[u as usize].push((v, 1.0));
+            adj[v as usize].push((u, 1.0));
+        }
+        WorkGraph { vw: vec![1; g.n], adj }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vw.is_empty()
+    }
+
+    /// Induced subgraph over `keep` (local ids in input order).
+    pub fn induced(&self, keep: &[u32]) -> WorkGraph {
+        let mut local = vec![u32::MAX; self.len()];
+        for (new, &old) in keep.iter().enumerate() {
+            local[old as usize] = new as u32;
+        }
+        let mut adj = Vec::with_capacity(keep.len());
+        for &old in keep {
+            let mut row = Vec::new();
+            for &(u, w) in &self.adj[old as usize] {
+                let l = local[u as usize];
+                if l != u32::MAX {
+                    row.push((l, w));
+                }
+            }
+            adj.push(row);
+        }
+        WorkGraph { vw: keep.iter().map(|&o| self.vw[o as usize]).collect(), adj }
+    }
+
+    /// One level of heavy-edge-matching coarsening. Returns the coarse
+    /// graph and `map[fine] = coarse`.
+    pub fn coarsen_hem(&self, rng: &mut Rng) -> (WorkGraph, Vec<u32>) {
+        let n = self.len();
+        let mut matched = vec![u32::MAX; n];
+        let mut visit: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut visit);
+
+        let mut next_coarse = 0u32;
+        for &v in &visit {
+            let v = v as usize;
+            if matched[v] != u32::MAX {
+                continue;
+            }
+            // heaviest unmatched neighbor
+            let mut best: Option<(u32, f32)> = None;
+            for &(u, w) in &self.adj[v] {
+                if matched[u as usize] == u32::MAX && u as usize != v {
+                    match best {
+                        Some((_, bw)) if bw >= w => {}
+                        _ => best = Some((u, w)),
+                    }
+                }
+            }
+            let c = next_coarse;
+            next_coarse += 1;
+            matched[v] = c;
+            if let Some((u, _)) = best {
+                matched[u as usize] = c;
+            }
+        }
+
+        let cn = next_coarse as usize;
+        let mut vw = vec![0u64; cn];
+        for v in 0..n {
+            vw[matched[v] as usize] += self.vw[v];
+        }
+        // merge parallel edges via a per-row map
+        let mut adj: Vec<Vec<(u32, f32)>> = vec![Vec::new(); cn];
+        let mut row_accum: std::collections::HashMap<u32, f32> = std::collections::HashMap::new();
+        for cv in 0..cn {
+            row_accum.clear();
+            for v in 0..n {
+                if matched[v] as usize != cv {
+                    continue;
+                }
+                for &(u, w) in &self.adj[v] {
+                    let cu = matched[u as usize];
+                    if cu as usize != cv {
+                        *row_accum.entry(cu).or_insert(0.0) += w;
+                    }
+                }
+            }
+            adj[cv] = row_accum.iter().map(|(&u, &w)| (u, w)).collect();
+            adj[cv].sort_unstable_by_key(|&(u, _)| u);
+        }
+        (WorkGraph { vw, adj }, matched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path(n: usize) -> WorkGraph {
+        WorkGraph::from_graph(&Graph::from_edges(
+            n,
+            (0..n as u32 - 1).map(|i| (i, i + 1)),
+        ))
+    }
+
+    #[test]
+    fn induced_keeps_internal_edges() {
+        let wg = path(6);
+        let sub = wg.induced(&[0, 1, 2]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.adj[1].len(), 2); // 1 connects to 0 and 2 locally
+        assert_eq!(sub.adj[2].len(), 1); // the 2-3 edge is cut
+    }
+
+    #[test]
+    fn coarsen_halves_path() {
+        let wg = path(16);
+        let mut rng = Rng::new(0);
+        let (coarse, map) = wg.coarsen_hem(&mut rng);
+        assert!(coarse.len() < wg.len());
+        assert!(coarse.len() >= wg.len() / 2);
+        assert_eq!(map.len(), 16);
+        let total: u64 = coarse.vw.iter().sum();
+        assert_eq!(total, 16, "vertex weight conserved");
+    }
+
+    #[test]
+    fn coarsen_merges_parallel_edges() {
+        // triangle: any matching creates a coarse pair with a merged edge
+        let wg = WorkGraph::from_graph(&Graph::from_edges(3, vec![(0, 1), (1, 2), (0, 2)]));
+        let mut rng = Rng::new(1);
+        let (coarse, _) = wg.coarsen_hem(&mut rng);
+        assert_eq!(coarse.len(), 2);
+        // merged edge weight = 2 (two fine edges collapse)
+        let w: f32 = coarse.adj[0].iter().map(|&(_, w)| w).sum();
+        assert_eq!(w, 2.0);
+    }
+
+    #[test]
+    fn coarsen_isolated_vertices() {
+        let wg = WorkGraph::from_graph(&Graph::empty(5));
+        let mut rng = Rng::new(2);
+        let (coarse, map) = wg.coarsen_hem(&mut rng);
+        assert_eq!(coarse.len(), 5); // nothing to match
+        assert_eq!(map.iter().collect::<std::collections::HashSet<_>>().len(), 5);
+    }
+}

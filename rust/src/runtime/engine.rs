@@ -1,0 +1,159 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them on
+//! the CPU PJRT client (lazily, cached), and executes them with validated
+//! operands.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax >= 0.5 emits that
+//! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::Tensor;
+
+/// Compiled-executable cache entry with compile-time telemetry.
+pub struct LoadedArtifact {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub compile_secs: f64,
+}
+
+/// The engine owns the PJRT client, the manifest, and the executable cache.
+///
+/// PJRT handles are not `Send`; the engine lives on the coordinator thread
+/// (Python never appears here — artifacts were lowered at build time).
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (must contain
+    /// `manifest.json`; run `make artifacts` to produce it).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.borrow().get(name) {
+            return Ok(hit.clone());
+        }
+        let meta = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of artifact {name}"))?;
+        let loaded = Rc::new(LoadedArtifact { exe, compile_secs: t0.elapsed().as_secs_f64() });
+        self.cache.borrow_mut().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Validate operands against the manifest and execute; returns output
+    /// literals in manifest order.
+    pub fn run(&self, name: &str, args: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        let meta = self.manifest.get(name)?.clone();
+        self.validate_args(&meta, args)?;
+        let loaded = self.load(name)?;
+        let literals = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = loaded.exe.execute::<xla::Literal>(&literals)?;
+        Self::untuple(outputs, meta.outputs.len())
+    }
+
+    /// Execute an already-loaded artifact with pre-packed literals,
+    /// skipping manifest validation — the training hot loop, where the
+    /// decomposed outputs of one step are fed back as the next step's
+    /// inputs without re-packing.
+    pub fn run_literals(
+        &self,
+        loaded: &LoadedArtifact,
+        args: &[&xla::Literal],
+        n_outputs: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        let outputs = loaded.exe.execute::<&xla::Literal>(args)?;
+        Self::untuple(outputs, n_outputs)
+    }
+
+    fn validate_args(&self, meta: &ArtifactMeta, args: &[Tensor]) -> Result<()> {
+        if args.len() != meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} operands, got {}",
+                meta.name,
+                meta.inputs.len(),
+                args.len()
+            );
+        }
+        for (t, spec) in args.iter().zip(&meta.inputs) {
+            t.validate(spec).with_context(|| format!("artifact {}", meta.name))?;
+        }
+        Ok(())
+    }
+
+    fn untuple(outputs: Vec<Vec<xla::PjRtBuffer>>, n: usize) -> Result<Vec<xla::Literal>> {
+        let replica = outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no replica outputs"))?;
+        if replica.len() == 1 {
+            // aot.py lowers with return_tuple=True, so the root is a tuple
+            // even for single outputs; decompose it.
+            let lit = replica[0].to_literal_sync()?;
+            if lit.shape()?.is_tuple() {
+                let parts = lit.to_tuple()?;
+                if parts.len() != n {
+                    bail!("tuple arity {} != expected {n}", parts.len());
+                }
+                return Ok(parts);
+            }
+            if n == 1 {
+                return Ok(vec![lit]);
+            }
+            bail!("single non-tuple output buffer but {n} outputs expected");
+        }
+        if replica.len() == n {
+            // PJRT untupled for us.
+            return replica.iter().map(|b| Ok(b.to_literal_sync()?)).collect();
+        }
+        bail!("unexpected output layout: {} buffers for {n} outputs", replica.len())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Helpers for reading output literals.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = literal_f32(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}

@@ -1,0 +1,280 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` describes every AOT-lowered HLO module — its
+//! operand names/shapes/dtypes in positional order, its outputs, and which
+//! (model, intra-kernel, inter-kernel, bucket) variant it implements. The
+//! coordinator selects executables purely through this index; it never
+//! inspects HLO text.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Tensor dtype in the manifest (matches aot.py's F32/I32 tags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// One operand or result of an artifact.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.get("name").as_str().ok_or_else(|| anyhow!("tensor missing name"))?.to_string(),
+            shape: v
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(v.get("dtype").as_str().unwrap_or(""))?,
+        })
+    }
+}
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// A single aggregation kernel in isolation (selector timing).
+    Kernel,
+    /// Model forward pass -> logits (serving).
+    Forward,
+    /// Fused fwd+bwd+SGD step (training).
+    TrainStep,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        match s {
+            "kernel" => Ok(ArtifactKind::Kernel),
+            "forward" => Ok(ArtifactKind::Forward),
+            "train_step" => Ok(ArtifactKind::TrainStep),
+            other => bail!("unknown artifact kind {other:?}"),
+        }
+    }
+}
+
+/// Manifest entry for one HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub kind: ArtifactKind,
+    pub bucket: String,
+    /// For kernel artifacts: the kernel id. For model artifacts: empty.
+    pub kernel: String,
+    pub model: String,
+    pub intra: String,
+    pub inter: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Static-shape compilation bucket (mirrors python/compile/buckets.py).
+#[derive(Debug, Clone)]
+pub struct BucketInfo {
+    pub name: String,
+    pub vertices: usize,
+    pub edges: usize,
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub blocks: usize,
+}
+
+/// The full parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub community: usize,
+    pub buckets: BTreeMap<String, BucketInfo>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let community = root
+            .get("community")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest missing community"))?;
+
+        let mut buckets = BTreeMap::new();
+        for (name, b) in root.get("buckets").as_obj().ok_or_else(|| anyhow!("missing buckets"))? {
+            let req = |k: &str| {
+                b.get(k).as_usize().ok_or_else(|| anyhow!("bucket {name} missing {k}"))
+            };
+            buckets.insert(
+                name.clone(),
+                BucketInfo {
+                    name: name.clone(),
+                    vertices: req("vertices")?,
+                    edges: req("edges")?,
+                    features: req("features")?,
+                    hidden: req("hidden")?,
+                    classes: req("classes")?,
+                    blocks: req("blocks")?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.get("artifacts").as_arr().ok_or_else(|| anyhow!("missing artifacts"))? {
+            let name = a.get("name").as_str().ok_or_else(|| anyhow!("artifact missing name"))?;
+            let meta = ArtifactMeta {
+                name: name.to_string(),
+                path: a.get("path").as_str().unwrap_or_default().to_string(),
+                kind: ArtifactKind::parse(a.get("kind").as_str().unwrap_or(""))?,
+                bucket: a.get("bucket").as_str().unwrap_or_default().to_string(),
+                kernel: a.get("kernel").as_str().unwrap_or_default().to_string(),
+                model: a.get("model").as_str().unwrap_or_default().to_string(),
+                intra: a.get("intra").as_str().unwrap_or_default().to_string(),
+                inter: a.get("inter").as_str().unwrap_or_default().to_string(),
+                inputs: a
+                    .get("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+            };
+            if !buckets.contains_key(&meta.bucket) {
+                bail!("artifact {name} references unknown bucket {}", meta.bucket);
+            }
+            artifacts.insert(name.to_string(), meta);
+        }
+        Ok(Manifest { dir, community, buckets, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.path)
+    }
+
+    /// Name of a train-step artifact for a variant.
+    pub fn train_name(model: &str, intra: &str, inter: &str, bucket: &str) -> String {
+        format!("train_{model}_{intra}_{inter}_{bucket}")
+    }
+
+    /// Name of a forward artifact for a variant.
+    pub fn fwd_name(model: &str, intra: &str, inter: &str, bucket: &str) -> String {
+        format!("fwd_{model}_{intra}_{inter}_{bucket}")
+    }
+
+    /// Name of a kernel-only artifact.
+    pub fn kernel_name(kernel: &str, bucket: &str) -> String {
+        format!("kernel_{kernel}_{bucket}")
+    }
+
+    /// Smallest bucket that fits `vertices` padded vertices and `edges`
+    /// padded edges (buckets ordered by capacity).
+    pub fn fit_bucket(&self, vertices: usize, edges: usize) -> Option<&BucketInfo> {
+        self.buckets
+            .values()
+            .filter(|b| b.vertices >= vertices && b.edges >= edges)
+            .min_by_key(|b| b.vertices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "community": 16,
+      "buckets": {"b256": {"vertices":256,"edges":1024,"features":32,
+                            "hidden":32,"classes":8,"blocks":16}},
+      "artifacts": [
+        {"name":"kernel_coo_b256","path":"kernel_coo_b256.hlo.txt",
+         "kind":"kernel","bucket":"b256","kernel":"coo",
+         "inputs":[{"name":"inter_src","shape":[1024],"dtype":"i32"},
+                    {"name":"x","shape":[256,32],"dtype":"f32"}],
+         "outputs":[{"name":"y","shape":[256,32],"dtype":"f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.community, 16);
+        let a = m.get("kernel_coo_b256").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Kernel);
+        assert_eq!(a.inputs[0].dtype, DType::I32);
+        assert_eq!(a.inputs[1].shape, vec![256, 32]);
+        assert_eq!(a.outputs[0].element_count(), 256 * 32);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_fitting() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.fit_bucket(200, 900).unwrap().name, "b256");
+        assert!(m.fit_bucket(300, 10).is_none());
+    }
+
+    #[test]
+    fn name_helpers() {
+        assert_eq!(Manifest::train_name("gcn", "csr_intra", "coo", "b256"),
+                   "train_gcn_csr_intra_coo_b256");
+        assert_eq!(Manifest::kernel_name("dense_block", "b1024"),
+                   "kernel_dense_block_b1024");
+    }
+
+    #[test]
+    fn rejects_bad_bucket_reference() {
+        let bad = SAMPLE.replace("\"bucket\":\"b256\"", "\"bucket\":\"zzz\"");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them on the
+//! request path. See DESIGN.md Sec. 5 for the dataflow.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{literal_f32, literal_scalar_f32, Engine, LoadedArtifact};
+pub use manifest::{ArtifactKind, ArtifactMeta, BucketInfo, DType, Manifest, TensorSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,128 @@
+//! Host-side tensor values and packing into PJRT literals/buffers.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor matched against a manifest `TensorSpec` before upload.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        Tensor::F32(data, shape.to_vec())
+    }
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        Tensor::I32(data, shape.to_vec())
+    }
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(d, _) => d.len(),
+            Tensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            Tensor::I32(..) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            Tensor::F32(..) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Check this tensor against an operand spec (name used in errors only).
+    pub fn validate(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("operand {}: dtype mismatch ({:?} vs {:?})", spec.name, self.dtype(), spec.dtype);
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "operand {}: shape mismatch ({:?} vs {:?})",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.len() != spec.element_count() {
+            bail!("operand {}: element count mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    /// Convert to an xla literal (host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(d, _) => xla::Literal::vec1(d),
+            Tensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::DType;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn validation_accepts_matching() {
+        let t = Tensor::f32(vec![0.0; 6], &[2, 3]);
+        assert!(t.validate(&spec("x", &[2, 3], DType::F32)).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_mismatches() {
+        let t = Tensor::f32(vec![0.0; 6], &[2, 3]);
+        assert!(t.validate(&spec("x", &[3, 2], DType::F32)).is_err());
+        assert!(t.validate(&spec("x", &[2, 3], DType::I32)).is_err());
+    }
+
+    #[test]
+    fn scalar_shape_is_empty() {
+        let t = Tensor::scalar_f32(0.5);
+        assert!(t.shape().is_empty());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn accessors() {
+        let t = Tensor::i32(vec![1, 2], &[2]);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Micro-benchmark measurement substrate (no `criterion` offline).
+//!
+//! Criterion-style flow: warmup, then timed samples until a time or
+//! iteration budget is reached; reports mean/median/p95 and flags noisy
+//! runs. Used by every target under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn p95_s(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+    pub fn stddev_s(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+    /// Coefficient of variation — rough noise indicator.
+    pub fn cv(&self) -> f64 {
+        let m = self.mean_s();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.stddev_s() / m
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} median {:>12} mean {:>12} p95 (n={}{})",
+            self.name,
+            fmt_duration(self.median_s()),
+            fmt_duration(self.mean_s()),
+            fmt_duration(self.p95_s()),
+            self.samples.len(),
+            if self.cv() > 0.15 { ", NOISY" } else { "" },
+        )
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner with a global time budget per measurement.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(750),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(0),
+            budget: Duration::from_millis(200),
+            min_samples: 3,
+            max_samples: 25,
+        }
+    }
+
+    /// Measure `f`, returning per-iteration timing samples.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Sampling.
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while (samples.len() < self.min_samples)
+            || (b0.elapsed() < self.budget && samples.len() < self.max_samples)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement { name: name.to_string(), samples }
+    }
+
+    /// Measure and print the one-line report (the common call).
+    pub fn bench<F: FnMut()>(&self, name: &str, f: F) -> Measurement {
+        let m = self.run(name, f);
+        println!("{}", m.report());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_min_samples() {
+        let b = Bench { budget: Duration::from_millis(1), min_samples: 7, ..Default::default() };
+        let m = b.run("noop", || {});
+        assert!(m.samples.len() >= 7);
+    }
+
+    #[test]
+    fn respects_max_samples() {
+        let b = Bench {
+            warmup: Duration::ZERO,
+            budget: Duration::from_secs(5),
+            min_samples: 1,
+            max_samples: 10,
+        };
+        let m = b.run("noop", || {});
+        assert!(m.samples.len() <= 10);
+    }
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let b = Bench::quick();
+        let fast = b.run("fast", || {
+            std::hint::black_box(1 + 1);
+        });
+        let slow = b.run("slow", || {
+            let mut x = 0u64;
+            for i in 0..200_000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(x);
+        });
+        assert!(slow.median_s() > fast.median_s());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(0.0025), "2.500ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500us");
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+    }
+}

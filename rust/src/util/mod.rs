@@ -1,0 +1,11 @@
+//! Infrastructure substrates the offline crate set does not provide:
+//! JSON, CLI parsing, PRNG, parallel map, micro-benchmarking, property
+//! testing, and shared statistics.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,95 @@
+//! Scoped parallel-map substrate (no `rayon` offline).
+//!
+//! The figure benches sweep 15 datasets × several strategies; on multi-core
+//! hosts `par_map` fans the work across scoped threads, on this session's
+//! single-core box it degrades gracefully to a serial loop with no thread
+//! overhead.
+
+/// Number of worker threads to use (respects `ADAPTGEAR_THREADS`).
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("ADAPTGEAR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parallel map preserving input order.
+///
+/// Splits `items` into `worker_count()` contiguous chunks and processes
+/// each on a scoped thread. `f` must be `Sync` (called concurrently).
+pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let workers = worker_count();
+    if workers <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let chunk = n.div_ceil(workers);
+    let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+
+    // Pair each item with its destination index, chunk, and scatter.
+    let mut indexed: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let mut chunks: Vec<Vec<(usize, T)>> = Vec::new();
+    while !indexed.is_empty() {
+        let take = chunk.min(indexed.len());
+        chunks.push(indexed.drain(..take).collect());
+    }
+
+    let slot_refs: Vec<&mut Option<U>> = slots.iter_mut().collect();
+    // Distribute mutable slot references chunk-wise.
+    let mut slot_iter = slot_refs.into_iter();
+    let mut chunk_slots: Vec<Vec<&mut Option<U>>> = Vec::new();
+    for c in &chunks {
+        chunk_slots.push((&mut slot_iter).take(c.len()).collect());
+    }
+
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (chunk, mut outs) in chunks.into_iter().zip(chunk_slots) {
+            scope.spawn(move || {
+                for ((_, item), out) in chunk.into_iter().zip(outs.iter_mut()) {
+                    **out = Some(f(item));
+                }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = par_map((0..100).collect(), |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_item() {
+        assert_eq!(par_map(vec![7], |x: i32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn heavier_closure() {
+        let out = par_map((0..32u64).collect(), |x| {
+            (0..1000).fold(x, |acc, i| acc.wrapping_mul(31).wrapping_add(i))
+        });
+        assert_eq!(out.len(), 32);
+    }
+}

@@ -1,0 +1,86 @@
+//! Mini property-testing substrate (no `proptest` offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::check("csr roundtrip", 200, |rng| {
+//!     let g = Graph::rmat(rng.usize_below(512) + 16, 4, rng);
+//!     prop::require(g.to_csr().to_coo().edge_count() == g.edge_count(), "edges preserved")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of one property case: Ok(()) or a failure message.
+pub type CaseResult = Result<(), String>;
+
+/// Build a failure unless `cond` holds.
+pub fn require(cond: bool, msg: &str) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert two f64s are within tolerance.
+pub fn require_close(a: f64, b: f64, tol: f64, msg: &str) -> CaseResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random instances of `property`. Panics (test failure) with
+/// the seed of the first failing case.
+pub fn check<F>(name: &str, cases: u64, property: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    // Honour ADAPTGEAR_PROP_SEED for deterministic replay of one case.
+    if let Ok(seed) = std::env::var("ADAPTGEAR_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("ADAPTGEAR_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with ADAPTGEAR_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("u64 below bound", 50, |rng| {
+            let b = rng.below(100) + 1;
+            require(rng.below(b) < b, "below() out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with ADAPTGEAR_PROP_SEED=")]
+    fn failing_property_names_seed() {
+        check("always fails", 3, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn require_close_tolerances() {
+        assert!(require_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(require_close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}
