@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command: build, tests, formatting, lints.
+#
+#   ./ci.sh          # build + test + fmt + clippy
+#   ./ci.sh bench    # additionally run the serve bench (emits BENCH_serve.json)
+#
+# The serve bench and the PJRT integration tests skip themselves when
+# artifacts/ has not been built, so this script is runnable on a bare
+# checkout.
+set -euo pipefail
+cd "$(dirname "$0")"
+# The crate manifest may live at the repo root or under rust/ depending on
+# how the build environment lays the workspace out; run cargo where it is.
+if [[ ! -f Cargo.toml && -f rust/Cargo.toml ]]; then
+    cd rust
+fi
+
+run() {
+    echo "==> $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+run cargo fmt --check
+run cargo clippy -- -D warnings
+
+if [[ "${1:-}" == "bench" ]]; then
+    run cargo bench --bench serve
+fi
+
+echo "ci.sh: all checks passed"

@@ -1,92 +1,72 @@
-//! Serving example: train briefly, then serve node-classification
-//! requests through the forward artifact, reporting latency percentiles
-//! and throughput — the "deployment" half of the paper's motivation
-//! (real-time graph analysis, Sec. 1).
+//! Serving example — a thin client of the `serve` subsystem.
+//!
+//! Deploys a briefly-trained model through the [`ModelRegistry`], then
+//! drives the micro-batched single-owner event loop with the closed-loop
+//! load generator and prints the SLO report: the "deployment" half of the
+//! paper's motivation (real-time graph analysis, Sec. 1), now with
+//! batched artifact executions instead of one PJRT call per request.
 //!
 //! ```text
 //! cargo run --release --example serve_inference -- --requests 200
 //! ```
+//!
+//! The `serve` subcommand (`cargo run --release -- serve ...`) exposes
+//! the same loop with more knobs; this example shows the library API.
 
-use std::time::Instant;
+use std::time::Duration;
 
-use adaptgear::coordinator::{pipeline, trainer, Clock, ModelKind, Strategy, TrainConfig};
+use adaptgear::coordinator::ModelKind;
 use adaptgear::graph::datasets;
 use adaptgear::runtime::Engine;
+use adaptgear::serve::{
+    loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession,
+};
 use adaptgear::util::cli::Args;
-use adaptgear::util::stats;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let requests = args.get_usize("requests", 200);
     let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
     let spec = datasets::find(args.get_or("dataset", "citeseer")).expect("unknown dataset");
 
-    // -- train a model to serve
-    let cfg = TrainConfig { model: ModelKind::Gcn, steps: 60, clock: Clock::Sim, ..Default::default() };
-    let scale = pipeline::auto_scale(spec, &engine);
-    let data = spec.build_scaled(scale, cfg.seed);
-    let (d, _) = adaptgear::coordinator::preprocess(
-        Strategy::AdaptGear,
-        &data.graph,
-        pipeline::propagation_for(cfg.model),
-        engine.manifest.community,
-        cfg.seed,
-    );
-    let f_data = engine.manifest.buckets.values().map(|b| b.features).max().unwrap();
-    let x0 = data.features(f_data);
-    let labels0 = data.labels();
-    let n = d.graph.n;
-    let mut x = vec![0.0f32; n * f_data];
-    let mut labels = vec![0i32; n];
-    for old in 0..n {
-        let new = d.perm[old] as usize;
-        x[new * f_data..(new + 1) * f_data].copy_from_slice(&x0[old * f_data..(old + 1) * f_data]);
-        labels[new] = labels0[old];
-    }
-    let report = trainer::train(&engine, &d, &x, f_data, &labels, &cfg)?;
+    // -- deploy: train a model and pre-warm its forward executable
+    let mut registry = ModelRegistry::new();
+    let mut dspec = DeploymentSpec::new("demo", spec, ModelKind::Gcn);
+    dspec.steps = args.get_usize("steps", 60);
+    let dep = registry.deploy(&engine, dspec)?;
     println!(
-        "model ready: {} on {} (loss {:.3} -> {:.3}, kernels {})",
-        cfg.model.as_str(),
+        "model ready: {} on {} (final loss {:.3}, kernels {}, forward warmed in {:.2}s)",
+        dep.model.as_str(),
         spec.name,
-        report.losses[0],
-        report.final_loss(),
-        report.chosen
+        dep.final_loss,
+        dep.chosen,
+        dep.warm_secs,
     );
+    let (n, f_data) = (dep.n, dep.f_data);
 
-    // -- serve: each request perturbs a node's features and asks for
-    //    fresh logits over the whole (static-topology) graph
-    let mut rng = adaptgear::util::rng::Rng::new(99);
-    let mut latencies_s = Vec::with_capacity(requests);
-    // warm the forward executable (compile happens once)
-    trainer::forward(&engine, &d, report.chosen, cfg.model, &report.params, &x, f_data)?;
+    // -- serve: closed-loop clients perturb node features and ask for
+    //    fresh logits; the session coalesces them into micro-batches
+    let cfg = ServeConfig {
+        max_batch: args.get_usize("max-batch", 8),
+        max_wait: Duration::from_micros(args.get_u64("max-wait-us", 2000)),
+        queue_depth: args.get_usize("queue-depth", 128),
+    };
+    let load = LoadGenConfig {
+        requests: args.get_usize("requests", 200),
+        clients: args.get_usize("clients", 16),
+        ..Default::default()
+    };
+    let (session, client) = ServeSession::new(&engine, &mut registry, cfg);
+    let gen = loadgen::spawn(client, "demo".to_string(), n, f_data, load);
+    let report = session.run()?;
+    let summary = gen.join();
 
-    let serve_start = Instant::now();
-    for _ in 0..requests {
-        let v = rng.usize_below(n);
-        let j = rng.usize_below(f_data);
-        x[v * f_data + j] += rng.normal_f32() * 0.1;
-
-        let t0 = Instant::now();
-        let logits =
-            trainer::forward(&engine, &d, report.chosen, cfg.model, &report.params, &x, f_data)?;
-        latencies_s.push(t0.elapsed().as_secs_f64());
-        std::hint::black_box(&logits);
-    }
-    let total = serve_start.elapsed().as_secs_f64();
-
-    let ms: Vec<f64> = latencies_s.iter().map(|s| s * 1e3).collect();
-    println!("\nserved {requests} full-graph inference requests in {total:.2}s");
+    println!("\n{}", report.render());
     println!(
-        "latency  p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | max {:.2} ms",
-        stats::percentile(&ms, 50.0),
-        stats::percentile(&ms, 95.0),
-        stats::percentile(&ms, 99.0),
-        stats::max(&ms),
-    );
-    println!(
-        "throughput {:.1} req/s ({:.1}k vertex-classifications/s)",
-        requests as f64 / total,
-        requests as f64 * n as f64 / total / 1e3,
+        "throughput {:.1} req/s ({:.1}k vertex-classifications/s) | clients: sent {} shed {}",
+        report.throughput_rps,
+        report.throughput_rps * n as f64 / 1e3,
+        summary.sent,
+        summary.shed,
     );
     Ok(())
 }

@@ -86,17 +86,12 @@ fn main() -> anyhow::Result<()> {
 
         // features/labels permuted into the reordered id space
         let f_data = engine.manifest.buckets.values().map(|b| b.features).max().unwrap();
-        let x0 = data.features(f_data);
-        let labels0 = data.labels();
-        let n = d.graph.n;
-        let mut x = vec![0.0f32; n * f_data];
-        let mut labels = vec![0i32; n];
-        for old in 0..n {
-            let new = d.perm[old] as usize;
-            x[new * f_data..(new + 1) * f_data]
-                .copy_from_slice(&x0[old * f_data..(old + 1) * f_data]);
-            labels[new] = labels0[old];
-        }
+        let (x, labels) = adaptgear::coordinator::apply_perm(
+            &d.perm,
+            &data.features(f_data),
+            &data.labels(),
+            f_data,
+        );
 
         let t0 = std::time::Instant::now();
         let report = trainer::train(&engine, &d, &x, f_data, &labels, &cfg)?;

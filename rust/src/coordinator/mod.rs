@@ -18,3 +18,54 @@ pub use modeldims::{ModelDims, ModelKind};
 pub use selector::{select, KernelTimer, Role, SelectorReport};
 pub use strategy::{best_adaptive_pair, forward_cost, preprocess, PreprocessTimes, Strategy};
 pub use trainer::{train, Clock, TrainConfig, TrainReport};
+
+/// Scatter features and labels from the original vertex order into a
+/// decomposition's reordered id space (`perm[old] = new`).
+///
+/// `x0` is `[n, f_data]` row-major in the original order; the returned
+/// pair is the same data in the reordered space, ready for the trainer,
+/// the forward path, and the serve registry.
+pub fn apply_perm(
+    perm: &[u32],
+    x0: &[f32],
+    labels0: &[i32],
+    f_data: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let n = perm.len();
+    debug_assert_eq!(x0.len(), n * f_data);
+    debug_assert_eq!(labels0.len(), n);
+    let mut x = vec![0.0f32; n * f_data];
+    let mut labels = vec![0i32; n];
+    for old in 0..n {
+        let new = perm[old] as usize;
+        x[new * f_data..(new + 1) * f_data]
+            .copy_from_slice(&x0[old * f_data..(old + 1) * f_data]);
+        labels[new] = labels0[old];
+    }
+    (x, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::apply_perm;
+
+    #[test]
+    fn apply_perm_scatters_rows_and_labels() {
+        // perm[old] = new: vertex 0 -> slot 2, 1 -> slot 0, 2 -> slot 1
+        let perm = [2u32, 0, 1];
+        let x0 = [0.0f32, 0.1, 1.0, 1.1, 2.0, 2.1]; // f_data = 2
+        let labels0 = [10i32, 11, 12];
+        let (x, labels) = apply_perm(&perm, &x0, &labels0, 2);
+        assert_eq!(x, vec![1.0, 1.1, 2.0, 2.1, 0.0, 0.1]);
+        assert_eq!(labels, vec![11, 12, 10]);
+    }
+
+    #[test]
+    fn apply_perm_identity_is_noop() {
+        let perm = [0u32, 1];
+        let x0 = [5.0f32, 6.0];
+        let (x, labels) = apply_perm(&perm, &x0, &[3, 4], 1);
+        assert_eq!(x, x0.to_vec());
+        assert_eq!(labels, vec![3, 4]);
+    }
+}

@@ -88,18 +88,9 @@ pub fn train_decomposition(
         .map(|b| b.features)
         .max()
         .unwrap_or(32);
-    let x0 = data.features(f_data);
-    let labels0 = data.labels();
     // permute rows into the decomposition's vertex order
-    let n = d.graph.n;
-    let mut x = vec![0.0f32; n * f_data];
-    let mut labels = vec![0i32; n];
-    for old in 0..n {
-        let new = d.perm[old] as usize;
-        x[new * f_data..(new + 1) * f_data]
-            .copy_from_slice(&x0[old * f_data..(old + 1) * f_data]);
-        labels[new] = labels0[old];
-    }
+    let (x, labels) =
+        super::apply_perm(&d.perm, &data.features(f_data), &data.labels(), f_data);
     train(engine, d, &x, f_data, &labels, cfg)
 }
 

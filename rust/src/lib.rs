@@ -11,10 +11,12 @@
 //! * **Layer 3** (this crate): the paper's system contribution — graph
 //!   decomposition, subgraph-level kernel mapping, and the feedback-driven
 //!   adaptive selector — plus every substrate it needs (graph formats,
-//!   METIS-like partitioner, GPU cost simulator, PJRT runtime).
+//!   METIS-like partitioner, GPU cost simulator, PJRT runtime) and the
+//!   [`serve`] inference-serving runtime (model registry, micro-batching,
+//!   admission control, SLO metrics) layered on top.
 //!
-//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `rust/DESIGN.md` for the full architecture inventory, including
+//! the serving subsystem's channel topology and SLO semantics.
 
 pub mod coordinator;
 pub mod graph;
@@ -22,4 +24,5 @@ pub mod gpusim;
 pub mod kernels;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod util;

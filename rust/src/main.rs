@@ -4,6 +4,8 @@
 //! adaptgear datasets                         # Table 1 registry + measured stats
 //! adaptgear decompose --dataset cora         # reorder + split, print density report
 //! adaptgear train --dataset cora --model gcn --steps 200 [--clock wall|sim]
+//! adaptgear serve --dataset citeseer --requests 500 --max-batch 16
+//!                                            # micro-batched serving + SLO report
 //! adaptgear selftest                         # artifact <-> runtime smoke check
 //! ```
 //!
@@ -26,6 +28,7 @@ fn main() {
         "datasets" => cmd_datasets(&args),
         "decompose" => cmd_decompose(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" => {
             print_help();
@@ -52,6 +55,10 @@ fn print_help() {
          \x20                                   reorder + split; print density report\n\
          \x20 train --dataset NAME [--model gcn|gin] [--steps N] [--lr F]\n\
          \x20       [--clock sim|wall] [--gpu a100|v100] [--scale S] [--seed N]\n\
+         \x20 serve --dataset NAME [--model gcn|gin] [--requests N] [--clients N]\n\
+         \x20       [--max-batch N] [--max-wait-us N] [--queue-depth N] [--steps N]\n\
+         \x20       [--seed N (loadgen)] [--train-seed N]\n\
+         \x20                                   micro-batched serving loop + SLO report\n\
          \x20 selftest                          verify artifacts + runtime numerics\n\n\
          Figures: cargo bench --bench figures -- <fig2b|fig3a|fig3b|fig4|fig8|\n\
          \x20        fig9|fig10|fig11|fig12|table2|overhead|all>"
@@ -168,6 +175,70 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.train.compile_secs,
         report.train.pack_secs,
     );
+    Ok(())
+}
+
+/// Closed-loop serving run: deploy (train + warm) a model through the
+/// registry, then drive the micro-batched event loop with the synthetic
+/// load generator and print the SLO report.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use adaptgear::serve::{
+        loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession,
+    };
+    use std::time::Duration;
+
+    let name = args.get_or("dataset", "citeseer");
+    let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
+    let model = ModelKind::parse(args.get_or("model", "gcn")).context("--model gcn|gin")?;
+    let cfg = ServeConfig {
+        max_batch: args.get_usize("max-batch", 16),
+        max_wait: Duration::from_micros(args.get_u64("max-wait-us", 2000)),
+        queue_depth: args.get_usize("queue-depth", 256),
+    };
+    let load = LoadGenConfig {
+        requests: args.get_usize("requests", 500),
+        clients: args.get_usize("clients", 32),
+        seed: args.get_u64("seed", 99),
+        ..Default::default()
+    };
+
+    let engine = Engine::new(artifacts_dir(args))?;
+    println!("platform={} artifacts={}", engine.platform(), engine.manifest.artifacts.len());
+
+    let mut registry = ModelRegistry::new();
+    let deployment = format!("{}-{}", spec.name, model.as_str());
+    let mut dspec = DeploymentSpec::new(deployment.clone(), spec, model);
+    dspec.steps = args.get_usize("steps", 60);
+    dspec.seed = args.get_u64("train-seed", 0);
+    let dep = registry.deploy(&engine, dspec)?;
+    println!(
+        "deployed {:?}: {} vertices, kernels {}, final loss {:.3}, forward warmed in {:.2}s",
+        dep.name, dep.n, dep.chosen, dep.final_loss, dep.warm_secs
+    );
+    let (n, f_data) = (dep.n, dep.f_data);
+
+    println!(
+        "serving: {} requests from {} closed-loop clients (max-batch {}, max-wait {:?}, queue depth {})",
+        load.requests, load.clients, cfg.max_batch, cfg.max_wait, cfg.queue_depth
+    );
+    let (session, client) = ServeSession::new(&engine, &mut registry, cfg);
+    let gen = loadgen::spawn(client, deployment, n, f_data, load);
+    let report = session.run()?;
+    let summary = gen.join();
+
+    println!("\n{}", report.render());
+    println!(
+        "clients: sent {} answered {} shed {} failed {}",
+        summary.sent, summary.answered, summary.shed, summary.failed
+    );
+    if report.forward_calls < report.served {
+        println!(
+            "micro-batching amortized {} requests over {} artifact executions ({:.2}x)",
+            report.served,
+            report.forward_calls,
+            report.served as f64 / report.forward_calls.max(1) as f64
+        );
+    }
     Ok(())
 }
 

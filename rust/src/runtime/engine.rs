@@ -70,11 +70,18 @@ impl Engine {
         Ok(loaded)
     }
 
+    /// Pre-compile an artifact without executing it (serve startup warms
+    /// forward executables so the first request pays no XLA compile).
+    /// Returns the artifact's compile time — 0-cost if already cached.
+    pub fn warm(&self, name: &str) -> Result<f64> {
+        Ok(self.load(name)?.compile_secs)
+    }
+
     /// Validate operands against the manifest and execute; returns output
     /// literals in manifest order.
     pub fn run(&self, name: &str, args: &[Tensor]) -> Result<Vec<xla::Literal>> {
-        let meta = self.manifest.get(name)?.clone();
-        self.validate_args(&meta, args)?;
+        let meta = self.manifest.get(name)?;
+        self.validate_args(meta, args)?;
         let loaded = self.load(name)?;
         let literals = args
             .iter()

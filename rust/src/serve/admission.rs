@@ -1,0 +1,157 @@
+//! Admission control: bound the number of in-flight requests and shed
+//! load beyond capacity instead of letting queues grow without bound.
+//!
+//! The controller is shared (`Arc`) between producer threads, which call
+//! [`Admission::try_admit`] before sending, and the coordinator event
+//! loop, which calls [`Admission::release`] once a request has been
+//! answered. "Depth" therefore counts requests anywhere in the system —
+//! channel, batcher, or executing — which is the quantity an SLO cares
+//! about (queueing delay is part of latency).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Shared admission state; counters are monotonic except `depth`.
+#[derive(Debug)]
+pub struct Admission {
+    capacity: usize,
+    depth: AtomicUsize,
+    admitted: AtomicUsize,
+    shed: AtomicUsize,
+}
+
+impl Admission {
+    /// `capacity` is clamped to at least 1 so a misconfigured controller
+    /// degrades to serial admission rather than shedding everything.
+    pub fn new(capacity: usize) -> Admission {
+        Admission {
+            capacity: capacity.max(1),
+            depth: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+        }
+    }
+
+    /// Try to take an in-flight slot. On `false` the request is shed and
+    /// the caller must NOT send it; the rejection is already counted.
+    pub fn try_admit(&self) -> bool {
+        let won = self
+            .depth
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
+                (d < self.capacity).then_some(d + 1)
+            })
+            .is_ok();
+        if won {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        won
+    }
+
+    /// Return an in-flight slot (request answered or dropped server-side).
+    pub fn release(&self) {
+        let prev = self.depth.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "release without matching admit");
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently in the system (queued, batched, or executing).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// Total requests ever admitted.
+    pub fn admitted(&self) -> usize {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Total requests ever shed.
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Total requests ever offered (admitted + shed).
+    pub fn offered(&self) -> usize {
+        self.admitted() + self.shed()
+    }
+
+    /// Fraction of offered load that was shed; 0.0 before any traffic.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / offered as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sheds_at_capacity() {
+        let a = Admission::new(2);
+        assert!(a.try_admit());
+        assert!(a.try_admit());
+        assert!(!a.try_admit(), "third concurrent request must shed");
+        assert_eq!(a.depth(), 2);
+        assert_eq!(a.admitted(), 2);
+        assert_eq!(a.shed(), 1);
+        assert_eq!(a.offered(), 3);
+        assert!((a.shed_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn release_reopens_capacity() {
+        let a = Admission::new(1);
+        assert!(a.try_admit());
+        assert!(!a.try_admit());
+        a.release();
+        assert_eq!(a.depth(), 0);
+        assert!(a.try_admit(), "freed slot is admittable again");
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let a = Admission::new(0);
+        assert_eq!(a.capacity(), 1);
+        assert!(a.try_admit());
+        assert!(!a.try_admit());
+    }
+
+    #[test]
+    fn empty_controller_has_zero_shed_rate() {
+        assert_eq!(Admission::new(8).shed_rate(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_admits_never_exceed_capacity() {
+        use std::sync::Arc;
+        let a = Arc::new(Admission::new(4));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    let mut taken = 0usize;
+                    for _ in 0..100 {
+                        if a.try_admit() {
+                            taken += 1;
+                            assert!(a.depth() <= 4);
+                            a.release();
+                        }
+                    }
+                    taken
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(a.depth(), 0);
+        assert_eq!(a.admitted(), total);
+        assert_eq!(a.offered(), 800);
+    }
+}

@@ -1,0 +1,148 @@
+//! Micro-batching: coalesce queued requests into one artifact execution.
+//!
+//! The batcher is a pure state machine over injected `Instant`s so the
+//! coalescing policy is unit-testable without threads or a PJRT engine.
+//! A batch closes on whichever comes first:
+//!
+//! * **max-batch** — the pending set reaches `max_batch` (returned from
+//!   [`MicroBatcher::push`]), or
+//! * **max-wait** — the *oldest* pending request has waited `max_wait`
+//!   (returned from [`MicroBatcher::poll`] once the deadline passes).
+//!
+//! The event loop sleeps on `recv_timeout` until [`MicroBatcher::deadline`]
+//! and calls `poll` on wakeup, so an idle queue costs nothing and a lone
+//! request is never delayed by more than `max_wait`.
+
+use std::time::{Duration, Instant};
+
+/// Coalescing policy state. `T` is the queued request type.
+#[derive(Debug)]
+pub struct MicroBatcher<T> {
+    max_batch: usize,
+    max_wait: Duration,
+    pending: Vec<T>,
+    /// Set when the first item of the open batch arrives.
+    deadline: Option<Instant>,
+}
+
+impl<T> MicroBatcher<T> {
+    /// `max_batch` is clamped to at least 1; `max_batch == 1` disables
+    /// coalescing (every push closes a batch immediately).
+    pub fn new(max_batch: usize, max_wait: Duration) -> MicroBatcher<T> {
+        MicroBatcher {
+            max_batch: max_batch.max(1),
+            max_wait,
+            pending: Vec::new(),
+            deadline: None,
+        }
+    }
+
+    /// Enqueue one item at time `now`; returns the closed batch when it
+    /// reaches `max_batch`.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.deadline = Some(now + self.max_wait);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.max_batch {
+            self.take()
+        } else {
+            None
+        }
+    }
+
+    /// Close the open batch if its deadline has passed at time `now`.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        match self.deadline {
+            Some(d) if now >= d => self.take(),
+            _ => None,
+        }
+    }
+
+    /// Close whatever is pending regardless of size or age (shutdown).
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        self.take()
+    }
+
+    /// When the event loop must wake to honor max-wait; `None` while the
+    /// batcher is empty (sleep indefinitely).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    fn take(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.deadline = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_batch_closes_immediately() {
+        let mut b = MicroBatcher::new(3, Duration::from_secs(60));
+        let t0 = Instant::now();
+        assert_eq!(b.push(1, t0), None);
+        assert_eq!(b.push(2, t0), None);
+        assert_eq!(b.push(3, t0), Some(vec![1, 2, 3]));
+        // batch closed: pending cleared, deadline cleared
+        assert!(b.is_empty());
+        assert_eq!(b.deadline(), None);
+    }
+
+    #[test]
+    fn max_wait_closes_partial_batch() {
+        let wait = Duration::from_millis(5);
+        let mut b = MicroBatcher::new(16, wait);
+        let t0 = Instant::now();
+        assert_eq!(b.push(7, t0), None);
+        // before the deadline nothing closes
+        assert_eq!(b.poll(t0), None);
+        assert_eq!(b.poll(t0 + wait / 2), None);
+        // at/after the deadline the undersized batch is released
+        assert_eq!(b.poll(t0 + wait), Some(vec![7]));
+        assert_eq!(b.poll(t0 + wait * 2), None, "closed batch does not re-fire");
+    }
+
+    #[test]
+    fn deadline_is_anchored_to_oldest_item() {
+        let wait = Duration::from_millis(10);
+        let mut b = MicroBatcher::new(16, wait);
+        let t0 = Instant::now();
+        assert_eq!(b.push(1, t0), None);
+        // later arrivals must not extend the oldest item's wait
+        assert_eq!(b.push(2, t0 + Duration::from_millis(9)), None);
+        assert_eq!(b.deadline(), Some(t0 + wait));
+        assert_eq!(b.poll(t0 + wait), Some(vec![1, 2]));
+    }
+
+    #[test]
+    fn flush_releases_pending() {
+        let mut b = MicroBatcher::new(16, Duration::from_secs(60));
+        assert_eq!(b.flush(), None::<Vec<u8>>);
+        assert_eq!(b.push(9, Instant::now()), None);
+        assert_eq!(b.flush(), Some(vec![9]));
+    }
+
+    #[test]
+    fn max_batch_one_disables_coalescing() {
+        let mut b = MicroBatcher::new(1, Duration::from_secs(60));
+        assert_eq!(b.push('a', Instant::now()), Some(vec!['a']));
+        // zero clamps to one rather than never closing
+        let mut z = MicroBatcher::new(0, Duration::from_secs(60));
+        assert_eq!(z.push('b', Instant::now()), Some(vec!['b']));
+    }
+}

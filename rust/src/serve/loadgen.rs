@@ -1,0 +1,129 @@
+//! Closed-loop synthetic load generator.
+//!
+//! Spawns `clients` producer threads, each holding a [`ServeClient`]
+//! clone and playing a closed loop: submit one feature-perturbation
+//! request, block for the answer, repeat. Offered concurrency therefore
+//! equals the client count — the standard closed-loop model, where
+//! micro-batch occupancy is bounded by how many clients are in flight
+//! while the coordinator executes the previous batch.
+//!
+//! Shed requests are dropped (the whole point of load shedding) and
+//! counted; they are NOT retried, so `answered + shed + failed == sent`.
+
+use std::thread;
+
+use super::session::{ServeClient, ServeError};
+use crate::util::rng::Rng;
+
+/// Load shape knobs.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Concurrent closed-loop clients (threads).
+    pub clients: usize,
+    pub seed: u64,
+    /// Scale of the gaussian feature perturbation each request applies.
+    pub delta_scale: f32,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig { requests: 500, clients: 32, seed: 99, delta_scale: 0.1 }
+    }
+}
+
+/// Aggregated client-side outcome counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadGenSummary {
+    pub sent: usize,
+    pub answered: usize,
+    pub shed: usize,
+    /// Server-side error replies (unknown deployment, PJRT failure).
+    pub failed: usize,
+}
+
+/// Running load generator; `join` blocks until every client finishes.
+pub struct LoadGen {
+    handles: Vec<thread::JoinHandle<LoadGenSummary>>,
+}
+
+impl LoadGen {
+    pub fn join(self) -> LoadGenSummary {
+        let mut total = LoadGenSummary::default();
+        for h in self.handles {
+            let s = h.join().expect("loadgen client thread panicked");
+            total.sent += s.sent;
+            total.answered += s.answered;
+            total.shed += s.shed;
+            total.failed += s.failed;
+        }
+        total
+    }
+}
+
+/// Start the generator against `deployment`, perturbing random features
+/// of random vertices in a `[n, f_data]` feature matrix. Takes ownership
+/// of `client` and drops it once all clones are distributed, so the
+/// serving loop shuts down exactly when the last client finishes.
+pub fn spawn(
+    client: ServeClient,
+    deployment: String,
+    n: usize,
+    f_data: usize,
+    cfg: LoadGenConfig,
+) -> LoadGen {
+    let clients = cfg.clients.max(1);
+    let mut seed_rng = Rng::new(cfg.seed);
+    let handles = (0..clients)
+        .map(|k| {
+            // requests split as evenly as possible across clients
+            let share = cfg.requests / clients + usize::from(k < cfg.requests % clients);
+            let client = client.clone();
+            let deployment = deployment.clone();
+            let mut rng = seed_rng.fork(k as u64);
+            let delta_scale = cfg.delta_scale;
+            thread::spawn(move || {
+                let mut s = LoadGenSummary::default();
+                for _ in 0..share {
+                    let v = rng.usize_below(n.max(1));
+                    let j = rng.usize_below(f_data.max(1));
+                    let delta = rng.normal_f32() * delta_scale;
+                    s.sent += 1;
+                    match client.call(&deployment, v, j, delta) {
+                        Ok(_) => s.answered += 1,
+                        Err(ServeError::Shed) => s.shed += 1,
+                        Err(ServeError::Remote(_)) => s.failed += 1,
+                        Err(ServeError::Closed) => {
+                            // server gone; nothing further will succeed
+                            s.failed += 1;
+                            break;
+                        }
+                    }
+                }
+                s
+            })
+        })
+        .collect();
+    // `client` (the original handle) drops here; only thread-held clones
+    // keep the request channel open.
+    LoadGen { handles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_accounting_identity() {
+        let s = LoadGenSummary { sent: 10, answered: 7, shed: 2, failed: 1 };
+        assert_eq!(s.answered + s.shed + s.failed, s.sent);
+    }
+
+    #[test]
+    fn default_config_matches_acceptance_shape() {
+        let cfg = LoadGenConfig::default();
+        assert_eq!(cfg.requests, 500);
+        assert!(cfg.clients > 1, "closed-loop batching needs concurrency");
+    }
+}

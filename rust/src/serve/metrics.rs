@@ -1,0 +1,215 @@
+//! SLO metrics: per-request latency percentiles, throughput, shed rate,
+//! and the batch-occupancy histogram that shows whether micro-batching is
+//! actually amortizing artifact executions.
+//!
+//! Recording is single-threaded (the coordinator event loop owns the
+//! collector); [`SloMetrics::report`] folds in the admission counters at
+//! shutdown to produce an immutable [`SloReport`].
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Mutable collector owned by the serve event loop.
+#[derive(Debug, Default)]
+pub struct SloMetrics {
+    latencies_ms: Vec<f64>,
+    /// batch size -> number of forward executions at that occupancy
+    occupancy: BTreeMap<usize, usize>,
+    forward_calls: usize,
+    served: usize,
+    errors: usize,
+}
+
+impl SloMetrics {
+    pub fn new() -> SloMetrics {
+        SloMetrics::default()
+    }
+
+    /// One request answered successfully; `latency` is enqueue -> reply.
+    pub fn record_reply(&mut self, latency: Duration) {
+        self.served += 1;
+        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
+    }
+
+    /// One request answered with an error (still counts toward depth
+    /// release, not toward latency percentiles).
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// One forward artifact execution serving `occupancy` requests.
+    pub fn record_forward(&mut self, occupancy: usize) {
+        self.forward_calls += 1;
+        *self.occupancy.entry(occupancy).or_insert(0) += 1;
+    }
+
+    pub fn served(&self) -> usize {
+        self.served
+    }
+
+    pub fn forward_calls(&self) -> usize {
+        self.forward_calls
+    }
+
+    /// Freeze into a report. `wall_secs` is the serving-loop wall time;
+    /// `offered`/`shed` come from the admission controller.
+    pub fn report(&self, wall_secs: f64, offered: usize, shed: usize) -> SloReport {
+        let batched: usize = self.occupancy.iter().map(|(size, count)| size * count).sum();
+        SloReport {
+            offered,
+            shed,
+            served: self.served,
+            errors: self.errors,
+            forward_calls: self.forward_calls,
+            wall_secs,
+            p50_ms: stats::percentile(&self.latencies_ms, 50.0),
+            p95_ms: stats::percentile(&self.latencies_ms, 95.0),
+            p99_ms: stats::percentile(&self.latencies_ms, 99.0),
+            max_ms: if self.latencies_ms.is_empty() { 0.0 } else { stats::max(&self.latencies_ms) },
+            throughput_rps: if wall_secs > 0.0 { self.served as f64 / wall_secs } else { 0.0 },
+            mean_occupancy: if self.forward_calls > 0 {
+                batched as f64 / self.forward_calls as f64
+            } else {
+                0.0
+            },
+            shed_rate: if offered > 0 { shed as f64 / offered as f64 } else { 0.0 },
+            occupancy: self.occupancy.clone(),
+        }
+    }
+}
+
+/// Immutable end-of-run SLO summary.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub offered: usize,
+    pub shed: usize,
+    pub served: usize,
+    pub errors: usize,
+    pub forward_calls: usize,
+    pub wall_secs: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub throughput_rps: f64,
+    /// Mean requests amortized per forward execution (1.0 = no batching).
+    pub mean_occupancy: f64,
+    pub shed_rate: f64,
+    pub occupancy: BTreeMap<usize, usize>,
+}
+
+impl SloReport {
+    /// Multi-line human-readable summary (the `serve` subcommand output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "served {} of {} offered in {:.2}s ({} shed, {} errors)\n",
+            self.served, self.offered, self.wall_secs, self.shed, self.errors
+        ));
+        out.push_str(&format!(
+            "latency    p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | max {:.2} ms\n",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
+        ));
+        out.push_str(&format!(
+            "throughput {:.1} req/s | shed rate {:.2}%\n",
+            self.throughput_rps,
+            self.shed_rate * 100.0
+        ));
+        out.push_str(&format!(
+            "batching   {} forward calls for {} requests (mean occupancy {:.2})\n",
+            self.forward_calls, self.served, self.mean_occupancy
+        ));
+        out.push_str("occupancy  ");
+        let peak = self.occupancy.values().copied().max().unwrap_or(0).max(1);
+        for (size, count) in &self.occupancy {
+            let bar = "#".repeat((count * 20).div_ceil(peak));
+            out.push_str(&format!("\n  {size:>4} reqs/batch x{count:<5} {bar}"));
+        }
+        out.push('\n');
+        out
+    }
+
+    /// JSON encoding for `BENCH_serve.json` and downstream tooling.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered", Json::num(self.offered as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("forward_calls", Json::num(self.forward_calls as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("mean_occupancy", Json::num(self.mean_occupancy)),
+            ("shed_rate", Json::num(self.shed_rate)),
+            (
+                "occupancy",
+                Json::Arr(
+                    self.occupancy
+                        .iter()
+                        .map(|(size, count)| {
+                            Json::obj(vec![
+                                ("batch", Json::num(*size as f64)),
+                                ("count", Json::num(*count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math() {
+        let mut m = SloMetrics::new();
+        for ms in [1.0, 2.0, 3.0, 4.0] {
+            m.record_reply(Duration::from_secs_f64(ms / 1e3));
+        }
+        m.record_forward(3);
+        m.record_forward(1);
+        m.record_error();
+        let r = m.report(2.0, 6, 1);
+        assert_eq!(r.served, 4);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.forward_calls, 2);
+        assert_eq!(r.throughput_rps, 2.0);
+        assert!((r.mean_occupancy - 2.0).abs() < 1e-12);
+        assert!((r.shed_rate - 1.0 / 6.0).abs() < 1e-12);
+        assert!((r.p50_ms - 2.5).abs() < 1e-9);
+        assert_eq!(r.max_ms, 4.0);
+        assert_eq!(r.occupancy.get(&3), Some(&1));
+    }
+
+    #[test]
+    fn empty_collector_reports_zeros() {
+        let r = SloMetrics::new().report(0.0, 0, 0);
+        assert_eq!(r.served, 0);
+        assert_eq!(r.p99_ms, 0.0);
+        assert_eq!(r.max_ms, 0.0);
+        assert_eq!(r.throughput_rps, 0.0);
+        assert_eq!(r.mean_occupancy, 0.0);
+        assert_eq!(r.shed_rate, 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips_through_writer() {
+        let mut m = SloMetrics::new();
+        m.record_reply(Duration::from_millis(2));
+        m.record_forward(1);
+        let text = crate::util::json::write(&m.report(1.0, 1, 0).to_json());
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("served").as_usize(), Some(1));
+        assert_eq!(parsed.get("occupancy").idx(0).get("batch").as_usize(), Some(1));
+    }
+}

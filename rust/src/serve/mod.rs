@@ -1,0 +1,37 @@
+//! Production inference serving on top of the adaptive kernel stack.
+//!
+//! The paper motivates AdaptGear with real-time graph analysis (Sec. 1);
+//! this subsystem is the runtime that turns the trained artifact stack
+//! into a service: throughput scales with *batched artifact executions*
+//! instead of per-request PJRT calls.
+//!
+//! * [`registry`] — named (dataset, model-kind, strategy) deployments,
+//!   each owning its trained parameters, chosen kernel pair, and the
+//!   mutable permuted feature/label state requests perturb.
+//! * [`batcher`] — micro-batching: coalesce requests into one forward
+//!   execution per tick (max-batch / max-wait policy).
+//! * [`admission`] — bounded in-flight depth with load shedding.
+//! * [`session`] — the single-owner PJRT event loop (PJRT handles are not
+//!   `Send`) fed by `std::sync::mpsc` channels from producer threads.
+//! * [`metrics`] — SLO accounting: p50/p95/p99 latency, throughput, shed
+//!   rate, and the batch-occupancy histogram.
+//! * [`loadgen`] — closed-loop synthetic load for the `serve` subcommand,
+//!   the serve bench, and the integration tests.
+//!
+//! See `rust/DESIGN.md` (Serving subsystem) for the channel topology and
+//! SLO semantics. Entry points: the `serve` subcommand in `main.rs` and
+//! the `serve_inference` example, both thin clients of this module.
+
+pub mod admission;
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod registry;
+pub mod session;
+
+pub use admission::Admission;
+pub use batcher::MicroBatcher;
+pub use loadgen::{LoadGen, LoadGenConfig, LoadGenSummary};
+pub use metrics::{SloMetrics, SloReport};
+pub use registry::{Deployment, DeploymentSpec, ModelRegistry};
+pub use session::{Request, Response, ServeClient, ServeConfig, ServeError, ServeSession};

@@ -1,0 +1,267 @@
+//! Model registry: named deployments and the state they own.
+//!
+//! A [`Deployment`] is one servable (dataset, model-kind, strategy)
+//! triple: its decomposed graph, trained parameters, chosen kernel pair,
+//! and — because serving requests *mutate* features — the current
+//! permuted feature/label state. [`ModelRegistry::deploy`] runs the full
+//! train path (preprocess → adaptive select → train) and pre-warms the
+//! forward executable so the first served request does not pay XLA
+//! compile time; [`ModelRegistry::insert`] is the pure bookkeeping half,
+//! unit-testable without artifacts or a PJRT client.
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{
+    apply_perm, pipeline, preprocess, trainer, Clock, ModelKind, Strategy, TrainConfig,
+};
+use crate::graph::datasets::DatasetSpec;
+use crate::kernels::KernelPair;
+use crate::partition::Decomposition;
+use crate::runtime::{Engine, Manifest, Tensor};
+
+/// What to deploy: the identity of a servable model plus its training
+/// budget. `name` is the registry key clients address requests to.
+#[derive(Debug, Clone)]
+pub struct DeploymentSpec {
+    pub name: String,
+    pub dataset: &'static DatasetSpec,
+    pub model: ModelKind,
+    pub strategy: Strategy,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl DeploymentSpec {
+    /// Default deployment: AdaptGear strategy, a short training budget.
+    pub fn new(
+        name: impl Into<String>,
+        dataset: &'static DatasetSpec,
+        model: ModelKind,
+    ) -> DeploymentSpec {
+        DeploymentSpec {
+            name: name.into(),
+            dataset,
+            model,
+            strategy: Strategy::AdaptGear,
+            steps: 60,
+            seed: 0,
+        }
+    }
+}
+
+/// A live deployment: everything the event loop needs to answer requests.
+#[derive(Debug)]
+pub struct Deployment {
+    pub name: String,
+    pub model: ModelKind,
+    pub strategy: Strategy,
+    pub d: Decomposition,
+    /// Permuted feature state `[n, f_data]` — mutated by served
+    /// perturbation requests (the graph topology stays static).
+    pub x: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub f_data: usize,
+    /// Vertices in the (scaled) served graph.
+    pub n: usize,
+    pub chosen: KernelPair,
+    pub params: Vec<Tensor>,
+    /// Padded vertex count of the AOT bucket (logits row stride divisor).
+    pub bucket_vertices: usize,
+    pub classes: usize,
+    pub final_loss: f32,
+    /// XLA compile time of the pre-warmed forward executable.
+    pub warm_secs: f64,
+}
+
+impl Deployment {
+    /// Argmax class for vertex `v` from a full-graph logits buffer.
+    pub fn classify(&self, logits: &[f32], v: usize) -> i32 {
+        let width = logits.len() / self.bucket_vertices.max(1);
+        let row = &logits[v * width..v * width + self.classes.min(width)];
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+}
+
+/// Named deployments, keyed by `DeploymentSpec::name`.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    deployments: BTreeMap<String, Deployment>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Train + register a deployment: auto-scale the dataset to the AOT
+    /// buckets, preprocess with the spec's strategy, train through PJRT,
+    /// and pre-warm the winning forward executable.
+    pub fn deploy(&mut self, engine: &Engine, spec: DeploymentSpec) -> Result<&Deployment> {
+        if self.deployments.contains_key(&spec.name) {
+            bail!("deployment {:?} already exists", spec.name);
+        }
+        let cfg = TrainConfig {
+            model: spec.model,
+            steps: spec.steps,
+            clock: Clock::Sim,
+            seed: spec.seed,
+            ..Default::default()
+        };
+        let scale = pipeline::auto_scale(spec.dataset, engine);
+        let data = spec.dataset.build_scaled(scale, spec.seed);
+        let (d, _times) = preprocess(
+            spec.strategy,
+            &data.graph,
+            pipeline::propagation_for(spec.model),
+            engine.manifest.community,
+            spec.seed,
+        );
+        let f_data = engine
+            .manifest
+            .buckets
+            .values()
+            .map(|b| b.features)
+            .max()
+            .context("manifest has no buckets")?;
+        let (x, labels) = apply_perm(&d.perm, &data.features(f_data), &data.labels(), f_data);
+        let report = trainer::train(engine, &d, &x, f_data, &labels, &cfg)
+            .with_context(|| format!("training deployment {:?}", spec.name))?;
+        let bucket = &engine.manifest.buckets[&report.bucket];
+        let fwd_name = Manifest::fwd_name(
+            spec.model.as_str(),
+            report.chosen.intra_str(),
+            &report.chosen.inter.to_string(),
+            &report.bucket,
+        );
+        let warm_secs = engine
+            .warm(&fwd_name)
+            .with_context(|| format!("warming forward executable for {:?}", spec.name))?;
+        let n = d.graph.n;
+        let final_loss = report.final_loss();
+        self.insert(Deployment {
+            name: spec.name,
+            model: spec.model,
+            strategy: spec.strategy,
+            d,
+            x,
+            labels,
+            f_data,
+            n,
+            chosen: report.chosen,
+            params: report.params,
+            bucket_vertices: bucket.vertices,
+            classes: bucket.classes,
+            final_loss,
+            warm_secs,
+        })
+    }
+
+    /// Register an already-built deployment; errors on a duplicate name.
+    pub fn insert(&mut self, dep: Deployment) -> Result<&Deployment> {
+        match self.deployments.entry(dep.name.clone()) {
+            Entry::Occupied(_) => bail!("deployment {:?} already exists", dep.name),
+            Entry::Vacant(slot) => Ok(slot.insert(dep)),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Deployment> {
+        self.deployments.get(name).ok_or_else(|| self.unknown(name))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Deployment> {
+        if !self.deployments.contains_key(name) {
+            return Err(self.unknown(name));
+        }
+        Ok(self.deployments.get_mut(name).unwrap())
+    }
+
+    fn unknown(&self, name: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "unknown deployment {name:?} (deployed: [{}])",
+            self.names().join(", ")
+        )
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.deployments.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.deployments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deployments.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::kernels::KernelKind;
+    use crate::partition::{Propagation, Reorder};
+    use crate::util::rng::Rng;
+
+    /// A structurally valid deployment with no trained parameters — enough
+    /// for registry bookkeeping tests without artifacts or a PJRT client.
+    fn dummy(name: &str) -> Deployment {
+        let mut rng = Rng::new(3);
+        let g = planted_partition(64, 4, 0.5, 0.05, &mut rng);
+        let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 4, 0);
+        let n = d.graph.n;
+        Deployment {
+            name: name.to_string(),
+            model: ModelKind::Gcn,
+            strategy: Strategy::AdaptGear,
+            d,
+            x: vec![0.0; n * 8],
+            labels: vec![0; n],
+            f_data: 8,
+            n,
+            chosen: KernelPair::full_graph(KernelKind::CsrInter),
+            params: Vec::new(),
+            bucket_vertices: n,
+            classes: 4,
+            final_loss: 0.0,
+            warm_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn double_deploy_is_an_error() {
+        let mut r = ModelRegistry::new();
+        r.insert(dummy("citeseer-gcn")).unwrap();
+        let err = r.insert(dummy("citeseer-gcn")).unwrap_err();
+        assert!(err.to_string().contains("already exists"), "{err}");
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_listing_deployments() {
+        let mut r = ModelRegistry::new();
+        assert!(r.get("nope").is_err());
+        r.insert(dummy("cora-gcn")).unwrap();
+        let err = r.get_mut("nope").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown deployment"), "{msg}");
+        assert!(msg.contains("cora-gcn"), "error should list live deployments: {msg}");
+    }
+
+    #[test]
+    fn classify_takes_argmax_over_class_prefix() {
+        let dep = dummy("m");
+        // bucket_vertices = n, classes = 4; craft logits with stride 4
+        let mut logits = vec![0.0f32; dep.bucket_vertices * 4];
+        logits[2 * 4 + 3] = 9.0; // vertex 2 -> class 3
+        assert_eq!(dep.classify(&logits, 2), 3);
+        assert_eq!(dep.classify(&logits, 0), 0);
+    }
+}

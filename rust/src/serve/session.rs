@@ -1,0 +1,345 @@
+//! The serving event loop and its channel topology.
+//!
+//! PJRT handles are not `Send`, so the [`Engine`] can never migrate off
+//! the coordinator thread. The design is therefore a **single-owner event
+//! loop**: producer threads hold a cloneable [`ServeClient`] and submit
+//! [`Request`]s over a bounded `std::sync::mpsc` channel; the coordinator
+//! thread runs [`ServeSession::run`], which coalesces requests with the
+//! [`MicroBatcher`], applies their feature perturbations to the target
+//! deployment's state, executes **one** forward artifact per
+//! (batch, deployment) group, and answers every request in the group over
+//! its per-request reply channel.
+//!
+//! ```text
+//!  client threads                 coordinator thread (owns Engine)
+//!  ┌────────────┐  mpsc::sync   ┌──────────┐   ┌─────────────────┐
+//!  │ ServeClient├──────────────▶│ batcher  ├──▶│ forward artifact │
+//!  │  (clone)   │◀──────────────┤ + replies│   │  (1 per batch)   │
+//!  └────────────┘  per-request  └──────────┘   └─────────────────┘
+//!                  reply channel
+//! ```
+//!
+//! Shutdown is by disconnection: when every `ServeClient` clone is
+//! dropped, `recv` reports the channel closed, the loop flushes the last
+//! partial batch, and `run` returns the [`SloReport`].
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::trainer;
+use crate::runtime::Engine;
+
+use super::admission::Admission;
+use super::batcher::MicroBatcher;
+use super::metrics::{SloMetrics, SloReport};
+use super::registry::ModelRegistry;
+
+/// Serving-loop knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Requests coalesced into one forward execution, at most.
+    pub max_batch: usize,
+    /// Longest a request may sit in an open batch before it is forced out.
+    pub max_wait: Duration,
+    /// Admission bound on in-flight requests (queued + batched + executing).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 256,
+        }
+    }
+}
+
+/// One feature-perturbation inference request: bump feature `feature` of
+/// vertex `vertex` by `delta`, then classify `vertex` under fresh logits.
+#[derive(Debug)]
+pub struct Request {
+    pub deployment: String,
+    pub vertex: usize,
+    pub feature: usize,
+    pub delta: f32,
+    enqueued: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// Successful answer to one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Argmax class of the perturbed vertex under the new logits.
+    pub class: i32,
+    /// Enqueue -> reply, as observed by the server.
+    pub latency: Duration,
+    /// How many requests shared this forward execution.
+    pub batch_size: usize,
+}
+
+pub type Reply = Result<Response, String>;
+
+/// Client-side submission failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control rejected the request (system at capacity).
+    Shed,
+    /// The serving loop has shut down.
+    Closed,
+    /// The server answered with an error (unknown deployment, PJRT
+    /// failure, ...).
+    Remote(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed => write!(f, "request shed by admission control"),
+            ServeError::Closed => write!(f, "serving loop is closed"),
+            ServeError::Remote(msg) => write!(f, "server error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Cloneable producer handle; safe to move across threads.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: mpsc::SyncSender<Request>,
+    admission: Arc<Admission>,
+}
+
+impl ServeClient {
+    /// Submit without blocking for the answer; returns the reply channel.
+    pub fn submit(
+        &self,
+        deployment: &str,
+        vertex: usize,
+        feature: usize,
+        delta: f32,
+    ) -> Result<mpsc::Receiver<Reply>, ServeError> {
+        if !self.admission.try_admit() {
+            return Err(ServeError::Shed);
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            deployment: deployment.to_string(),
+            vertex,
+            feature,
+            delta,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match self.tx.send(req) {
+            Ok(()) => Ok(reply_rx),
+            Err(_) => {
+                self.admission.release();
+                Err(ServeError::Closed)
+            }
+        }
+    }
+
+    /// Closed-loop convenience: submit and block until the answer.
+    pub fn call(
+        &self,
+        deployment: &str,
+        vertex: usize,
+        feature: usize,
+        delta: f32,
+    ) -> Result<Response, ServeError> {
+        let rx = self.submit(deployment, vertex, feature, delta)?;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(ServeError::Remote(msg)),
+            Err(_) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Shared admission view (for monitoring from producer threads).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+}
+
+/// The coordinator-thread serving loop. Owns the request receiver and the
+/// metrics; borrows the engine and registry so callers keep deployment
+/// state (and can serve again) after the session ends.
+pub struct ServeSession<'a> {
+    engine: &'a Engine,
+    registry: &'a mut ModelRegistry,
+    cfg: ServeConfig,
+    admission: Arc<Admission>,
+    rx: mpsc::Receiver<Request>,
+    metrics: SloMetrics,
+}
+
+impl<'a> ServeSession<'a> {
+    /// Build a session plus the client handle that feeds it. Drop every
+    /// client clone to end [`ServeSession::run`].
+    pub fn new(
+        engine: &'a Engine,
+        registry: &'a mut ModelRegistry,
+        cfg: ServeConfig,
+    ) -> (ServeSession<'a>, ServeClient) {
+        let admission = Arc::new(Admission::new(cfg.queue_depth));
+        let (tx, rx) = mpsc::sync_channel(cfg.queue_depth);
+        let session = ServeSession {
+            engine,
+            registry,
+            cfg,
+            admission: admission.clone(),
+            rx,
+            metrics: SloMetrics::new(),
+        };
+        (session, ServeClient { tx, admission })
+    }
+
+    /// Drive the event loop until every [`ServeClient`] is dropped, then
+    /// flush the final partial batch and report.
+    ///
+    /// Hard `Err` means the loop itself is broken (poisoned engine state);
+    /// per-request failures are answered over the reply channel instead.
+    pub fn run(mut self) -> Result<SloReport> {
+        let started = Instant::now();
+        let mut batcher: MicroBatcher<Request> =
+            MicroBatcher::new(self.cfg.max_batch, self.cfg.max_wait);
+        loop {
+            // Sleep until the next request or the open batch's deadline.
+            let msg = match batcher.deadline() {
+                Some(deadline) => {
+                    let timeout = deadline.saturating_duration_since(Instant::now());
+                    match self.rx.recv_timeout(timeout) {
+                        Ok(req) => Some(req),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                None => match self.rx.recv() {
+                    Ok(req) => Some(req),
+                    Err(_) => break,
+                },
+            };
+            let now = Instant::now();
+            let ready = match msg {
+                Some(req) => batcher.push(req, now),
+                None => batcher.poll(now),
+            };
+            if let Some(batch) = ready {
+                self.execute(batch);
+            }
+        }
+        if let Some(batch) = batcher.flush() {
+            self.execute(batch);
+        }
+        let wall = started.elapsed().as_secs_f64();
+        Ok(self
+            .metrics
+            .report(wall, self.admission.offered(), self.admission.shed()))
+    }
+
+    /// Execute one closed batch: group by deployment, one forward each.
+    fn execute(&mut self, batch: Vec<Request>) {
+        let mut groups: BTreeMap<String, Vec<Request>> = BTreeMap::new();
+        for req in batch {
+            groups.entry(req.deployment.clone()).or_default().push(req);
+        }
+        for (name, group) in groups {
+            self.execute_group(&name, group);
+        }
+    }
+
+    fn execute_group(&mut self, name: &str, group: Vec<Request>) {
+        let (n, f_data) = match self.registry.get(name) {
+            Ok(dep) => (dep.n, dep.f_data),
+            Err(e) => {
+                self.fail_group(group, &format!("{e:#}"));
+                return;
+            }
+        };
+        // Bounds-check up front: an out-of-range request gets an error
+        // reply, never a clamped answer for a vertex it didn't ask about.
+        let (valid, invalid): (Vec<Request>, Vec<Request>) = group
+            .into_iter()
+            .partition(|r| r.vertex < n && r.feature < f_data);
+        if !invalid.is_empty() {
+            self.fail_group(
+                invalid,
+                &format!("vertex or feature index out of range (n={n}, f={f_data})"),
+            );
+        }
+        if valid.is_empty() {
+            return;
+        }
+        let size = valid.len();
+        let dep = self.registry.get_mut(name).expect("deployment vanished mid-batch");
+        // Apply every perturbation in the batch to the deployment's
+        // feature state, then amortize ONE forward over the whole group.
+        for req in &valid {
+            dep.x[req.vertex * dep.f_data + req.feature] += req.delta;
+        }
+        let logits = trainer::forward(
+            self.engine,
+            &dep.d,
+            dep.chosen,
+            dep.model,
+            &dep.params,
+            &dep.x,
+            dep.f_data,
+        );
+        match logits {
+            Ok(logits) => {
+                self.metrics.record_forward(size);
+                for req in valid {
+                    let class = dep.classify(&logits, req.vertex);
+                    let latency = req.enqueued.elapsed();
+                    self.metrics.record_reply(latency);
+                    // A client that gave up on its reply is not an error.
+                    let _ = req.reply.send(Ok(Response { class, latency, batch_size: size }));
+                    self.admission.release();
+                }
+            }
+            Err(e) => {
+                // Roll the batch's perturbations back so a client retry
+                // after a transient PJRT failure does not double-apply.
+                for req in &valid {
+                    dep.x[req.vertex * dep.f_data + req.feature] -= req.delta;
+                }
+                self.fail_group(valid, &format!("forward failed: {e:#}"));
+            }
+        }
+    }
+
+    fn fail_group(&mut self, group: Vec<Request>, msg: &str) {
+        for req in group {
+            self.metrics.record_error();
+            let _ = req.reply.send(Err(msg.to_string()));
+            self.admission.release();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.max_batch > 1);
+        assert!(cfg.queue_depth >= cfg.max_batch);
+        assert!(cfg.max_wait > Duration::ZERO);
+    }
+
+    #[test]
+    fn serve_error_display() {
+        assert!(ServeError::Shed.to_string().contains("shed"));
+        assert!(ServeError::Closed.to_string().contains("closed"));
+        assert!(ServeError::Remote("boom".into()).to_string().contains("boom"));
+    }
+}

@@ -91,6 +91,22 @@ mod tests {
     }
 
     #[test]
+    fn percentile_empty_input_is_zero() {
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], q), 0.0);
+        }
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample() {
+        let xs = [7.25];
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, q), 7.25, "q={q}");
+        }
+    }
+
+    #[test]
     fn stddev_basic() {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((stddev(&xs) - 2.0).abs() < 1e-12);

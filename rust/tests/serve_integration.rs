@@ -1,0 +1,147 @@
+//! Integration: the serving subsystem end to end through PJRT — deploy,
+//! micro-batched event loop, closed-loop load, SLO accounting.
+//!
+//! Skips (like `training_integration`) when `artifacts/` is not built.
+
+use std::time::Duration;
+
+use adaptgear::coordinator::ModelKind;
+use adaptgear::graph::datasets;
+use adaptgear::runtime::Engine;
+use adaptgear::serve::{
+    loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeError, ServeSession,
+};
+
+fn engine_or_skip() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+fn deploy(engine: &Engine, registry: &mut ModelRegistry, name: &str) -> (usize, usize) {
+    let spec = datasets::find("cora").unwrap();
+    let mut dspec = DeploymentSpec::new(name, spec, ModelKind::Gcn);
+    dspec.steps = 20;
+    let dep = registry.deploy(engine, dspec).expect("deploy");
+    (dep.n, dep.f_data)
+}
+
+#[test]
+fn closed_loop_serving_batches_and_answers_everything() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut registry = ModelRegistry::new();
+    let (n, f_data) = deploy(&engine, &mut registry, "cora-gcn");
+
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 64,
+    };
+    let load = LoadGenConfig { requests: 64, clients: 8, seed: 5, ..Default::default() };
+    let (session, client) = ServeSession::new(&engine, &mut registry, cfg);
+    let gen = loadgen::spawn(client, "cora-gcn".to_string(), n, f_data, load);
+    let report = session.run().expect("serve loop");
+    let summary = gen.join();
+
+    // every offered request is accounted for exactly once
+    assert_eq!(summary.sent, 64);
+    assert_eq!(summary.answered + summary.shed + summary.failed, summary.sent);
+    assert_eq!(report.served, summary.answered);
+    assert_eq!(report.shed, summary.shed);
+    assert_eq!(report.errors, summary.failed);
+
+    // batching is real: 8 closed-loop clients against one coordinator
+    // must coalesce, so strictly fewer forwards than requests served
+    assert!(report.served > 0);
+    assert!(
+        report.forward_calls < report.served,
+        "no batching: {} forwards for {} served",
+        report.forward_calls,
+        report.served
+    );
+    assert!(report.mean_occupancy > 1.0);
+    let occupancy_total: usize = report.occupancy.iter().map(|(s, c)| s * c).sum();
+    assert_eq!(occupancy_total, report.served, "histogram covers every served request");
+
+    // SLO numbers are well-formed
+    assert!(report.p50_ms > 0.0 && report.p50_ms.is_finite());
+    assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn unknown_deployment_gets_error_replies_not_hangs() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut registry = ModelRegistry::new();
+    deploy(&engine, &mut registry, "cora-gcn");
+
+    let cfg = ServeConfig { max_batch: 4, max_wait: Duration::from_millis(1), queue_depth: 16 };
+    let load = LoadGenConfig { requests: 8, clients: 2, seed: 1, ..Default::default() };
+    let (session, client) = ServeSession::new(&engine, &mut registry, cfg);
+    let gen = loadgen::spawn(client, "no-such-model".to_string(), 100, 8, load);
+    let report = session.run().expect("serve loop");
+    let summary = gen.join();
+
+    assert_eq!(report.served, 0);
+    assert_eq!(summary.failed, 8, "every request must get an error reply");
+    assert_eq!(report.errors, 8);
+}
+
+#[test]
+fn out_of_range_vertex_is_an_error_not_a_clamped_answer() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut registry = ModelRegistry::new();
+    deploy(&engine, &mut registry, "cora-gcn");
+
+    let cfg = ServeConfig { max_batch: 1, max_wait: Duration::ZERO, queue_depth: 4 };
+    let (session, client) = ServeSession::new(&engine, &mut registry, cfg);
+    let handle = std::thread::spawn(move || {
+        let bad = client.call("cora-gcn", usize::MAX / 2, 0, 0.1);
+        let good = client.call("cora-gcn", 0, 0, 0.1);
+        (bad, good)
+    });
+    let report = session.run().expect("serve loop");
+    let (bad, good) = handle.join().unwrap();
+
+    match bad {
+        Err(ServeError::Remote(msg)) => assert!(msg.contains("out of range"), "{msg}"),
+        other => panic!("expected Remote out-of-range error, got {other:?}"),
+    }
+    assert!(good.is_ok(), "in-range request after a bad one must still serve");
+    assert_eq!(report.served, 1);
+    assert_eq!(report.errors, 1);
+}
+
+#[test]
+fn registry_double_deploy_through_engine_is_rejected() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut registry = ModelRegistry::new();
+    deploy(&engine, &mut registry, "dup");
+    let spec = datasets::find("cora").unwrap();
+    let mut dspec = DeploymentSpec::new("dup", spec, ModelKind::Gcn);
+    dspec.steps = 5;
+    let err = registry.deploy(&engine, dspec).unwrap_err();
+    assert!(err.to_string().contains("already exists"), "{err}");
+    assert_eq!(registry.len(), 1);
+}
+
+#[test]
+fn serial_clients_still_get_answers_with_max_batch_one() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut registry = ModelRegistry::new();
+    let (n, f_data) = deploy(&engine, &mut registry, "cora-gcn");
+
+    // max_batch 1 = no coalescing: forwards == served
+    let cfg = ServeConfig { max_batch: 1, max_wait: Duration::ZERO, queue_depth: 8 };
+    let load = LoadGenConfig { requests: 6, clients: 1, seed: 2, ..Default::default() };
+    let (session, client) = ServeSession::new(&engine, &mut registry, cfg);
+    let gen = loadgen::spawn(client, "cora-gcn".to_string(), n, f_data, load);
+    let report = session.run().expect("serve loop");
+    let summary = gen.join();
+
+    assert_eq!(summary.answered, 6);
+    assert_eq!(report.forward_calls, report.served);
+    assert!((report.mean_occupancy - 1.0).abs() < 1e-12);
+}
