@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verification in one command: build, tests, formatting, lints.
+# Tier-1 verification in one command: build, tests, formatting, lints,
+# and a `plan` subcommand smoke run (cold compute+persist, then a cache
+# hit) against a synthetic bucket-only manifest.
 #
-#   ./ci.sh          # build + test + fmt + clippy
+#   ./ci.sh          # build + test + fmt + clippy + plan smoke
 #   ./ci.sh bench    # additionally run the serve bench (emits BENCH_serve.json)
 #
 # The serve bench and the PJRT integration tests skip themselves when
@@ -24,6 +26,42 @@ run cargo build --release
 run cargo test -q
 run cargo fmt --check
 run cargo clippy -- -D warnings
+
+# --- `adaptgear plan` smoke: needs only a manifest (buckets), no HLO.
+# First invocation computes + persists the plan; the second must be served
+# from the on-disk store with zero monitor iterations.
+plan_smoke() {
+    local bin=""
+    local candidate
+    for candidate in target/release/adaptgear ../target/release/adaptgear; do
+        if [[ -x "$candidate" ]]; then
+            bin="$candidate"
+            break
+        fi
+    done
+    if [[ -z "$bin" ]]; then
+        echo "plan smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    local tmp
+    tmp="$(mktemp -d)"
+    cat > "$tmp/manifest.json" <<'EOF'
+{
+  "version": 1, "community": 16,
+  "buckets": {
+    "b1024": {"vertices": 1024, "edges": 4096, "features": 32,
+               "hidden": 32, "classes": 8, "blocks": 64}
+  },
+  "artifacts": []
+}
+EOF
+    run "$bin" plan --dataset cora --artifacts "$tmp" --explain
+    echo "==> $bin plan (second run must hit the plan cache)"
+    "$bin" plan --dataset cora --artifacts "$tmp" | tee "$tmp/second.txt"
+    grep -q "cache hit" "$tmp/second.txt"
+    rm -rf "$tmp"
+}
+plan_smoke
 
 if [[ "${1:-}" == "bench" ]]; then
     run cargo bench --bench serve

@@ -5,11 +5,13 @@
 //! ```
 //!
 //! Loads a small dataset, decomposes it into intra/inter-community
-//! subgraphs, lets the adaptive selector pick kernels, and trains a GCN
-//! for a few steps through the AOT-compiled PJRT artifacts.
+//! subgraphs, lets a planner pick kernels (wall-clock monitoring through
+//! PJRT), and trains a GCN for a few steps through the AOT-compiled
+//! artifacts — all through the one [`Run`] builder entrypoint.
 
-use adaptgear::coordinator::{pipeline, Clock, ModelKind, TrainConfig};
+use adaptgear::coordinator::{ModelKind, Run};
 use adaptgear::graph::datasets;
+use adaptgear::plan::MonitorPlanner;
 use adaptgear::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
@@ -19,24 +21,22 @@ fn main() -> anyhow::Result<()> {
     // 2. Pick a dataset from the Table 1 registry.
     let spec = datasets::find("cora").expect("registry always has cora");
 
-    // 3. Preprocess + adaptively select kernels + train, end to end.
-    let cfg = TrainConfig {
-        model: ModelKind::Gcn,
-        steps: 40,
-        clock: Clock::Wall, // time candidate kernels through PJRT
-        ..Default::default()
-    };
-    let report = pipeline::run(&engine, spec, &cfg, None)?;
+    // 3. Preprocess + plan kernels + train, end to end.
+    let report = Run::new(&engine)
+        .dataset(spec)
+        .model(ModelKind::Gcn)
+        .steps(40)
+        .planner(MonitorPlanner::wall(&engine, 3)) // time candidates through PJRT
+        .train()?;
 
     println!(
         "trained {} ({} vertices) in bucket {}",
         report.dataset, report.vertices, report.train.bucket
     );
+    let plan = &report.train.plan;
     println!(
-        "selector chose {} (intra candidates: {:?} / inter: {:?})",
-        report.train.chosen,
-        report.train.selector.intra_times,
-        report.train.selector.inter_times,
+        "planner chose {} after {} monitor iters (intra times: {:?} / inter: {:?})",
+        plan.chosen, plan.monitor_iters, plan.intra_times, plan.inter_times,
     );
     println!(
         "loss {:.4} -> {:.4} over {} steps ({:.2} ms/step)",

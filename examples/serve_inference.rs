@@ -15,12 +15,10 @@
 
 use std::time::Duration;
 
-use adaptgear::coordinator::ModelKind;
+use adaptgear::coordinator::{ModelKind, Run};
 use adaptgear::graph::datasets;
 use adaptgear::runtime::Engine;
-use adaptgear::serve::{
-    loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession,
-};
+use adaptgear::serve::{loadgen, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession};
 use adaptgear::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -28,17 +26,22 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
     let spec = datasets::find(args.get_or("dataset", "citeseer")).expect("unknown dataset");
 
-    // -- deploy: train a model and pre-warm its forward executable
+    // -- deploy: plan (from the persistent plan cache when warm), train,
+    //    and pre-warm the forward executable — one builder call
     let mut registry = ModelRegistry::new();
-    let mut dspec = DeploymentSpec::new("demo", spec, ModelKind::Gcn);
-    dspec.steps = args.get_usize("steps", 60);
-    let dep = registry.deploy(&engine, dspec)?;
+    let dep = Run::new(&engine)
+        .dataset(spec)
+        .model(ModelKind::Gcn)
+        .steps(args.get_usize("steps", 60))
+        .deploy_as(&mut registry, "demo")?;
     println!(
-        "model ready: {} on {} (final loss {:.3}, kernels {}, forward warmed in {:.2}s)",
+        "model ready: {} on {} (final loss {:.3}, kernels {}, {} monitor iters{}, forward warmed in {:.2}s)",
         dep.model.as_str(),
         spec.name,
         dep.final_loss,
-        dep.chosen,
+        dep.chosen(),
+        dep.plan.monitor_iters,
+        if dep.plan.provenance.cached { " [plan cache hit]" } else { "" },
         dep.warm_secs,
     );
     let (n, f_data) = (dep.n, dep.f_data);

@@ -10,9 +10,10 @@
 //! cargo run --release --example train_gcn [-- --dataset cora --steps 300]
 //! ```
 
-use adaptgear::coordinator::{pipeline, trainer, Clock, ModelKind, Strategy, TrainConfig};
+use adaptgear::coordinator::{pipeline, trainer, ModelKind, Strategy, TrainConfig};
 use adaptgear::graph::datasets;
 use adaptgear::partition::Decomposition;
+use adaptgear::plan::{MonitorPlanner, PlanRequest, Planner};
 use adaptgear::runtime::Engine;
 use adaptgear::util::cli::Args;
 
@@ -26,7 +27,7 @@ fn accuracy(
     labels: &[i32],
     classes: usize,
 ) -> anyhow::Result<f64> {
-    let logits = trainer::forward(engine, d, report.chosen, model, &report.params, x, f_data)?;
+    let logits = trainer::forward(engine, d, report.chosen(), model, &report.params, x, f_data)?;
     let n = d.graph.n;
     let width = logits.len() / engine.manifest.buckets[&report.bucket].vertices;
     let mut correct = 0usize;
@@ -59,30 +60,29 @@ fn main() -> anyhow::Result<()> {
             model,
             steps,
             lr: args.get_f64("lr", 0.05) as f32,
-            clock: Clock::Wall,
             seed: args.get_u64("seed", 0),
-            ..Default::default()
         };
 
-        // materialize + preprocess (same path as pipeline::run, but keep
-        // the intermediates for the accuracy computation)
-        let scale = pipeline::auto_scale(spec, &engine);
-        let data = spec.build_scaled(scale, cfg.seed);
-        let (d, times) = adaptgear::coordinator::preprocess(
+        // materialize + preprocess + fit a bucket (same staging path as
+        // pipeline::Run, but keep the intermediates for the accuracy
+        // computation)
+        let staged = pipeline::stage(
+            &engine.manifest,
+            spec,
+            model,
             Strategy::AdaptGear,
-            &data.graph,
-            pipeline::propagation_for(model),
-            engine.manifest.community,
+            None,
             cfg.seed,
-        );
+        )?;
         println!(
             "scale {:.3}: {} vertices, {} edges | reorder {:.3}s decompose {:.3}s",
-            scale,
-            data.graph.n,
-            data.graph.directed_edge_count(),
-            times.reorder_secs,
-            times.decompose_secs
+            staged.scale,
+            staged.data.graph.n,
+            staged.data.graph.directed_edge_count(),
+            staged.times.reorder_secs,
+            staged.times.decompose_secs
         );
+        let (data, d) = (&staged.data, &staged.d);
 
         // features/labels permuted into the reordered id space
         let f_data = engine.manifest.buckets.values().map(|b| b.features).max().unwrap();
@@ -93,13 +93,28 @@ fn main() -> anyhow::Result<()> {
             f_data,
         );
 
+        // plan: wall-clock monitoring of the kernel candidates over PJRT
+        let req = PlanRequest::labeled(
+            d,
+            model,
+            &staged.bucket,
+            spec.name,
+            staged.scale,
+            Strategy::AdaptGear.reorder(),
+            cfg.seed,
+        );
+        let plan = MonitorPlanner::wall(&engine, 3).plan(&req)?;
+
         let t0 = std::time::Instant::now();
-        let report = trainer::train(&engine, &d, &x, f_data, &labels, &cfg)?;
+        let report = trainer::train(&engine, d, &x, f_data, &labels, &cfg, &plan)?;
         let wall = t0.elapsed().as_secs_f64();
 
         println!(
-            "selector: {} (monitor {} iters, {:.1}us overhead) | bucket {}",
-            report.chosen, report.selector.monitor_iters, report.selector.monitor_overhead_us, report.bucket
+            "plan: {} (monitor {} iters, {:.1}us overhead) | bucket {}",
+            report.chosen(),
+            report.plan.monitor_iters,
+            report.plan.monitor_overhead_us,
+            report.bucket
         );
         let every = (report.losses.len() / 12).max(1);
         for (i, l) in report.losses.iter().enumerate() {
@@ -108,7 +123,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let classes = engine.manifest.buckets[&report.bucket].classes;
-        let acc = accuracy(&engine, &d, &report, model, &x, f_data, &labels, classes)?;
+        let acc = accuracy(&engine, d, &report, model, &x, f_data, &labels, classes)?;
         println!(
             "loss {:.4} -> {:.4} | train accuracy {:.1}% | {} steps in {:.1}s ({:.2} ms/step)",
             report.losses.first().unwrap(),

@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
         dep.model.as_str(),
         spec.name,
         n,
-        dep.chosen
+        dep.chosen()
     );
 
     let unbatched = serve_once(&engine, &mut registry, "bench", n, f_data, 1, requests)?;

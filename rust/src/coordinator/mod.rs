@@ -1,10 +1,13 @@
 //! Layer-3 coordinator — the paper's system contribution.
 //!
-//! * [`selector`]: feedback-driven adaptive kernel selection (Sec. 3.3).
+//! * [`selector`]: feedback-driven adaptive kernel selection (Sec. 3.3),
+//!   driven by the planners in [`crate::plan`].
 //! * [`strategy`]: AdaptGear O1/O2/O3 and every baseline (Table 2) as
 //!   iteration-cost assemblies over gpusim.
-//! * [`trainer`]: the real PJRT training loop (monitor → locked steps).
-//! * [`pipeline`]: dataset → preprocess → select → train, end to end.
+//! * [`trainer`]: the real PJRT training loop executing a
+//!   [`GearPlan`](crate::plan::GearPlan)'s kernel decision.
+//! * [`pipeline`]: dataset → preprocess → plan → train, end to end, and
+//!   [`pipeline::Run`] — the one builder entrypoint for train/serve/bench.
 //! * [`metrics`]: memory/overhead accounting (Fig. 12, Sec. 6.3).
 
 pub mod metrics;
@@ -14,10 +17,12 @@ pub mod selector;
 pub mod strategy;
 pub mod trainer;
 
+pub use crate::plan::Clock;
 pub use modeldims::{ModelDims, ModelKind};
+pub use pipeline::Run;
 pub use selector::{select, KernelTimer, Role, SelectorReport};
 pub use strategy::{best_adaptive_pair, forward_cost, preprocess, PreprocessTimes, Strategy};
-pub use trainer::{train, Clock, TrainConfig, TrainReport};
+pub use trainer::{train, TrainConfig, TrainReport};
 
 /// Scatter features and labels from the original vertex order into a
 /// decomposition's reordered id space (`perm[old] = new`).

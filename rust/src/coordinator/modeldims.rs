@@ -16,11 +16,22 @@ impl ModelKind {
         }
     }
 
+    /// Thin wrapper over the canonical [`FromStr`] path.
     pub fn parse(s: &str) -> Option<ModelKind> {
+        s.parse().ok()
+    }
+}
+
+/// Canonical string dispatch — CLI parsing, manifest lookup, and plan
+/// deserialization all come through here.
+impl std::str::FromStr for ModelKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ModelKind, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
-            "gcn" => Some(ModelKind::Gcn),
-            "gin" => Some(ModelKind::Gin),
-            _ => None,
+            "gcn" => Ok(ModelKind::Gcn),
+            "gin" => Ok(ModelKind::Gin),
+            other => Err(anyhow::anyhow!("unknown model {other:?} (expected gcn|gin)")),
         }
     }
 }

@@ -1,11 +1,34 @@
 //! End-to-end pipeline (Fig. 7's user flow): load dataset → reorder +
-//! decompose → adaptive selection → train through PJRT.
+//! decompose → **plan** (pluggable [`Planner`]) → train through PJRT —
+//! plus [`Run`], the one builder entrypoint for train / serve / bench.
+//!
+//! ```no_run
+//! # use adaptgear::coordinator::{pipeline::Run, ModelKind};
+//! # use adaptgear::plan::{CachedPlanner, MonitorPlanner, PlanStore};
+//! # use adaptgear::gpusim::A100;
+//! # fn demo(engine: &adaptgear::runtime::Engine,
+//! #         spec: &'static adaptgear::graph::datasets::DatasetSpec,
+//! #         registry: &mut adaptgear::serve::ModelRegistry) -> anyhow::Result<()> {
+//! let _report = Run::new(engine)
+//!     .dataset(spec)
+//!     .model(ModelKind::Gcn)
+//!     .planner(CachedPlanner::new(
+//!         PlanStore::in_artifacts(&engine.manifest.dir),
+//!         MonitorPlanner::sim(&A100, 3),
+//!     ))
+//!     .train()?;
+//! let _dep = Run::new(engine).dataset(spec).model(ModelKind::Gcn).deploy(registry)?;
+//! # Ok(()) }
+//! ```
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::graph::datasets::{Dataset, DatasetSpec};
+use crate::gpusim::A100;
 use crate::partition::{Decomposition, Propagation};
-use crate::runtime::Engine;
+use crate::plan::{GearPlan, MonitorPlanner, PlanRequest, Planner};
+use crate::runtime::{BucketInfo, Engine, Manifest};
+use crate::serve::{Deployment, DeploymentSpec, ModelRegistry};
 
 use super::modeldims::ModelKind;
 use super::strategy::{preprocess, PreprocessTimes, Strategy};
@@ -27,13 +50,23 @@ pub struct PipelineReport {
 pub fn auto_scale(spec: &DatasetSpec, engine: &Engine) -> f64 {
     let max_v = engine.manifest.buckets.values().map(|b| b.vertices).max().unwrap_or(0);
     let max_e = engine.manifest.buckets.values().map(|b| b.edges).max().unwrap_or(0);
+    auto_scale_for(spec, max_v, max_e)
+}
+
+/// [`auto_scale`] core, engine-free for testing: `max_v` / `max_e` are
+/// the largest bucket's vertex and per-subgraph edge capacities.
+pub fn auto_scale_for(spec: &DatasetSpec, max_v: usize, max_e: usize) -> f64 {
     if max_v == 0 {
         return 1.0;
     }
-    // GCN-normalized nnz = directed edges + n; leave 15% headroom for
-    // the randomness of the generator.
+    // GCN-normalized nnz = directed edges + n; leave 15% headroom for the
+    // randomness of the generator. With small buckets the vertex term can
+    // swallow the whole edge budget and drive the headroom negative, so it
+    // is floored at 10% of the bucket's edge capacity — a conservative but
+    // sane scale instead of a silent collapse to the 1e-6 floor.
     let v_scale = max_v as f64 / spec.vertices as f64;
-    let e_scale = (max_e as f64 * 0.85 - max_v as f64 * 0.3) / spec.edges as f64;
+    let headroom = (max_e as f64 * 0.85 - max_v as f64 * 0.3).max(max_e as f64 * 0.10);
+    let e_scale = headroom / spec.edges as f64;
     v_scale.min(e_scale).min(1.0).max(1e-6)
 }
 
@@ -45,41 +78,255 @@ pub fn propagation_for(model: ModelKind) -> Propagation {
     }
 }
 
+/// Everything between "pick a dataset" and "plan kernels": materialized
+/// data, its decomposition, the chosen scale, and the fitted AOT bucket.
+pub struct Staged {
+    pub scale: f64,
+    pub data: Dataset,
+    pub d: Decomposition,
+    pub times: PreprocessTimes,
+    pub bucket: BucketInfo,
+}
+
+/// Materialize (auto-scaled) + preprocess + fit a bucket against a
+/// manifest. The single shared front half of every planning path —
+/// [`Run::prepare`], `ModelRegistry::deploy_planned`, and the engine-free
+/// `adaptgear plan` subcommand all call this, so they cannot drift apart
+/// (identical scale, reorder, and therefore plan fingerprint).
+pub fn stage(
+    manifest: &Manifest,
+    spec: &DatasetSpec,
+    model: ModelKind,
+    strategy: Strategy,
+    scale_override: Option<f64>,
+    seed: u64,
+) -> Result<Staged> {
+    let max_v = manifest.buckets.values().map(|b| b.vertices).max().unwrap_or(0);
+    let max_e = manifest.buckets.values().map(|b| b.edges).max().unwrap_or(0);
+    let scale = scale_override.unwrap_or_else(|| auto_scale_for(spec, max_v, max_e));
+    let data = spec.build_scaled(scale, seed);
+    let (d, times) = preprocess(
+        strategy,
+        &data.graph,
+        propagation_for(model),
+        manifest.community,
+        seed,
+    );
+    let needed_edges = d.intra.nnz().max(d.inter.nnz());
+    let bucket = manifest
+        .fit_bucket(d.graph.n, needed_edges)
+        .with_context(|| {
+            format!(
+                "no AOT bucket fits n={}, edges={needed_edges}; scale the dataset down",
+                d.graph.n
+            )
+        })?
+        .clone();
+    Ok(Staged { scale, data, d, times, bucket })
+}
+
+/// One fluent path from dataset to a trained model or a live deployment —
+/// replaces hand-wiring `TrainConfig` + preprocess + select + train (and
+/// `DeploymentSpec` plumbing on the serve side).
+pub struct Run<'e> {
+    engine: &'e Engine,
+    spec: Option<&'static DatasetSpec>,
+    model: ModelKind,
+    strategy: Strategy,
+    /// Training budget. Unset falls back to each terminal's documented
+    /// default: 100 steps for [`Run::train`], the registry's 60 for
+    /// [`Run::deploy`] — so the builder never silently changes what the
+    /// equivalent direct `TrainConfig`/`DeploymentSpec` path would do.
+    steps: Option<usize>,
+    lr: f32,
+    seed: u64,
+    scale: Option<f64>,
+    planner: Option<Box<dyn Planner + 'e>>,
+}
+
+impl<'e> Run<'e> {
+    pub fn new(engine: &'e Engine) -> Run<'e> {
+        Run {
+            engine,
+            spec: None,
+            model: ModelKind::Gcn,
+            strategy: Strategy::AdaptGear,
+            steps: None,
+            lr: 0.05,
+            seed: 0,
+            scale: None,
+            planner: None,
+        }
+    }
+
+    pub fn dataset(mut self, spec: &'static DatasetSpec) -> Self {
+        self.spec = Some(spec);
+        self
+    }
+
+    pub fn model(mut self, model: ModelKind) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the auto-chosen dataset scale.
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = Some(scale);
+        self
+    }
+
+    /// Plug in a planner (default: sim-clock [`MonitorPlanner`], the
+    /// paper's online feedback loop on the deterministic surface).
+    pub fn planner(mut self, planner: impl Planner + 'e) -> Self {
+        self.planner = Some(Box::new(planner));
+        self
+    }
+
+    fn spec(&self) -> Result<&'static DatasetSpec> {
+        self.spec.context("Run: no dataset set (call .dataset(spec) first)")
+    }
+
+    /// Materialize + preprocess + plan, without training. Returns the
+    /// dataset, decomposition, chosen scale, fitted bucket, preprocess
+    /// times, and plan.
+    pub fn prepare(&mut self) -> Result<Prepared> {
+        let spec = self.spec()?;
+        let staged = stage(
+            &self.engine.manifest,
+            spec,
+            self.model,
+            self.strategy,
+            self.scale,
+            self.seed,
+        )?;
+        let req = PlanRequest::labeled(
+            &staged.d,
+            self.model,
+            &staged.bucket,
+            spec.name,
+            staged.scale,
+            self.strategy.reorder(),
+            self.seed,
+        );
+        let plan = match self.planner.as_mut() {
+            Some(p) => p.plan(&req)?,
+            None => MonitorPlanner::sim(&A100, 3).plan(&req)?,
+        };
+        let Staged { scale, data, d, times, bucket } = staged;
+        Ok(Prepared { scale, data, d, times, bucket, plan })
+    }
+
+    /// Train end to end: prepare (plan) then run the PJRT training loop.
+    pub fn train(mut self) -> Result<PipelineReport> {
+        let spec = self.spec()?;
+        let prepared = self.prepare()?;
+        let cfg = TrainConfig {
+            model: self.model,
+            steps: self.steps.unwrap_or(100),
+            lr: self.lr,
+            seed: self.seed,
+        };
+        let report =
+            train_decomposition(self.engine, &prepared.data, &prepared.d, &cfg, &prepared.plan)?;
+        Ok(PipelineReport {
+            dataset: spec.name,
+            scale: prepared.scale,
+            vertices: prepared.data.graph.n,
+            edges: prepared.data.graph.directed_edge_count(),
+            preprocess: prepared.times,
+            train: report,
+        })
+    }
+
+    /// Deploy into a registry under the default `{dataset}-{model}` name.
+    pub fn deploy<'r>(self, registry: &'r mut ModelRegistry) -> Result<&'r Deployment> {
+        let spec = self.spec()?;
+        let name = format!("{}-{}", spec.name, self.model.as_str());
+        self.deploy_as(registry, name)
+    }
+
+    /// Deploy into a registry under an explicit name.
+    pub fn deploy_as<'r>(
+        mut self,
+        registry: &'r mut ModelRegistry,
+        name: impl Into<String>,
+    ) -> Result<&'r Deployment> {
+        let spec = self.spec()?;
+        let mut dspec = DeploymentSpec::new(name, spec, self.model);
+        dspec.strategy = self.strategy;
+        if let Some(steps) = self.steps {
+            dspec.steps = steps; // otherwise keep the registry's default
+        }
+        dspec.lr = self.lr;
+        dspec.seed = self.seed;
+        dspec.scale = self.scale;
+        match self.planner.take() {
+            Some(mut p) => registry.deploy_planned(self.engine, dspec, p.as_mut()),
+            None => registry.deploy(self.engine, dspec),
+        }
+    }
+}
+
+/// Output of [`Run::prepare`]: everything needed to train or explain.
+pub struct Prepared {
+    pub scale: f64,
+    pub data: Dataset,
+    pub d: Decomposition,
+    pub times: PreprocessTimes,
+    pub bucket: BucketInfo,
+    pub plan: GearPlan,
+}
+
 /// Materialize a dataset (auto-scaled), preprocess it the AdaptGear way,
-/// and train for `cfg.steps` through PJRT.
+/// plan with the default sim-clock monitor, and train for `cfg.steps`
+/// through PJRT. Thin wrapper over [`Run`].
 pub fn run(
     engine: &Engine,
-    spec: &DatasetSpec,
+    spec: &'static DatasetSpec,
     cfg: &TrainConfig,
     scale_override: Option<f64>,
 ) -> Result<PipelineReport> {
-    let scale = scale_override.unwrap_or_else(|| auto_scale(spec, engine));
-    let data = spec.build_scaled(scale, cfg.seed);
-    let (d, times) = preprocess(
-        Strategy::AdaptGear,
-        &data.graph,
-        propagation_for(cfg.model),
-        engine.manifest.community,
-        cfg.seed,
-    );
-    let report = train_decomposition(engine, &data, &d, cfg)?;
-    Ok(PipelineReport {
-        dataset: spec.name,
-        scale,
-        vertices: data.graph.n,
-        edges: data.graph.directed_edge_count(),
-        preprocess: times,
-        train: report,
-    })
+    let mut r = Run::new(engine)
+        .dataset(spec)
+        .model(cfg.model)
+        .steps(cfg.steps)
+        .lr(cfg.lr)
+        .seed(cfg.seed);
+    if let Some(s) = scale_override {
+        r = r.scale(s);
+    }
+    r.train()
 }
 
-/// Train an already-decomposed dataset (features/labels re-derived from
-/// the ORIGINAL vertex order must be permuted to the reordered ids).
+/// Train an already-decomposed dataset under `plan` (features/labels
+/// re-derived from the ORIGINAL vertex order are permuted to the
+/// reordered ids).
 pub fn train_decomposition(
     engine: &Engine,
     data: &Dataset,
     d: &Decomposition,
     cfg: &TrainConfig,
+    plan: &GearPlan,
 ) -> Result<TrainReport> {
     let f_data = engine
         .manifest
@@ -91,7 +338,7 @@ pub fn train_decomposition(
     // permute rows into the decomposition's vertex order
     let (x, labels) =
         super::apply_perm(&d.perm, &data.features(f_data), &data.labels(), f_data);
-    train(engine, d, &x, f_data, &labels, cfg)
+    train(engine, d, &x, f_data, &labels, cfg, plan)
 }
 
 #[cfg(test)]
@@ -106,5 +353,27 @@ mod tests {
         // v_scale for a 1024 bucket = 1024/2708 ≈ 0.378
         let v_scale = 1024.0 / spec.vertices as f64;
         assert!(v_scale < 1.0 && v_scale > 0.3);
+        let scale = auto_scale_for(spec, 1024, 4096);
+        assert!(scale > 0.0 && scale <= v_scale);
+    }
+
+    #[test]
+    fn auto_scale_small_bucket_does_not_collapse() {
+        // Regression: with edge capacity below ~0.35x the vertex capacity
+        // the old edge-headroom term went negative and the scale silently
+        // collapsed to the 1e-6 floor.
+        let spec = datasets::find("cora").unwrap();
+        let scale = auto_scale_for(spec, 1024, 256);
+        assert!(scale > 1e-4, "scale collapsed to the floor: {scale}");
+        // the floored headroom still respects the edge budget: at most 10%
+        // of the bucket's capacity worth of directed edges
+        let est_edges = spec.edges as f64 * scale;
+        assert!(est_edges <= 256.0 * 0.10 + 1.0, "estimated edges {est_edges}");
+    }
+
+    #[test]
+    fn auto_scale_no_buckets_is_identity() {
+        let spec = datasets::find("cora").unwrap();
+        assert_eq!(auto_scale_for(spec, 0, 0), 1.0);
     }
 }

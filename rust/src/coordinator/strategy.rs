@@ -10,7 +10,7 @@ use std::collections::HashMap;
 
 use crate::graph::{Csr, Graph};
 use crate::gpusim::{elementwise_us, gemm_us, kernel_cost, GpuModel, IterationCost, KernelCost};
-use crate::kernels::{KernelKind, KernelPair};
+use crate::kernels::KernelKind;
 use crate::partition::{Decomposition, Propagation, Reorder};
 
 use super::modeldims::ModelDims;
@@ -170,34 +170,11 @@ pub fn forward_cost(
     it
 }
 
-/// Pick the simulated-fastest kernel per subgraph (what the runtime
-/// selector converges to when driven by the sim clock). Inter candidates
-/// are timed against the warm L2 the intra kernel leaves behind, matching
-/// how the runtime selector measures them back to back.
-pub fn best_adaptive_pair(d: &Decomposition, width: usize, gpu: &GpuModel) -> KernelPair {
-    use crate::gpusim::kernel_cost::subgraph_pair_cost;
-    let intra = crate::kernels::INTRA_CANDIDATES
-        .into_iter()
-        .min_by(|&a, &b| {
-            let ca = kernel_cost(a, &d.intra, width, d.community, gpu).time_us;
-            let cb = kernel_cost(b, &d.intra, width, d.community, gpu).time_us;
-            ca.partial_cmp(&cb).unwrap()
-        })
-        .unwrap();
-    let inter = crate::kernels::INTER_CANDIDATES
-        .into_iter()
-        .min_by(|&a, &b| {
-            let ca = subgraph_pair_cost(intra, a, &d.intra, &d.inter, width, d.community, gpu)
-                .1
-                .time_us;
-            let cb = subgraph_pair_cost(intra, b, &d.intra, &d.inter, width, d.community, gpu)
-                .1
-                .time_us;
-            ca.partial_cmp(&cb).unwrap()
-        })
-        .unwrap();
-    KernelPair::new(intra, inter)
-}
+/// The simulated-fastest kernel per subgraph — absorbed by the plan
+/// subsystem ([`SimCostPlanner`](crate::plan::SimCostPlanner) is its
+/// planner form); re-exported here because the strategy assemblies and
+/// the figure benches sit on the same decision.
+pub use crate::plan::planners::best_adaptive_pair;
 
 /// Aggregate-only cost of GNNAdvisor at a given width (the paper's Fig. 3b
 /// profiles the first-layer aggregate at the dataset's raw feature width).

@@ -1,60 +1,42 @@
-//! The PJRT training loop: monitor (adaptive selector) then locked
-//! steady-state training, entirely in Rust over AOT artifacts.
+//! The PJRT training loop: execute a [`GearPlan`]'s kernel decision as
+//! locked steady-state training, entirely in Rust over AOT artifacts.
+//!
+//! Kernel *selection* no longer happens here — it is the planner's job
+//! (`crate::plan`): `train` takes a computed [`GearPlan`], validates it
+//! against the decomposition, and runs the winning train-step artifact.
 //!
 //! Hot-loop discipline: graph operands and feature/label literals are
-//! packed once; each step feeds the previous step's decomposed output
-//! literals straight back as parameters, so steady state performs no
-//! host-side tensor packing at all.
+//! packed once (and only for the plan's chosen kernels); each step feeds
+//! the previous step's decomposed output literals straight back as
+//! parameters, so steady state performs no host-side tensor packing at
+//! all.
 
-use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::gpusim::{kernel_cost, GpuModel};
 use crate::kernels::pack::{pack_features, pack_kernel_operands, pack_labels_mask};
-use crate::kernels::{KernelKind, KernelPair};
+use crate::kernels::KernelPair;
 use crate::partition::Decomposition;
-use crate::runtime::{literal_scalar_f32, BucketInfo, Engine, Manifest, Tensor};
+use crate::plan::GearPlan;
+use crate::runtime::{literal_scalar_f32, Engine, Manifest, Tensor};
 use crate::util::rng::Rng;
 
 use super::modeldims::ModelKind;
-use super::selector::{select, KernelTimer, Role, SelectorReport};
 
-/// Timing source for the adaptive selector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Clock {
-    /// Deterministic gpusim surface (figure benches; no GPU here).
-    Sim,
-    /// Real PJRT wall time of the kernel-only artifacts.
-    Wall,
-}
-
-/// Training configuration.
+/// Training configuration — the training *budget*. Kernel-selection knobs
+/// (clock, monitor repeats, GPU model) live with the planner instead.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub model: ModelKind,
     pub steps: usize,
     pub lr: f32,
-    /// Timed repeats per candidate during monitoring.
-    pub monitor_repeats: usize,
-    pub clock: Clock,
-    /// GPU model driving the Sim clock.
-    pub gpu: &'static GpuModel,
     pub seed: u64,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig {
-            model: ModelKind::Gcn,
-            steps: 100,
-            lr: 0.05,
-            monitor_repeats: 3,
-            clock: Clock::Sim,
-            gpu: &crate::gpusim::A100,
-            seed: 0,
-        }
+        TrainConfig { model: ModelKind::Gcn, steps: 100, lr: 0.05, seed: 0 }
     }
 }
 
@@ -62,8 +44,8 @@ impl Default for TrainConfig {
 #[derive(Debug)]
 pub struct TrainReport {
     pub bucket: String,
-    pub chosen: KernelPair,
-    pub selector: SelectorReport,
+    /// The plan this run executed (decision + provenance + monitor cost).
+    pub plan: GearPlan,
     pub losses: Vec<f32>,
     pub step_secs: Vec<f64>,
     pub compile_secs: f64,
@@ -73,61 +55,22 @@ pub struct TrainReport {
 }
 
 impl TrainReport {
+    /// The kernel pair the run executed.
+    pub fn chosen(&self) -> KernelPair {
+        self.plan.chosen
+    }
+
     pub fn final_loss(&self) -> f32 {
         *self.losses.last().unwrap_or(&f32::NAN)
     }
+
     pub fn mean_step_secs(&self) -> f64 {
         crate::util::stats::mean(&self.step_secs)
     }
 }
 
-/// Selector timer driven by the gpusim cost model.
-struct SimTimer<'a> {
-    d: &'a Decomposition,
-    gpu: &'static GpuModel,
-}
-
-impl KernelTimer for SimTimer<'_> {
-    fn time_us(&mut self, role: Role, kind: KernelKind, width: usize) -> f64 {
-        let m = match role {
-            Role::Intra => &self.d.intra,
-            Role::Inter => &self.d.inter,
-        };
-        kernel_cost(kind, m, width, self.d.community, self.gpu).time_us
-    }
-}
-
-/// Selector timer that executes kernel-only artifacts through PJRT.
-///
-/// Perf note (EXPERIMENTS.md §Perf L3-1): the first call per candidate
-/// warms the executable (XLA compile + first run) OUTSIDE the timed
-/// window, so the monitor measures steady-state kernel time — on the real
-/// system compile happens once per topology, not per training run.
-struct PjrtTimer<'a> {
-    engine: &'a Engine,
-    bucket: BucketInfo,
-    ops: HashMap<KernelKind, Vec<Tensor>>,
-    x: Tensor,
-    warmed: std::collections::HashSet<KernelKind>,
-}
-
-impl KernelTimer for PjrtTimer<'_> {
-    fn time_us(&mut self, _role: Role, kind: KernelKind, _width: usize) -> f64 {
-        let name = Manifest::kernel_name(kind.as_str(), &self.bucket.name);
-        let mut args: Vec<Tensor> = self.ops[&kind].clone();
-        args.push(self.x.clone());
-        if self.warmed.insert(kind) && self.engine.run(&name, &args).is_err() {
-            return f64::INFINITY; // unrunnable candidate never wins
-        }
-        let t0 = Instant::now();
-        match self.engine.run(&name, &args) {
-            Ok(_) => t0.elapsed().as_secs_f64() * 1e6,
-            Err(_) => f64::INFINITY,
-        }
-    }
-}
-
-/// Train a decomposed graph end to end. `x` is `[n, f_data]` row-major.
+/// Train a decomposed graph end to end under `plan`'s kernel decision.
+/// `x` is `[n, f_data]` row-major in the decomposition's vertex order.
 pub fn train(
     engine: &Engine,
     d: &Decomposition,
@@ -135,6 +78,7 @@ pub fn train(
     f_data: usize,
     labels: &[i32],
     cfg: &TrainConfig,
+    plan: &GearPlan,
 ) -> Result<TrainReport> {
     let n = d.graph.n;
     let needed_edges = d.intra.nnz().max(d.inter.nnz());
@@ -152,41 +96,32 @@ pub fn train(
             engine.manifest.community
         );
     }
-
-    // ---- pack static operands once
-    let t_pack = Instant::now();
-    let mut ops: HashMap<KernelKind, Vec<Tensor>> = HashMap::new();
-    for kind in crate::kernels::INTRA_CANDIDATES {
-        ops.insert(kind, pack_kernel_operands(kind, &d.intra, d.community, &bucket)?);
+    plan.validate(d, cfg.model)
+        .context("train: the provided plan does not cover this graph")?;
+    if plan.bucket != bucket.name {
+        bail!(
+            "plan targets bucket {} but the graph fits bucket {}; replan",
+            plan.bucket,
+            bucket.name
+        );
     }
-    for kind in crate::kernels::INTER_CANDIDATES {
-        ops.insert(kind, pack_kernel_operands(kind, &d.inter, d.community, &bucket)?);
+    let chosen = plan.chosen;
+
+    // ---- pack static operands once — only the chosen kernels
+    let t_pack = Instant::now();
+    let mut static_ops: Vec<Tensor> = Vec::new();
+    if let Some(ik) = chosen.intra {
+        static_ops.extend(pack_kernel_operands(ik, &d.intra, d.community, &bucket)?);
+        static_ops.extend(pack_kernel_operands(chosen.inter, &d.inter, d.community, &bucket)?);
+    } else {
+        // full-graph variant: the whole propagation matrix through inter
+        static_ops.extend(pack_kernel_operands(chosen.inter, &d.whole(), d.community, &bucket)?);
     }
     let x_packed = pack_features(x, n, f_data, &bucket)?;
     let (labels_t, mask_t) = pack_labels_mask(labels, &bucket)?;
     let pack_secs = t_pack.elapsed().as_secs_f64();
 
-    // ---- monitoring phase (adaptive selector)
-    let widths = [bucket.features, bucket.hidden];
-    let selector = match cfg.clock {
-        Clock::Sim => {
-            let mut t = SimTimer { d, gpu: cfg.gpu };
-            select(&mut t, &widths, cfg.monitor_repeats)
-        }
-        Clock::Wall => {
-            let mut t = PjrtTimer {
-                engine,
-                bucket: bucket.clone(),
-                ops: ops.clone(),
-                x: x_packed.clone(),
-                warmed: std::collections::HashSet::new(),
-            };
-            select(&mut t, &widths, cfg.monitor_repeats)
-        }
-    };
-    let chosen = selector.chosen;
-
-    // ---- load the winning train-step artifact
+    // ---- load the planned train-step artifact
     let name = Manifest::train_name(
         cfg.model.as_str(),
         chosen.intra_str(),
@@ -215,13 +150,7 @@ pub fn train(
 
     // ---- pack static (non-parameter) literals once
     let mut static_lits: Vec<xla::Literal> = Vec::new();
-    let intra_ops = chosen.intra.map(|k| &ops[&k]);
-    if let Some(iops) = intra_ops {
-        for t in iops {
-            static_lits.push(t.to_literal()?);
-        }
-    }
-    for t in &ops[&chosen.inter] {
+    for t in &static_ops {
         static_lits.push(t.to_literal()?);
     }
     static_lits.push(x_packed.to_literal()?);
@@ -255,8 +184,7 @@ pub fn train(
     let params = literals_to_tensors(&params, &meta.inputs[..n_params])?;
     Ok(TrainReport {
         bucket: bucket.name.clone(),
-        chosen,
-        selector,
+        plan: plan.clone(),
         losses,
         step_secs,
         compile_secs,
@@ -315,7 +243,10 @@ pub fn forward(
 
 /// Extract trained parameters from a report-producing run for reuse in
 /// `forward` (params come back as literals; convert to host tensors).
-pub fn literals_to_tensors(lits: &[xla::Literal], specs: &[crate::runtime::TensorSpec]) -> Result<Vec<Tensor>> {
+pub fn literals_to_tensors(
+    lits: &[xla::Literal],
+    specs: &[crate::runtime::TensorSpec],
+) -> Result<Vec<Tensor>> {
     lits.iter()
         .zip(specs)
         .map(|(l, s)| Ok(Tensor::f32(l.to_vec::<f32>()?, &s.shape)))

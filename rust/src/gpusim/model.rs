@@ -63,13 +63,24 @@ pub const A100: GpuModel = GpuModel {
     framework_op_us: 6.0,
 };
 
-impl GpuModel {
-    pub fn by_name(name: &str) -> Option<&'static GpuModel> {
-        match name.to_ascii_lowercase().as_str() {
-            "v100" => Some(&V100),
-            "a100" => Some(&A100),
-            _ => None,
+/// Canonical string dispatch — CLI parsing and plan deserialization both
+/// come through here (`"a100".parse::<&'static GpuModel>()`).
+impl std::str::FromStr for &'static GpuModel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<&'static GpuModel, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "v100" => Ok(&V100),
+            "a100" => Ok(&A100),
+            other => Err(anyhow::anyhow!("unknown GPU {other:?} (expected a100|v100)")),
         }
+    }
+}
+
+impl GpuModel {
+    /// Thin wrapper over the canonical [`FromStr`] path.
+    pub fn by_name(name: &str) -> Option<&'static GpuModel> {
+        name.parse().ok()
     }
 
     /// Time to stream `bytes` at full (coalesced) bandwidth, microseconds.

@@ -30,14 +30,27 @@ impl KernelKind {
         }
     }
 
+    /// Thin wrapper over the canonical [`FromStr`] path.
     pub fn parse(s: &str) -> Option<KernelKind> {
+        s.parse().ok()
+    }
+}
+
+/// Canonical string dispatch — CLI parsing, manifest lookup, and plan
+/// deserialization all come through here.
+impl std::str::FromStr for KernelKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<KernelKind, Self::Err> {
         match s {
-            "csr_inter" => Some(KernelKind::CsrInter),
-            "csr_intra" => Some(KernelKind::CsrIntra),
-            "coo" => Some(KernelKind::Coo),
-            "dense_block" => Some(KernelKind::DenseBlock),
-            "dense_full" => Some(KernelKind::DenseFull),
-            _ => None,
+            "csr_inter" => Ok(KernelKind::CsrInter),
+            "csr_intra" => Ok(KernelKind::CsrIntra),
+            "coo" => Ok(KernelKind::Coo),
+            "dense_block" => Ok(KernelKind::DenseBlock),
+            "dense_full" => Ok(KernelKind::DenseFull),
+            other => Err(anyhow::anyhow!(
+                "unknown kernel {other:?} (expected csr_inter|csr_intra|coo|dense_block|dense_full)"
+            )),
         }
     }
 }

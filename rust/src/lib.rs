@@ -11,18 +11,23 @@
 //! * **Layer 3** (this crate): the paper's system contribution — graph
 //!   decomposition, subgraph-level kernel mapping, and the feedback-driven
 //!   adaptive selector — plus every substrate it needs (graph formats,
-//!   METIS-like partitioner, GPU cost simulator, PJRT runtime) and the
-//!   [`serve`] inference-serving runtime (model registry, micro-batching,
-//!   admission control, SLO metrics) layered on top.
+//!   METIS-like partitioner, GPU cost simulator, PJRT runtime), the
+//!   [`plan`] subsystem that makes the kernel decision a first-class,
+//!   cacheable artifact (`GearPlan` + pluggable planners + on-disk
+//!   `PlanStore`), and the [`serve`] inference-serving runtime (model
+//!   registry, micro-batching, admission control, SLO metrics) layered on
+//!   top.
 //!
 //! See `rust/DESIGN.md` for the full architecture inventory, including
-//! the serving subsystem's channel topology and SLO semantics.
+//! the plan lifecycle (Sec. 7) and the serving subsystem's channel
+//! topology and SLO semantics.
 
 pub mod coordinator;
 pub mod graph;
 pub mod gpusim;
 pub mod kernels;
 pub mod partition;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod util;

@@ -3,7 +3,9 @@
 //! ```text
 //! adaptgear datasets                         # Table 1 registry + measured stats
 //! adaptgear decompose --dataset cora         # reorder + split, print density report
-//! adaptgear train --dataset cora --model gcn --steps 200 [--clock wall|sim]
+//! adaptgear plan --dataset cora --model gcn [--explain]
+//!                                            # compute + persist a GearPlan
+//! adaptgear train --dataset cora --model gcn --steps 200 [--planner cached]
 //! adaptgear serve --dataset citeseer --requests 500 --max-batch 16
 //!                                            # micro-batched serving + SLO report
 //! adaptgear selftest                         # artifact <-> runtime smoke check
@@ -14,12 +16,17 @@
 
 use anyhow::{bail, Context, Result};
 
-use adaptgear::coordinator::{pipeline, Clock, ModelKind, Strategy, TrainConfig};
+use adaptgear::coordinator::{pipeline, Clock, ModelKind, Run, Strategy};
 use adaptgear::graph::{datasets, stats};
-use adaptgear::gpusim::GpuModel;
-use adaptgear::partition::Propagation;
-use adaptgear::runtime::Engine;
+use adaptgear::gpusim::{kernel_cost, GpuModel};
+use adaptgear::kernels::{INTER_CANDIDATES, INTRA_CANDIDATES};
+use adaptgear::partition::{Decomposition, Propagation};
+use adaptgear::plan::{
+    CachedPlanner, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner, SimCostPlanner,
+};
+use adaptgear::runtime::{Engine, Manifest};
 use adaptgear::util::cli::Args;
+use adaptgear::util::json;
 
 fn main() {
     let args = Args::from_env();
@@ -27,6 +34,7 @@ fn main() {
     let result = match cmd {
         "datasets" => cmd_datasets(&args),
         "decompose" => cmd_decompose(&args),
+        "plan" => cmd_plan(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
@@ -53,12 +61,20 @@ fn print_help() {
          \x20 datasets                          list the Table 1 registry\n\
          \x20 decompose --dataset NAME [--scale S] [--community C]\n\
          \x20                                   reorder + split; print density report\n\
+         \x20 plan --dataset NAME [--model gcn|gin] [--planner cached|monitor|sim]\n\
+         \x20      [--clock sim|wall] [--gpu a100|v100] [--monitor-repeats N]\n\
+         \x20      [--scale S] [--seed N] [--explain] [--no-save] [--out FILE]\n\
+         \x20                                   compute the kernel plan, print it, and\n\
+         \x20                                   persist it to <artifacts>/plans/\n\
          \x20 train --dataset NAME [--model gcn|gin] [--steps N] [--lr F]\n\
-         \x20       [--clock sim|wall] [--gpu a100|v100] [--scale S] [--seed N]\n\
+         \x20       [--planner monitor|cached|sim] [--clock sim|wall]\n\
+         \x20       [--gpu a100|v100] [--scale S] [--seed N]\n\
+         \x20                                   plan (or load a cached plan), then train\n\
          \x20 serve --dataset NAME [--model gcn|gin] [--requests N] [--clients N]\n\
          \x20       [--max-batch N] [--max-wait-us N] [--queue-depth N] [--steps N]\n\
          \x20       [--seed N (loadgen)] [--train-seed N]\n\
          \x20                                   micro-batched serving loop + SLO report\n\
+         \x20                                   (deploys plan through the plan cache)\n\
          \x20 selftest                          verify artifacts + runtime numerics\n\n\
          Figures: cargo bench --bench figures -- <fig2b|fig3a|fig3b|fig4|fig8|\n\
          \x20        fig9|fig10|fig11|fig12|table2|overhead|all>"
@@ -123,42 +139,236 @@ fn cmd_decompose(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Compute a `GearPlan` for a dataset without training: decompose, run the
+/// requested planner, print (optionally `--explain` per-candidate costs),
+/// and persist it to the plan store so later `train`/`serve` runs skip
+/// monitoring. Needs only the artifact *manifest* unless `--clock wall`.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("cora");
+    let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
+    let model: ModelKind = args.get_or("model", "gcn").parse()?;
+    let gpu: &'static GpuModel = args.get_or("gpu", "a100").parse()?;
+    let clock: Clock = args.get_or("clock", "sim").parse()?;
+    let repeats = args.get_usize("monitor-repeats", 3);
+    let seed = args.get_u64("seed", 0);
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+
+    let scale_override = args.get("scale").map(|s| s.parse::<f64>()).transpose()?;
+    // Same staging path as `train`/`deploy`, so the fingerprint (and
+    // therefore the plan cache key) is identical across subcommands.
+    let strategy = Strategy::AdaptGear;
+    let staged = pipeline::stage(&manifest, spec, model, strategy, scale_override, seed)
+        .context("staging the dataset (pass a smaller --scale?)")?;
+    println!(
+        "dataset={} scale={:.4} vertices={} edges={} | reorder {:.3}s decompose {:.3}s",
+        spec.name,
+        staged.scale,
+        staged.data.graph.n,
+        staged.data.graph.directed_edge_count(),
+        staged.times.reorder_secs,
+        staged.times.decompose_secs
+    );
+    let (d, bucket) = (&staged.d, &staged.bucket);
+    let req = PlanRequest::labeled(
+        d,
+        model,
+        bucket,
+        spec.name,
+        staged.scale,
+        strategy.reorder(),
+        seed,
+    );
+
+    let store = PlanStore::in_artifacts(&dir);
+    let no_save = args.flag("no-save");
+    let planner_kind = args.get_or("planner", "cached");
+    // `--clock wall` is the only configuration that needs a live engine.
+    let engine = match clock {
+        Clock::Wall => Some(Engine::new(&dir)?),
+        Clock::Sim => None,
+    };
+    // --no-save makes the cached planner read-only: hits still serve, but
+    // a miss is computed without mutating the store.
+    let mut planner = build_planner(
+        planner_kind,
+        clock,
+        gpu,
+        repeats,
+        engine.as_ref(),
+        store.clone(),
+        no_save,
+    )?;
+    let plan = planner.plan(&req)?;
+    // Report what THIS run did (a stale file for the same fingerprint must
+    // not read as "persisted"): a cached hit was served from disk, a
+    // cached miss was written by the planner unless read-only, and the
+    // plain planners save here.
+    let persisted = if planner_kind == "cached" {
+        plan.provenance.cached || !no_save
+    } else if no_save {
+        false
+    } else {
+        store.save(&plan)?;
+        true
+    };
+    if persisted {
+        println!("store: {}", store.path_for(plan.fingerprint).display());
+    } else {
+        println!("store: not persisted (--no-save)");
+    }
+
+    println!("{}", plan.summary());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, json::write(&plan.to_json()))
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    if args.flag("explain") {
+        explain_plan(&plan, d, [bucket.features, bucket.hidden], gpu);
+    }
+    Ok(())
+}
+
+/// `--explain`: the per-candidate cost surface behind the decision.
+fn explain_plan(plan: &GearPlan, d: &Decomposition, widths: [usize; 2], gpu: &GpuModel) {
+    println!("\nper-candidate gpusim costs (us; * = chosen):");
+    for &w in &widths {
+        println!("  width {w}:");
+        let show = |role: &str,
+                        matrix: &adaptgear::graph::Csr,
+                        candidates: &[adaptgear::kernels::KernelKind],
+                        chosen: &str| {
+            for &k in candidates {
+                let c = kernel_cost(k, matrix, w, d.community, gpu);
+                let mark = if k.as_str() == chosen { "*" } else { " " };
+                println!(
+                    "   {mark} {role:<5} {:<12} {:>9.2} = launch {:.2} + max(compute {:.2}, memory {:.2})",
+                    k.as_str(),
+                    c.time_us,
+                    c.launch_us,
+                    c.compute_us,
+                    c.memory_us
+                );
+            }
+        };
+        show("intra", &d.intra, &INTRA_CANDIDATES, plan.chosen.intra_str());
+        show("inter", &d.inter, &INTER_CANDIDATES, plan.chosen.inter.as_str());
+    }
+    let fmt_times = |m: &std::collections::BTreeMap<String, f64>| {
+        m.iter()
+            .map(|(k, v)| format!("{k}={v:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    };
+    println!(
+        "  monitored means (us): intra[{}] inter[{}]",
+        fmt_times(&plan.intra_times),
+        fmt_times(&plan.inter_times)
+    );
+    println!(
+        "  projected forward: {:.1}us aggregate + {:.1}us update + {:.1}us overhead = {:.1}us ({} launches)",
+        plan.projected.aggregate_us,
+        plan.projected.update_us,
+        plan.projected.overhead_us,
+        plan.projected.total_us(),
+        plan.projected.kernel_launches
+    );
+}
+
+/// The monitoring planner for a clock; wall needs a live engine.
+fn monitor_planner<'e>(
+    clock: Clock,
+    gpu: &'static GpuModel,
+    repeats: usize,
+    engine: Option<&'e Engine>,
+) -> Result<Box<dyn Planner + 'e>> {
+    Ok(match clock {
+        Clock::Sim => Box::new(MonitorPlanner::sim(gpu, repeats)),
+        Clock::Wall => {
+            let engine = engine.context("--clock wall needs the artifacts engine")?;
+            Box::new(MonitorPlanner::wall(engine, repeats).gpu(gpu))
+        }
+    })
+}
+
+/// The single `--planner` x `--clock` dispatch shared by the `plan` and
+/// `train` subcommands.
+fn build_planner<'e>(
+    kind: &str,
+    clock: Clock,
+    gpu: &'static GpuModel,
+    repeats: usize,
+    engine: Option<&'e Engine>,
+    store: PlanStore,
+    read_only: bool,
+) -> Result<Box<dyn Planner + 'e>> {
+    Ok(match kind {
+        "sim" => Box::new(SimCostPlanner::new(gpu)),
+        "monitor" => monitor_planner(clock, gpu, repeats, engine)?,
+        "cached" => {
+            let inner = monitor_planner(clock, gpu, repeats, engine)?;
+            if read_only {
+                Box::new(CachedPlanner::read_only(store, inner))
+            } else {
+                Box::new(CachedPlanner::new(store, inner))
+            }
+        }
+        other => bail!("--planner must be cached|monitor|sim, got {other}"),
+    })
+}
+
+/// Build the planner the `train` subcommand asked for.
+fn planner_from_args<'e>(args: &Args, engine: &'e Engine) -> Result<Box<dyn Planner + 'e>> {
+    let gpu: &'static GpuModel = args.get_or("gpu", "a100").parse()?;
+    let clock: Clock = args.get_or("clock", "sim").parse()?;
+    let repeats = args.get_usize("monitor-repeats", 3);
+    build_planner(
+        args.get_or("planner", "monitor"),
+        clock,
+        gpu,
+        repeats,
+        Some(engine),
+        PlanStore::in_artifacts(&engine.manifest.dir),
+        false,
+    )
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let name = args.get("dataset").unwrap_or("cora");
     let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
-    let model = ModelKind::parse(args.get_or("model", "gcn")).context("--model gcn|gin")?;
-    let clock = match args.get_or("clock", "sim") {
-        "sim" => Clock::Sim,
-        "wall" => Clock::Wall,
-        other => bail!("--clock must be sim or wall, got {other}"),
-    };
-    let gpu = GpuModel::by_name(args.get_or("gpu", "a100")).context("--gpu a100|v100")?;
-    let cfg = TrainConfig {
-        model,
-        steps: args.get_usize("steps", 200),
-        lr: args.get_f64("lr", 0.05) as f32,
-        monitor_repeats: args.get_usize("monitor-repeats", 3),
-        clock,
-        gpu,
-        seed: args.get_u64("seed", 0),
-    };
+    let model: ModelKind = args.get_or("model", "gcn").parse()?;
     let scale = args.get("scale").map(|s| s.parse::<f64>()).transpose()?;
 
     let engine = Engine::new(artifacts_dir(args))?;
     println!("platform={} artifacts={}", engine.platform(), engine.manifest.artifacts.len());
 
-    let report = pipeline::run(&engine, spec, &cfg, scale)?;
+    let planner = planner_from_args(args, &engine)?;
+    let mut run = Run::new(&engine)
+        .dataset(spec)
+        .model(model)
+        .steps(args.get_usize("steps", 200))
+        .lr(args.get_f64("lr", 0.05) as f32)
+        .seed(args.get_u64("seed", 0))
+        .planner(planner);
+    if let Some(s) = scale {
+        run = run.scale(s);
+    }
+    let report = run.train()?;
     println!(
         "dataset={} scale={:.4} vertices={} edges={} bucket={}",
         report.dataset, report.scale, report.vertices, report.edges, report.train.bucket
     );
+    let plan = &report.train.plan;
     println!(
-        "preprocess: reorder {:.3}s decompose {:.3}s | selector: chose {} after {} monitor iters ({:.1}us overhead)",
+        "preprocess: reorder {:.3}s decompose {:.3}s | plan[{}{}]: {} after {} monitor iters ({:.1}us overhead)",
         report.preprocess.reorder_secs,
         report.preprocess.decompose_secs,
-        report.train.chosen,
-        report.train.selector.monitor_iters,
-        report.train.selector.monitor_overhead_us,
+        plan.provenance.planner,
+        if plan.provenance.cached { ", cache hit" } else { "" },
+        plan.chosen,
+        plan.monitor_iters,
+        plan.monitor_overhead_us,
     );
     let losses = &report.train.losses;
     let every = (losses.len() / 10).max(1);
@@ -178,18 +388,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Closed-loop serving run: deploy (train + warm) a model through the
-/// registry, then drive the micro-batched event loop with the synthetic
-/// load generator and print the SLO report.
+/// Closed-loop serving run: deploy (plan + train + warm) a model through
+/// the registry — the plan comes from the persistent cache when warm —
+/// then drive the micro-batched event loop with the synthetic load
+/// generator and print the SLO report.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use adaptgear::serve::{
-        loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession,
-    };
+    use adaptgear::serve::{loadgen, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession};
     use std::time::Duration;
 
     let name = args.get_or("dataset", "citeseer");
     let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
-    let model = ModelKind::parse(args.get_or("model", "gcn")).context("--model gcn|gin")?;
+    let model: ModelKind = args.get_or("model", "gcn").parse()?;
     let cfg = ServeConfig {
         max_batch: args.get_usize("max-batch", 16),
         max_wait: Duration::from_micros(args.get_u64("max-wait-us", 2000)),
@@ -207,13 +416,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let mut registry = ModelRegistry::new();
     let deployment = format!("{}-{}", spec.name, model.as_str());
-    let mut dspec = DeploymentSpec::new(deployment.clone(), spec, model);
-    dspec.steps = args.get_usize("steps", 60);
-    dspec.seed = args.get_u64("train-seed", 0);
-    let dep = registry.deploy(&engine, dspec)?;
+    let dep = Run::new(&engine)
+        .dataset(spec)
+        .model(model)
+        .steps(args.get_usize("steps", 60))
+        .seed(args.get_u64("train-seed", 0))
+        .deploy_as(&mut registry, deployment.clone())?;
     println!(
-        "deployed {:?}: {} vertices, kernels {}, final loss {:.3}, forward warmed in {:.2}s",
-        dep.name, dep.n, dep.chosen, dep.final_loss, dep.warm_secs
+        "deployed {:?}: {} vertices, kernels {} ({} monitor iters{}), final loss {:.3}, forward warmed in {:.2}s",
+        dep.name,
+        dep.n,
+        dep.chosen(),
+        dep.plan.monitor_iters,
+        if dep.plan.provenance.cached { ", plan cache hit" } else { "" },
+        dep.final_loss,
+        dep.warm_secs
     );
     let (n, f_data) = (dep.n, dep.f_data);
 

@@ -19,13 +19,17 @@ pub enum Reorder {
 }
 
 impl Reorder {
-    pub fn parse(s: &str) -> Option<Reorder> {
-        match s.to_ascii_lowercase().as_str() {
-            "metis" => Some(Reorder::Metis),
-            "rabbit" => Some(Reorder::Rabbit),
-            "identity" | "none" => Some(Reorder::Identity),
-            _ => None,
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Reorder::Metis => "metis",
+            Reorder::Rabbit => "rabbit",
+            Reorder::Identity => "identity",
         }
+    }
+
+    /// Thin wrapper over the canonical [`FromStr`] path.
+    pub fn parse(s: &str) -> Option<Reorder> {
+        s.parse().ok()
     }
 
     pub fn order(&self, g: &Graph, community: usize, seed: u64) -> Vec<u32> {
@@ -33,6 +37,23 @@ impl Reorder {
             Reorder::Metis => metis_order(g, community, seed),
             Reorder::Rabbit => rabbit_order(g, community),
             Reorder::Identity => (0..g.n as u32).collect(),
+        }
+    }
+}
+
+/// Canonical string dispatch — CLI parsing and plan deserialization both
+/// come through here.
+impl std::str::FromStr for Reorder {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Reorder, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "metis" => Ok(Reorder::Metis),
+            "rabbit" => Ok(Reorder::Rabbit),
+            "identity" | "none" => Ok(Reorder::Identity),
+            other => Err(anyhow::anyhow!(
+                "unknown reorder {other:?} (expected metis|rabbit|identity)"
+            )),
         }
     }
 }

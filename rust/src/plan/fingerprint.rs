@@ -1,0 +1,135 @@
+//! Graph fingerprinting — the plan-cache key.
+//!
+//! A [`Fingerprint`] identifies the exact kernel-selection problem a
+//! [`GearPlan`](super::GearPlan) solves: the decomposed topology (both
+//! subgraph CSRs, values included, so a propagation change invalidates),
+//! the community width, and the model kind (GCN and GIN aggregate at
+//! different widths). Anything that could change the winning kernel pair
+//! changes the fingerprint; cosmetic state (feature values, labels,
+//! training budget) does not.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::coordinator::ModelKind;
+use crate::graph::Csr;
+use crate::partition::Decomposition;
+
+/// 64-bit FNV-1a digest of a (decomposition, model) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+impl Fingerprint {
+    /// Fingerprint the selection problem: topology + community + model.
+    pub fn of(d: &Decomposition, model: ModelKind) -> Fingerprint {
+        let mut h = Fnv::new();
+        h.write(b"adaptgear-plan-v1");
+        h.write(model.as_str().as_bytes());
+        h.write_usize(d.community);
+        h.write_usize(d.graph.n);
+        h.write_csr(&d.intra);
+        h.write_csr(&d.inter);
+        Fingerprint(h.finish())
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+impl FromStr for Fingerprint {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Fingerprint, Self::Err> {
+        let raw = u64::from_str_radix(s, 16)
+            .map_err(|e| anyhow::anyhow!("bad fingerprint {s:?}: {e}"))?;
+        Ok(Fingerprint(raw))
+    }
+}
+
+/// Minimal FNV-1a, enough for cache keying (not cryptographic).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn write_usize(&mut self, v: usize) {
+        self.write(&(v as u64).to_le_bytes());
+    }
+
+    fn write_csr(&mut self, c: &Csr) {
+        self.write_usize(c.n_rows);
+        self.write_usize(c.n_cols);
+        for &p in &c.row_ptr {
+            self.write_u32(p);
+        }
+        for &i in &c.col_idx {
+            self.write_u32(i);
+        }
+        for &w in &c.vals {
+            self.write_u32(w.to_bits());
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::partition::{Propagation, Reorder};
+    use crate::util::rng::Rng;
+
+    fn decomp(seed: u64, propagation: Propagation) -> Decomposition {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition(128, 16, 0.4, 0.02, &mut rng);
+        Decomposition::build(&g, Reorder::Metis, propagation, 16, 1)
+    }
+
+    #[test]
+    fn stable_for_identical_input() {
+        let d = decomp(7, Propagation::GcnNormalized);
+        assert_eq!(
+            Fingerprint::of(&d, ModelKind::Gcn),
+            Fingerprint::of(&d, ModelKind::Gcn)
+        );
+    }
+
+    #[test]
+    fn changes_with_model_topology_and_propagation() {
+        let d = decomp(7, Propagation::GcnNormalized);
+        let gcn = Fingerprint::of(&d, ModelKind::Gcn);
+        assert_ne!(gcn, Fingerprint::of(&d, ModelKind::Gin));
+        let other = decomp(8, Propagation::GcnNormalized);
+        assert_ne!(gcn, Fingerprint::of(&other, ModelKind::Gcn));
+        let plain = decomp(7, Propagation::PlainAdjacency);
+        assert_ne!(gcn, Fingerprint::of(&plain, ModelKind::Gcn));
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        let fp = Fingerprint(0x0123_4567_89ab_cdef);
+        let text = fp.to_string();
+        assert_eq!(text.len(), 16);
+        assert_eq!(text.parse::<Fingerprint>().unwrap(), fp);
+        assert!("zz".parse::<Fingerprint>().is_err());
+    }
+}

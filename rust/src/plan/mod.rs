@@ -1,0 +1,484 @@
+//! First-class kernel planning.
+//!
+//! AdaptGear's core contribution is choosing density-specialized kernels
+//! per subgraph; this module makes that choice a serializable **plan**
+//! instead of a transient side effect of training. A [`GearPlan`] records
+//! everything the decision depends on (graph [`Fingerprint`], scale,
+//! community, reorder), the decision itself (per-width and overall
+//! [`KernelPair`], AOT bucket), the projected [`IterationCost`], and
+//! provenance — and roundtrips through `util::json`.
+//!
+//! Plans are produced by [`Planner`] implementations:
+//!
+//! * [`SimCostPlanner`] — deterministic gpusim costs, no monitoring.
+//! * [`MonitorPlanner`] — the paper's Sec. 3.3 feedback loop (sim or
+//!   PJRT wall clock) via `coordinator::selector::select`.
+//! * [`CachedPlanner`] — a [`PlanStore`] on disk keyed by fingerprint,
+//!   delegating to an inner planner on miss; a cache hit costs zero
+//!   monitor iterations.
+//!
+//! Consumers: `coordinator::trainer::train` executes a plan,
+//! `coordinator::pipeline::Run` builds one end to end,
+//! `serve::ModelRegistry::deploy` plans through `CachedPlanner`, and the
+//! `adaptgear plan` subcommand computes/prints/persists them.
+
+pub mod fingerprint;
+pub mod planners;
+pub mod store;
+
+pub use fingerprint::Fingerprint;
+pub use planners::{best_adaptive_pair, CachedPlanner, MonitorPlanner, SimCostPlanner};
+pub use store::PlanStore;
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::ModelKind;
+use crate::gpusim::IterationCost;
+use crate::kernels::{KernelKind, KernelPair};
+use crate::partition::{Decomposition, Reorder};
+use crate::runtime::BucketInfo;
+use crate::util::json::Json;
+
+/// Timing source for monitoring-based planners.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// Deterministic gpusim surface (figure benches; no GPU here).
+    Sim,
+    /// Real PJRT wall time of the kernel-only artifacts.
+    Wall,
+}
+
+impl Clock {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Clock::Sim => "sim",
+            Clock::Wall => "wall",
+        }
+    }
+}
+
+impl FromStr for Clock {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Clock, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Ok(Clock::Sim),
+            "wall" => Ok(Clock::Wall),
+            other => Err(anyhow!("unknown clock {other:?} (expected sim|wall)")),
+        }
+    }
+}
+
+/// Everything a planner needs to decide kernels for one decomposed graph.
+pub struct PlanRequest<'a> {
+    pub d: &'a Decomposition,
+    pub model: ModelKind,
+    /// AOT bucket the padded graph fits (widths come from here).
+    pub bucket: &'a BucketInfo,
+    /// Provenance labels — not part of the cache key.
+    pub dataset: String,
+    pub scale: f64,
+    pub reorder: Reorder,
+    pub seed: u64,
+}
+
+impl<'a> PlanRequest<'a> {
+    pub fn new(d: &'a Decomposition, model: ModelKind, bucket: &'a BucketInfo) -> PlanRequest<'a> {
+        PlanRequest {
+            d,
+            model,
+            bucket,
+            dataset: String::new(),
+            scale: 1.0,
+            reorder: Reorder::Metis,
+            seed: 0,
+        }
+    }
+
+    /// [`PlanRequest::new`] plus the provenance labels in one call — the
+    /// pipeline, registry, CLI, and examples all thread the same four.
+    pub fn labeled(
+        d: &'a Decomposition,
+        model: ModelKind,
+        bucket: &'a BucketInfo,
+        dataset: &str,
+        scale: f64,
+        reorder: Reorder,
+        seed: u64,
+    ) -> PlanRequest<'a> {
+        PlanRequest { d, model, bucket, dataset: dataset.to_string(), scale, reorder, seed }
+    }
+
+    /// Aggregate widths the selector monitors (matches the AOT kernel-only
+    /// artifacts, which are lowered at the bucket's feature and hidden
+    /// widths).
+    pub fn widths(&self) -> [usize; 2] {
+        [self.bucket.features, self.bucket.hidden]
+    }
+
+    pub fn fingerprint(&self) -> Fingerprint {
+        Fingerprint::of(self.d, self.model)
+    }
+}
+
+/// Where a plan came from — recorded for `--explain` and cache forensics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    /// Planner that computed the decision ("simcost", "monitor", ...).
+    pub planner: String,
+    /// Timing source ("analytic", "sim", "wall").
+    pub clock: String,
+    /// GPU model driving simulated costs.
+    pub gpu: String,
+    /// True when this instance was served from a [`PlanStore`] hit.
+    pub cached: bool,
+}
+
+/// A serializable subgraph-level kernel decision.
+#[derive(Debug, Clone)]
+pub struct GearPlan {
+    /// Identity of the selection problem (topology + community + model).
+    pub fingerprint: Fingerprint,
+    pub dataset: String,
+    pub model: ModelKind,
+    pub scale: f64,
+    pub community: usize,
+    pub reorder: Reorder,
+    pub seed: u64,
+    /// AOT bucket the plan targets.
+    pub bucket: String,
+    /// Overall winner — the variant the AOT train/forward artifacts honor.
+    pub chosen: KernelPair,
+    /// Per-aggregate-width winners, under the same per-candidate cost
+    /// basis as `chosen` (informational; artifacts are lowered per
+    /// overall pair, so `chosen` is what executes).
+    pub per_width: BTreeMap<usize, KernelPair>,
+    /// Mean measured/simulated time per intra candidate (us).
+    pub intra_times: BTreeMap<String, f64>,
+    /// Mean measured/simulated time per inter candidate (us).
+    pub inter_times: BTreeMap<String, f64>,
+    /// Projected cost of one forward pass under this plan.
+    pub projected: IterationCost,
+    /// Monitoring iterations spent producing THIS instance (0 when the
+    /// plan was served from cache — the Sec. 6.3 overhead that caching
+    /// eliminates).
+    pub monitor_iters: usize,
+    pub monitor_overhead_us: f64,
+    pub provenance: Provenance,
+}
+
+impl GearPlan {
+    /// Check this plan solves the selection problem `d` + `model` poses.
+    pub fn validate(&self, d: &Decomposition, model: ModelKind) -> Result<()> {
+        if self.community != d.community {
+            bail!(
+                "plan community {} != decomposition community {}",
+                self.community,
+                d.community
+            );
+        }
+        let fp = Fingerprint::of(d, model);
+        if self.fingerprint != fp {
+            bail!(
+                "plan fingerprint {} does not match graph fingerprint {fp} — replan",
+                self.fingerprint
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether this plan's decision still applies to `bucket` — the
+    /// bucket the padded graph currently fits. False after an artifacts
+    /// rebuild changes bucket geometry (name, or the monitored widths):
+    /// the graph fingerprint alone cannot see that, so the plan cache
+    /// must re-check before serving a stored decision.
+    pub fn matches_bucket(&self, bucket: &BucketInfo) -> bool {
+        self.bucket == bucket.name
+            && [bucket.features, bucket.hidden]
+                .iter()
+                .all(|w| self.per_width.contains_key(w))
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "plan {}: {} on {} (scale {:.4}) -> {} in bucket {} | projected {:.1}us/fwd | {} monitor iters ({}{})",
+            self.fingerprint,
+            self.model.as_str(),
+            if self.dataset.is_empty() { "<graph>" } else { self.dataset.as_str() },
+            self.scale,
+            self.chosen,
+            self.bucket,
+            self.projected.total_us(),
+            self.monitor_iters,
+            self.provenance.planner,
+            if self.provenance.cached { ", cache hit" } else { "" },
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let times = |m: &BTreeMap<String, f64>| {
+            Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect())
+        };
+        let per_width = Json::Obj(
+            self.per_width
+                .iter()
+                .map(|(w, p)| (w.to_string(), pair_to_json(*p)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("fingerprint", Json::str(self.fingerprint.to_string())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("model", Json::str(self.model.as_str())),
+            ("scale", Json::num(self.scale)),
+            ("community", Json::num(self.community as f64)),
+            ("reorder", Json::str(self.reorder.as_str())),
+            // string, not number: u64 seeds above 2^53 don't survive f64
+            ("seed", Json::str(self.seed.to_string())),
+            ("bucket", Json::str(self.bucket.clone())),
+            ("chosen", pair_to_json(self.chosen)),
+            ("per_width", per_width),
+            ("intra_times", times(&self.intra_times)),
+            ("inter_times", times(&self.inter_times)),
+            ("projected", cost_to_json(&self.projected)),
+            ("monitor_iters", Json::num(self.monitor_iters as f64)),
+            ("monitor_overhead_us", Json::num(self.monitor_overhead_us)),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("planner", Json::str(self.provenance.planner.clone())),
+                    ("clock", Json::str(self.provenance.clock.clone())),
+                    ("gpu", Json::str(self.provenance.gpu.clone())),
+                    ("cached", Json::Bool(self.provenance.cached)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<GearPlan> {
+        let req_str = |k: &str| {
+            v.get(k)
+                .as_str()
+                .ok_or_else(|| anyhow!("plan missing string field {k:?}"))
+        };
+        let req_num = |k: &str| {
+            v.get(k)
+                .as_f64()
+                .ok_or_else(|| anyhow!("plan missing numeric field {k:?}"))
+        };
+        let times = |k: &str| -> Result<BTreeMap<String, f64>> {
+            v.get(k)
+                .as_obj()
+                .map(|o| {
+                    o.iter()
+                        .map(|(name, t)| {
+                            let t = t.as_f64().ok_or_else(|| anyhow!("bad time for {name}"))?;
+                            Ok((name.clone(), t))
+                        })
+                        .collect()
+                })
+                .unwrap_or_else(|| Ok(BTreeMap::new()))
+        };
+        let mut per_width = BTreeMap::new();
+        if let Some(obj) = v.get("per_width").as_obj() {
+            for (w, p) in obj {
+                let w: usize = w.parse().map_err(|_| anyhow!("bad width key {w:?}"))?;
+                per_width.insert(w, pair_from_json(p)?);
+            }
+        }
+        let prov = v.get("provenance");
+        Ok(GearPlan {
+            fingerprint: req_str("fingerprint")?.parse()?,
+            dataset: req_str("dataset")?.to_string(),
+            model: req_str("model")?.parse()?,
+            scale: req_num("scale")?,
+            community: req_num("community")? as usize,
+            reorder: req_str("reorder")?.parse()?,
+            seed: req_str("seed")?
+                .parse::<u64>()
+                .map_err(|e| anyhow!("bad seed in plan: {e}"))?,
+            bucket: req_str("bucket")?.to_string(),
+            chosen: pair_from_json(v.get("chosen")).context("plan field 'chosen'")?,
+            per_width,
+            intra_times: times("intra_times")?,
+            inter_times: times("inter_times")?,
+            projected: cost_from_json(v.get("projected")),
+            monitor_iters: req_num("monitor_iters")? as usize,
+            monitor_overhead_us: v.get("monitor_overhead_us").as_f64().unwrap_or(0.0),
+            provenance: Provenance {
+                planner: prov.get("planner").as_str().unwrap_or("unknown").to_string(),
+                clock: prov.get("clock").as_str().unwrap_or("unknown").to_string(),
+                gpu: prov.get("gpu").as_str().unwrap_or("unknown").to_string(),
+                cached: prov.get("cached").as_bool().unwrap_or(false),
+            },
+        })
+    }
+}
+
+fn pair_to_json(p: KernelPair) -> Json {
+    Json::obj(vec![
+        (
+            "intra",
+            match p.intra {
+                Some(k) => Json::str(k.as_str()),
+                None => Json::Null,
+            },
+        ),
+        ("inter", Json::str(p.inter.as_str())),
+    ])
+}
+
+fn pair_from_json(v: &Json) -> Result<KernelPair> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("kernel pair must be an object"))?;
+    let inter: KernelKind = obj
+        .get("inter")
+        .and_then(|j| j.as_str())
+        .ok_or_else(|| anyhow!("kernel pair missing inter"))?
+        .parse()?;
+    // An ABSENT intra is malformed; only an explicit null means the
+    // full-graph variant — a truncated plan must not silently decode.
+    let intra = match obj.get("intra") {
+        None => bail!("kernel pair missing intra (use null for the full-graph variant)"),
+        Some(Json::Null) => None,
+        Some(other) => Some(
+            other
+                .as_str()
+                .ok_or_else(|| anyhow!("kernel pair intra must be a string or null"))?
+                .parse::<KernelKind>()?,
+        ),
+    };
+    Ok(KernelPair { intra, inter })
+}
+
+fn cost_to_json(c: &IterationCost) -> Json {
+    Json::obj(vec![
+        ("aggregate_us", Json::num(c.aggregate_us)),
+        ("update_us", Json::num(c.update_us)),
+        ("overhead_us", Json::num(c.overhead_us)),
+        ("l2_hits", Json::num(c.l2_hits as f64)),
+        ("l2_accesses", Json::num(c.l2_accesses as f64)),
+        ("kernel_launches", Json::num(c.kernel_launches as f64)),
+    ])
+}
+
+fn cost_from_json(v: &Json) -> IterationCost {
+    IterationCost {
+        aggregate_us: v.get("aggregate_us").as_f64().unwrap_or(0.0),
+        update_us: v.get("update_us").as_f64().unwrap_or(0.0),
+        overhead_us: v.get("overhead_us").as_f64().unwrap_or(0.0),
+        l2_hits: v.get("l2_hits").as_f64().unwrap_or(0.0) as u64,
+        l2_accesses: v.get("l2_accesses").as_f64().unwrap_or(0.0) as u64,
+        kernel_launches: v.get("kernel_launches").as_f64().unwrap_or(0.0) as usize,
+    }
+}
+
+/// A pluggable kernel-decision maker.
+pub trait Planner {
+    /// Short id used in provenance and CLI output.
+    fn name(&self) -> &'static str;
+
+    /// Decide kernels for the request (possibly via cache or monitoring).
+    fn plan(&mut self, req: &PlanRequest) -> Result<GearPlan>;
+}
+
+impl<P: Planner + ?Sized> Planner for Box<P> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> Result<GearPlan> {
+        (**self).plan(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::gpusim::A100;
+    use crate::partition::Propagation;
+    use crate::util::json;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn small_decomposition(seed: u64) -> Decomposition {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition(128, 16, 0.5, 0.02, &mut rng);
+        let mut sh: Vec<u32> = (0..128).collect();
+        rng.shuffle(&mut sh);
+        Decomposition::build(&g.relabel(&sh), Reorder::Metis, Propagation::GcnNormalized, 16, 1)
+    }
+
+    pub(crate) fn small_bucket() -> BucketInfo {
+        BucketInfo {
+            name: "b256".to_string(),
+            vertices: 256,
+            edges: 1024,
+            features: 32,
+            hidden: 32,
+            classes: 8,
+            blocks: 16,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let d = small_decomposition(3);
+        let bucket = small_bucket();
+        let mut req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+        req.dataset = "cora".to_string();
+        req.scale = 0.25;
+        req.seed = u64::MAX - 12345; // above 2^53: must survive JSON exactly
+        let plan = SimCostPlanner::new(&A100).plan(&req).unwrap();
+
+        let text = json::write(&plan.to_json());
+        let back = GearPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+        // canonical JSON equality covers every field, including f64 values
+        assert_eq!(json::write(&back.to_json()), text);
+        assert_eq!(back.fingerprint, plan.fingerprint);
+        assert_eq!(back.chosen, plan.chosen);
+        assert_eq!(back.per_width, plan.per_width);
+        assert_eq!(back.model, plan.model);
+        assert_eq!(back.reorder, plan.reorder);
+        assert_eq!(back.seed, plan.seed);
+    }
+
+    #[test]
+    fn full_graph_pair_serializes_null_intra() {
+        let p = KernelPair::full_graph(KernelKind::CsrInter);
+        let j = pair_to_json(p);
+        assert_eq!(j.get("intra"), &Json::Null);
+        assert_eq!(pair_from_json(&j).unwrap(), p);
+        // absent intra is malformed, not full-graph
+        let truncated = json::parse(r#"{"inter":"coo"}"#).unwrap();
+        assert!(pair_from_json(&truncated).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_other_graphs() {
+        let d = small_decomposition(3);
+        let other = small_decomposition(4);
+        let bucket = small_bucket();
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        assert!(plan.validate(&d, ModelKind::Gcn).is_ok());
+        assert!(plan.validate(&other, ModelKind::Gcn).is_err());
+        assert!(plan.validate(&d, ModelKind::Gin).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_plans() {
+        assert!(GearPlan::from_json(&json::parse("{}").unwrap()).is_err());
+        let d = small_decomposition(5);
+        let bucket = small_bucket();
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        let text = json::write(&plan.to_json()).replace("csr", "zzz");
+        assert!(GearPlan::from_json(&json::parse(&text).unwrap()).is_err());
+    }
+}

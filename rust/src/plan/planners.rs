@@ -1,0 +1,587 @@
+//! The three [`Planner`](super::Planner) implementations.
+//!
+//! * [`SimCostPlanner`] — pure analytic: per-candidate gpusim cost, no
+//!   feedback loop. Deterministic and engine-free (absorbs what used to
+//!   be `strategy::best_adaptive_pair`, which now lives here).
+//! * [`MonitorPlanner`] — the Sec. 3.3 feedback loop over
+//!   `selector::select`, timed by the gpusim surface ([`Clock::Sim`]) or
+//!   by running kernel-only PJRT artifacts ([`Clock::Wall`]).
+//! * [`CachedPlanner`] — consults a [`PlanStore`] keyed by graph
+//!   fingerprint; a hit returns the stored decision with
+//!   `monitor_iters == 0`, a miss delegates to the inner planner and
+//!   persists the result.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::selector::{select, KernelTimer, Role};
+use crate::coordinator::{ModelDims, Strategy};
+use crate::gpusim::{kernel_cost, GpuModel, IterationCost};
+use crate::kernels::pack::{pack_features, pack_kernel_operands};
+use crate::kernels::{KernelKind, KernelPair, INTER_CANDIDATES, INTRA_CANDIDATES};
+use crate::partition::Decomposition;
+use crate::runtime::{Engine, Manifest, Tensor};
+use crate::util::rng::Rng;
+
+use super::store::PlanStore;
+use super::{Clock, GearPlan, PlanRequest, Planner, Provenance};
+
+/// Pick the simulated-fastest kernel per subgraph at one aggregate width
+/// (what the runtime selector converges to when driven by the sim clock).
+/// Inter candidates are timed against the warm L2 the intra kernel leaves
+/// behind, matching how the runtime selector measures them back to back.
+pub fn best_adaptive_pair(d: &Decomposition, width: usize, gpu: &GpuModel) -> KernelPair {
+    use crate::gpusim::kernel_cost::subgraph_pair_cost;
+    let intra = INTRA_CANDIDATES
+        .into_iter()
+        .min_by(|&a, &b| {
+            let ca = kernel_cost(a, &d.intra, width, d.community, gpu).time_us;
+            let cb = kernel_cost(b, &d.intra, width, d.community, gpu).time_us;
+            ca.partial_cmp(&cb).unwrap()
+        })
+        .unwrap();
+    let inter = INTER_CANDIDATES
+        .into_iter()
+        .min_by(|&a, &b| {
+            let ca = subgraph_pair_cost(intra, a, &d.intra, &d.inter, width, d.community, gpu)
+                .1
+                .time_us;
+            let cb = subgraph_pair_cost(intra, b, &d.intra, &d.inter, width, d.community, gpu)
+                .1
+                .time_us;
+            ca.partial_cmp(&cb).unwrap()
+        })
+        .unwrap();
+    KernelPair::new(intra, inter)
+}
+
+/// Projected cost of one forward pass under the adaptive assignment.
+fn projected_cost(req: &PlanRequest, gpu: &GpuModel) -> IterationCost {
+    let dims = ModelDims::new(
+        req.model,
+        req.bucket.features,
+        req.bucket.hidden,
+        req.bucket.classes,
+    );
+    crate::coordinator::forward_cost(Strategy::AdaptGear, req.d, &dims, gpu, 0)
+}
+
+/// Per-width winners under the SAME per-candidate cost basis that decides
+/// `chosen` (standalone `kernel_cost`, uncoupled) — so a plan can never
+/// record a per-width winner that contradicts its own overall decision.
+/// The coupled warm-L2 model ([`best_adaptive_pair`]) stays on the
+/// strategy/figure surface and in the projected cost.
+fn per_width_pairs(req: &PlanRequest, gpu: &GpuModel) -> BTreeMap<usize, KernelPair> {
+    let pick = |matrix: &crate::graph::Csr, cands: &[KernelKind], w: usize| {
+        cands
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                let ca = kernel_cost(a, matrix, w, req.d.community, gpu).time_us;
+                let cb = kernel_cost(b, matrix, w, req.d.community, gpu).time_us;
+                ca.partial_cmp(&cb).unwrap()
+            })
+            .unwrap()
+    };
+    req.widths()
+        .iter()
+        .map(|&w| {
+            (
+                w,
+                KernelPair::new(
+                    pick(&req.d.intra, &INTRA_CANDIDATES, w),
+                    pick(&req.d.inter, &INTER_CANDIDATES, w),
+                ),
+            )
+        })
+        .collect()
+}
+
+fn owned_times(times: &BTreeMap<&'static str, f64>) -> BTreeMap<String, f64> {
+    times.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Deterministic planner over the gpusim cost surface — no monitoring, no
+/// engine, zero runtime overhead.
+#[derive(Debug, Clone, Copy)]
+pub struct SimCostPlanner {
+    pub gpu: &'static GpuModel,
+}
+
+impl SimCostPlanner {
+    pub fn new(gpu: &'static GpuModel) -> SimCostPlanner {
+        SimCostPlanner { gpu }
+    }
+}
+
+impl Planner for SimCostPlanner {
+    fn name(&self) -> &'static str {
+        "simcost"
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> Result<GearPlan> {
+        let widths = req.widths();
+        let mean = |matrix: &crate::graph::Csr, kind: KernelKind| {
+            widths
+                .iter()
+                .map(|&w| kernel_cost(kind, matrix, w, req.d.community, self.gpu).time_us)
+                .sum::<f64>()
+                / widths.len() as f64
+        };
+        let mut intra_times = BTreeMap::new();
+        for kind in INTRA_CANDIDATES {
+            intra_times.insert(kind.as_str().to_string(), mean(&req.d.intra, kind));
+        }
+        let mut inter_times = BTreeMap::new();
+        for kind in INTER_CANDIDATES {
+            inter_times.insert(kind.as_str().to_string(), mean(&req.d.inter, kind));
+        }
+        let argmin = |times: &BTreeMap<String, f64>, candidates: &[KernelKind]| {
+            candidates
+                .iter()
+                .copied()
+                .min_by(|a, b| times[a.as_str()].partial_cmp(&times[b.as_str()]).unwrap())
+                .unwrap()
+        };
+        let chosen = KernelPair::new(
+            argmin(&intra_times, &INTRA_CANDIDATES),
+            argmin(&inter_times, &INTER_CANDIDATES),
+        );
+        Ok(GearPlan {
+            fingerprint: req.fingerprint(),
+            dataset: req.dataset.clone(),
+            model: req.model,
+            scale: req.scale,
+            community: req.d.community,
+            reorder: req.reorder,
+            seed: req.seed,
+            bucket: req.bucket.name.clone(),
+            chosen,
+            per_width: per_width_pairs(req, self.gpu),
+            intra_times,
+            inter_times,
+            projected: projected_cost(req, self.gpu),
+            monitor_iters: 0,
+            monitor_overhead_us: 0.0,
+            provenance: Provenance {
+                planner: self.name().to_string(),
+                clock: "analytic".to_string(),
+                gpu: self.gpu.name.to_string(),
+                cached: false,
+            },
+        })
+    }
+}
+
+/// Selector timer driven by the gpusim cost model.
+struct SimTimer<'a> {
+    d: &'a Decomposition,
+    gpu: &'static GpuModel,
+}
+
+impl KernelTimer for SimTimer<'_> {
+    fn time_us(&mut self, role: Role, kind: KernelKind, width: usize) -> f64 {
+        let m = match role {
+            Role::Intra => &self.d.intra,
+            Role::Inter => &self.d.inter,
+        };
+        kernel_cost(kind, m, width, self.d.community, self.gpu).time_us
+    }
+}
+
+/// Selector timer that executes kernel-only artifacts through PJRT.
+///
+/// Perf note (EXPERIMENTS.md §Perf L3-1): the first call per candidate
+/// warms the executable (XLA compile + first run) OUTSIDE the timed
+/// window, so the monitor measures steady-state kernel time — on the real
+/// system compile happens once per topology, not per training run.
+struct PjrtTimer<'a> {
+    engine: &'a Engine,
+    bucket_name: String,
+    ops: HashMap<KernelKind, Vec<Tensor>>,
+    x: Tensor,
+    warmed: HashSet<KernelKind>,
+}
+
+impl<'a> PjrtTimer<'a> {
+    fn build(engine: &'a Engine, req: &PlanRequest) -> Result<PjrtTimer<'a>> {
+        let mut ops: HashMap<KernelKind, Vec<Tensor>> = HashMap::new();
+        for kind in INTRA_CANDIDATES {
+            ops.insert(
+                kind,
+                pack_kernel_operands(kind, &req.d.intra, req.d.community, req.bucket)?,
+            );
+        }
+        for kind in INTER_CANDIDATES {
+            ops.insert(
+                kind,
+                pack_kernel_operands(kind, &req.d.inter, req.d.community, req.bucket)?,
+            );
+        }
+        // Timing is value-independent; synth features at the bucket width.
+        let n = req.d.graph.n;
+        let f = req.bucket.features;
+        let mut rng = Rng::new(req.seed ^ 0x51ee);
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+        Ok(PjrtTimer {
+            engine,
+            bucket_name: req.bucket.name.clone(),
+            ops,
+            x: pack_features(&x, n, f, req.bucket)?,
+            warmed: HashSet::new(),
+        })
+    }
+}
+
+impl KernelTimer for PjrtTimer<'_> {
+    fn time_us(&mut self, _role: Role, kind: KernelKind, _width: usize) -> f64 {
+        let name = Manifest::kernel_name(kind.as_str(), &self.bucket_name);
+        let mut args: Vec<Tensor> = self.ops[&kind].clone();
+        args.push(self.x.clone());
+        if self.warmed.insert(kind) && self.engine.run(&name, &args).is_err() {
+            return f64::INFINITY; // unrunnable candidate never wins
+        }
+        let t0 = Instant::now();
+        match self.engine.run(&name, &args) {
+            Ok(_) => t0.elapsed().as_secs_f64() * 1e6,
+            Err(_) => f64::INFINITY,
+        }
+    }
+}
+
+/// Pass-through timer that accumulates per-(role, kind, width) sums, so
+/// measurements taken by `selector::select` can be re-read afterwards.
+struct RecordingTimer<'t> {
+    inner: &'t mut dyn KernelTimer,
+    /// (is_intra, kernel, width) -> (sum_us, samples)
+    acc: BTreeMap<(bool, &'static str, usize), (f64, u32)>,
+}
+
+impl RecordingTimer<'_> {
+    fn mean(&self, is_intra: bool, kind: KernelKind, width: usize) -> f64 {
+        self.acc
+            .get(&(is_intra, kind.as_str(), width))
+            .map(|&(sum, n)| sum / n as f64)
+            .unwrap_or(f64::INFINITY)
+    }
+}
+
+impl KernelTimer for RecordingTimer<'_> {
+    fn time_us(&mut self, role: Role, kind: KernelKind, width: usize) -> f64 {
+        let t = self.inner.time_us(role, kind, width);
+        let entry = self
+            .acc
+            .entry((matches!(role, Role::Intra), kind.as_str(), width))
+            .or_insert((0.0, 0));
+        entry.0 += t;
+        entry.1 += 1;
+        t
+    }
+}
+
+/// The paper's online feedback loop as a planner: a few monitored
+/// iterations per candidate, then lock the winner.
+pub struct MonitorPlanner<'e> {
+    clock: Clock,
+    gpu: &'static GpuModel,
+    repeats: usize,
+    engine: Option<&'e Engine>,
+}
+
+impl MonitorPlanner<'static> {
+    /// Monitor on the deterministic gpusim clock (no engine needed).
+    pub fn sim(gpu: &'static GpuModel, repeats: usize) -> MonitorPlanner<'static> {
+        MonitorPlanner { clock: Clock::Sim, gpu, repeats, engine: None }
+    }
+}
+
+impl<'e> MonitorPlanner<'e> {
+    /// Monitor real PJRT wall time of the kernel-only artifacts. The GPU
+    /// model (default A100) still drives the *projected* cost — override
+    /// with [`MonitorPlanner::gpu`].
+    pub fn wall(engine: &'e Engine, repeats: usize) -> MonitorPlanner<'e> {
+        MonitorPlanner {
+            clock: Clock::Wall,
+            gpu: &crate::gpusim::A100,
+            repeats,
+            engine: Some(engine),
+        }
+    }
+
+    /// Set the GPU model used for projected costs and provenance.
+    pub fn gpu(mut self, gpu: &'static GpuModel) -> Self {
+        self.gpu = gpu;
+        self
+    }
+
+    fn finish(&self, req: &PlanRequest, timer: &mut dyn KernelTimer) -> GearPlan {
+        let widths = req.widths();
+        // Record per-(role, kind, width) means while select() measures, so
+        // the per-width assignment reuses the SAME monitored runs — no
+        // extra kernel executions, and monitor_iters accounting stays
+        // exact (every real run happened inside select()).
+        let mut rec = RecordingTimer { inner: timer, acc: BTreeMap::new() };
+        let report = select(&mut rec, &widths, self.repeats);
+        let mut per_width = BTreeMap::new();
+        for &w in &widths {
+            let argmin = |cands: &[KernelKind], intra: bool| {
+                cands
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        rec.mean(intra, a, w).partial_cmp(&rec.mean(intra, b, w)).unwrap()
+                    })
+                    .unwrap()
+            };
+            per_width.insert(
+                w,
+                KernelPair::new(argmin(&INTRA_CANDIDATES, true), argmin(&INTER_CANDIDATES, false)),
+            );
+        }
+        GearPlan {
+            fingerprint: req.fingerprint(),
+            dataset: req.dataset.clone(),
+            model: req.model,
+            scale: req.scale,
+            community: req.d.community,
+            reorder: req.reorder,
+            seed: req.seed,
+            bucket: req.bucket.name.clone(),
+            chosen: report.chosen,
+            per_width,
+            intra_times: owned_times(&report.intra_times),
+            inter_times: owned_times(&report.inter_times),
+            projected: projected_cost(req, self.gpu),
+            monitor_iters: report.monitor_iters,
+            monitor_overhead_us: report.monitor_overhead_us,
+            provenance: Provenance {
+                planner: "monitor".to_string(),
+                clock: self.clock.as_str().to_string(),
+                gpu: self.gpu.name.to_string(),
+                cached: false,
+            },
+        }
+    }
+}
+
+impl Planner for MonitorPlanner<'_> {
+    fn name(&self) -> &'static str {
+        "monitor"
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> Result<GearPlan> {
+        match self.clock {
+            Clock::Sim => {
+                let mut timer = SimTimer { d: req.d, gpu: self.gpu };
+                Ok(self.finish(req, &mut timer))
+            }
+            Clock::Wall => {
+                let engine = self
+                    .engine
+                    .context("wall-clock monitoring requires an engine")?;
+                let mut timer = PjrtTimer::build(engine, req)
+                    .context("packing candidate operands for wall-clock monitoring")?;
+                Ok(self.finish(req, &mut timer))
+            }
+        }
+    }
+}
+
+/// Persistent plan cache: fingerprint hit skips the inner planner (and
+/// therefore every monitor iteration); miss delegates and persists. A
+/// stored plan whose bucket geometry no longer matches the request (the
+/// artifacts were rebuilt with different buckets) is treated as a miss
+/// and overwritten, never served.
+pub struct CachedPlanner<P> {
+    store: PlanStore,
+    inner: P,
+    write: bool,
+}
+
+impl<P: Planner> CachedPlanner<P> {
+    pub fn new(store: PlanStore, inner: P) -> CachedPlanner<P> {
+        CachedPlanner { store, inner, write: true }
+    }
+
+    /// Consult the store but never write to it (`plan --no-save`).
+    pub fn read_only(store: PlanStore, inner: P) -> CachedPlanner<P> {
+        CachedPlanner { store, inner, write: false }
+    }
+
+    pub fn store(&self) -> &PlanStore {
+        &self.store
+    }
+}
+
+impl<P: Planner> Planner for CachedPlanner<P> {
+    fn name(&self) -> &'static str {
+        "cached"
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> Result<GearPlan> {
+        let fp = req.fingerprint();
+        if let Some(mut plan) = self.store.load(fp) {
+            if plan.matches_bucket(req.bucket) {
+                // Served from cache: zero monitor iterations this run.
+                plan.monitor_iters = 0;
+                plan.monitor_overhead_us = 0.0;
+                plan.provenance.cached = true;
+                return Ok(plan);
+            }
+            // Stale bucket geometry: fall through, replan, overwrite.
+        }
+        let plan = self.inner.plan(req)?;
+        if self.write {
+            self.store
+                .save(&plan)
+                .with_context(|| format!("persisting plan {fp}"))?;
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{small_bucket, small_decomposition};
+    use super::*;
+    use crate::coordinator::ModelKind;
+    use crate::gpusim::{A100, V100};
+
+    #[test]
+    fn simcost_matches_sim_clock_monitor() {
+        // Parity: the analytic planner and the feedback loop driven by the
+        // same deterministic cost surface must converge on one decision.
+        for seed in 1..6u64 {
+            let d = small_decomposition(seed);
+            let bucket = small_bucket();
+            let req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+            for gpu in [&A100, &V100] {
+                let sim = SimCostPlanner::new(gpu).plan(&req).unwrap();
+                let mon = MonitorPlanner::sim(gpu, 3).plan(&req).unwrap();
+                assert_eq!(
+                    sim.chosen, mon.chosen,
+                    "seed {seed} on {}: simcost {} vs monitor {}",
+                    gpu.name, sim.chosen, mon.chosen
+                );
+                assert_eq!(sim.fingerprint, mon.fingerprint);
+                // single-width bucket (features == hidden): the per-width
+                // winner must agree with the overall decision
+                assert_eq!(sim.per_width[&32], sim.chosen);
+                assert_eq!(mon.per_width[&32], mon.chosen);
+            }
+        }
+    }
+
+    #[test]
+    fn monitor_accounts_iterations_simcost_does_not() {
+        let d = small_decomposition(2);
+        let bucket = small_bucket();
+        let req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+        let sim = SimCostPlanner::new(&A100).plan(&req).unwrap();
+        assert_eq!(sim.monitor_iters, 0);
+        let mon = MonitorPlanner::sim(&A100, 2).plan(&req).unwrap();
+        assert_eq!(
+            mon.monitor_iters,
+            2 * (INTRA_CANDIDATES.len() + INTER_CANDIDATES.len())
+        );
+        assert!(mon.monitor_overhead_us >= 0.0);
+    }
+
+    #[test]
+    fn plans_cover_every_candidate_and_width() {
+        let d = small_decomposition(3);
+        let mut bucket = small_bucket();
+        bucket.features = 64; // distinct widths => two per_width entries
+        let req = PlanRequest::new(&d, ModelKind::Gin, &bucket);
+        let plan = MonitorPlanner::sim(&A100, 1).plan(&req).unwrap();
+        assert_eq!(plan.intra_times.len(), INTRA_CANDIDATES.len());
+        assert_eq!(plan.inter_times.len(), INTER_CANDIDATES.len());
+        assert_eq!(plan.per_width.len(), 2);
+        assert!(plan.per_width.contains_key(&64) && plan.per_width.contains_key(&32));
+        assert!(plan.projected.total_us() > 0.0);
+    }
+
+    #[test]
+    fn cached_planner_hits_after_first_plan() {
+        let dir = std::env::temp_dir().join(format!(
+            "adaptgear-cachedplanner-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = small_decomposition(4);
+        let bucket = small_bucket();
+        let req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+
+        let mut first =
+            CachedPlanner::new(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 3));
+        let cold = first.plan(&req).unwrap();
+        assert!(!cold.provenance.cached);
+        assert!(cold.monitor_iters > 0);
+
+        let mut second =
+            CachedPlanner::new(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 3));
+        let warm = second.plan(&req).unwrap();
+        assert!(warm.provenance.cached);
+        assert_eq!(warm.monitor_iters, 0);
+        assert_eq!(warm.monitor_overhead_us, 0.0);
+        assert_eq!(warm.chosen, cold.chosen);
+
+        // a different graph misses and replans
+        let other = small_decomposition(5);
+        let other_req = PlanRequest::new(&other, ModelKind::Gcn, &bucket);
+        let miss = second.plan(&other_req).unwrap();
+        assert!(!miss.provenance.cached);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cached_planner_invalidates_on_bucket_change() {
+        // Same graph, but the artifacts were rebuilt with different bucket
+        // geometry: the fingerprint matches, the bucket does not — the
+        // stored plan must NOT be served.
+        let dir = std::env::temp_dir().join(format!(
+            "adaptgear-bucketchange-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = small_decomposition(6);
+        let bucket = small_bucket();
+        let mut planner =
+            CachedPlanner::new(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 2));
+        planner.plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket)).unwrap();
+
+        let mut rebuilt = small_bucket();
+        rebuilt.name = "b512".to_string();
+        rebuilt.features = 64;
+        let fresh = planner
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &rebuilt))
+            .unwrap();
+        assert!(!fresh.provenance.cached, "stale bucket must be replanned");
+        assert!(fresh.monitor_iters > 0);
+        assert_eq!(fresh.bucket, "b512");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_only_cached_planner_never_writes() {
+        let dir = std::env::temp_dir().join(format!(
+            "adaptgear-readonly-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = small_decomposition(7);
+        let bucket = small_bucket();
+        let req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+        let mut ro =
+            CachedPlanner::read_only(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 1));
+        let plan = ro.plan(&req).unwrap();
+        assert!(!plan.provenance.cached);
+        assert!(ro.store().is_empty(), "read-only planner must not persist");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,151 @@
+//! On-disk plan cache under the artifacts directory.
+//!
+//! One JSON file per plan, named `plan_<fingerprint>.json`. The
+//! fingerprint is both the file name and a field inside the document;
+//! [`PlanStore::load`] treats any mismatch (renamed file, stale copy,
+//! corrupt JSON) as a miss so the cache self-heals by re-planning — a
+//! cache can degrade service but must never serve a wrong decision.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+use super::{Fingerprint, GearPlan};
+
+/// Directory of serialized [`GearPlan`]s keyed by [`Fingerprint`].
+#[derive(Debug, Clone)]
+pub struct PlanStore {
+    dir: PathBuf,
+}
+
+impl PlanStore {
+    pub fn new(dir: impl Into<PathBuf>) -> PlanStore {
+        PlanStore { dir: dir.into() }
+    }
+
+    /// The conventional location: `<artifacts>/plans/`.
+    pub fn in_artifacts(artifacts_dir: impl AsRef<Path>) -> PlanStore {
+        PlanStore::new(artifacts_dir.as_ref().join("plans"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, fp: Fingerprint) -> PathBuf {
+        self.dir.join(format!("plan_{fp}.json"))
+    }
+
+    /// Load the plan for `fp`; `None` on miss. A file that exists but does
+    /// not parse, or whose embedded fingerprint disagrees with its name,
+    /// is invalid — treated as a miss, never an error.
+    pub fn load(&self, fp: Fingerprint) -> Option<GearPlan> {
+        let text = std::fs::read_to_string(self.path_for(fp)).ok()?;
+        let plan = GearPlan::from_json(&json::parse(&text).ok()?).ok()?;
+        (plan.fingerprint == fp).then_some(plan)
+    }
+
+    /// Persist a plan under its fingerprint; returns the file path.
+    pub fn save(&self, plan: &GearPlan) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating plan store {}", self.dir.display()))?;
+        let path = self.path_for(plan.fingerprint);
+        std::fs::write(&path, json::write(&plan.to_json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    pub fn contains(&self, fp: Fingerprint) -> bool {
+        self.load(fp).is_some()
+    }
+
+    /// Number of (syntactically plausible) cached plans on disk.
+    pub fn len(&self) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return 0;
+        };
+        entries
+            .flatten()
+            .filter(|e| {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                name.starts_with("plan_") && name.ends_with(".json")
+            })
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{small_bucket, small_decomposition};
+    use super::super::{PlanRequest, Planner, SimCostPlanner};
+    use super::*;
+    use crate::coordinator::ModelKind;
+    use crate::gpusim::A100;
+
+    fn temp_store(tag: &str) -> PlanStore {
+        let dir = std::env::temp_dir().join(format!(
+            "adaptgear-planstore-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        PlanStore::new(dir)
+    }
+
+    fn make_plan(seed: u64) -> GearPlan {
+        let d = small_decomposition(seed);
+        let bucket = small_bucket();
+        SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap()
+    }
+
+    #[test]
+    fn save_then_load_hits() {
+        let store = temp_store("hit");
+        let plan = make_plan(1);
+        assert!(store.is_empty());
+        assert!(store.load(plan.fingerprint).is_none(), "cold store must miss");
+        store.save(&plan).unwrap();
+        assert_eq!(store.len(), 1);
+        let back = store.load(plan.fingerprint).expect("warm store must hit");
+        assert_eq!(back.chosen, plan.chosen);
+        assert_eq!(back.fingerprint, plan.fingerprint);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn fingerprint_change_misses() {
+        let store = temp_store("miss");
+        let plan = make_plan(2);
+        store.save(&plan).unwrap();
+        let other = make_plan(3); // different topology => different key
+        assert_ne!(other.fingerprint, plan.fingerprint);
+        assert!(store.load(other.fingerprint).is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn stale_or_corrupt_entries_are_invalidated() {
+        let store = temp_store("invalid");
+        let plan = make_plan(4);
+        let other = make_plan(5);
+        store.save(&plan).unwrap();
+
+        // a file renamed onto another key embeds the wrong fingerprint
+        std::fs::copy(store.path_for(plan.fingerprint), store.path_for(other.fingerprint))
+            .unwrap();
+        assert!(store.load(other.fingerprint).is_none(), "mismatch must invalidate");
+
+        // corrupt JSON is a miss, not a crash
+        std::fs::write(store.path_for(plan.fingerprint), "{not json").unwrap();
+        assert!(store.load(plan.fingerprint).is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

@@ -6,8 +6,10 @@
 //! instead of per-request PJRT calls.
 //!
 //! * [`registry`] — named (dataset, model-kind, strategy) deployments,
-//!   each owning its trained parameters, chosen kernel pair, and the
-//!   mutable permuted feature/label state requests perturb.
+//!   each owning its trained parameters, the [`crate::plan::GearPlan`]
+//!   that chose its kernels (served from the persistent plan cache on
+//!   redeploy), and the mutable permuted feature/label state requests
+//!   perturb.
 //! * [`batcher`] — micro-batching: coalesce requests into one forward
 //!   execution per tick (max-batch / max-wait policy).
 //! * [`admission`] — bounded in-flight depth with load shedding.

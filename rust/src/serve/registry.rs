@@ -1,25 +1,27 @@
 //! Model registry: named deployments and the state they own.
 //!
 //! A [`Deployment`] is one servable (dataset, model-kind, strategy)
-//! triple: its decomposed graph, trained parameters, chosen kernel pair,
-//! and — because serving requests *mutate* features — the current
-//! permuted feature/label state. [`ModelRegistry::deploy`] runs the full
-//! train path (preprocess → adaptive select → train) and pre-warms the
-//! forward executable so the first served request does not pay XLA
-//! compile time; [`ModelRegistry::insert`] is the pure bookkeeping half,
-//! unit-testable without artifacts or a PJRT client.
+//! triple: its decomposed graph, trained parameters, the [`GearPlan`]
+//! that chose its kernels, and — because serving requests *mutate*
+//! features — the current permuted feature/label state.
+//! [`ModelRegistry::deploy`] plans through a [`CachedPlanner`] over the
+//! artifacts-dir [`PlanStore`], so a second deployment of the same
+//! (dataset, model) shape is served its kernel decision from disk and
+//! spends **zero** monitor iterations; [`ModelRegistry::deploy_planned`]
+//! accepts any planner; [`ModelRegistry::insert`] is the pure
+//! bookkeeping half, unit-testable without artifacts or a PJRT client.
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{
-    apply_perm, pipeline, preprocess, trainer, Clock, ModelKind, Strategy, TrainConfig,
-};
+use crate::coordinator::{apply_perm, pipeline, trainer, ModelKind, Strategy, TrainConfig};
 use crate::graph::datasets::DatasetSpec;
+use crate::gpusim::A100;
 use crate::kernels::KernelPair;
 use crate::partition::Decomposition;
+use crate::plan::{CachedPlanner, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner};
 use crate::runtime::{Engine, Manifest, Tensor};
 
 /// What to deploy: the identity of a servable model plus its training
@@ -31,7 +33,10 @@ pub struct DeploymentSpec {
     pub model: ModelKind,
     pub strategy: Strategy,
     pub steps: usize,
+    pub lr: f32,
     pub seed: u64,
+    /// Dataset scale override; `None` auto-scales to the AOT buckets.
+    pub scale: Option<f64>,
 }
 
 impl DeploymentSpec {
@@ -47,7 +52,9 @@ impl DeploymentSpec {
             model,
             strategy: Strategy::AdaptGear,
             steps: 60,
+            lr: 0.05,
             seed: 0,
+            scale: None,
         }
     }
 }
@@ -66,7 +73,10 @@ pub struct Deployment {
     pub f_data: usize,
     /// Vertices in the (scaled) served graph.
     pub n: usize,
-    pub chosen: KernelPair,
+    /// The kernel decision this deployment executes — including whether
+    /// it was served from the plan cache (`plan.provenance.cached`, in
+    /// which case `plan.monitor_iters == 0`).
+    pub plan: GearPlan,
     pub params: Vec<Tensor>,
     /// Padded vertex count of the AOT bucket (logits row stride divisor).
     pub bucket_vertices: usize,
@@ -77,6 +87,12 @@ pub struct Deployment {
 }
 
 impl Deployment {
+    /// The kernel pair this deployment executes (mirrors
+    /// `TrainReport::chosen` — single source of truth is the plan).
+    pub fn chosen(&self) -> KernelPair {
+        self.plan.chosen
+    }
+
     /// Argmax class for vertex `v` from a full-graph logits buffer.
     pub fn classify(&self, logits: &[f32], v: usize) -> i32 {
         let width = logits.len() / self.bucket_vertices.max(1);
@@ -100,29 +116,59 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
-    /// Train + register a deployment: auto-scale the dataset to the AOT
-    /// buckets, preprocess with the spec's strategy, train through PJRT,
-    /// and pre-warm the winning forward executable.
+    /// Train + register a deployment through the default planner: a
+    /// [`CachedPlanner`] over `<artifacts>/plans/` wrapping the sim-clock
+    /// monitor. A warm cache skips monitoring entirely — redeploying the
+    /// same (dataset, model) shape costs zero monitor iterations.
     pub fn deploy(&mut self, engine: &Engine, spec: DeploymentSpec) -> Result<&Deployment> {
+        let mut planner = CachedPlanner::new(
+            PlanStore::in_artifacts(&engine.manifest.dir),
+            MonitorPlanner::sim(&A100, 3),
+        );
+        self.deploy_planned(engine, spec, &mut planner)
+    }
+
+    /// Train + register a deployment with an explicit planner: auto-scale
+    /// the dataset to the AOT buckets, preprocess with the spec's
+    /// strategy, plan, train through PJRT, and pre-warm the winning
+    /// forward executable.
+    pub fn deploy_planned(
+        &mut self,
+        engine: &Engine,
+        spec: DeploymentSpec,
+        planner: &mut dyn Planner,
+    ) -> Result<&Deployment> {
         if self.deployments.contains_key(&spec.name) {
             bail!("deployment {:?} already exists", spec.name);
         }
         let cfg = TrainConfig {
             model: spec.model,
             steps: spec.steps,
-            clock: Clock::Sim,
+            lr: spec.lr,
             seed: spec.seed,
-            ..Default::default()
         };
-        let scale = pipeline::auto_scale(spec.dataset, engine);
-        let data = spec.dataset.build_scaled(scale, spec.seed);
-        let (d, _times) = preprocess(
+        let staged = pipeline::stage(
+            &engine.manifest,
+            spec.dataset,
+            spec.model,
             spec.strategy,
-            &data.graph,
-            pipeline::propagation_for(spec.model),
-            engine.manifest.community,
+            spec.scale,
+            spec.seed,
+        )
+        .with_context(|| format!("staging deployment {:?}", spec.name))?;
+        let (data, d) = (staged.data, staged.d);
+        let req = PlanRequest::labeled(
+            &d,
+            spec.model,
+            &staged.bucket,
+            spec.dataset.name,
+            staged.scale,
+            spec.strategy.reorder(),
             spec.seed,
         );
+        let plan = planner
+            .plan(&req)
+            .with_context(|| format!("planning deployment {:?}", spec.name))?;
         let f_data = engine
             .manifest
             .buckets
@@ -131,13 +177,14 @@ impl ModelRegistry {
             .max()
             .context("manifest has no buckets")?;
         let (x, labels) = apply_perm(&d.perm, &data.features(f_data), &data.labels(), f_data);
-        let report = trainer::train(engine, &d, &x, f_data, &labels, &cfg)
+        let report = trainer::train(engine, &d, &x, f_data, &labels, &cfg, &plan)
             .with_context(|| format!("training deployment {:?}", spec.name))?;
         let bucket = &engine.manifest.buckets[&report.bucket];
+        let chosen = report.chosen();
         let fwd_name = Manifest::fwd_name(
             spec.model.as_str(),
-            report.chosen.intra_str(),
-            &report.chosen.inter.to_string(),
+            chosen.intra_str(),
+            &chosen.inter.to_string(),
             &report.bucket,
         );
         let warm_secs = engine
@@ -154,7 +201,7 @@ impl ModelRegistry {
             labels,
             f_data,
             n,
-            chosen: report.chosen,
+            plan: report.plan,
             params: report.params,
             bucket_vertices: bucket.vertices,
             classes: bucket.classes,
@@ -206,8 +253,10 @@ impl ModelRegistry {
 mod tests {
     use super::*;
     use crate::graph::generate::planted_partition;
-    use crate::kernels::KernelKind;
+    use crate::gpusim::A100;
     use crate::partition::{Propagation, Reorder};
+    use crate::plan::{Fingerprint, SimCostPlanner};
+    use crate::runtime::BucketInfo;
     use crate::util::rng::Rng;
 
     /// A structurally valid deployment with no trained parameters — enough
@@ -217,6 +266,18 @@ mod tests {
         let g = planted_partition(64, 4, 0.5, 0.05, &mut rng);
         let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 4, 0);
         let n = d.graph.n;
+        let bucket = BucketInfo {
+            name: "b64".to_string(),
+            vertices: n,
+            edges: 4096,
+            features: 8,
+            hidden: 8,
+            classes: 4,
+            blocks: 16,
+        };
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
         Deployment {
             name: name.to_string(),
             model: ModelKind::Gcn,
@@ -226,7 +287,7 @@ mod tests {
             labels: vec![0; n],
             f_data: 8,
             n,
-            chosen: KernelPair::full_graph(KernelKind::CsrInter),
+            plan,
             params: Vec::new(),
             bucket_vertices: n,
             classes: 4,
@@ -263,5 +324,12 @@ mod tests {
         logits[2 * 4 + 3] = 9.0; // vertex 2 -> class 3
         assert_eq!(dep.classify(&logits, 2), 3);
         assert_eq!(dep.classify(&logits, 0), 0);
+    }
+
+    #[test]
+    fn deployment_records_its_plan() {
+        let dep = dummy("planned");
+        assert_eq!(dep.plan.fingerprint, Fingerprint::of(&dep.d, ModelKind::Gcn));
+        assert!(!dep.plan.provenance.cached);
     }
 }

@@ -286,7 +286,7 @@ impl<'a> ServeSession<'a> {
         let logits = trainer::forward(
             self.engine,
             &dep.d,
-            dep.chosen,
+            dep.chosen(),
             dep.model,
             &dep.params,
             &dep.x,

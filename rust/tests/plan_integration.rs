@@ -1,0 +1,89 @@
+//! Integration: the plan lifecycle end to end — compute a plan, persist
+//! it, and have a later training run load and honor it without spending
+//! monitor iterations (the `adaptgear plan` → `adaptgear train --planner
+//! cached` flow, through the library API).
+//!
+//! Skips (like the other integration suites) when `artifacts/` is not
+//! built.
+
+use adaptgear::coordinator::{ModelKind, Run};
+use adaptgear::gpusim::A100;
+use adaptgear::plan::{CachedPlanner, MonitorPlanner, PlanStore};
+use adaptgear::runtime::Engine;
+
+fn engine_or_skip() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+fn temp_store(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("adaptgear-planint-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn persisted_plan_is_loaded_and_honored_by_train() {
+    let Some(engine) = engine_or_skip() else { return };
+    let spec = adaptgear::graph::datasets::find("cora").unwrap();
+    let dir = temp_store("train");
+
+    // "adaptgear plan": compute + persist (cold store -> monitoring runs)
+    let planned = Run::new(&engine)
+        .dataset(spec)
+        .model(ModelKind::Gcn)
+        .steps(3)
+        .planner(CachedPlanner::new(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 3)))
+        .train()
+        .expect("planning run");
+    assert!(planned.train.plan.monitor_iters > 0);
+    assert!(!planned.train.plan.provenance.cached);
+    assert!(
+        PlanStore::new(&dir).contains(planned.train.plan.fingerprint),
+        "plan must be persisted"
+    );
+
+    // later "adaptgear train --planner cached": loads and honors the plan
+    let honored = Run::new(&engine)
+        .dataset(spec)
+        .model(ModelKind::Gcn)
+        .steps(3)
+        .planner(CachedPlanner::new(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 3)))
+        .train()
+        .expect("cached run");
+    assert_eq!(honored.train.plan.monitor_iters, 0, "cache hit spends no monitor iters");
+    assert!(honored.train.plan.provenance.cached);
+    assert_eq!(honored.train.chosen(), planned.train.chosen(), "decision honored");
+    assert_eq!(honored.train.plan.fingerprint, planned.train.plan.fingerprint);
+    // identical budget + seed + kernels => identical training trajectory
+    assert_eq!(honored.train.losses, planned.train.losses);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_for_a_different_model_misses_the_cache() {
+    let Some(engine) = engine_or_skip() else { return };
+    let spec = adaptgear::graph::datasets::find("cora").unwrap();
+    let dir = temp_store("model-miss");
+
+    let gcn = Run::new(&engine)
+        .dataset(spec)
+        .model(ModelKind::Gcn)
+        .steps(2)
+        .planner(CachedPlanner::new(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 1)))
+        .train()
+        .expect("gcn run");
+    let gin = Run::new(&engine)
+        .dataset(spec)
+        .model(ModelKind::Gin)
+        .steps(2)
+        .planner(CachedPlanner::new(PlanStore::new(&dir), MonitorPlanner::sim(&A100, 1)))
+        .train()
+        .expect("gin run");
+    assert!(!gin.train.plan.provenance.cached, "GIN must not reuse the GCN plan");
+    assert_ne!(gcn.train.plan.fingerprint, gin.train.plan.fingerprint);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -7,6 +7,8 @@ use std::time::Duration;
 
 use adaptgear::coordinator::ModelKind;
 use adaptgear::graph::datasets;
+use adaptgear::gpusim::A100;
+use adaptgear::plan::{CachedPlanner, MonitorPlanner, PlanStore};
 use adaptgear::runtime::Engine;
 use adaptgear::serve::{
     loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeError, ServeSession,
@@ -112,6 +114,37 @@ fn out_of_range_vertex_is_an_error_not_a_clamped_answer() {
     assert!(good.is_ok(), "in-range request after a bad one must still serve");
     assert_eq!(report.served, 1);
     assert_eq!(report.errors, 1);
+}
+
+#[test]
+fn warm_plan_store_skips_monitoring_on_redeploy() {
+    let Some(engine) = engine_or_skip() else { return };
+    let tmp = std::env::temp_dir().join(format!("adaptgear-redeploy-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let spec = datasets::find("cora").unwrap();
+    let mut registry = ModelRegistry::new();
+
+    // first deployment: cold store, the monitor runs and the plan persists
+    let mut cold = CachedPlanner::new(PlanStore::new(&tmp), MonitorPlanner::sim(&A100, 3));
+    let mut dspec = DeploymentSpec::new("first", spec, ModelKind::Gcn);
+    dspec.steps = 10;
+    let (cold_iters, cold_cached, cold_chosen) = {
+        let dep = registry.deploy_planned(&engine, dspec, &mut cold).expect("first deploy");
+        (dep.plan.monitor_iters, dep.plan.provenance.cached, dep.chosen())
+    };
+    assert!(cold_iters > 0, "cold deploy must monitor");
+    assert!(!cold_cached);
+
+    // second deployment of the same (dataset, model, seed) shape: the
+    // warm store serves the decision — zero monitor iterations
+    let mut warm = CachedPlanner::new(PlanStore::new(&tmp), MonitorPlanner::sim(&A100, 3));
+    let mut dspec = DeploymentSpec::new("second", spec, ModelKind::Gcn);
+    dspec.steps = 10;
+    let dep = registry.deploy_planned(&engine, dspec, &mut warm).expect("second deploy");
+    assert_eq!(dep.plan.monitor_iters, 0, "warm store must skip monitoring");
+    assert!(dep.plan.provenance.cached, "plan must be served from cache");
+    assert_eq!(dep.chosen(), cold_chosen, "cached plan must reproduce the decision");
+    let _ = std::fs::remove_dir_all(&tmp);
 }
 
 #[test]

@@ -1,9 +1,11 @@
 //! Integration: the full training pipeline through PJRT — selector,
 //! train-step artifacts, loss descent, forward serving, and determinism.
 
-use adaptgear::coordinator::{pipeline, trainer, Clock, ModelKind, Strategy, TrainConfig};
+use adaptgear::coordinator::{pipeline, trainer, ModelKind, Run, Strategy, TrainConfig};
 use adaptgear::graph::datasets;
+use adaptgear::gpusim::A100;
 use adaptgear::partition::Propagation;
+use adaptgear::plan::{MonitorPlanner, PlanRequest, Planner};
 use adaptgear::runtime::Engine;
 
 fn engine_or_skip() -> Option<Engine> {
@@ -15,7 +17,7 @@ fn engine_or_skip() -> Option<Engine> {
 }
 
 fn quick_cfg(model: ModelKind, steps: usize) -> TrainConfig {
-    TrainConfig { model, steps, monitor_repeats: 1, clock: Clock::Sim, ..Default::default() }
+    TrainConfig { model, steps, ..Default::default() }
 }
 
 #[test]
@@ -49,16 +51,22 @@ fn gin_loss_descends_on_citeseer() {
 }
 
 #[test]
-fn wall_clock_selector_picks_runnable_pair() {
+fn wall_clock_planner_picks_runnable_pair() {
     let Some(engine) = engine_or_skip() else { return };
     let spec = datasets::find("cora").unwrap();
-    let mut cfg = quick_cfg(ModelKind::Gcn, 5);
-    cfg.clock = Clock::Wall;
-    let report = pipeline::run(&engine, spec, &cfg, None).unwrap();
+    let report = Run::new(&engine)
+        .dataset(spec)
+        .model(ModelKind::Gcn)
+        .steps(5)
+        .planner(MonitorPlanner::wall(&engine, 1))
+        .train()
+        .unwrap();
     // all four candidates measured
-    assert_eq!(report.train.selector.intra_times.len(), 2);
-    assert_eq!(report.train.selector.inter_times.len(), 2);
-    assert!(report.train.selector.intra_times.values().all(|t| t.is_finite()));
+    let plan = &report.train.plan;
+    assert_eq!(plan.intra_times.len(), 2);
+    assert_eq!(plan.inter_times.len(), 2);
+    assert!(plan.intra_times.values().all(|t| t.is_finite()));
+    assert!(plan.monitor_iters > 0);
     // training proceeded with the winner
     assert_eq!(report.train.losses.len(), 5);
 }
@@ -70,7 +78,8 @@ fn training_is_deterministic_for_fixed_seed() {
     let r1 = pipeline::run(&engine, spec, &quick_cfg(ModelKind::Gcn, 8), None).unwrap();
     let r2 = pipeline::run(&engine, spec, &quick_cfg(ModelKind::Gcn, 8), None).unwrap();
     assert_eq!(r1.train.losses, r2.train.losses);
-    assert_eq!(r1.train.chosen, r2.train.chosen);
+    assert_eq!(r1.train.chosen(), r2.train.chosen());
+    assert_eq!(r1.train.plan.fingerprint, r2.train.plan.fingerprint);
 }
 
 #[test]
@@ -95,10 +104,15 @@ fn forward_serves_trained_params() {
         &data.labels(),
         f_data,
     );
-    let report = trainer::train(&engine, &d, &x, f_data, &labels, &cfg).unwrap();
+    let needed_edges = d.intra.nnz().max(d.inter.nnz());
+    let bucket = engine.manifest.fit_bucket(n, needed_edges).unwrap().clone();
+    let plan = MonitorPlanner::sim(&A100, 1)
+        .plan(&PlanRequest::new(&d, cfg.model, &bucket))
+        .unwrap();
+    let report = trainer::train(&engine, &d, &x, f_data, &labels, &cfg, &plan).unwrap();
 
     let logits =
-        trainer::forward(&engine, &d, report.chosen, cfg.model, &report.params, &x, f_data)
+        trainer::forward(&engine, &d, report.chosen(), cfg.model, &report.params, &x, f_data)
             .unwrap();
     assert!(logits.iter().all(|v| v.is_finite()));
 
