@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command: build, tests, formatting, lints,
-# and a `plan` subcommand smoke run (cold compute+persist, then a cache
-# hit) against a synthetic bucket-only manifest.
+# a `plan` subcommand smoke run (cold compute+persist, then a cache
+# hit), and a hybrid-split smoke on a mixed-density planted graph —
+# all against synthetic bucket-only manifests.
 #
-#   ./ci.sh          # build + test + fmt + clippy + plan smoke
+#   ./ci.sh          # build + test + fmt + clippy + plan/hybrid smokes
 #   ./ci.sh bench    # additionally run the serve bench (emits BENCH_serve.json)
 #
 # The serve bench and the PJRT integration tests skip themselves when
@@ -11,6 +12,17 @@
 # checkout.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+# Fail fast with a clear message when the toolchain is missing — every
+# check below needs it, and a bare "command not found" mid-run is easy
+# to misread as a test failure.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: error: cargo not found on PATH." >&2
+    echo "ci.sh: tier-1 verification is 'cargo build --release && cargo test -q';" >&2
+    echo "ci.sh: install the Rust toolchain (e.g. rustup) and re-run." >&2
+    exit 1
+fi
+
 # The crate manifest may live at the repo root or under rust/ depending on
 # how the build environment lays the workspace out; run cargo where it is.
 if [[ ! -f Cargo.toml && -f rust/Cargo.toml ]]; then
@@ -27,19 +39,23 @@ run cargo test -q
 run cargo fmt --check
 run cargo clippy -- -D warnings
 
+find_bin() {
+    local candidate
+    for candidate in target/release/adaptgear ../target/release/adaptgear; do
+        if [[ -x "$candidate" ]]; then
+            echo "$candidate"
+            return 0
+        fi
+    done
+    return 1
+}
+
 # --- `adaptgear plan` smoke: needs only a manifest (buckets), no HLO.
 # First invocation computes + persists the plan; the second must be served
 # from the on-disk store with zero monitor iterations.
 plan_smoke() {
-    local bin=""
-    local candidate
-    for candidate in target/release/adaptgear ../target/release/adaptgear; do
-        if [[ -x "$candidate" ]]; then
-            bin="$candidate"
-            break
-        fi
-    done
-    if [[ -z "$bin" ]]; then
+    local bin
+    if ! bin="$(find_bin)"; then
         echo "plan smoke: adaptgear binary not found, skipping"
         return 0
     fi
@@ -62,6 +78,41 @@ EOF
     rm -rf "$tmp"
 }
 plan_smoke
+
+# --- hybrid smoke: on the mixed-density planted graph the planner must
+# split the intra diagonal into >= 2 density classes with distinct
+# kernels, price the split below both uniform plans, and cache-hit on
+# the second invocation.
+hybrid_smoke() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "hybrid smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    local tmp
+    tmp="$(mktemp -d)"
+    cat > "$tmp/manifest.json" <<'EOF'
+{
+  "version": 1, "community": 16,
+  "buckets": {
+    "b512k": {"vertices": 524288, "edges": 8388608, "features": 32,
+               "hidden": 32, "classes": 4, "blocks": 32768}
+  },
+  "artifacts": []
+}
+EOF
+    run "$bin" plan --dataset planted-mixed --artifacts "$tmp" --explain \
+        | tee "$tmp/explain.txt"
+    echo "==> hybrid smoke: the plan must carry two intra classes"
+    grep -q "intra classes: 2" "$tmp/explain.txt"
+    grep -q "dense_intra" "$tmp/explain.txt"
+    grep -q "sparse_intra" "$tmp/explain.txt"
+    echo "==> $bin plan (hybrid replan must hit the plan cache)"
+    "$bin" plan --dataset planted-mixed --artifacts "$tmp" | tee "$tmp/second.txt"
+    grep -q "cache hit" "$tmp/second.txt"
+    rm -rf "$tmp"
+}
+hybrid_smoke
 
 if [[ "${1:-}" == "bench" ]]; then
     run cargo bench --bench serve

@@ -31,6 +31,22 @@ impl MemoryReport {
     }
 }
 
+/// Hybrid-aware twin of [`memory_breakdown`]: topology bytes are derived
+/// from the ACTUAL parts a plan stores — each intra density class keeps
+/// its own row_ptr, so a hybrid plan's Fig. 12 overhead is one extra
+/// `(V+1)` row_ptr per extra class, not a hard-coded two-part constant.
+pub fn memory_breakdown_planned(
+    d: &Decomposition,
+    dims: &ModelDims,
+    assignment: &crate::plan::GearAssignment,
+) -> MemoryReport {
+    let mut report = memory_breakdown(d, dims);
+    let split = d.split_intra(assignment.threshold);
+    report.topo_bytes = split.topology_bytes(&d.inter);
+    report.topo_extra_bytes = split.extra_topology_bytes(d.graph.n);
+    report
+}
+
 /// Estimate the training-memory breakdown for a model over a decomposed
 /// graph (f32 everywhere, SGD optimizer — matching the AOT train step).
 pub fn memory_breakdown(d: &Decomposition, dims: &ModelDims) -> MemoryReport {
@@ -93,6 +109,26 @@ mod tests {
         let wide = memory_breakdown(&d, &ModelDims::new(ModelKind::Gcn, 1433, 32, 8));
         let narrow = memory_breakdown(&d, &ModelDims::new(ModelKind::Gcn, 29, 32, 8));
         assert!(narrow.topo_fraction() > wide.topo_fraction());
+    }
+
+    #[test]
+    fn hybrid_breakdown_charges_one_row_ptr_per_extra_class() {
+        use crate::kernels::{KernelKind, KernelPair};
+        use crate::plan::GearAssignment;
+        let d = decomp(256);
+        let dims = ModelDims::new(ModelKind::Gcn, 64, 32, 8);
+        let uniform = memory_breakdown(&d, &dims);
+        let profile = d.intra_block_profile();
+        let rows: usize = profile.blocks.iter().map(|&(r, _)| r).sum();
+        let a = GearAssignment::uniform(
+            KernelPair::new(KernelKind::CsrIntra, KernelKind::CsrInter),
+            (profile.len(), rows, d.intra.nnz(), 0.0),
+            (d.inter.n_rows, d.inter.nnz(), 0.0),
+        );
+        let planned = memory_breakdown_planned(&d, &dims, &a);
+        // uniform assignment: same two parts, same accounting
+        assert_eq!(planned.topo_extra_bytes, uniform.topo_extra_bytes);
+        assert_eq!(planned.topo_bytes, uniform.topo_bytes);
     }
 
     #[test]

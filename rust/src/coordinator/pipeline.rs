@@ -93,6 +93,10 @@ pub struct Staged {
 /// [`Run::prepare`], `ModelRegistry::deploy_planned`, and the engine-free
 /// `adaptgear plan` subcommand all call this, so they cannot drift apart
 /// (identical scale, reorder, and therefore plan fingerprint).
+///
+/// The fitted bucket also caps hybrid plans: the planner sweep only
+/// admits density splits whose merged sparse-class + inter operand fits
+/// `bucket.edges`, so every plan staged here is executable as-is.
 pub fn stage(
     manifest: &Manifest,
     spec: &DatasetSpec,
@@ -295,6 +299,14 @@ pub struct Prepared {
     pub times: PreprocessTimes,
     pub bucket: BucketInfo,
     pub plan: GearPlan,
+}
+
+impl Prepared {
+    /// Whether the plan routes the intra diagonal through more than one
+    /// density class (hybrid execution).
+    pub fn is_hybrid(&self) -> bool {
+        self.plan.assignment.is_hybrid()
+    }
 }
 
 /// Materialize a dataset (auto-scaled), preprocess it the AdaptGear way,

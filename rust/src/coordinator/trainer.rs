@@ -15,7 +15,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::kernels::pack::{pack_features, pack_kernel_operands, pack_labels_mask};
+use crate::kernels::pack::{
+    pack_assignment, pack_features, pack_kernel_operands, pack_labels_mask,
+};
 use crate::kernels::KernelPair;
 use crate::partition::Decomposition;
 use crate::plan::GearPlan;
@@ -107,12 +109,16 @@ pub fn train(
     }
     let chosen = plan.chosen;
 
-    // ---- pack static operands once — only the chosen kernels
+    // ---- pack static operands once — only the plan's classes. Hybrid
+    // plans lower their N parts onto the two artifact slots: dense class
+    // in the intra slot, sparse class merged into the inter operand.
     let t_pack = Instant::now();
     let mut static_ops: Vec<Tensor> = Vec::new();
-    if let Some(ik) = chosen.intra {
-        static_ops.extend(pack_kernel_operands(ik, &d.intra, d.community, &bucket)?);
-        static_ops.extend(pack_kernel_operands(chosen.inter, &d.inter, d.community, &bucket)?);
+    if chosen.intra.is_some() {
+        let (intra_ops, inter_ops) = pack_assignment(d, &plan.assignment, &bucket)
+            .context("packing the plan's class assignment")?;
+        static_ops.extend(intra_ops);
+        static_ops.extend(inter_ops);
     } else {
         // full-graph variant: the whole propagation matrix through inter
         static_ops.extend(pack_kernel_operands(chosen.inter, &d.whole(), d.community, &bucket)?);
@@ -204,6 +210,56 @@ fn init_param(shape: &[usize], rng: &mut Rng) -> Result<Tensor> {
         vec![0.0f32; count]
     };
     Ok(Tensor::f32(data, shape))
+}
+
+/// Run a forward pass honoring a plan's full class assignment — the
+/// hybrid-aware twin of [`forward`]: uniform plans pack identically,
+/// hybrid plans pack the dense class + merged sparse/inter operands the
+/// trainer executed.
+pub fn forward_planned(
+    engine: &Engine,
+    d: &Decomposition,
+    plan: &GearPlan,
+    model: ModelKind,
+    params: &[Tensor],
+    x: &[f32],
+    f_data: usize,
+) -> Result<Vec<f32>> {
+    let n = d.graph.n;
+    let needed_edges = d.intra.nnz().max(d.inter.nnz());
+    let bucket = engine
+        .manifest
+        .fit_bucket(n, needed_edges)
+        .context("no bucket fits")?
+        .clone();
+    // Same staleness guard as train(): the hybrid edge-cap admissibility
+    // was checked against the plan's bucket, so a rebuilt manifest that
+    // refits a different bucket must replan, not fail deep in packing.
+    if plan.bucket != bucket.name {
+        bail!(
+            "plan targets bucket {} but the graph fits bucket {}; replan",
+            plan.bucket,
+            bucket.name
+        );
+    }
+    let chosen = plan.chosen;
+    let name = Manifest::fwd_name(
+        model.as_str(),
+        chosen.intra_str(),
+        &chosen.inter.to_string(),
+        &bucket.name,
+    );
+    let mut args: Vec<Tensor> = params.to_vec();
+    if chosen.intra.is_some() {
+        let (intra_ops, inter_ops) = pack_assignment(d, &plan.assignment, &bucket)?;
+        args.extend(intra_ops);
+        args.extend(inter_ops);
+    } else {
+        args.extend(pack_kernel_operands(chosen.inter, &d.whole(), d.community, &bucket)?);
+    }
+    args.push(pack_features(x, n, f_data, &bucket)?);
+    let out = engine.run(&name, &args)?;
+    Ok(out[0].to_vec::<f32>()?)
 }
 
 /// Run a forward (inference) pass with trained parameters.

@@ -167,8 +167,21 @@ pub fn csr_inter_cost_full(
 /// is staged once per community ("shared memory"), so per-edge gathers
 /// generate no L2 traffic.
 pub fn csr_intra_cost(a: &Csr, f: usize, community: usize, gpu: &GpuModel) -> KernelCost {
-    let e = a.nnz() as f64;
-    let v = a.n_rows as f64;
+    csr_intra_cost_dims(a.n_rows, a.nnz(), f, community, gpu)
+}
+
+/// [`csr_intra_cost`] from dimensions alone — a density *class* keeps
+/// global row ids (empty rows outside its blocks), so its cost must be
+/// priced on the class's real rows/nnz, not the container matrix's.
+pub fn csr_intra_cost_dims(
+    rows: usize,
+    nnz: usize,
+    f: usize,
+    community: usize,
+    gpu: &GpuModel,
+) -> KernelCost {
+    let e = nnz as f64;
+    let v = rows as f64;
     let flops = 2.0 * e * f as f64;
     let row_bytes = f as f64 * BYTES;
     // one streamed tile load per community + topology + output
@@ -190,7 +203,7 @@ pub fn csr_intra_cost(a: &Csr, f: usize, community: usize, gpu: &GpuModel) -> Ke
         flops,
         bytes: tile_bytes + topo_bytes,
         l2_hits: 0,
-        l2_accesses: accesses.min(v as u64),
+        l2_accesses: accesses.min(rows as u64),
     }
     .finish(gpu)
 }
@@ -240,12 +253,26 @@ pub fn coo_cost_full(a: &Csr, f: usize, gpu: &GpuModel, l2: Option<&mut CacheSim
     .finish(gpu)
 }
 
-/// Dense block-diagonal batched GEMM on the dense engine.
+/// Dense block-diagonal batched GEMM on the dense engine. A ragged tail
+/// block is padded to a full `c x c` tile (the packing pads with zeros),
+/// so the block count rounds UP.
 pub fn dense_block_cost(n: usize, community: usize, f: usize, gpu: &GpuModel) -> KernelCost {
-    let blocks = (n / community.max(1)) as f64;
+    dense_block_cost_dims(n.div_ceil(community.max(1)), n, community, f, gpu)
+}
+
+/// [`dense_block_cost`] from dimensions alone: `blocks` dense tiles
+/// covering `rows` real rows — the form a density class is priced in.
+pub fn dense_block_cost_dims(
+    blocks: usize,
+    rows: usize,
+    community: usize,
+    f: usize,
+    gpu: &GpuModel,
+) -> KernelCost {
+    let b = blocks as f64;
     let c = community as f64;
-    let flops = blocks * c * c * f as f64 * 2.0;
-    let bytes = blocks * c * c * BYTES + n as f64 * f as f64 * BYTES * 2.0; // A blocks + X + Y
+    let flops = b * c * c * f as f64 * 2.0;
+    let bytes = b * c * c * BYTES + rows as f64 * f as f64 * BYTES * 2.0; // A blocks + X + Y
     let memory_us = gpu.stream_us(bytes);
     let compute_us = gpu.dense_us(flops);
     KernelCost {
@@ -257,7 +284,7 @@ pub fn dense_block_cost(n: usize, community: usize, f: usize, gpu: &GpuModel) ->
         flops,
         bytes,
         l2_hits: 0,
-        l2_accesses: (n / community.max(1)).max(1) as u64,
+        l2_accesses: blocks.max(1) as u64,
     }
     .finish(gpu)
 }
@@ -336,6 +363,79 @@ pub fn coo_cost_analytic(nnz: usize, f: usize, hit_rate: f64, gpu: &GpuModel) ->
         l2_accesses: nnz as u64,
     }
     .finish(gpu)
+}
+
+/// Closed-form COO cost for a block-diagonal density class: every gather
+/// stays inside its community tile, so the assumed L2 hit rate is the
+/// tile-reuse bound `1 - rows/nnz` (one compulsory miss per resident
+/// feature row, everything else hits).
+pub fn coo_class_cost(rows: usize, nnz: usize, f: usize, gpu: &GpuModel) -> KernelCost {
+    let e = nnz as f64;
+    let hr = (1.0 - rows as f64 / e.max(1.0)).clamp(0.0, 0.98);
+    let row_bytes = f as f64 * BYTES;
+    let flops = 2.0 * e * f as f64;
+    let miss_bytes = e * (1.0 - hr) * row_bytes;
+    let hit_bytes = e * hr * row_bytes;
+    let topo_bytes = e * 12.0; // (src, dst, val)
+    let write_bytes = e * row_bytes * 0.5;
+    let memory_us = gpu.stream_us(topo_bytes)
+        + gpu.gather_us(miss_bytes)
+        + gpu.stream_us(hit_bytes) / 2.0
+        + gpu.gather_us(write_bytes * (1.0 - hr))
+        + gpu.stream_us(write_bytes * hr) / 2.0;
+    let collisions = (e / rows.max(1) as f64).clamp(0.1, 4.0);
+    let atomic_us = e * gpu.atomic_ns * 1e-3 * collisions * (f as f64 / 32.0).max(1.0);
+    KernelCost {
+        kind: KernelKind::Coo,
+        time_us: 0.0,
+        compute_us: gpu.fp32_us(flops) + atomic_us,
+        memory_us,
+        launch_us: 0.0,
+        flops,
+        bytes: topo_bytes + miss_bytes + hit_bytes + write_bytes,
+        l2_hits: (e * hr) as u64,
+        l2_accesses: nnz as u64,
+    }
+    .finish(gpu)
+}
+
+/// Dimensions of one intra density class, for class-level pricing.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassDims {
+    pub kind: KernelKind,
+    /// Diagonal blocks in the class.
+    pub blocks: usize,
+    /// Real rows covered by those blocks.
+    pub rows: usize,
+    pub nnz: usize,
+}
+
+/// Cost of one launch of `kind` over an intra density class (closed
+/// form, so threshold sweeps can price thousands of candidate splits).
+pub fn class_kernel_cost(
+    class: &ClassDims,
+    f: usize,
+    community: usize,
+    gpu: &GpuModel,
+) -> KernelCost {
+    match class.kind {
+        KernelKind::CsrIntra => csr_intra_cost_dims(class.rows, class.nnz, f, community, gpu),
+        KernelKind::DenseBlock => {
+            dense_block_cost_dims(class.blocks, class.rows, community, f, gpu)
+        }
+        KernelKind::Coo => coo_class_cost(class.rows, class.nnz, f, gpu),
+        other => panic!("{other} is not an intra class candidate"),
+    }
+}
+
+/// The hybrid pricing rule: the intra side of a plan costs the SUM over
+/// its density classes — each class is one kernel launch, so a split
+/// must buy back its extra `launch_us` in format savings to win.
+pub fn hybrid_intra_cost(classes: &[ClassDims], f: usize, community: usize, gpu: &GpuModel) -> f64 {
+    classes
+        .iter()
+        .map(|c| class_kernel_cost(c, f, community, gpu).time_us)
+        .sum()
 }
 
 /// Joint cost of a subgraph kernel pair in one iteration: the intra
@@ -481,6 +581,46 @@ mod tests {
         let a = Csr::from_triplets(64, 64, vec![]);
         let c = kernel_cost(KernelKind::Coo, &a, 32, 16, &A100);
         assert_eq!(c.time_us, A100.launch_us);
+    }
+
+    #[test]
+    fn class_costs_agree_with_whole_matrix_costs() {
+        // a single class covering the whole intra part must price exactly
+        // like the whole-matrix cost functions
+        let mut rng = Rng::new(8);
+        let g = planted_partition(1024, 16, 0.4, 0.01, &mut rng);
+        let (intra, _) = Csr::gcn_normalized(&g).split_block_diagonal(16);
+        let whole = ClassDims {
+            kind: KernelKind::CsrIntra,
+            blocks: 64,
+            rows: intra.n_rows,
+            nnz: intra.nnz(),
+        };
+        let a = class_kernel_cost(&whole, 32, 16, &A100).time_us;
+        let b = csr_intra_cost(&intra, 32, 16, &A100).time_us;
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        let dense = ClassDims { kind: KernelKind::DenseBlock, ..whole };
+        let c = class_kernel_cost(&dense, 32, 16, &A100).time_us;
+        let d = dense_block_cost(intra.n_rows, 16, 32, &A100).time_us;
+        assert!((c - d).abs() < 1e-9, "{c} vs {d}");
+    }
+
+    #[test]
+    fn hybrid_sum_includes_one_launch_per_class() {
+        let a = ClassDims { kind: KernelKind::DenseBlock, blocks: 8, rows: 128, nnz: 2000 };
+        let b = ClassDims { kind: KernelKind::CsrIntra, blocks: 56, rows: 896, nnz: 1500 };
+        let two = hybrid_intra_cost(&[a, b], 32, 16, &A100);
+        let ca = class_kernel_cost(&a, 32, 16, &A100).time_us;
+        let cb = class_kernel_cost(&b, 32, 16, &A100).time_us;
+        assert!((two - (ca + cb)).abs() < 1e-9);
+        assert!(two > 2.0 * A100.launch_us, "each class pays its launch");
+    }
+
+    #[test]
+    fn ragged_dense_block_cost_rounds_blocks_up() {
+        let exact = dense_block_cost(64, 16, 32, &A100);
+        let ragged = dense_block_cost(65, 16, 32, &A100);
+        assert!(ragged.flops > exact.flops, "tail block must be priced");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! community structure is latent — exactly what METIS-style reordering
 //! must re-discover (Fig. 3a).
 
-use super::generate::planted_partition;
+use super::generate::{planted_partition, planted_partition_mixed};
 use super::Graph;
 use crate::util::rng::Rng;
 
@@ -53,6 +53,19 @@ impl DatasetSpec {
         assert!(scale > 0.0 && scale <= 1.0);
         let n = ((self.vertices as f64 * scale) as usize).max(2 * COMMUNITY);
         let n = n.div_ceil(COMMUNITY) * COMMUNITY; // multiple of community
+        if self.name == PLANTED_MIXED.name {
+            // Mixed-density stand-in: fixed per-community probabilities
+            // (every 3rd community near-dense, the rest near-empty) plus
+            // ~0.15 inter edges per vertex — the hybrid-split regime.
+            let total_pairs = (n as f64) * (n as f64 - 1.0) / 2.0;
+            let p_inter = (0.15 * n as f64 / total_pairs.max(1.0)).min(0.95);
+            let mut rng = Rng::new(seed ^ fxhash(self.name));
+            let planted = planted_partition_mixed(n, COMMUNITY, 0.95, 0.01, 3, p_inter, &mut rng);
+            let mut perm: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut perm);
+            let graph = planted.relabel(&perm);
+            return Dataset { spec: *self, graph, seed };
+        }
         let e_und = (self.edges as f64 * scale / 2.0).max(1.0);
 
         // translate (edge budget, affinity) into planted probabilities
@@ -170,11 +183,28 @@ pub const DATASETS: &[DatasetSpec] = &[
     DatasetSpec { name: "OVCAR-8H", code: "OV", vertices: 1889542, edges: 3946402, features: 66, classes: 2, affinity: 0.94 },
 ];
 
-/// Look up a dataset by name or figure code (case-insensitive).
+/// Synthetic mixed-density benchmark graph (NOT part of Table 1): every
+/// 3rd community is near-dense (p=0.95), the rest near-empty (p=0.01),
+/// so no single intra kernel is right for the whole block diagonal — the
+/// hybrid-split CI smoke and the planner sweep tests use it. `edges` is
+/// the expected directed count at full scale (for auto-scaling).
+pub const PLANTED_MIXED: DatasetSpec = DatasetSpec {
+    name: "planted-mixed",
+    code: "PM",
+    vertices: 524288,
+    edges: 2_700_000,
+    features: 32,
+    classes: 4,
+    affinity: 0.94,
+};
+
+/// Look up a dataset by name or figure code (case-insensitive); includes
+/// the synthetic [`PLANTED_MIXED`] stand-in alongside the Table 1 registry.
 pub fn find(name: &str) -> Option<&'static DatasetSpec> {
     let lower = name.to_ascii_lowercase();
     DATASETS
         .iter()
+        .chain(std::iter::once(&PLANTED_MIXED))
         .find(|d| d.name.to_ascii_lowercase() == lower || d.code.to_ascii_lowercase() == lower)
 }
 
@@ -255,6 +285,31 @@ mod tests {
             }
         }
         assert!(aligned / na as f64 > other / no as f64 + 0.5);
+    }
+
+    #[test]
+    fn planted_mixed_has_bimodal_latent_blocks() {
+        let d = find("planted-mixed").unwrap().build_scaled(0.01, 3);
+        let n = d.graph.n;
+        assert!(n >= 2 * COMMUNITY && n % COMMUNITY == 0);
+        // the structure is hidden behind a shuffle, so the *visible* intra
+        // fraction must be small ...
+        let intra = d
+            .graph
+            .edges()
+            .iter()
+            .filter(|&&(u, v)| u as usize / COMMUNITY == v as usize / COMMUNITY)
+            .count();
+        assert!(
+            (intra as f64) < 0.2 * d.graph.edge_count().max(1) as f64,
+            "planted structure leaked"
+        );
+        // ... while the overall edge budget reflects the dense third:
+        // ~1/3 of blocks at p=0.95 over C(16,2)=120 pairs
+        let blocks = n / COMMUNITY;
+        let expect_und = (blocks as f64 / 3.0).ceil() * 120.0 * 0.95;
+        let got = d.graph.edge_count() as f64;
+        assert!(got > expect_und * 0.7, "edges {got} vs expected >= {expect_und}");
     }
 
     #[test]

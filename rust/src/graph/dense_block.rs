@@ -4,25 +4,35 @@
 
 use super::csr::Csr;
 
-/// `[n_blocks, c, c]` row-major dense blocks along the diagonal.
+/// `[n_blocks, c, c]` row-major dense blocks along the diagonal. A ragged
+/// tail (row count not a multiple of `community`) is zero-padded into a
+/// full final block — exact for aggregate-sum, same as bucket padding.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DenseBlocks {
     pub n_blocks: usize,
     pub community: usize,
+    /// Actual (unpadded) rows covered; `<= n_blocks * community`.
+    pub rows: usize,
     pub data: Vec<f32>,
 }
 
 impl DenseBlocks {
     pub fn zeros(n_blocks: usize, community: usize) -> DenseBlocks {
-        DenseBlocks { n_blocks, community, data: vec![0.0; n_blocks * community * community] }
+        DenseBlocks {
+            n_blocks,
+            community,
+            rows: n_blocks * community,
+            data: vec![0.0; n_blocks * community * community],
+        }
     }
 
     /// Densify a block-diagonal CSR (panics if any entry escapes its
-    /// diagonal block — callers split first).
+    /// diagonal block — callers split first). A ragged tail block is
+    /// padded with zeros rather than rejected.
     pub fn from_block_diagonal_csr(a: &Csr, community: usize) -> DenseBlocks {
-        assert_eq!(a.n_rows % community, 0, "rows not a multiple of community");
-        let n_blocks = a.n_rows / community;
+        let n_blocks = a.n_rows.div_ceil(community.max(1));
         let mut out = DenseBlocks::zeros(n_blocks, community);
+        out.rows = a.n_rows;
         for (r, c, w) in a.to_triplets() {
             let (r, c) = (r as usize, c as usize);
             let b = r / community;
@@ -50,17 +60,18 @@ impl DenseBlocks {
         self.data.iter().filter(|&&v| v != 0.0).count()
     }
 
-    /// `y = A @ x`, x row-major `[n, f]` — serial reference.
+    /// `y = A @ x`, x row-major `[rows, f]` — serial reference. The ragged
+    /// tail block only touches its real rows/columns.
     pub fn spmm(&self, x: &[f32], f: usize) -> Vec<f32> {
-        let n = self.n_blocks * self.community;
-        assert_eq!(x.len(), n * f);
+        assert_eq!(x.len(), self.rows * f);
         let c = self.community;
-        let mut y = vec![0.0f32; n * f];
+        let mut y = vec![0.0f32; self.rows * f];
         for b in 0..self.n_blocks {
             let blk = self.block(b);
-            for lr in 0..c {
+            let width = c.min(self.rows - b * c);
+            for lr in 0..width {
                 let out = &mut y[(b * c + lr) * f..(b * c + lr + 1) * f];
-                for lc in 0..c {
+                for lc in 0..width {
                     let w = blk[lr * c + lc];
                     if w != 0.0 {
                         let src = &x[(b * c + lc) * f..(b * c + lc + 1) * f];
@@ -118,5 +129,40 @@ mod tests {
         let b = DenseBlocks::from_block_diagonal_csr(&a, 16);
         assert_eq!(b.stored_elements(), 2 * 16 * 16);
         assert_eq!(b.nnz(), 2);
+    }
+
+    #[test]
+    fn ragged_tail_is_padded_not_rejected() {
+        // 40 rows / community 16: the tail block covers rows 32..40
+        let a = Csr::from_triplets(40, 40, vec![(0, 1, 1.0), (33, 39, 2.0), (39, 33, 2.0)]);
+        let b = DenseBlocks::from_block_diagonal_csr(&a, 16);
+        assert_eq!(b.n_blocks, 3);
+        assert_eq!(b.rows, 40);
+        assert_eq!(b.stored_elements(), 3 * 16 * 16);
+        assert_eq!(b.nnz(), 3);
+    }
+
+    #[test]
+    fn ragged_spmm_matches_csr_spmm() {
+        prop::check("ragged dense block spmm == csr spmm", 15, |rng: &mut Rng| {
+            // deliberately NOT a multiple of 16
+            let n = rng.usize_below(60) + 5;
+            let m = rng.usize_below(3 * n);
+            let g = Graph::from_edges(
+                n,
+                (0..m).map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32)),
+            );
+            let a = Csr::gcn_normalized(&g);
+            let (intra, _) = a.split_block_diagonal(16);
+            let blocks = DenseBlocks::from_block_diagonal_csr(&intra, 16);
+            let f = 3;
+            let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+            let y1 = intra.spmm(&x, f);
+            let y2 = blocks.spmm(&x, f);
+            for (a, b) in y1.iter().zip(&y2) {
+                prop::require_close(*a as f64, *b as f64, 1e-4, "ragged spmm elem")?;
+            }
+            Ok(())
+        });
     }
 }

@@ -84,6 +84,45 @@ pub fn planted_partition(
     Graph::from_edges(n, pairs)
 }
 
+/// Planted partition with *mixed* per-community densities: every
+/// `dense_period`-th community is sampled at `p_dense`, the rest at
+/// `p_sparse` (inter-community pairs at `p_inter` as usual). This is the
+/// regime the hybrid intra split targets — one graph whose diagonal
+/// blocks need different kernels.
+pub fn planted_partition_mixed(
+    n: usize,
+    community: usize,
+    p_dense: f64,
+    p_sparse: f64,
+    dense_period: usize,
+    p_inter: f64,
+    rng: &mut Rng,
+) -> Graph {
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let period = dense_period.max(1);
+
+    for b in 0..n.div_ceil(community) {
+        let base = b * community;
+        let width = community.min(n - base);
+        let local_pairs = width * (width - 1) / 2;
+        let p = if b % period == 0 { p_dense } else { p_sparse };
+        sample_pairs(local_pairs, p, rng, |k| {
+            let (i, j) = unrank_pair(k);
+            pairs.push(((base + i) as u32, (base + j) as u32));
+        });
+    }
+
+    let total_pairs = n * (n - 1) / 2;
+    sample_pairs(total_pairs, p_inter, rng, |k| {
+        let (i, j) = unrank_pair(k);
+        if i / community != j / community {
+            pairs.push((i as u32, j as u32));
+        }
+    });
+
+    Graph::from_edges(n, pairs)
+}
+
 /// Erdős–Rényi G(n, p) via geometric skipping.
 pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
     let mut pairs = Vec::new();
@@ -193,6 +232,26 @@ mod tests {
                 &format!("edges {got} vs expected {expect}"),
             )
         });
+    }
+
+    #[test]
+    fn mixed_partition_blocks_are_bimodal() {
+        let mut rng = Rng::new(7);
+        let g = planted_partition_mixed(1024, 16, 0.9, 0.02, 4, 0.0005, &mut rng);
+        // count intra edges per block
+        let mut per_block = vec![0usize; 64];
+        for &(u, v) in g.edges() {
+            if u / 16 == v / 16 {
+                per_block[(u / 16) as usize] += 1;
+            }
+        }
+        for (b, &cnt) in per_block.iter().enumerate() {
+            if b % 4 == 0 {
+                assert!(cnt > 80, "dense block {b} too sparse: {cnt}");
+            } else {
+                assert!(cnt < 20, "sparse block {b} too dense: {cnt}");
+            }
+        }
     }
 
     #[test]

@@ -34,14 +34,15 @@ pub fn csr_inter_spmm(a: &Csr, x: &[f32], f: usize) -> Vec<f32> {
 /// of the community's rows from the tile. `a` must be block-diagonal.
 pub fn csr_intra_spmm(a: &Csr, x: &[f32], f: usize, community: usize) -> Vec<f32> {
     assert_eq!(x.len(), a.n_cols * f);
-    assert_eq!(a.n_rows % community, 0);
     let mut y = vec![0.0f32; a.n_rows * f];
     let mut tile = vec![0.0f32; community * f];
-    for b in 0..a.n_rows / community {
+    for b in 0..a.n_rows.div_ceil(community) {
         let base = b * community;
-        // stage the community tile (the shared-memory preload)
-        tile.copy_from_slice(&x[base * f..(base + community) * f]);
-        for lr in 0..community {
+        // stage the community tile (the shared-memory preload); the tail
+        // block may be ragged and stages only its real rows
+        let width = community.min(a.n_rows - base);
+        tile[..width * f].copy_from_slice(&x[base * f..(base + width) * f]);
+        for lr in 0..width {
             let r = base + lr;
             let (cols, vals) = a.row(r);
             let out = &mut y[r * f..(r + 1) * f];
@@ -151,6 +152,27 @@ mod tests {
         let a = Csr::from_triplets(32, 32, vec![(0, 20, 1.0)]);
         let x = vec![0.0f32; 32 * 2];
         csr_intra_spmm(&a, &x, 2, 16);
+    }
+
+    #[test]
+    fn intra_schedule_handles_ragged_tail() {
+        prop::check("ragged csr_intra == Csr::spmm", 15, |rng| {
+            let n = rng.usize_below(70) + 3; // usually NOT a multiple of 16
+            let m = rng.usize_below(3 * n);
+            let g = Graph::from_edges(
+                n,
+                (0..m).map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32)),
+            );
+            let a = Csr::gcn_normalized(&g);
+            let (intra, _) = a.split_block_diagonal(16);
+            let f = 2;
+            let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+            let got = csr_intra_spmm(&intra, &x, f, 16);
+            for (a, b) in got.iter().zip(&intra.spmm(&x, f)) {
+                prop::require_close(*a as f64, *b as f64, 1e-4, "ragged intra elem")?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

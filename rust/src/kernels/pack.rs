@@ -6,10 +6,11 @@
 //! (row_ptr is exact), padded COO edges carry weight 0, padded vertices
 //! are masked out of the loss.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::graph::Csr;
-use crate::partition::Decomposition;
+use crate::partition::{Decomposition, DensityClass};
+use crate::plan::{GearAssignment, SubgraphClass};
 use crate::runtime::{BucketInfo, Tensor};
 
 use super::spec::KernelKind;
@@ -173,6 +174,99 @@ pub fn pack_labels_mask(labels: &[i32], bucket: &BucketInfo) -> Result<(Tensor, 
     Ok((Tensor::i32(lab, &[v]), Tensor::f32(mask, &[v])))
 }
 
+/// Pack only the listed diagonal `blocks` of a block-diagonal matrix for
+/// `kind`, zeroing every other block — the class-subset packing hybrid
+/// execution rests on (zero padding is exact for aggregate-sum, so the
+/// classes' outputs sum back to the whole intra aggregate).
+///
+/// The block-membership rule (`row / community`) is the same one
+/// `Decomposition::split_intra` classifies by; [`pack_assignment`] goes
+/// through the split's pre-materialized class matrices instead so it can
+/// cross-check them against the plan, while this standalone primitive
+/// serves ad-hoc class packing (candidate timing, tests).
+pub fn pack_block_class(
+    kind: KernelKind,
+    matrix: &Csr,
+    blocks: &[u32],
+    community: usize,
+    bucket: &BucketInfo,
+) -> Result<Vec<Tensor>> {
+    let c = community.max(1);
+    let n_blocks = matrix.n_rows.div_ceil(c);
+    let mut member = vec![false; n_blocks];
+    for &b in blocks {
+        if (b as usize) < n_blocks {
+            member[b as usize] = true;
+        }
+    }
+    let filtered = Csr::from_triplets(
+        matrix.n_rows,
+        matrix.n_cols,
+        matrix
+            .to_triplets()
+            .into_iter()
+            .filter(|&(r, _, _)| member[r as usize / c]),
+    );
+    pack_kernel_operands(kind, &filtered, community, bucket)
+}
+
+/// Lower a plan's class assignment onto the two AOT operand slots.
+///
+/// Uniform assignments pack exactly like [`pack_pair`]. Hybrid
+/// assignments re-split the intra part at the recorded threshold, pack
+/// the dense class into the intra slot, and MERGE the sparse class into
+/// the inter operand — the inter kernels are global sparse formats that
+/// take arbitrary coordinates, so the merge is exact and a 2-slot
+/// artifact executes the N-part plan.
+pub fn pack_assignment(
+    d: &Decomposition,
+    assignment: &GearAssignment,
+    bucket: &BucketInfo,
+) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let inter_kernel = assignment.inter_class()?.kernel;
+    if !assignment.is_hybrid() {
+        let pair = assignment.executed_pair()?;
+        return pack_pair(d, pair.intra, inter_kernel, bucket);
+    }
+    let split = d.split_intra(assignment.threshold);
+    let dense = split
+        .class(DensityClass::Dense)
+        .context("hybrid plan but the threshold split produced no dense class — replan")?;
+    let sparse = split
+        .class(DensityClass::Sparse)
+        .context("hybrid plan but the threshold split produced no sparse class — replan")?;
+    for (class, got) in [
+        (SubgraphClass::DenseIntra, dense),
+        (SubgraphClass::SparseIntra, sparse),
+    ] {
+        let want = assignment
+            .classes
+            .iter()
+            .find(|c| c.class == class)
+            .with_context(|| format!("assignment missing {} class", class.as_str()))?;
+        if want.blocks != got.blocks.len() || want.nnz != got.matrix.nnz() {
+            bail!(
+                "plan's {} class ({} blocks, {} nnz) does not match the decomposition's split ({} blocks, {} nnz) — replan",
+                class.as_str(),
+                want.blocks,
+                want.nnz,
+                got.blocks.len(),
+                got.matrix.nnz()
+            );
+        }
+    }
+    let dense_kernel = assignment
+        .kernel_for(SubgraphClass::DenseIntra)
+        .expect("hybrid assignment has a dense class");
+    let intra_ops = pack_kernel_operands(dense_kernel, &dense.matrix, d.community, bucket)?;
+    let mut merged = sparse.matrix.to_triplets();
+    merged.extend(d.inter.to_triplets());
+    let merged = Csr::from_triplets(d.inter.n_rows, d.inter.n_cols, merged);
+    let inter_ops = pack_kernel_operands(inter_kernel, &merged, d.community, bucket)
+        .context("packing the merged sparse-class + inter operand")?;
+    Ok((intra_ops, inter_ops))
+}
+
 /// Pack both subgraphs of a decomposition for a kernel pair; full-graph
 /// pairs (intra=None) pack the recombined whole matrix as "inter".
 pub fn pack_pair(
@@ -274,6 +368,107 @@ mod tests {
         assert_eq!(&l[..3], &[0, 1, 3]); // 5 % 4 = 1, -1 -> 3
         let m = mask.as_f32().unwrap();
         assert_eq!(&m[..4], &[1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn block_class_subset_zeroes_other_blocks() {
+        let d = decomp();
+        let b = bucket();
+        // pack only block 0 of the intra part as dense tiles
+        let ops = pack_block_class(KernelKind::DenseBlock, &d.intra, &[0], 16, &b).unwrap();
+        let data = ops[0].as_f32().unwrap();
+        let tile = 16 * 16;
+        assert!(data[..tile].iter().any(|&v| v != 0.0), "member block packed");
+        assert!(data[tile..].iter().all(|&v| v == 0.0), "non-members zeroed");
+    }
+
+    #[test]
+    fn hybrid_assignment_packs_dense_slot_plus_merged_inter() {
+        use crate::plan::{ClassAssignment, GearAssignment, SubgraphClass};
+        let d = decomp();
+        let b = bucket();
+        let profile = d.intra_block_profile();
+        // pick a threshold that genuinely splits the blocks
+        let mut dens: Vec<f64> = (0..profile.len()).map(|i| profile.density(i)).collect();
+        dens.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let threshold = (dens[0] + dens[dens.len() - 1]) / 2.0;
+        let split = d.split_intra(threshold);
+        if split.classes.len() < 2 {
+            return; // degenerate sample: nothing to pack hybrid
+        }
+        let class_stat = |label| {
+            let c = split.class(label).unwrap();
+            (c.blocks.len(), c.rows, c.matrix.nnz())
+        };
+        let (db, dr, dn) = class_stat(crate::partition::DensityClass::Dense);
+        let (sb, sr, sn) = class_stat(crate::partition::DensityClass::Sparse);
+        let assignment = GearAssignment {
+            threshold,
+            classes: vec![
+                ClassAssignment {
+                    class: SubgraphClass::DenseIntra,
+                    kernel: KernelKind::DenseBlock,
+                    blocks: db,
+                    rows: dr,
+                    nnz: dn,
+                    time_us: 1.0,
+                },
+                ClassAssignment {
+                    class: SubgraphClass::SparseIntra,
+                    kernel: KernelKind::CsrIntra,
+                    blocks: sb,
+                    rows: sr,
+                    nnz: sn,
+                    time_us: 1.0,
+                },
+                ClassAssignment {
+                    class: SubgraphClass::Inter,
+                    kernel: KernelKind::CsrInter,
+                    blocks: 0,
+                    rows: d.inter.n_rows,
+                    nnz: d.inter.nnz(),
+                    time_us: 1.0,
+                },
+            ],
+        };
+        let (iops, jops) = pack_assignment(&d, &assignment, &b).unwrap();
+        // intra slot: dense tiles holding ONLY the dense class's entries
+        assert_eq!(iops[0].shape(), &[4, 16, 16]);
+        let dense_sum: f32 = iops[0].as_f32().unwrap().iter().sum();
+        let expect_dense: f32 = split
+            .class(crate::partition::DensityClass::Dense)
+            .unwrap()
+            .matrix
+            .vals
+            .iter()
+            .sum();
+        assert!((dense_sum - expect_dense).abs() < 1e-4);
+        // inter slot: row_ptr tail counts sparse-class + inter entries
+        let rp = jops[0].as_i32().unwrap();
+        assert_eq!(rp[64] as usize, sn + d.inter.nnz());
+    }
+
+    #[test]
+    fn uniform_assignment_packs_like_pack_pair() {
+        use crate::plan::GearAssignment;
+        use crate::kernels::KernelPair;
+        let d = decomp();
+        let b = bucket();
+        let pair = KernelPair::new(KernelKind::CsrIntra, KernelKind::Coo);
+        let profile = d.intra_block_profile();
+        let rows: usize = profile.blocks.iter().map(|&(r, _)| r).sum();
+        let assignment = GearAssignment::uniform(
+            pair,
+            (profile.len(), rows, d.intra.nnz(), 1.0),
+            (d.inter.n_rows, d.inter.nnz(), 1.0),
+        );
+        let (a_i, a_j) = pack_assignment(&d, &assignment, &b).unwrap();
+        let (p_i, p_j) = pack_pair(&d, pair.intra, pair.inter, &b).unwrap();
+        assert_eq!(a_i.len(), p_i.len());
+        assert_eq!(a_j.len(), p_j.len());
+        for (x, y) in a_i.iter().zip(&p_i).chain(a_j.iter().zip(&p_j)) {
+            assert_eq!(x.shape(), y.shape());
+        }
     }
 
     #[test]

@@ -96,6 +96,11 @@ fn cmd_datasets(_args: &Args) -> Result<()> {
             d.name, d.vertices, d.edges, d.features, d.classes, d.density()
         );
     }
+    let pm = &datasets::PLANTED_MIXED;
+    println!(
+        "{:<28} {:>9} {:>9} {:>6} {:>7} {:>10.2e}  (synthetic, mixed-density)",
+        pm.name, pm.vertices, pm.edges, pm.features, pm.classes, pm.density()
+    );
     Ok(())
 }
 
@@ -225,13 +230,20 @@ fn cmd_plan(args: &Args) -> Result<()> {
         println!("wrote {out}");
     }
     if args.flag("explain") {
-        explain_plan(&plan, d, [bucket.features, bucket.hidden], gpu);
+        explain_plan(&plan, d, bucket, gpu);
     }
     Ok(())
 }
 
-/// `--explain`: the per-candidate cost surface behind the decision.
-fn explain_plan(plan: &GearPlan, d: &Decomposition, widths: [usize; 2], gpu: &GpuModel) {
+/// `--explain`: the per-candidate cost surface behind the decision, the
+/// intra density histogram, and the per-class hybrid assignment.
+fn explain_plan(
+    plan: &GearPlan,
+    d: &Decomposition,
+    bucket: &adaptgear::runtime::BucketInfo,
+    gpu: &'static GpuModel,
+) {
+    let widths = [bucket.features, bucket.hidden];
     println!("\nper-candidate gpusim costs (us; * = chosen):");
     for &w in &widths {
         println!("  width {w}:");
@@ -273,6 +285,53 @@ fn explain_plan(plan: &GearPlan, d: &Decomposition, widths: [usize; 2], gpu: &Gp
         plan.projected.overhead_us,
         plan.projected.total_us(),
         plan.projected.kernel_launches
+    );
+
+    // ---- per-block density histogram over the intra block diagonal
+    let profile = d.intra_block_profile();
+    println!(
+        "\nintra block density histogram ({} blocks of community {}):",
+        profile.len(),
+        d.community
+    );
+    let hist = profile.histogram(10);
+    let peak = hist.iter().copied().max().unwrap_or(1).max(1);
+    for (i, &count) in hist.iter().enumerate() {
+        let lo = i as f64 / 10.0;
+        let hi = (i + 1) as f64 / 10.0;
+        let bar = "#".repeat((count * 40).div_ceil(peak).min(40));
+        println!("  [{lo:.1},{hi:.1}) {count:>7} {bar}");
+    }
+
+    // ---- the per-class decision and what the alternatives would cost
+    println!("\nassignment (density threshold {:.3}):", plan.assignment.threshold);
+    for c in &plan.assignment.classes {
+        println!(
+            "  {:<12} -> {:<12} {:>7} blocks {:>9} nnz {:>10.2}us",
+            c.class.as_str(),
+            c.kernel.as_str(),
+            c.blocks,
+            c.nnz,
+            c.time_us
+        );
+    }
+    let kernels = plan
+        .assignment
+        .intra_kernels()
+        .iter()
+        .map(|k| k.as_str())
+        .collect::<Vec<_>>()
+        .join("+");
+    println!(
+        "intra classes: {} ({kernels})",
+        plan.assignment.intra_classes().count()
+    );
+    let sweep = adaptgear::plan::hybrid::sweep(&profile, &d.inter, &widths, bucket.edges, gpu);
+    println!(
+        "intra+inter simulated: chosen {:.2}us | all-dense_block {:.2}us | all-csr_intra {:.2}us",
+        plan.assignment.total_cost_us(),
+        sweep.all_dense_us,
+        sweep.all_sparse_us
     );
 }
 
@@ -423,10 +482,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .seed(args.get_u64("train-seed", 0))
         .deploy_as(&mut registry, deployment.clone())?;
     println!(
-        "deployed {:?}: {} vertices, kernels {} ({} monitor iters{}), final loss {:.3}, forward warmed in {:.2}s",
+        "deployed {:?}: {} vertices, kernels {} ({} intra classes, {} monitor iters{}), final loss {:.3}, forward warmed in {:.2}s",
         dep.name,
         dep.n,
         dep.chosen(),
+        dep.assignment().intra_classes().count(),
         dep.plan.monitor_iters,
         if dep.plan.provenance.cached { ", plan cache hit" } else { "" },
         dep.final_loss,

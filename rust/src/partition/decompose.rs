@@ -81,6 +81,141 @@ pub struct Decomposition {
     pub community: usize,
 }
 
+/// Density class of one diagonal block (AdaptGear's hybrid intra split):
+/// dense blocks route to the batched-GEMM kernel, sparse blocks to a
+/// sparse schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DensityClass {
+    Dense,
+    Sparse,
+}
+
+impl DensityClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DensityClass::Dense => "dense",
+            DensityClass::Sparse => "sparse",
+        }
+    }
+}
+
+/// Per-block density statistics over the block-diagonal intra part — the
+/// histogram the hybrid planner sweeps thresholds over.
+#[derive(Debug, Clone)]
+pub struct BlockProfile {
+    pub community: usize,
+    /// `(rows, nnz)` per diagonal block in block order; the tail block may
+    /// be ragged (`rows < community`).
+    pub blocks: Vec<(usize, usize)>,
+}
+
+impl BlockProfile {
+    /// Profile a block-diagonal matrix (entries outside the diagonal
+    /// blocks are a caller bug and are counted where their row lands).
+    pub fn of(intra: &Csr, community: usize) -> BlockProfile {
+        let c = community.max(1);
+        let n_blocks = intra.n_rows.div_ceil(c);
+        let mut blocks = vec![(0usize, 0usize); n_blocks];
+        for (b, stat) in blocks.iter_mut().enumerate() {
+            stat.0 = c.min(intra.n_rows - b * c);
+        }
+        for r in 0..intra.n_rows {
+            blocks[r / c].1 += (intra.row_ptr[r + 1] - intra.row_ptr[r]) as usize;
+        }
+        BlockProfile { community, blocks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Density of block `b`: nnz over the block's true capacity
+    /// (`rows^2`, so a ragged tail is not biased sparse).
+    pub fn density(&self, b: usize) -> f64 {
+        let (rows, nnz) = self.blocks[b];
+        nnz as f64 / ((rows * rows).max(1)) as f64
+    }
+
+    /// `bins` equal-width density bins over [0, 1]; densities at exactly
+    /// 1.0 land in the last bin.
+    pub fn histogram(&self, bins: usize) -> Vec<usize> {
+        let bins = bins.max(1);
+        let mut out = vec![0usize; bins];
+        for b in 0..self.len() {
+            let idx = ((self.density(b) * bins as f64) as usize).min(bins - 1);
+            out[idx] += 1;
+        }
+        out
+    }
+
+    /// Classify each block: density `>= threshold` is dense-class.
+    pub fn classify(&self, threshold: f64) -> Vec<DensityClass> {
+        (0..self.len())
+            .map(|b| {
+                if self.density(b) >= threshold {
+                    DensityClass::Dense
+                } else {
+                    DensityClass::Sparse
+                }
+            })
+            .collect()
+    }
+}
+
+/// One intra density class: its member blocks and a full-size CSR holding
+/// only those blocks' entries (rows outside the class are empty, so class
+/// matrices pack and execute with global row ids and sum exactly).
+#[derive(Debug, Clone)]
+pub struct IntraClass {
+    pub label: DensityClass,
+    /// Member diagonal-block indices, ascending.
+    pub blocks: Vec<u32>,
+    /// Real rows covered by the member blocks.
+    pub rows: usize,
+    pub matrix: Csr,
+}
+
+/// A density-refined view of the intra part: 1 class (uniform) or 2
+/// classes (hybrid), in dense-first order. Together with `inter` these
+/// are the N parts a hybrid plan executes.
+#[derive(Debug, Clone)]
+pub struct IntraSplit {
+    pub threshold: f64,
+    pub classes: Vec<IntraClass>,
+}
+
+impl IntraSplit {
+    pub fn class(&self, label: DensityClass) -> Option<&IntraClass> {
+        self.classes.iter().find(|c| c.label == label)
+    }
+
+    /// Total stored topology bytes when this split is materialized next
+    /// to `inter` (each part keeps its own row_ptr + col_idx + vals).
+    pub fn topology_bytes(&self, inter: &Csr) -> usize {
+        self.classes
+            .iter()
+            .map(|c| csr_bytes(&c.matrix))
+            .sum::<usize>()
+            + csr_bytes(inter)
+    }
+
+    /// Extra topology bytes versus one full-graph CSR — derived from the
+    /// ACTUAL number of stored parts (classes + inter), one extra
+    /// `(V+1)` row_ptr per extra part (Fig. 12's numerator).
+    pub fn extra_topology_bytes(&self, n: usize) -> usize {
+        (self.classes.len() + 1).saturating_sub(1) * (n + 1) * std::mem::size_of::<u32>()
+    }
+}
+
+fn csr_bytes(c: &Csr) -> usize {
+    (c.row_ptr.len() + c.col_idx.len()) * std::mem::size_of::<u32>()
+        + c.vals.len() * std::mem::size_of::<f32>()
+}
+
 impl Decomposition {
     /// Full preprocessing pipeline: reorder + build propagation + split.
     pub fn build(
@@ -108,21 +243,67 @@ impl Decomposition {
         Csr::from_triplets(self.graph.n, self.graph.n, trips)
     }
 
-    /// Extra topology memory the decomposition stores versus the single
-    /// full-graph CSR, in bytes (Fig. 12's "Topo. Tensor" numerator):
-    /// two row_ptr arrays instead of one.
-    pub fn extra_topology_bytes(&self) -> usize {
-        // both splits keep a (V+1) row_ptr; the whole graph needs one
-        (self.graph.n + 1) * std::mem::size_of::<u32>()
+    /// The propagation parts this decomposition stores, in execution
+    /// order (intra first, inter last). The base decomposition stores
+    /// two; hybrid refinements materialize more via [`Decomposition::split_intra`].
+    pub fn stored_parts(&self) -> Vec<&Csr> {
+        vec![&self.intra, &self.inter]
     }
 
-    /// Total topology bytes stored (row_ptr + col_idx + vals, both parts).
+    /// Extra topology memory the decomposition stores versus the single
+    /// full-graph CSR, in bytes (Fig. 12's "Topo. Tensor" numerator) —
+    /// derived from the actual stored parts: one extra `(V+1)` row_ptr
+    /// per part beyond the first.
+    pub fn extra_topology_bytes(&self) -> usize {
+        self.stored_parts().len().saturating_sub(1)
+            * (self.graph.n + 1)
+            * std::mem::size_of::<u32>()
+    }
+
+    /// Total topology bytes stored (row_ptr + col_idx + vals, all parts).
     pub fn topology_bytes(&self) -> usize {
-        let csr_bytes = |c: &Csr| {
-            (c.row_ptr.len() + c.col_idx.len()) * std::mem::size_of::<u32>()
-                + c.vals.len() * std::mem::size_of::<f32>()
-        };
-        csr_bytes(&self.intra) + csr_bytes(&self.inter)
+        self.stored_parts().iter().map(|c| csr_bytes(c)).sum()
+    }
+
+    /// Per-block density profile of the intra part.
+    pub fn intra_block_profile(&self) -> BlockProfile {
+        BlockProfile::of(&self.intra, self.community)
+    }
+
+    /// Refine the intra part into density classes at `threshold` (block
+    /// density `>= threshold` is dense-class). Returns one class when the
+    /// threshold puts every block on the same side, two otherwise —
+    /// dense-first. The class matrices partition the intra entries, so
+    /// executing every class plus inter reproduces the whole propagation.
+    pub fn split_intra(&self, threshold: f64) -> IntraSplit {
+        let profile = self.intra_block_profile();
+        let labels = profile.classify(threshold);
+        let c = self.community.max(1);
+        // one pass over the intra entries, partitioned by label
+        let mut dense_trips = Vec::new();
+        let mut sparse_trips = Vec::new();
+        for t in self.intra.to_triplets() {
+            match labels[t.0 as usize / c] {
+                DensityClass::Dense => dense_trips.push(t),
+                DensityClass::Sparse => sparse_trips.push(t),
+            }
+        }
+        let mut out: Vec<IntraClass> = Vec::new();
+        for (label, trips) in [
+            (DensityClass::Dense, dense_trips),
+            (DensityClass::Sparse, sparse_trips),
+        ] {
+            let blocks: Vec<u32> = (0..profile.len() as u32)
+                .filter(|&b| labels[b as usize] == label)
+                .collect();
+            if blocks.is_empty() {
+                continue;
+            }
+            let rows: usize = blocks.iter().map(|&b| profile.blocks[b as usize].0).sum();
+            let matrix = Csr::from_triplets(self.intra.n_rows, self.intra.n_cols, trips);
+            out.push(IntraClass { label, blocks, rows, matrix });
+        }
+        IntraSplit { threshold, classes: out }
     }
 }
 
@@ -187,6 +368,93 @@ mod tests {
         let g = hidden_graph(&mut rng, 64);
         let d = Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, 2);
         assert!(d.topology_bytes() > 0);
+        // derived from the stored parts: (2 - 1) extra row_ptr of (64+1) u32
+        assert_eq!(d.stored_parts().len(), 2);
         assert_eq!(d.extra_topology_bytes(), 65 * 4);
+    }
+
+    #[test]
+    fn ragged_vertex_counts_decompose_and_split() {
+        // regression: n not a multiple of `community` must not panic
+        // anywhere on the decompose -> profile -> split path
+        for n in [5usize, 17, 40, 100] {
+            let mut rng = Rng::new(n as u64);
+            let g = {
+                let m = 3 * n;
+                let pairs = (0..m)
+                    .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32));
+                crate::graph::Graph::from_edges(n, pairs)
+            };
+            let d = Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, 1);
+            let profile = d.intra_block_profile();
+            assert_eq!(profile.len(), n.div_ceil(16));
+            let tail_rows = profile.blocks.last().unwrap().0;
+            assert_eq!(tail_rows, n - (profile.len() - 1) * 16);
+            let split = d.split_intra(0.5);
+            let class_nnz: usize = split.classes.iter().map(|c| c.matrix.nnz()).sum();
+            assert_eq!(class_nnz, d.intra.nnz());
+            // dense blocks survive the round trip through DenseBlocks
+            let blocks = crate::graph::DenseBlocks::from_block_diagonal_csr(&d.intra, 16);
+            assert_eq!(blocks.rows, n);
+        }
+    }
+
+    #[test]
+    fn block_profile_counts_every_entry() {
+        let mut rng = Rng::new(9);
+        let g = hidden_graph(&mut rng, 128);
+        let d = Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, 3);
+        let profile = d.intra_block_profile();
+        let total: usize = profile.blocks.iter().map(|&(_, nnz)| nnz).sum();
+        assert_eq!(total, d.intra.nnz());
+        let hist = profile.histogram(10);
+        assert_eq!(hist.iter().sum::<usize>(), profile.len());
+        assert!((0..profile.len()).all(|b| (0.0..=1.0).contains(&profile.density(b))));
+    }
+
+    #[test]
+    fn split_intra_partitions_blocks_and_entries() {
+        let mut rng = Rng::new(11);
+        let g = hidden_graph(&mut rng, 256);
+        let d = Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, 4);
+        let profile = d.intra_block_profile();
+        // pick a threshold strictly inside the density range so both
+        // classes are non-empty
+        let mut dens: Vec<f64> = (0..profile.len()).map(|b| profile.density(b)).collect();
+        dens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let threshold = (dens[0] + dens[dens.len() - 1]) / 2.0;
+        let split = d.split_intra(threshold);
+        assert!(!split.classes.is_empty() && split.classes.len() <= 2);
+        let block_total: usize = split.classes.iter().map(|c| c.blocks.len()).sum();
+        assert_eq!(block_total, profile.len());
+        let nnz_total: usize = split.classes.iter().map(|c| c.matrix.nnz()).sum();
+        assert_eq!(nnz_total, d.intra.nnz());
+        // dense class entries really sit in dense blocks
+        if let Some(dense) = split.class(DensityClass::Dense) {
+            for (r, _, _) in dense.matrix.to_triplets() {
+                assert!(dense.blocks.contains(&(r / 16)));
+            }
+        }
+        // hybrid split reports one extra row_ptr per extra part
+        let parts = split.classes.len() + 1;
+        assert_eq!(
+            split.extra_topology_bytes(d.graph.n),
+            (parts - 1) * (d.graph.n + 1) * 4
+        );
+        assert!(split.topology_bytes(&d.inter) >= d.topology_bytes());
+    }
+
+    #[test]
+    fn extreme_thresholds_are_uniform_splits() {
+        let mut rng = Rng::new(12);
+        let g = hidden_graph(&mut rng, 64);
+        let d = Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, 5);
+        let all_dense = d.split_intra(0.0);
+        assert_eq!(all_dense.classes.len(), 1);
+        assert_eq!(all_dense.classes[0].label, DensityClass::Dense);
+        assert_eq!(all_dense.classes[0].matrix.nnz(), d.intra.nnz());
+        let all_sparse = d.split_intra(2.0);
+        assert_eq!(all_sparse.classes.len(), 1);
+        assert_eq!(all_sparse.classes[0].label, DensityClass::Sparse);
     }
 }

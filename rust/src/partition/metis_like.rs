@@ -123,18 +123,23 @@ fn initial_bisection(wg: &WorkGraph, rng: &mut Rng) -> Vec<bool> {
     frontier.push_back(seed as u32);
     side[seed] = false;
     absorbed += wg.vw[seed];
+    // Advancing cursor for the disconnected fallback: absorbed vertices
+    // never revert, so a monotone scan stays O(n) total — a fresh
+    // `(0..n).find` per isolated vertex was O(n^2) on edgeless subgraphs.
+    let mut scan = 0usize;
     while absorbed < target {
         let Some(v) = frontier.pop_front() else {
-            // disconnected: absorb the lightest unvisited vertex
-            match (0..n).find(|&u| side[u]) {
-                Some(u) => {
-                    side[u] = false;
-                    absorbed += wg.vw[u];
-                    frontier.push_back(u as u32);
-                    continue;
-                }
-                None => break,
+            // disconnected: absorb the next unvisited vertex
+            while scan < n && !side[scan] {
+                scan += 1;
             }
+            if scan < n {
+                side[scan] = false;
+                absorbed += wg.vw[scan];
+                frontier.push_back(scan as u32);
+                continue;
+            }
+            break;
         };
         for &(u, _) in &wg.adj[v as usize] {
             if side[u as usize] {

@@ -10,7 +10,9 @@ pub mod quality;
 pub mod rabbit_like;
 mod work_graph;
 
-pub use decompose::{Decomposition, Propagation, Reorder};
+pub use decompose::{
+    BlockProfile, Decomposition, DensityClass, IntraClass, IntraSplit, Propagation, Reorder,
+};
 pub use metis_like::{metis_order, metis_parts};
 pub use rabbit_like::rabbit_order;
 pub use work_graph::WorkGraph;

@@ -88,24 +88,30 @@ impl WorkGraph {
         for v in 0..n {
             vw[matched[v] as usize] += self.vw[v];
         }
-        // merge parallel edges via a per-row map
+        // Merge parallel edges with one pass over the fine graph: scatter
+        // every surviving edge to its coarse row, then sort + coalesce per
+        // row. O(E log deg) — the previous per-coarse-row rescan of every
+        // fine vertex was O(V * coarse_V) and made large graphs unusable.
         let mut adj: Vec<Vec<(u32, f32)>> = vec![Vec::new(); cn];
-        let mut row_accum: std::collections::HashMap<u32, f32> = std::collections::HashMap::new();
-        for cv in 0..cn {
-            row_accum.clear();
-            for v in 0..n {
-                if matched[v] as usize != cv {
-                    continue;
-                }
-                for &(u, w) in &self.adj[v] {
-                    let cu = matched[u as usize];
-                    if cu as usize != cv {
-                        *row_accum.entry(cu).or_insert(0.0) += w;
-                    }
+        for v in 0..n {
+            let cv = matched[v];
+            for &(u, w) in &self.adj[v] {
+                let cu = matched[u as usize];
+                if cu != cv {
+                    adj[cv as usize].push((cu, w));
                 }
             }
-            adj[cv] = row_accum.iter().map(|(&u, &w)| (u, w)).collect();
-            adj[cv].sort_unstable_by_key(|&(u, _)| u);
+        }
+        for row in &mut adj {
+            row.sort_unstable_by_key(|&(u, _)| u);
+            let mut merged: Vec<(u32, f32)> = Vec::with_capacity(row.len());
+            for &(u, w) in row.iter() {
+                match merged.last_mut() {
+                    Some(last) if last.0 == u => last.1 += w,
+                    _ => merged.push((u, w)),
+                }
+            }
+            *row = merged;
         }
         (WorkGraph { vw, adj }, matched)
     }

@@ -21,9 +21,12 @@ pub struct Fingerprint(pub u64);
 
 impl Fingerprint {
     /// Fingerprint the selection problem: topology + community + model.
+    /// The salt names the plan schema generation — v2 added the per-class
+    /// hybrid assignment, so every pre-hybrid cache entry keys differently
+    /// and is recomputed rather than served.
     pub fn of(d: &Decomposition, model: ModelKind) -> Fingerprint {
         let mut h = Fnv::new();
-        h.write(b"adaptgear-plan-v1");
+        h.write(b"adaptgear-plan-v2");
         h.write(model.as_str().as_bytes());
         h.write_usize(d.community);
         h.write_usize(d.graph.n);

@@ -4,9 +4,12 @@
 //! per subgraph; this module makes that choice a serializable **plan**
 //! instead of a transient side effect of training. A [`GearPlan`] records
 //! everything the decision depends on (graph [`Fingerprint`], scale,
-//! community, reorder), the decision itself (per-width and overall
-//! [`KernelPair`], AOT bucket), the projected [`IterationCost`], and
-//! provenance — and roundtrips through `util::json`.
+//! community, reorder), the decision itself (a [`GearAssignment`] — the
+//! density threshold plus one `(subgraph class, kernel)` entry per
+//! executed part, with the two-slot [`KernelPair`] lowering in `chosen`),
+//! the projected [`IterationCost`], and provenance — and roundtrips
+//! through `util::json`. The per-class split itself is decided by the
+//! [`hybrid`] threshold sweep, which every planner runs.
 //!
 //! Plans are produced by [`Planner`] implementations:
 //!
@@ -23,10 +26,12 @@
 //! `adaptgear plan` subcommand computes/prints/persists them.
 
 pub mod fingerprint;
+pub mod hybrid;
 pub mod planners;
 pub mod store;
 
 pub use fingerprint::Fingerprint;
+pub use hybrid::HybridDecision;
 pub use planners::{best_adaptive_pair, CachedPlanner, MonitorPlanner, SimCostPlanner};
 pub use store::PlanStore;
 
@@ -37,8 +42,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::ModelKind;
 use crate::gpusim::IterationCost;
-use crate::kernels::{KernelKind, KernelPair};
-use crate::partition::{Decomposition, Reorder};
+use crate::kernels::{KernelKind, KernelPair, INTRA_CANDIDATES};
+use crate::partition::{Decomposition, DensityClass, Reorder};
 use crate::runtime::BucketInfo;
 use crate::util::json::Json;
 
@@ -124,6 +129,277 @@ impl<'a> PlanRequest<'a> {
     }
 }
 
+/// Which part of the decomposed propagation a class assignment covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubgraphClass {
+    /// Diagonal blocks at or above the density threshold.
+    DenseIntra,
+    /// Diagonal blocks below the density threshold.
+    SparseIntra,
+    /// The off-diagonal remainder.
+    Inter,
+}
+
+impl SubgraphClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SubgraphClass::DenseIntra => "dense_intra",
+            SubgraphClass::SparseIntra => "sparse_intra",
+            SubgraphClass::Inter => "inter",
+        }
+    }
+
+    pub fn is_intra(&self) -> bool {
+        !matches!(self, SubgraphClass::Inter)
+    }
+}
+
+impl FromStr for SubgraphClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<SubgraphClass, Self::Err> {
+        match s {
+            "dense_intra" => Ok(SubgraphClass::DenseIntra),
+            "sparse_intra" => Ok(SubgraphClass::SparseIntra),
+            "inter" => Ok(SubgraphClass::Inter),
+            other => Err(anyhow!(
+                "unknown subgraph class {other:?} (expected dense_intra|sparse_intra|inter)"
+            )),
+        }
+    }
+}
+
+/// One executed class of a plan: which slice of the graph it covers and
+/// which kernel runs it, plus the planner's cost basis for the slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassAssignment {
+    pub class: SubgraphClass,
+    pub kernel: KernelKind,
+    /// Diagonal blocks covered (0 for the inter class).
+    pub blocks: usize,
+    /// Real rows covered.
+    pub rows: usize,
+    pub nnz: usize,
+    /// Planner's mean simulated/measured launch time for this class (us).
+    pub time_us: f64,
+}
+
+/// The decision a [`GearPlan`] executes: a density threshold over the
+/// intra block diagonal plus one `(subgraph class, kernel)` assignment
+/// per executed part. Uniform plans carry one intra class; hybrid plans
+/// carry two (dense-first). This is the list that replaced the single
+/// intra/inter [`KernelPair`] end to end; [`GearPlan::chosen`] is its
+/// two-slot artifact lowering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GearAssignment {
+    /// Block density (`nnz / rows^2`) at or above which a diagonal block
+    /// joins the dense class. [`ALL_DENSE_THRESHOLD`] /
+    /// [`ALL_SPARSE_THRESHOLD`] encode the uniform extremes.
+    pub threshold: f64,
+    /// Intra classes first (dense before sparse), inter last.
+    pub classes: Vec<ClassAssignment>,
+}
+
+/// Threshold that puts every block in the dense class.
+pub const ALL_DENSE_THRESHOLD: f64 = 0.0;
+/// Threshold that puts every block in the sparse class (block densities
+/// never exceed 1.0).
+pub const ALL_SPARSE_THRESHOLD: f64 = 2.0;
+
+impl GearAssignment {
+    /// A single-intra-class assignment — the legacy `(intra, inter)` pair
+    /// expressed in class form. `intra_stats`/`inter_stats` are
+    /// `(blocks, rows, nnz, time_us)` for the respective parts.
+    pub fn uniform(
+        pair: KernelPair,
+        intra_stats: (usize, usize, usize, f64),
+        inter_stats: (usize, usize, f64),
+    ) -> GearAssignment {
+        let intra_kernel = pair
+            .intra
+            .expect("uniform assignments require an intra kernel (full-graph plans have no assignment)");
+        let (threshold, class) = if intra_kernel == KernelKind::DenseBlock {
+            (ALL_DENSE_THRESHOLD, SubgraphClass::DenseIntra)
+        } else {
+            (ALL_SPARSE_THRESHOLD, SubgraphClass::SparseIntra)
+        };
+        let (blocks, rows, nnz, time_us) = intra_stats;
+        let (inter_rows, inter_nnz, inter_time_us) = inter_stats;
+        GearAssignment {
+            threshold,
+            classes: vec![
+                ClassAssignment { class, kernel: intra_kernel, blocks, rows, nnz, time_us },
+                ClassAssignment {
+                    class: SubgraphClass::Inter,
+                    kernel: pair.inter,
+                    blocks: 0,
+                    rows: inter_rows,
+                    nnz: inter_nnz,
+                    time_us: inter_time_us,
+                },
+            ],
+        }
+    }
+
+    pub fn intra_classes(&self) -> impl Iterator<Item = &ClassAssignment> {
+        self.classes.iter().filter(|c| c.class.is_intra())
+    }
+
+    pub fn inter_class(&self) -> Result<&ClassAssignment> {
+        self.classes
+            .iter()
+            .find(|c| c.class == SubgraphClass::Inter)
+            .ok_or_else(|| anyhow!("assignment has no inter class"))
+    }
+
+    pub fn kernel_for(&self, class: SubgraphClass) -> Option<KernelKind> {
+        self.classes.iter().find(|c| c.class == class).map(|c| c.kernel)
+    }
+
+    /// Two or more intra classes execute (per-block density routing).
+    pub fn is_hybrid(&self) -> bool {
+        self.intra_classes().count() >= 2
+    }
+
+    /// Distinct intra kernels, in class order.
+    pub fn intra_kernels(&self) -> Vec<KernelKind> {
+        let mut out = Vec::new();
+        for c in self.intra_classes() {
+            if !out.contains(&c.kernel) {
+                out.push(c.kernel);
+            }
+        }
+        out
+    }
+
+    /// Sum of the intra classes' planner cost basis (us).
+    pub fn intra_cost_us(&self) -> f64 {
+        self.intra_classes().map(|c| c.time_us).sum()
+    }
+
+    /// Total classes cost including inter (us).
+    pub fn total_cost_us(&self) -> f64 {
+        self.classes.iter().map(|c| c.time_us).sum()
+    }
+
+    /// Lower the class list onto the two-slot AOT artifact contract: the
+    /// first intra class (the dense one when hybrid) executes in the
+    /// intra slot; a hybrid plan's sparse class is merged into the inter
+    /// operand at pack time (`kernels::pack::pack_assignment`), which the
+    /// inter kernel's global sparse format absorbs exactly.
+    pub fn executed_pair(&self) -> Result<KernelPair> {
+        let intra = self
+            .intra_classes()
+            .next()
+            .ok_or_else(|| anyhow!("assignment has no intra class"))?
+            .kernel;
+        if !INTRA_CANDIDATES.contains(&intra) {
+            bail!("class kernel {intra} cannot execute in the intra artifact slot");
+        }
+        Ok(KernelPair::new(intra, self.inter_class()?.kernel))
+    }
+
+    /// Cheap consistency check against the decomposition a plan claims to
+    /// cover (the fingerprint guarantees topology identity; this catches
+    /// tampered or mismatched class lists).
+    pub fn covers(&self, d: &Decomposition) -> Result<()> {
+        let intra_nnz: usize = self.intra_classes().map(|c| c.nnz).sum();
+        if intra_nnz != d.intra.nnz() {
+            bail!(
+                "assignment intra nnz {intra_nnz} != decomposition intra nnz {}",
+                d.intra.nnz()
+            );
+        }
+        let inter = self.inter_class()?;
+        if inter.nnz != d.inter.nnz() {
+            bail!("assignment inter nnz {} != decomposition inter nnz {}", inter.nnz, d.inter.nnz());
+        }
+        let blocks: usize = self.intra_classes().map(|c| c.blocks).sum();
+        let expect = d.graph.n.div_ceil(d.community.max(1));
+        if blocks != expect {
+            bail!("assignment covers {blocks} blocks, decomposition has {expect}");
+        }
+        self.executed_pair().map(|_| ())
+    }
+
+    /// The [`DensityClass`] label a class assignment corresponds to.
+    pub fn density_label(class: SubgraphClass) -> Option<DensityClass> {
+        match class {
+            SubgraphClass::DenseIntra => Some(DensityClass::Dense),
+            SubgraphClass::SparseIntra => Some(DensityClass::Sparse),
+            SubgraphClass::Inter => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("threshold", Json::num(self.threshold)),
+            (
+                "classes",
+                Json::Arr(
+                    self.classes
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("class", Json::str(c.class.as_str())),
+                                ("kernel", Json::str(c.kernel.as_str())),
+                                ("blocks", Json::num(c.blocks as f64)),
+                                ("rows", Json::num(c.rows as f64)),
+                                ("nnz", Json::num(c.nnz as f64)),
+                                ("time_us", Json::num(c.time_us)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<GearAssignment> {
+        let threshold = v
+            .get("threshold")
+            .as_f64()
+            .ok_or_else(|| anyhow!("assignment missing threshold"))?;
+        let raw = v
+            .get("classes")
+            .as_arr()
+            .ok_or_else(|| anyhow!("assignment missing classes"))?;
+        let mut classes = Vec::with_capacity(raw.len());
+        for c in raw {
+            let num = |k: &str| {
+                c.get(k)
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("class missing numeric field {k:?}"))
+            };
+            classes.push(ClassAssignment {
+                class: c
+                    .get("class")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("class missing 'class'"))?
+                    .parse()?,
+                kernel: c
+                    .get("kernel")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("class missing 'kernel'"))?
+                    .parse()?,
+                blocks: num("blocks")?,
+                rows: num("rows")?,
+                nnz: num("nnz")?,
+                time_us: c
+                    .get("time_us")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("class missing time_us"))?,
+            });
+        }
+        let a = GearAssignment { threshold, classes };
+        if a.intra_classes().next().is_none() {
+            bail!("assignment has no intra class");
+        }
+        a.inter_class()?;
+        Ok(a)
+    }
+}
+
 /// Where a plan came from — recorded for `--explain` and cache forensics.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Provenance {
@@ -151,7 +427,12 @@ pub struct GearPlan {
     /// AOT bucket the plan targets.
     pub bucket: String,
     /// Overall winner — the variant the AOT train/forward artifacts honor.
+    /// Always the two-slot lowering of `assignment`
+    /// ([`GearAssignment::executed_pair`]).
     pub chosen: KernelPair,
+    /// The per-class decision: density threshold + one (class, kernel)
+    /// entry per executed part. Hybrid plans carry two intra classes.
+    pub assignment: GearAssignment,
     /// Per-aggregate-width winners, under the same per-candidate cost
     /// basis as `chosen` (informational; artifacts are lowered per
     /// overall pair, so `chosen` is what executes).
@@ -187,6 +468,16 @@ impl GearPlan {
                 self.fingerprint
             );
         }
+        self.assignment
+            .covers(d)
+            .context("plan assignment does not cover this decomposition")?;
+        let pair = self.assignment.executed_pair()?;
+        if pair != self.chosen {
+            bail!(
+                "plan chosen {} disagrees with its assignment lowering {pair}",
+                self.chosen
+            );
+        }
         Ok(())
     }
 
@@ -204,13 +495,27 @@ impl GearPlan {
 
     /// One-line human summary for the CLI.
     pub fn summary(&self) -> String {
+        let decision = if self.assignment.is_hybrid() {
+            format!(
+                "hybrid[{}]+{} @ thr {:.3}",
+                self.assignment
+                    .intra_kernels()
+                    .iter()
+                    .map(|k| k.as_str())
+                    .collect::<Vec<_>>()
+                    .join("|"),
+                self.chosen.inter,
+                self.assignment.threshold,
+            )
+        } else {
+            self.chosen.to_string()
+        };
         format!(
-            "plan {}: {} on {} (scale {:.4}) -> {} in bucket {} | projected {:.1}us/fwd | {} monitor iters ({}{})",
+            "plan {}: {} on {} (scale {:.4}) -> {decision} in bucket {} | projected {:.1}us/fwd | {} monitor iters ({}{})",
             self.fingerprint,
             self.model.as_str(),
             if self.dataset.is_empty() { "<graph>" } else { self.dataset.as_str() },
             self.scale,
-            self.chosen,
             self.bucket,
             self.projected.total_us(),
             self.monitor_iters,
@@ -230,7 +535,7 @@ impl GearPlan {
                 .collect(),
         );
         Json::obj(vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(2.0)),
             ("fingerprint", Json::str(self.fingerprint.to_string())),
             ("dataset", Json::str(self.dataset.clone())),
             ("model", Json::str(self.model.as_str())),
@@ -241,6 +546,7 @@ impl GearPlan {
             ("seed", Json::str(self.seed.to_string())),
             ("bucket", Json::str(self.bucket.clone())),
             ("chosen", pair_to_json(self.chosen)),
+            ("assignment", self.assignment.to_json()),
             ("per_width", per_width),
             ("intra_times", times(&self.intra_times)),
             ("inter_times", times(&self.inter_times)),
@@ -291,6 +597,15 @@ impl GearPlan {
             }
         }
         let prov = v.get("provenance");
+        let chosen = pair_from_json(v.get("chosen")).context("plan field 'chosen'")?;
+        // Pre-hybrid (version 1) plans have no assignment — they fail to
+        // decode, which the PlanStore treats as a cache miss, so stale
+        // uniform-only decisions are replanned rather than served.
+        let assignment = GearAssignment::from_json(v.get("assignment"))
+            .context("plan field 'assignment' (pre-hybrid plans must be recomputed)")?;
+        if assignment.executed_pair()? != chosen {
+            bail!("plan 'chosen' disagrees with its assignment lowering");
+        }
         Ok(GearPlan {
             fingerprint: req_str("fingerprint")?.parse()?,
             dataset: req_str("dataset")?.to_string(),
@@ -302,7 +617,8 @@ impl GearPlan {
                 .parse::<u64>()
                 .map_err(|e| anyhow!("bad seed in plan: {e}"))?,
             bucket: req_str("bucket")?.to_string(),
-            chosen: pair_from_json(v.get("chosen")).context("plan field 'chosen'")?,
+            chosen,
+            assignment,
             per_width,
             intra_times: times("intra_times")?,
             inter_times: times("inter_times")?,
@@ -468,6 +784,37 @@ mod tests {
         assert!(plan.validate(&d, ModelKind::Gcn).is_ok());
         assert!(plan.validate(&other, ModelKind::Gcn).is_err());
         assert!(plan.validate(&d, ModelKind::Gin).is_err());
+    }
+
+    #[test]
+    fn uniform_assignment_is_consistent_with_chosen() {
+        let d = small_decomposition(6);
+        let bucket = small_bucket();
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        // small graphs stay uniform: one intra class + inter
+        assert!(!plan.assignment.is_hybrid());
+        assert_eq!(plan.assignment.classes.len(), 2);
+        assert_eq!(plan.assignment.executed_pair().unwrap(), plan.chosen);
+        assert!(plan.assignment.covers(&d).is_ok());
+        let intra: usize = plan.assignment.intra_classes().map(|c| c.nnz).sum();
+        assert_eq!(intra, d.intra.nnz());
+    }
+
+    #[test]
+    fn pre_hybrid_plan_files_fail_to_decode() {
+        // a v1 plan (no assignment) must not silently decode — the store
+        // treats the parse failure as a miss and replans
+        let d = small_decomposition(8);
+        let bucket = small_bucket();
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        let Json::Obj(mut obj) = plan.to_json() else { unreachable!() };
+        obj.remove("assignment");
+        let err = GearPlan::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(err.to_string().contains("assignment"), "{err:#}");
     }
 
     #[test]

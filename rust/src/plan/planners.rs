@@ -26,7 +26,7 @@ use crate::runtime::{Engine, Manifest, Tensor};
 use crate::util::rng::Rng;
 
 use super::store::PlanStore;
-use super::{Clock, GearPlan, PlanRequest, Planner, Provenance};
+use super::{hybrid, Clock, GearAssignment, GearPlan, PlanRequest, Planner, Provenance};
 
 /// Pick the simulated-fastest kernel per subgraph at one aggregate width
 /// (what the runtime selector converges to when driven by the sim clock).
@@ -103,6 +103,40 @@ fn owned_times(times: &BTreeMap<&'static str, f64>) -> BTreeMap<String, f64> {
     times.iter().map(|(k, v)| (k.to_string(), *v)).collect()
 }
 
+/// Resolve the final class assignment for a request: run the hybrid
+/// threshold sweep on the deterministic surface; when it stays uniform,
+/// defer to the planner's own (measured or argmin) winner `pair` with its
+/// candidate `times` — so uniform decisions are byte-identical to the
+/// pre-hybrid planners. A hybrid split keeps its analytic intra classes
+/// and adopts the planner's inter winner.
+fn resolve_assignment(
+    req: &PlanRequest,
+    gpu: &'static GpuModel,
+    pair: KernelPair,
+    intra_time_us: f64,
+    inter_time_us: f64,
+) -> GearAssignment {
+    let profile = req.d.intra_block_profile();
+    let decision = hybrid::sweep(&profile, &req.d.inter, &req.widths(), req.bucket.edges, gpu);
+    if decision.assignment.is_hybrid() {
+        let mut a = decision.assignment;
+        for c in &mut a.classes {
+            if c.class == super::SubgraphClass::Inter {
+                c.kernel = pair.inter;
+                c.time_us = inter_time_us;
+            }
+        }
+        return a;
+    }
+    let blocks = profile.len();
+    let rows: usize = profile.blocks.iter().map(|&(r, _)| r).sum();
+    GearAssignment::uniform(
+        pair,
+        (blocks, rows, req.d.intra.nnz(), intra_time_us),
+        (req.d.inter.n_rows, req.d.inter.nnz(), inter_time_us),
+    )
+}
+
 /// Deterministic planner over the gpusim cost surface — no monitoring, no
 /// engine, zero runtime overhead.
 #[derive(Debug, Clone, Copy)]
@@ -145,10 +179,20 @@ impl Planner for SimCostPlanner {
                 .min_by(|a, b| times[a.as_str()].partial_cmp(&times[b.as_str()]).unwrap())
                 .unwrap()
         };
-        let chosen = KernelPair::new(
+        let uniform = KernelPair::new(
             argmin(&intra_times, &INTRA_CANDIDATES),
             argmin(&inter_times, &INTER_CANDIDATES),
         );
+        let assignment = resolve_assignment(
+            req,
+            self.gpu,
+            uniform,
+            intra_times[uniform.intra_str()],
+            inter_times[uniform.inter.as_str()],
+        );
+        let chosen = assignment
+            .executed_pair()
+            .expect("planner assignments always lower to an executable pair");
         Ok(GearPlan {
             fingerprint: req.fingerprint(),
             dataset: req.dataset.clone(),
@@ -159,6 +203,7 @@ impl Planner for SimCostPlanner {
             seed: req.seed,
             bucket: req.bucket.name.clone(),
             chosen,
+            assignment,
             per_width: per_width_pairs(req, self.gpu),
             intra_times,
             inter_times,
@@ -340,6 +385,19 @@ impl<'e> MonitorPlanner<'e> {
                 KernelPair::new(argmin(&INTRA_CANDIDATES, true), argmin(&INTER_CANDIDATES, false)),
             );
         }
+        // The density split is decided on the deterministic surface (under
+        // the sim clock that IS the measured surface); a uniform outcome
+        // honors the monitored winner exactly as before.
+        let assignment = resolve_assignment(
+            req,
+            self.gpu,
+            report.chosen,
+            report.intra_times[report.chosen.intra_str()],
+            report.inter_times[report.chosen.inter.as_str()],
+        );
+        let chosen = assignment
+            .executed_pair()
+            .expect("planner assignments always lower to an executable pair");
         GearPlan {
             fingerprint: req.fingerprint(),
             dataset: req.dataset.clone(),
@@ -349,7 +407,8 @@ impl<'e> MonitorPlanner<'e> {
             reorder: req.reorder,
             seed: req.seed,
             bucket: req.bucket.name.clone(),
-            chosen: report.chosen,
+            chosen,
+            assignment,
             per_width,
             intra_times: owned_times(&report.intra_times),
             inter_times: owned_times(&report.inter_times),
@@ -501,6 +560,66 @@ mod tests {
         assert_eq!(plan.per_width.len(), 2);
         assert!(plan.per_width.contains_key(&64) && plan.per_width.contains_key(&32));
         assert!(plan.projected.total_us() > 0.0);
+    }
+
+    #[test]
+    fn mixed_density_graph_plans_hybrid_and_cache_roundtrips() {
+        // The acceptance path end to end, engine-free: a mixed-density
+        // planted graph must yield a hybrid plan (>= 2 distinct intra
+        // kernels), priced strictly below both single-kernel plans, that
+        // JSON-roundtrips and cache-hits through the PlanStore.
+        use crate::graph::generate::planted_partition_mixed;
+        use crate::partition::{Propagation, Reorder};
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(5);
+        let n = 131072;
+        let g = planted_partition_mixed(n, 64, 0.95, 0.005, 3, 0.3 / n as f64, &mut rng);
+        let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 64, 0);
+        let bucket = crate::runtime::BucketInfo {
+            name: "b128k".to_string(),
+            vertices: n,
+            edges: 8 * 1024 * 1024,
+            features: 32,
+            hidden: 32,
+            classes: 4,
+            blocks: n / 64,
+        };
+        let req = PlanRequest::new(&d, crate::coordinator::ModelKind::Gcn, &bucket);
+        let plan = SimCostPlanner::new(&A100).plan(&req).unwrap();
+
+        assert!(plan.assignment.is_hybrid(), "mixed graph must plan hybrid");
+        assert_eq!(plan.assignment.intra_kernels().len(), 2, "two distinct intra kernels");
+        assert_eq!(plan.chosen.intra, Some(KernelKind::DenseBlock), "dense class lowers to the intra slot");
+        assert!(plan.validate(&d, crate::coordinator::ModelKind::Gcn).is_ok());
+
+        // strictly below both uniforms on the same surface
+        let decision = hybrid::sweep(
+            &d.intra_block_profile(),
+            &d.inter,
+            &req.widths(),
+            bucket.edges,
+            &A100,
+        );
+        assert!(decision.total_us < decision.all_dense_us);
+        assert!(decision.total_us < decision.all_sparse_us);
+
+        // JSON + store roundtrip preserves the assignment; replanning hits
+        let dir = std::env::temp_dir().join(format!(
+            "adaptgear-hybridplan-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cached = CachedPlanner::new(PlanStore::new(&dir), SimCostPlanner::new(&A100));
+        let cold = cached.plan(&req).unwrap();
+        assert!(!cold.provenance.cached);
+        let warm = cached.plan(&req).unwrap();
+        assert!(warm.provenance.cached, "hybrid plan must cache-hit");
+        assert_eq!(warm.assignment, cold.assignment);
+        assert_eq!(warm.assignment.threshold, plan.assignment.threshold);
+        assert_eq!(warm.chosen, plan.chosen);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

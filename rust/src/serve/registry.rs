@@ -93,6 +93,12 @@ impl Deployment {
         self.plan.chosen
     }
 
+    /// The full per-class decision this deployment serves with — hybrid
+    /// deployments carry two intra classes plus inter.
+    pub fn assignment(&self) -> &crate::plan::GearAssignment {
+        &self.plan.assignment
+    }
+
     /// Argmax class for vertex `v` from a full-graph logits buffer.
     pub fn classify(&self, logits: &[f32], v: usize) -> i32 {
         let width = logits.len() / self.bucket_vertices.max(1);

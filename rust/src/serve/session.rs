@@ -283,10 +283,12 @@ impl<'a> ServeSession<'a> {
         for req in &valid {
             dep.x[req.vertex * dep.f_data + req.feature] += req.delta;
         }
-        let logits = trainer::forward(
+        // Hybrid-aware forward: deployments execute their plan's full
+        // class assignment, not just the lowered kernel pair.
+        let logits = trainer::forward_planned(
             self.engine,
             &dep.d,
-            dep.chosen(),
+            &dep.plan,
             dep.model,
             &dep.params,
             &dep.x,

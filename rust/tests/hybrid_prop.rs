@@ -1,0 +1,119 @@
+//! Property: hybrid per-class execution is EXACT — running the dense
+//! class (dense-block schedule) + the sparse class (community-resident
+//! CSR schedule) + inter (vertex-parallel CSR / edge-parallel COO) and
+//! summing the three outputs matches the whole-graph CSR `spmm` within
+//! 1e-4, across random densities, random thresholds, and ragged vertex
+//! counts. This is the numerical contract that lets a planner split the
+//! block diagonal freely: zero padding is exact for aggregate-sum.
+//!
+//! Engine-free: uses the native CPU kernel schedules (the PJRT artifacts
+//! are separately held to the same contract by `kernel_parity.rs`).
+
+use adaptgear::graph::generate::planted_partition_mixed;
+use adaptgear::graph::DenseBlocks;
+use adaptgear::kernels::native;
+use adaptgear::partition::{Decomposition, DensityClass, Propagation, Reorder};
+use adaptgear::util::prop;
+use adaptgear::util::rng::Rng;
+
+#[test]
+fn hybrid_class_execution_matches_whole_graph_spmm() {
+    prop::check("dense class + sparse class + inter == whole", 25, |rng| {
+        // random size, deliberately often ragged
+        let n = rng.usize_below(300) + 20;
+        let p_dense = 0.3 + rng.f64() * 0.65;
+        let p_sparse = rng.f64() * 0.1;
+        let p_inter = rng.f64() * 0.02;
+        let period = rng.usize_below(3) + 2;
+        let g = planted_partition_mixed(n, 16, p_dense, p_sparse, period, p_inter, rng);
+        let reorder = if rng.chance(0.5) { Reorder::Identity } else { Reorder::Metis };
+        let d = Decomposition::build(&g, reorder, Propagation::GcnNormalized, 16, 7);
+
+        // random threshold anywhere in [0, 1.1): both degenerate and
+        // genuinely hybrid splits must stay exact
+        let threshold = rng.f64() * 1.1;
+        let split = d.split_intra(threshold);
+        prop::require(
+            (1..=2).contains(&split.classes.len()),
+            "split yields 1 or 2 classes",
+        )?;
+
+        let f = rng.usize_below(5) + 1;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+
+        // execute each class on its own schedule
+        let mut acc = vec![0.0f32; n * f];
+        if let Some(dense) = split.class(DensityClass::Dense) {
+            let blocks = DenseBlocks::from_block_diagonal_csr(&dense.matrix, 16);
+            for (a, b) in acc.iter_mut().zip(native::dense_block_spmm(&blocks, &x, f)) {
+                *a += b;
+            }
+        }
+        if let Some(sparse) = split.class(DensityClass::Sparse) {
+            for (a, b) in acc
+                .iter_mut()
+                .zip(native::csr_intra_spmm(&sparse.matrix, &x, f, 16))
+            {
+                *a += b;
+            }
+        }
+        // inter on both of its candidate schedules — each must complete
+        // the sum exactly
+        let via_csr = native::csr_inter_spmm(&d.inter, &x, f);
+        let via_coo = native::coo_spmm(n, &d.inter.to_triplets(), &x, f);
+        let expect = d.whole().spmm(&x, f);
+        for (i, &e) in expect.iter().enumerate() {
+            prop::require_close(
+                (acc[i] + via_csr[i]) as f64,
+                e as f64,
+                1e-4,
+                "hybrid classes + csr_inter",
+            )?;
+            prop::require_close(
+                (acc[i] + via_coo[i]) as f64,
+                e as f64,
+                1e-4,
+                "hybrid classes + coo",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merged_sparse_class_into_inter_is_exact() {
+    // The trainer's artifact lowering: dense class in the intra slot,
+    // sparse class MERGED into the inter operand. The merged matrix on
+    // the inter schedule plus the dense class must equal the whole.
+    prop::check("dense class + (sparse ∪ inter) == whole", 25, |rng| {
+        let n = rng.usize_below(250) + 17;
+        let g = planted_partition_mixed(n, 16, 0.8, rng.f64() * 0.08, 3, 0.01, rng);
+        let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 16, 3);
+        let threshold = 0.2 + rng.f64() * 0.5;
+        let split = d.split_intra(threshold);
+        let f = 2;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+
+        let mut merged_trips = d.inter.to_triplets();
+        let mut acc = vec![0.0f32; n * f];
+        if let Some(dense) = split.class(DensityClass::Dense) {
+            let blocks = DenseBlocks::from_block_diagonal_csr(&dense.matrix, 16);
+            acc = native::dense_block_spmm(&blocks, &x, f);
+        }
+        if let Some(sparse) = split.class(DensityClass::Sparse) {
+            merged_trips.extend(sparse.matrix.to_triplets());
+        }
+        let merged = adaptgear::graph::Csr::from_triplets(n, n, merged_trips);
+        let inter_part = native::csr_inter_spmm(&merged, &x, f);
+        let expect = d.whole().spmm(&x, f);
+        for i in 0..n * f {
+            prop::require_close(
+                (acc[i] + inter_part[i]) as f64,
+                expect[i] as f64,
+                1e-4,
+                "merged lowering",
+            )?;
+        }
+        Ok(())
+    });
+}
