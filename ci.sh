@@ -5,13 +5,34 @@
 # all against synthetic bucket-only manifests.
 #
 #   ./ci.sh          # build + test + fmt + clippy + plan/hybrid smokes
-#   ./ci.sh bench    # additionally run the serve bench (emits BENCH_serve.json)
+#   ./ci.sh bench    # additionally run the quick bench suite: emit the
+#                    # four BENCH_*.json reports, schema-validate them,
+#                    # self-check the comparator, and gate against
+#                    # committed baselines/ when present
 #
-# The serve bench and the PJRT integration tests skip themselves when
-# artifacts/ has not been built, so this script is runnable on a bare
-# checkout.
+# The PJRT-backed bench tiers and the integration tests skip themselves
+# when artifacts/ has not been built, so this script is runnable on a
+# bare checkout.
 set -euo pipefail
 cd "$(dirname "$0")"
+ROOT="$(pwd)"
+
+# Every mktemp -d in this script is registered here and removed by ONE
+# EXIT trap, so a failure inside any smoke function cannot leak tempdirs
+# (the old per-function `rm -rf` never ran when a step failed mid-way).
+CI_TMPDIRS=()
+cleanup_tmpdirs() {
+    if [[ ${#CI_TMPDIRS[@]} -gt 0 ]]; then
+        rm -rf "${CI_TMPDIRS[@]}"
+    fi
+}
+trap cleanup_tmpdirs EXIT
+# Sets NEW_TMPDIR (no command substitution: `$(new_tmpdir)` would run in
+# a subshell and the registration would never reach the parent's array).
+new_tmpdir() {
+    NEW_TMPDIR="$(mktemp -d)"
+    CI_TMPDIRS+=("$NEW_TMPDIR")
+}
 
 # Fail fast with a clear message when the toolchain is missing — every
 # check below needs it, and a bare "command not found" mid-run is easy
@@ -50,6 +71,17 @@ find_bin() {
     return 1
 }
 
+# Assert a grep pattern holds, printing the whole file on failure so the
+# CI log shows what the command actually said instead of a bare exit 1.
+expect_grep() {
+    local pattern="$1" file="$2" what="$3"
+    if ! grep -q "$pattern" "$file"; then
+        echo "FAILED: $what (pattern '$pattern' not found). Output was:" >&2
+        cat "$file" >&2
+        exit 1
+    fi
+}
+
 # --- `adaptgear plan` smoke: needs only a manifest (buckets), no HLO.
 # First invocation computes + persists the plan; the second must be served
 # from the on-disk store with zero monitor iterations.
@@ -59,8 +91,8 @@ plan_smoke() {
         echo "plan smoke: adaptgear binary not found, skipping"
         return 0
     fi
-    local tmp
-    tmp="$(mktemp -d)"
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
     cat > "$tmp/manifest.json" <<'EOF'
 {
   "version": 1, "community": 16,
@@ -74,8 +106,8 @@ EOF
     run "$bin" plan --dataset cora --artifacts "$tmp" --explain
     echo "==> $bin plan (second run must hit the plan cache)"
     "$bin" plan --dataset cora --artifacts "$tmp" | tee "$tmp/second.txt"
-    grep -q "cache hit" "$tmp/second.txt"
-    rm -rf "$tmp"
+    expect_grep "cache hit" "$tmp/second.txt" \
+        "plan smoke: second run did not hit the plan cache"
 }
 plan_smoke
 
@@ -89,8 +121,8 @@ hybrid_smoke() {
         echo "hybrid smoke: adaptgear binary not found, skipping"
         return 0
     fi
-    local tmp
-    tmp="$(mktemp -d)"
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
     cat > "$tmp/manifest.json" <<'EOF'
 {
   "version": 1, "community": 16,
@@ -104,18 +136,45 @@ EOF
     run "$bin" plan --dataset planted-mixed --artifacts "$tmp" --explain \
         | tee "$tmp/explain.txt"
     echo "==> hybrid smoke: the plan must carry two intra classes"
-    grep -q "intra classes: 2" "$tmp/explain.txt"
-    grep -q "dense_intra" "$tmp/explain.txt"
-    grep -q "sparse_intra" "$tmp/explain.txt"
+    expect_grep "intra classes: 2" "$tmp/explain.txt" \
+        "hybrid smoke: plan did not split into two intra classes"
+    expect_grep "dense_intra" "$tmp/explain.txt" "hybrid smoke: no dense_intra class"
+    expect_grep "sparse_intra" "$tmp/explain.txt" "hybrid smoke: no sparse_intra class"
     echo "==> $bin plan (hybrid replan must hit the plan cache)"
     "$bin" plan --dataset planted-mixed --artifacts "$tmp" | tee "$tmp/second.txt"
-    grep -q "cache hit" "$tmp/second.txt"
-    rm -rf "$tmp"
+    expect_grep "cache hit" "$tmp/second.txt" \
+        "hybrid smoke: second run did not hit the plan cache"
 }
 hybrid_smoke
 
+# --- `./ci.sh bench`: the quick benchmark suite end to end.
+# Emits BENCH_{kernels,plan,train,serve}.json at the repo root, schema-
+# validates all four, proves the comparator on a known-identical baseline
+# (must pass), and gates against committed baselines/ when they exist.
+bench_mode() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "bench: adaptgear binary not found, skipping"
+        return 0
+    fi
+    run "$bin" bench --quick --out "$ROOT" --artifacts artifacts
+    run "$bin" bench --validate --out "$ROOT"
+
+    echo "==> bench: comparator self-check (a run vs itself must pass)"
+    new_tmpdir
+    local self="$NEW_TMPDIR"
+    cp "$ROOT"/BENCH_*.json "$self"/
+    run "$bin" bench --check --baseline "$self" --out "$ROOT"
+
+    if [[ -d "$ROOT/baselines" ]]; then
+        run "$bin" bench --check --baseline "$ROOT/baselines" --out "$ROOT"
+    else
+        echo "bench: no baselines/ directory — skipping the regression gate"
+        echo "bench: (to enable it: copy the emitted BENCH_*.json into baselines/ and commit)"
+    fi
+}
 if [[ "${1:-}" == "bench" ]]; then
-    run cargo bench --bench serve
+    bench_mode
 fi
 
 echo "ci.sh: all checks passed"

@@ -13,6 +13,7 @@
 
 use std::collections::HashMap;
 
+use adaptgear::bench::{BenchReport, Direction};
 use adaptgear::coordinator::{forward_cost, preprocess, ModelDims, ModelKind, Strategy};
 use adaptgear::graph::datasets::{DatasetSpec, DATASETS};
 use adaptgear::graph::generate::rmat;
@@ -231,7 +232,7 @@ fn fig4(prep: &mut Prep) {
 // ---------------------------------------------------------------------------
 // Fig. 8 — end-to-end normalized training time vs DGL/PyG (2 GPUs, 2 models)
 // ---------------------------------------------------------------------------
-fn fig8(prep: &mut Prep) {
+fn fig8(prep: &mut Prep, report: &mut BenchReport) {
     println!("\n=== Fig 8: speedup over frameworks (higher = better, AdaptGear = baseline 1.0) ===");
     let mut all_dgl = Vec::new();
     let mut all_pyg = Vec::new();
@@ -265,12 +266,16 @@ fn fig8(prep: &mut Prep) {
         geomean(&gcn_speedups),
         geomean(&gin_speedups)
     );
+    report.push("fig8/geomean_vs_dgl", geomean(&all_dgl), "x", Direction::Higher);
+    report.push("fig8/geomean_vs_pyg", geomean(&all_pyg), "x", Direction::Higher);
+    report.push("fig8/geomean_gcn", geomean(&gcn_speedups), "x", Direction::Higher);
+    report.push("fig8/geomean_gin", geomean(&gin_speedups), "x", Direction::Higher);
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 9 — vs GNNAdvisor (rabbit + metis preprocessing), A100
 // ---------------------------------------------------------------------------
-fn fig9(prep: &mut Prep) {
+fn fig9(prep: &mut Prep, report: &mut BenchReport) {
     println!("\n=== Fig 9: speedup over GNNAdvisor on A100 (GCN + GIN) ===");
     let mut rabbit = Vec::new();
     let mut metis = Vec::new();
@@ -291,12 +296,14 @@ fn fig9(prep: &mut Prep) {
         geomean(&rabbit),
         geomean(&metis)
     );
+    report.push("fig9/geomean_vs_gnna_rabbit", geomean(&rabbit), "x", Direction::Higher);
+    report.push("fig9/geomean_vs_gnna_metis", geomean(&metis), "x", Direction::Higher);
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 10 — vs PCGCN with its tile size swept 2..1024, GCN, A100
 // ---------------------------------------------------------------------------
-fn fig10(prep: &mut Prep) {
+fn fig10(prep: &mut Prep, report: &mut BenchReport) {
     println!("\n=== Fig 10: speedup over best-tile PCGCN (GCN, A100) ===");
     println!("{:<28} {:>10} {:>12}", "dataset", "best tile", "speedup");
     let mut speedups = Vec::new();
@@ -317,6 +324,7 @@ fn fig10(prep: &mut Prep) {
         println!("{:<28} {:>10} {:>11.2}x", spec.name, best_tile, best / ours);
     }
     println!("geomean: {:.2}x  (paper: 2.30x on A100)", geomean(&speedups));
+    report.push("fig10/geomean_vs_pcgcn", geomean(&speedups), "x", Direction::Higher);
 }
 
 // ---------------------------------------------------------------------------
@@ -337,7 +345,7 @@ fn fig11(prep: &mut Prep) {
 // ---------------------------------------------------------------------------
 // Fig. 12 — memory overhead of subgraph topology storage
 // ---------------------------------------------------------------------------
-fn fig12(prep: &mut Prep) {
+fn fig12(prep: &mut Prep, report: &mut BenchReport) {
     use adaptgear::coordinator::metrics::memory_breakdown;
     println!("\n=== Fig 12: topology share of peak training memory (GCN) ===");
     println!("{:<28} {:>12} {:>12} {:>10}", "dataset", "topo(MB)", "total(MB)", "topo %");
@@ -354,10 +362,9 @@ fn fig12(prep: &mut Prep) {
             m.topo_fraction() * 100.0
         );
     }
-    println!(
-        "mean topology share: {:.2}%  (paper: 4.47% average)",
-        fracs.iter().sum::<f64>() / fracs.len() as f64
-    );
+    let mean_share = fracs.iter().sum::<f64>() / fracs.len() as f64;
+    println!("mean topology share: {mean_share:.2}%  (paper: 4.47% average)");
+    report.push("fig12/mean_topo_share_pct", mean_share, "%", Direction::Lower);
 }
 
 // ---------------------------------------------------------------------------
@@ -460,6 +467,9 @@ fn main() {
 
     let t0 = std::time::Instant::now();
     let mut prep = Prep::new();
+    // Headline geomeans flow through the shared bench report schema so
+    // figure regressions gate exactly like every other BENCH_*.json.
+    let mut report = BenchReport::new("figures", false);
     if want("fig2b") {
         fig2b();
     }
@@ -473,19 +483,19 @@ fn main() {
         fig4(&mut prep);
     }
     if want("fig8") {
-        fig8(&mut prep);
+        fig8(&mut prep, &mut report);
     }
     if want("fig9") {
-        fig9(&mut prep);
+        fig9(&mut prep, &mut report);
     }
     if want("fig10") {
-        fig10(&mut prep);
+        fig10(&mut prep, &mut report);
     }
     if want("fig11") {
         fig11(&mut prep);
     }
     if want("fig12") {
-        fig12(&mut prep);
+        fig12(&mut prep, &mut report);
     }
     if want("table2") {
         table2(&mut prep);
@@ -495,6 +505,13 @@ fn main() {
     }
     if want("community") {
         ablation_community(&mut prep);
+    }
+    if !report.metrics.is_empty() {
+        report.note("scale_cap", format!("{}", vertex_cap()));
+        match report.write_at(std::path::Path::new(".")) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("figures: could not write report: {e:#}"),
+        }
     }
     println!("\n[figures done in {:.1}s]", t0.elapsed().as_secs_f64());
 }

@@ -1,74 +1,23 @@
-//! Micro-benchmarks of the native kernel schedules and the gpusim cost
-//! evaluation itself (the L3 hot paths the perf pass optimizes —
-//! EXPERIMENTS.md §Perf).
+//! Kernel microbenches — thin wrapper over `adaptgear::bench::kernels`
+//! (per-kernel spmm/pack across density classes + gpusim calibration),
+//! emitting `BENCH_kernels.json` through the shared report writer.
 //!
 //! ```text
-//! cargo bench --bench kernels
+//! cargo bench --bench kernels [-- --quick] [-- --out DIR]
 //! ```
 
-use adaptgear::graph::generate::planted_partition;
-use adaptgear::graph::{Csr, DenseBlocks};
-use adaptgear::gpusim::{kernel_cost, A100};
-use adaptgear::kernels::native;
-use adaptgear::kernels::KernelKind;
-use adaptgear::partition::{Decomposition, Propagation, Reorder};
-use adaptgear::util::bench::Bench;
-use adaptgear::util::rng::Rng;
+use adaptgear::bench::{kernels, BenchConfig};
+use adaptgear::util::cli::Args;
 
-fn main() {
-    let bench = Bench::default();
-    let mut rng = Rng::new(7);
-
-    for &(n, p_intra, p_inter, f) in
-        &[(4096usize, 0.4f64, 0.005f64, 32usize), (16384, 0.3, 0.001, 64)]
-    {
-        let g = planted_partition(n, 16, p_intra, p_inter, &mut rng);
-        let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 16, 0);
-        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
-        let blocks = DenseBlocks::from_block_diagonal_csr(&d.intra, 16);
-        let inter_trips = d.inter.to_triplets();
-        println!(
-            "\n-- n={n} f={f} intra_nnz={} inter_nnz={} --",
-            d.intra.nnz(),
-            d.inter.nnz()
-        );
-
-        bench.bench(&format!("native/csr_inter/n{n}/f{f}"), || {
-            std::hint::black_box(native::csr_inter_spmm(&d.inter, &x, f));
-        });
-        bench.bench(&format!("native/csr_intra/n{n}/f{f}"), || {
-            std::hint::black_box(native::csr_intra_spmm(&d.intra, &x, f, 16));
-        });
-        bench.bench(&format!("native/coo/n{n}/f{f}"), || {
-            std::hint::black_box(native::coo_spmm(n, &inter_trips, &x, f));
-        });
-        bench.bench(&format!("native/dense_block/n{n}/f{f}"), || {
-            std::hint::black_box(native::dense_block_spmm(&blocks, &x, f));
-        });
-        bench.bench(&format!("native/reference_spmm/n{n}/f{f}"), || {
-            std::hint::black_box(d.inter.spmm(&x, f));
-        });
-
-        // the cost-model evaluation itself is on the selector's hot path
-        bench.bench(&format!("gpusim/kernel_cost_csr/n{n}/f{f}"), || {
-            std::hint::black_box(kernel_cost(KernelKind::CsrInter, &d.inter, f, 16, &A100));
-        });
-        bench.bench(&format!("gpusim/kernel_cost_dense/n{n}/f{f}"), || {
-            std::hint::black_box(kernel_cost(KernelKind::DenseBlock, &d.intra, f, 16, &A100));
-        });
-    }
-
-    // graph-construction substrate costs
-    let mut rng = Rng::new(9);
-    let g = planted_partition(32768, 16, 0.3, 0.0005, &mut rng);
-    bench.bench("graph/gcn_normalized/n32768", || {
-        std::hint::black_box(Csr::gcn_normalized(&g));
-    });
-    let a = Csr::gcn_normalized(&g);
-    bench.bench("graph/split_block_diagonal/n32768", || {
-        std::hint::black_box(a.split_block_diagonal(16));
-    });
-    bench.bench("graph/transpose/n32768", || {
-        std::hint::black_box(a.transpose());
-    });
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = BenchConfig {
+        quick: args.flag("quick"),
+        out: args.get_or("out", ".").into(),
+        ..Default::default()
+    };
+    let report = kernels::run(&cfg)?;
+    let path = report.write_at(&cfg.out)?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

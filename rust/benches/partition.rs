@@ -1,49 +1,25 @@
-//! Partitioner benchmarks: speed and ordering quality of the METIS-like
-//! multilevel partitioner vs the rabbit-like modularity orderer — the
-//! preprocessing half of the Sec. 6.3 overhead study.
+//! Partitioner benchmarks — thin wrapper over `adaptgear::bench::plan`,
+//! whose suite absorbed the metis-vs-rabbit speed/quality study (the
+//! preprocessing half of the Sec. 6.3 overhead analysis) alongside the
+//! planner sweep and PlanStore latencies. Emits `BENCH_plan.json`
+//! through the shared report writer.
 //!
 //! ```text
-//! cargo bench --bench partition
+//! cargo bench --bench partition [-- --quick] [-- --out DIR]
 //! ```
 
-use adaptgear::graph::generate::planted_partition;
-use adaptgear::graph::stats;
-use adaptgear::partition::{metis_order, quality, rabbit_order};
-use adaptgear::util::bench::Bench;
-use adaptgear::util::rng::Rng;
+use adaptgear::bench::{plan, BenchConfig};
+use adaptgear::util::cli::Args;
 
-fn main() {
-    let bench = Bench::quick();
-
-    for &n in &[4096usize, 16384, 65536] {
-        let mut rng = Rng::new(3);
-        let g = planted_partition(n, 16, 0.45, 2.0 / n as f64, &mut rng);
-        let mut shuffle: Vec<u32> = (0..n as u32).collect();
-        rng.shuffle(&mut shuffle);
-        let hidden = g.relabel(&shuffle);
-        println!("\n-- n={n} edges={} --", hidden.directed_edge_count());
-
-        bench.bench(&format!("metis_order/n{n}"), || {
-            std::hint::black_box(metis_order(&hidden, 16, 1));
-        });
-        bench.bench(&format!("rabbit_order/n{n}"), || {
-            std::hint::black_box(rabbit_order(&hidden, 16));
-        });
-
-        // ordering quality: fraction of edges captured inside communities
-        for (name, perm) in [
-            ("metis", metis_order(&hidden, 16, 1)),
-            ("rabbit", rabbit_order(&hidden, 16)),
-        ] {
-            let reordered = hidden.relabel(&perm);
-            let split = stats::density_split(&reordered, 16);
-            let parts = quality::parts_from_order(&perm, 16);
-            println!(
-                "   quality/{name:<7} intra_frac={:.3} modularity={:.3} cut={}",
-                split.intra_edges as f64 / hidden.edge_count().max(1) as f64,
-                quality::modularity(&hidden, &parts),
-                quality::edge_cut(&hidden, &parts),
-            );
-        }
-    }
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = BenchConfig {
+        quick: args.flag("quick"),
+        out: args.get_or("out", ".").into(),
+        ..Default::default()
+    };
+    let report = plan::run(&cfg)?;
+    let path = report.write_at(&cfg.out)?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

@@ -1,115 +1,26 @@
-//! Serving throughput/latency bench: drives the `serve` subsystem with
-//! the closed-loop synthetic load generator at max-batch 1 (no
-//! coalescing) and max-batch 16, and emits `BENCH_serve.json` with
-//! throughput and tail latency for both — the batching win is the ratio.
+//! Serving throughput/latency bench — thin wrapper over
+//! `adaptgear::bench::serve` (closed-loop loadgen at max-batch 1 vs 16),
+//! emitting `BENCH_serve.json` through the shared report writer. Skips
+//! cleanly (exit 0, schema-valid skip report) when `artifacts/` is not
+//! built, mirroring the integration tests.
 //!
 //! ```text
-//! cargo bench --bench serve [-- --requests 400]
+//! cargo bench --bench serve [-- --quick] [-- --out DIR]
 //! ```
-//!
-//! Skips cleanly (exit 0) when `artifacts/` is not built, mirroring the
-//! integration tests.
 
-use std::time::Duration;
-
-use adaptgear::coordinator::ModelKind;
-use adaptgear::graph::datasets;
-use adaptgear::runtime::Engine;
-use adaptgear::serve::{
-    loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession, SloReport,
-};
+use adaptgear::bench::{serve, BenchConfig};
 use adaptgear::util::cli::Args;
-use adaptgear::util::json::{self, Json};
-
-fn serve_once(
-    engine: &Engine,
-    registry: &mut ModelRegistry,
-    deployment: &str,
-    n: usize,
-    f_data: usize,
-    max_batch: usize,
-    requests: usize,
-) -> anyhow::Result<SloReport> {
-    let cfg = ServeConfig {
-        max_batch,
-        max_wait: Duration::from_millis(2),
-        queue_depth: 256,
-    };
-    let load = LoadGenConfig { requests, clients: 32, ..Default::default() };
-    let (session, client) = ServeSession::new(engine, registry, cfg);
-    let gen = loadgen::spawn(client, deployment.to_string(), n, f_data, load);
-    let report = session.run()?;
-    gen.join();
-    Ok(report)
-}
-
-fn config_json(max_batch: usize, r: &SloReport) -> Json {
-    Json::obj(vec![
-        ("max_batch", Json::num(max_batch as f64)),
-        ("throughput_rps", Json::num(r.throughput_rps)),
-        ("p50_ms", Json::num(r.p50_ms)),
-        ("p99_ms", Json::num(r.p99_ms)),
-        ("served", Json::num(r.served as f64)),
-        ("forward_calls", Json::num(r.forward_calls as f64)),
-        ("mean_occupancy", Json::num(r.mean_occupancy)),
-        ("shed_rate", Json::num(r.shed_rate)),
-    ])
-}
 
 fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("skipping bench serve: artifacts/ not built (run `make artifacts`)");
-        return Ok(());
-    }
     let args = Args::from_env();
-    let requests = args.get_usize("requests", 400);
-    let dataset = args.get_or("dataset", "citeseer");
-
-    let engine = Engine::new(args.get_or("artifacts", "artifacts"))?;
-    let spec = datasets::find(dataset).expect("unknown dataset");
-    let mut registry = ModelRegistry::new();
-    let mut dspec = DeploymentSpec::new("bench", spec, ModelKind::Gcn);
-    dspec.steps = 40;
-    let dep = registry.deploy(&engine, dspec)?;
-    let (n, f_data) = (dep.n, dep.f_data);
-    println!(
-        "deployed {} on {} ({} vertices, kernels {})",
-        dep.model.as_str(),
-        spec.name,
-        n,
-        dep.chosen()
-    );
-
-    let unbatched = serve_once(&engine, &mut registry, "bench", n, f_data, 1, requests)?;
-    println!("\n-- max-batch 1 (no coalescing) --\n{}", unbatched.render());
-    let batched = serve_once(&engine, &mut registry, "bench", n, f_data, 16, requests)?;
-    println!("\n-- max-batch 16 --\n{}", batched.render());
-
-    let speedup = if unbatched.throughput_rps > 0.0 {
-        batched.throughput_rps / unbatched.throughput_rps
-    } else {
-        0.0
+    let cfg = BenchConfig {
+        quick: args.flag("quick"),
+        artifacts: args.get_or("artifacts", "artifacts").to_string(),
+        out: args.get_or("out", ".").into(),
+        ..Default::default()
     };
-    println!(
-        "batching speedup {speedup:.2}x ({:.1} -> {:.1} req/s, {} -> {} forwards)",
-        unbatched.throughput_rps,
-        batched.throughput_rps,
-        unbatched.forward_calls,
-        batched.forward_calls
-    );
-
-    let out = Json::obj(vec![
-        ("bench", Json::str("serve")),
-        ("dataset", Json::str(spec.name)),
-        ("requests", Json::num(requests as f64)),
-        (
-            "configs",
-            Json::Arr(vec![config_json(1, &unbatched), config_json(16, &batched)]),
-        ),
-        ("batching_speedup", Json::num(speedup)),
-        ("detail", Json::Arr(vec![unbatched.to_json(), batched.to_json()])),
-    ]);
-    std::fs::write("BENCH_serve.json", json::write(&out))?;
-    println!("wrote BENCH_serve.json");
+    let report = serve::run(&cfg)?;
+    let path = report.write_at(&cfg.out)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

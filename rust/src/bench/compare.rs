@@ -1,0 +1,510 @@
+//! Baseline comparator — the CI perf-regression gate behind
+//! `adaptgear bench --check --baseline <dir>`.
+//!
+//! Policy (each rule has a dedicated test):
+//!
+//! * Baseline and current must share the suite id and schema version
+//!   (version is enforced at load by `report::BenchReport::from_json`).
+//! * A metric present in the baseline but absent from the current run is
+//!   a failure — silently dropping a gated number is how regressions
+//!   hide. Exception: when the two runs ran at different *capability
+//!   tiers* (the `engine` / `skipped` context notes differ — e.g. the
+//!   baseline was recorded with built artifacts and CI runs on a bare
+//!   checkout), artifact-tier metrics legitimately disappear, so they
+//!   are skipped instead of failed; same-tier metrics still gate.
+//! * A metric new in the current run is informational (it becomes gated
+//!   once a baseline containing it is committed).
+//! * Quick and full profiles time different workloads; [`check_dirs`]
+//!   refuses to compare across them (flagged, not failed).
+//! * Gating uses the *baseline's* `better` direction: the committed
+//!   baseline is the contract.
+//! * `better == none` metrics are diffed but never fail.
+//! * A zero-valued baseline has no defined relative delta: equal-zero
+//!   passes, any movement in the worse direction fails.
+//! * The relative tolerance is a strict bound: `worse == tolerance`
+//!   passes, anything beyond fails.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::report::{BenchReport, Direction};
+
+/// Allowed relative degradation before a metric fails the gate.
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerance {
+    /// e.g. 0.5 = a metric may be up to 50% worse than its baseline.
+    /// Wall-clock benches on shared CI machines are noisy; deterministic
+    /// gpusim metrics regress far past this when something real breaks.
+    pub rel: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance { rel: 0.5 }
+    }
+}
+
+/// Outcome for one metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    /// Better than baseline by more than the tolerance (reported so
+    /// stale baselines get refreshed, never a failure).
+    Improved,
+    Regression,
+    /// In the baseline, absent from the current run — a failure.
+    MissingInCurrent,
+    /// In the current run, absent from the baseline — informational.
+    New,
+    /// `better == none`: diffed, never gated.
+    Info,
+    /// Absent from the current run, but the two runs were produced at
+    /// different capability tiers (artifacts vs bare checkout) — the
+    /// metric's tier did not run, so its absence is not a failure.
+    Skipped,
+}
+
+impl Verdict {
+    pub fn is_failure(&self) -> bool {
+        matches!(self, Verdict::Regression | Verdict::MissingInCurrent)
+    }
+
+    fn tag(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "ok  ",
+            Verdict::Improved => "good",
+            Verdict::Regression => "REGR",
+            Verdict::MissingInCurrent => "MISS",
+            Verdict::New => "new ",
+            Verdict::Info => "info",
+            Verdict::Skipped => "skip",
+        }
+    }
+}
+
+/// Per-metric diff.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    pub name: String,
+    pub base: Option<f64>,
+    pub current: Option<f64>,
+    /// Relative change in the *worse* direction (positive = worse), when
+    /// defined.
+    pub worse_frac: Option<f64>,
+    pub verdict: Verdict,
+}
+
+/// One suite's full diff.
+#[derive(Debug)]
+pub struct Comparison {
+    pub suite: String,
+    pub deltas: Vec<MetricDelta>,
+}
+
+impl Comparison {
+    pub fn failures(&self) -> usize {
+        self.deltas.iter().filter(|d| d.verdict.is_failure()).count()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("suite {}:\n", self.suite);
+        for d in &self.deltas {
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.4}"),
+                None => "-".to_string(),
+            };
+            let delta = match d.worse_frac {
+                Some(w) => format!("{:+.1}% worse", w * 100.0),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "  [{}] {:<48} {:>14} -> {:>14}  {delta}\n",
+                d.verdict.tag(),
+                d.name,
+                fmt(d.base),
+                fmt(d.current),
+            ));
+        }
+        let fails = self.failures();
+        out.push_str(&format!(
+            "  {} metrics, {} failures\n",
+            self.deltas.len(),
+            fails
+        ));
+        out
+    }
+}
+
+fn judge(better: Direction, base: f64, cur: f64, tol: Tolerance) -> (Option<f64>, Verdict) {
+    let dir_sign = match better {
+        Direction::None => {
+            let frac = if base != 0.0 { Some((cur - base) / base.abs()) } else { None };
+            return (frac, Verdict::Info);
+        }
+        Direction::Lower => 1.0,
+        Direction::Higher => -1.0,
+    };
+    if base == 0.0 {
+        // No relative scale: only an exact hold (or an improvement) passes.
+        let worse = cur * dir_sign > 0.0;
+        return (None, if worse { Verdict::Regression } else { Verdict::Pass });
+    }
+    let worse_frac = dir_sign * (cur - base) / base.abs();
+    let verdict = if worse_frac > tol.rel {
+        Verdict::Regression
+    } else if worse_frac < -tol.rel {
+        Verdict::Improved
+    } else {
+        Verdict::Pass
+    };
+    (Some(worse_frac), verdict)
+}
+
+/// Diff `current` against `baseline` (same suite).
+pub fn compare(
+    baseline: &BenchReport,
+    current: &BenchReport,
+    tol: Tolerance,
+) -> Result<Comparison> {
+    if baseline.suite != current.suite {
+        bail!(
+            "cannot compare suite {:?} against baseline suite {:?}",
+            current.suite,
+            baseline.suite
+        );
+    }
+    // Capability tier: suites note how they were produced ("engine" for
+    // the train tiers, "skipped" for a no-artifacts serve run). When the
+    // tiers differ, metrics only the richer tier emits are expected to
+    // be absent — skipped, not failed.
+    let tier_differs = baseline.context.get("engine") != current.context.get("engine")
+        || baseline.context.contains_key("skipped") != current.context.contains_key("skipped");
+    let mut deltas = Vec::new();
+    for m in &baseline.metrics {
+        match current.get(&m.name) {
+            None => deltas.push(MetricDelta {
+                name: m.name.clone(),
+                base: Some(m.value),
+                current: None,
+                worse_frac: None,
+                verdict: if tier_differs {
+                    Verdict::Skipped
+                } else {
+                    Verdict::MissingInCurrent
+                },
+            }),
+            Some(c) => {
+                let (worse_frac, verdict) = judge(m.better, m.value, c.value, tol);
+                deltas.push(MetricDelta {
+                    name: m.name.clone(),
+                    base: Some(m.value),
+                    current: Some(c.value),
+                    worse_frac,
+                    verdict,
+                });
+            }
+        }
+    }
+    for c in &current.metrics {
+        if baseline.get(&c.name).is_none() {
+            deltas.push(MetricDelta {
+                name: c.name.clone(),
+                base: None,
+                current: Some(c.value),
+                worse_frac: None,
+                verdict: Verdict::New,
+            });
+        }
+    }
+    Ok(Comparison { suite: baseline.suite.clone(), deltas })
+}
+
+/// Result of checking a set of suites across two directories.
+#[derive(Debug)]
+pub struct CheckOutcome {
+    pub comparisons: Vec<Comparison>,
+    /// Suites with no committed baseline file (skipped, not failed).
+    pub skipped: Vec<String>,
+    /// Suites where baseline and current ran different profiles (quick
+    /// vs full). The profiles time different workloads, so comparing
+    /// them would produce spurious verdicts — these suites are NOT
+    /// compared, only flagged.
+    pub profile_mismatch: Vec<String>,
+}
+
+impl CheckOutcome {
+    pub fn failures(&self) -> usize {
+        self.comparisons.iter().map(Comparison::failures).sum()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.comparisons {
+            out.push_str(&c.render());
+        }
+        for s in &self.skipped {
+            out.push_str(&format!(
+                "suite {s}: no baseline file — skipped (commit BENCH_{s}.json into the baseline dir to gate it)\n"
+            ));
+        }
+        for s in &self.profile_mismatch {
+            out.push_str(&format!(
+                "suite {s}: WARNING quick/full profile mismatch — different workloads, not compared (re-record the baseline at the profile CI runs)\n"
+            ));
+        }
+        out.push_str(&format!("total failures: {}\n", self.failures()));
+        out
+    }
+}
+
+/// Check every requested suite's current report (in `current_dir`)
+/// against its committed baseline (in `baseline_dir`). A missing
+/// *current* file is an error (the suite was not run); a missing
+/// *baseline* file skips that suite with a message.
+pub fn check_dirs(
+    baseline_dir: &Path,
+    current_dir: &Path,
+    suites: &[&str],
+    tol: Tolerance,
+) -> Result<CheckOutcome> {
+    let mut out = CheckOutcome {
+        comparisons: Vec::new(),
+        skipped: Vec::new(),
+        profile_mismatch: Vec::new(),
+    };
+    for &suite in suites {
+        let cur_path = BenchReport::path_in(current_dir, suite);
+        let current = BenchReport::load(&cur_path)
+            .with_context(|| format!("suite {suite}: run `adaptgear bench` first"))?;
+        let base_path = BenchReport::path_in(baseline_dir, suite);
+        if !base_path.exists() {
+            out.skipped.push(suite.to_string());
+            continue;
+        }
+        let baseline =
+            BenchReport::load(&base_path).with_context(|| format!("suite {suite}: baseline"))?;
+        if baseline.quick != current.quick {
+            // Different workload profiles: a diff would be meaningless
+            // and gate on noise-vs-noise — refuse, loudly.
+            out.profile_mismatch.push(suite.to_string());
+            continue;
+        }
+        out.comparisons.push(compare(&baseline, &current, tol)?);
+    }
+    Ok(out)
+}
+
+/// Load + validate each suite's report in `dir` (schema validation is
+/// the load path itself). Errors name the first offending file.
+pub fn validate_dir(dir: &Path, suites: &[&str]) -> Result<Vec<BenchReport>> {
+    let mut reports = Vec::new();
+    for &suite in suites {
+        let path = BenchReport::path_in(dir, suite);
+        let report = BenchReport::load(&path)?;
+        if report.suite != suite {
+            bail!(
+                "{} declares suite {:?}, expected {suite:?}",
+                path.display(),
+                report.suite
+            );
+        }
+        reports.push(report);
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(suite: &str, metrics: &[(&str, f64, Direction)]) -> BenchReport {
+        let mut r = BenchReport::new(suite, true);
+        for &(name, value, better) in metrics {
+            r.push(name, value, "us", better);
+        }
+        r
+    }
+
+    fn verdict_of(c: &Comparison, name: &str) -> Verdict {
+        c.deltas.iter().find(|d| d.name == name).unwrap().verdict
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = report("kernels", &[("a", 10.0, Direction::Lower), ("b", 5.0, Direction::Higher)]);
+        let c = compare(&r, &r, Tolerance::default()).unwrap();
+        assert_eq!(c.failures(), 0);
+        assert!(c.deltas.iter().all(|d| d.verdict == Verdict::Pass));
+    }
+
+    #[test]
+    fn injected_2x_regression_fails() {
+        let base = report("kernels", &[("a", 100.0, Direction::Lower)]);
+        let cur = report("kernels", &[("a", 200.0, Direction::Lower)]);
+        let c = compare(&base, &cur, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "a"), Verdict::Regression);
+        assert_eq!(c.failures(), 1);
+    }
+
+    #[test]
+    fn tolerance_boundary_is_inclusive() {
+        // exactly at the bound passes; epsilon beyond fails
+        let base = report("k", &[("a", 100.0, Direction::Lower)]);
+        let at = report("k", &[("a", 150.0, Direction::Lower)]);
+        let past = report("k", &[("a", 150.0001, Direction::Lower)]);
+        let tol = Tolerance { rel: 0.5 };
+        assert_eq!(verdict_of(&compare(&base, &at, tol).unwrap(), "a"), Verdict::Pass);
+        assert_eq!(verdict_of(&compare(&base, &past, tol).unwrap(), "a"), Verdict::Regression);
+    }
+
+    #[test]
+    fn higher_is_better_inverts_the_gate() {
+        let base = report("k", &[("rps", 100.0, Direction::Higher)]);
+        let worse = report("k", &[("rps", 40.0, Direction::Higher)]);
+        let better = report("k", &[("rps", 400.0, Direction::Higher)]);
+        let c = compare(&base, &worse, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "rps"), Verdict::Regression);
+        let c = compare(&base, &better, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "rps"), Verdict::Improved);
+        assert_eq!(c.failures(), 0, "improvement is not a failure");
+    }
+
+    #[test]
+    fn tier_mismatch_skips_artifact_metrics_but_gates_shared_ones() {
+        // Baseline recorded with built artifacts; CI runs a bare
+        // checkout: the PJRT-tier metric is skipped, the engine-free
+        // metric still gates (and here, still regresses).
+        let mut base = report(
+            "train",
+            &[
+                ("prep/cora", 10.0, Direction::Lower),
+                ("train/cora/mean_step_ms", 3.0, Direction::Lower),
+            ],
+        );
+        base.note("engine", "pjrt");
+        let mut cur = report("train", &[("prep/cora", 100.0, Direction::Lower)]);
+        cur.note("engine", "native-only");
+        let c = compare(&base, &cur, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "train/cora/mean_step_ms"), Verdict::Skipped);
+        assert_eq!(verdict_of(&c, "prep/cora"), Verdict::Regression);
+        assert_eq!(c.failures(), 1, "only the same-tier regression fails");
+
+        // serve's skip-report marker works the same way
+        let mut base = report("serve", &[("serve/mb16/p99_ms", 5.0, Direction::Lower)]);
+        base.note("dataset", "citeseer");
+        let mut cur = report("serve", &[]);
+        cur.note("skipped", "artifacts not available");
+        let c = compare(&base, &cur, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "serve/mb16/p99_ms"), Verdict::Skipped);
+        assert_eq!(c.failures(), 0);
+    }
+
+    #[test]
+    fn metric_missing_from_current_fails() {
+        let base = report("k", &[("a", 1.0, Direction::Lower), ("b", 1.0, Direction::Lower)]);
+        let cur = report("k", &[("a", 1.0, Direction::Lower)]);
+        let c = compare(&base, &cur, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "b"), Verdict::MissingInCurrent);
+        assert_eq!(c.failures(), 1);
+    }
+
+    #[test]
+    fn metric_missing_from_baseline_is_informational() {
+        let base = report("k", &[("a", 1.0, Direction::Lower)]);
+        let cur = report("k", &[("a", 1.0, Direction::Lower), ("b", 9.0, Direction::Lower)]);
+        let c = compare(&base, &cur, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "b"), Verdict::New);
+        assert_eq!(c.failures(), 0);
+    }
+
+    #[test]
+    fn zero_valued_baseline_rules() {
+        // equal-zero holds; any worse-direction movement fails; the
+        // improvement direction passes.
+        let base = report(
+            "k",
+            &[("errs", 0.0, Direction::Lower), ("rps", 0.0, Direction::Higher)],
+        );
+        let hold = report(
+            "k",
+            &[("errs", 0.0, Direction::Lower), ("rps", 7.0, Direction::Higher)],
+        );
+        let c = compare(&base, &hold, Tolerance::default()).unwrap();
+        assert_eq!(c.failures(), 0);
+        let regress = report(
+            "k",
+            &[("errs", 0.1, Direction::Lower), ("rps", 0.0, Direction::Higher)],
+        );
+        let c = compare(&base, &regress, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "errs"), Verdict::Regression);
+        assert_eq!(verdict_of(&c, "rps"), Verdict::Pass);
+    }
+
+    #[test]
+    fn none_direction_never_fails() {
+        let base = report("k", &[("ratio", 1.0, Direction::None)]);
+        let cur = report("k", &[("ratio", 50.0, Direction::None)]);
+        let c = compare(&base, &cur, Tolerance::default()).unwrap();
+        assert_eq!(verdict_of(&c, "ratio"), Verdict::Info);
+        assert_eq!(c.failures(), 0);
+    }
+
+    #[test]
+    fn suite_mismatch_is_an_error() {
+        let a = report("kernels", &[]);
+        let b = report("serve", &[]);
+        assert!(compare(&a, &b, Tolerance::default()).is_err());
+    }
+
+    #[test]
+    fn check_dirs_end_to_end() {
+        let root = std::env::temp_dir().join(format!(
+            "adaptgear-checkdirs-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let base_dir = root.join("base");
+        let cur_dir = root.join("cur");
+        report("kernels", &[("a", 100.0, Direction::Lower)])
+            .write_at(&base_dir)
+            .unwrap();
+        report("kernels", &[("a", 100.0, Direction::Lower)])
+            .write_at(&cur_dir)
+            .unwrap();
+        report("plan", &[("p", 1.0, Direction::Lower)])
+            .write_at(&cur_dir)
+            .unwrap();
+
+        // kernels gated + passes; plan has no baseline -> skipped
+        let out = check_dirs(&base_dir, &cur_dir, &["kernels", "plan"], Tolerance::default())
+            .unwrap();
+        assert_eq!(out.failures(), 0);
+        assert_eq!(out.skipped, vec!["plan".to_string()]);
+        assert!(out.render().contains("no baseline file"));
+
+        // a missing CURRENT file is an error, not a skip
+        assert!(check_dirs(&base_dir, &cur_dir, &["serve"], Tolerance::default()).is_err());
+
+        // a quick-vs-full profile mismatch is flagged and NOT compared —
+        // even a 10x "regression" cannot fail across profiles
+        let mut full_base = BenchReport::new("kernels", false);
+        full_base.push("a", 10.0, "us", Direction::Lower);
+        full_base.write_at(&base_dir).unwrap();
+        let mut quick_cur = BenchReport::new("kernels", true);
+        quick_cur.push("a", 100.0, "us", Direction::Lower);
+        quick_cur.write_at(&cur_dir).unwrap();
+        let out =
+            check_dirs(&base_dir, &cur_dir, &["kernels"], Tolerance::default()).unwrap();
+        assert_eq!(out.failures(), 0);
+        assert!(out.comparisons.is_empty());
+        assert_eq!(out.profile_mismatch, vec!["kernels".to_string()]);
+        assert!(out.render().contains("profile mismatch"));
+
+        // validate_dir: present suites validate; absent ones error
+        assert!(validate_dir(&cur_dir, &["kernels", "plan"]).is_ok());
+        assert!(validate_dir(&cur_dir, &["serve"]).is_err());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

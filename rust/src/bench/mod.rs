@@ -1,0 +1,106 @@
+//! Deterministic benchmark subsystem — the measurement backbone every
+//! perf PR gates on (DESIGN.md Sec. 9).
+//!
+//! Four fixed-workload suites emit schema-versioned `BENCH_*.json`
+//! reports through one writer ([`report::BenchReport`]):
+//!
+//! | suite     | covers                                                |
+//! |-----------|-------------------------------------------------------|
+//! | `kernels` | per-kernel spmm + pack across density classes, plus   |
+//! |           | the gpusim calibration cross-check                    |
+//! | `plan`    | partitioner speed/quality, planner sweep, PlanStore   |
+//! |           | hit latency, deterministic decision costs             |
+//! | `train`   | preprocess + native epoch + projected cost; real PJRT |
+//! |           | steps when artifacts exist                            |
+//! | `serve`   | loadgen p50/p99/throughput at max-batch 1 and 16      |
+//!
+//! The `adaptgear bench` subcommand runs them; `bench --check --baseline
+//! <dir>` diffs fresh reports against committed baselines with
+//! [`compare`] and exits non-zero on regression; `bench --validate`
+//! schema-checks emitted files. The targets under `rust/benches/` are
+//! thin wrappers over these suites, so `cargo bench` and CI gate on the
+//! same numbers.
+//!
+//! Workloads are seeded and fixed per suite: rerunning a suite on the
+//! same machine re-times the *identical* computation. `--quick` swaps in
+//! the reduced profile (smaller graphs, shorter sampling budgets) used
+//! by `./ci.sh bench`; quick and full reports are flagged when compared
+//! against each other.
+
+pub mod compare;
+pub mod kernels;
+pub mod plan;
+pub mod report;
+pub mod serve;
+pub mod train;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+pub use compare::{check_dirs, compare, validate_dir, CheckOutcome, Comparison, Tolerance, Verdict};
+pub use report::{BenchReport, Direction, Metric, SCHEMA_VERSION};
+
+use crate::util::bench::Bench;
+
+/// The suites `bench` runs (and `--validate`/`--check` expect) by default.
+pub const SUITES: [&str; 4] = ["kernels", "plan", "train", "serve"];
+
+/// Shared knobs for one suite invocation.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Reduced workload + sampling profile (CI mode).
+    pub quick: bool,
+    /// Artifacts directory for the PJRT-backed tiers (train/serve).
+    pub artifacts: String,
+    /// Where `BENCH_*.json` files are written.
+    pub out: PathBuf,
+    /// Workload seed — part of the suite contract; change it and every
+    /// baseline must be re-recorded.
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            quick: false,
+            artifacts: "artifacts".to_string(),
+            out: PathBuf::from("."),
+            seed: 7,
+        }
+    }
+}
+
+/// The measurement profile suites sample with.
+pub(crate) fn measurer(quick: bool) -> Bench {
+    if quick {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+/// Run one suite by name.
+pub fn run_suite(name: &str, cfg: &BenchConfig) -> Result<BenchReport> {
+    match name {
+        "kernels" => kernels::run(cfg),
+        "plan" => plan::run(cfg),
+        "train" => train::run(cfg),
+        "serve" => serve::run(cfg),
+        other => bail!("unknown bench suite {other:?} (expected one of {SUITES:?})"),
+    }
+}
+
+/// Run `names` (or every suite when empty) and write each report into
+/// `cfg.out`; returns the written paths.
+pub fn run_and_write(names: &[&str], cfg: &BenchConfig) -> Result<Vec<PathBuf>> {
+    let names: Vec<&str> = if names.is_empty() { SUITES.to_vec() } else { names.to_vec() };
+    let mut paths = Vec::new();
+    for name in names {
+        let report = run_suite(name, cfg)?;
+        let path = report.write_at(&cfg.out)?;
+        println!("wrote {}", path.display());
+        paths.push(path);
+    }
+    Ok(paths)
+}

@@ -1,0 +1,192 @@
+//! Plan suite: partitioner speed/quality, planner sweep latency, the
+//! hybrid threshold sweep, and PlanStore save/hit latency.
+//!
+//! Everything here is engine-free (gpusim surface + on-disk store), so
+//! the suite gates on a bare checkout. Alongside the wall-clock numbers
+//! it records the *deterministic* decision surface — projected forward
+//! cost and assignment cost of the chosen plan — which is noise-free and
+//! therefore the tightest regression gate in the whole bench subsystem:
+//! any cost-model or planner change moves these digits.
+
+use anyhow::Result;
+
+use crate::coordinator::ModelKind;
+use crate::graph::generate::{planted_partition, planted_partition_mixed};
+use crate::graph::stats;
+use crate::gpusim::A100;
+use crate::partition::{metis_order, quality, rabbit_order, Decomposition, Propagation, Reorder};
+use crate::plan::{
+    hybrid, CachedPlanner, MonitorPlanner, PlanRequest, PlanStore, Planner, SimCostPlanner,
+};
+use crate::runtime::BucketInfo;
+use crate::util::rng::Rng;
+
+use super::report::{BenchReport, Direction};
+use super::BenchConfig;
+
+const COMMUNITY: usize = 16;
+
+fn bucket_for(d: &Decomposition) -> BucketInfo {
+    BucketInfo {
+        name: "bench".to_string(),
+        vertices: d.graph.n,
+        edges: d.intra.nnz().max(d.inter.nnz()),
+        features: 32,
+        hidden: 32,
+        classes: 8,
+        blocks: d.graph.n.div_ceil(COMMUNITY),
+    }
+}
+
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new("plan", cfg.quick);
+    let bench = super::measurer(cfg.quick);
+    let n = if cfg.quick { 2048 } else { 16384 };
+
+    // ---- partitioners: speed and ordering quality on a hidden-community
+    // planted graph (the preprocessing half of the Sec. 6.3 overheads)
+    let mut rng = Rng::new(cfg.seed ^ 0x9a57);
+    let g = planted_partition(n, COMMUNITY, 0.45, 2.0 / n as f64, &mut rng);
+    let mut shuffle: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut shuffle);
+    let hidden = g.relabel(&shuffle);
+    report.note("partition.workload", format!("n={n} edges={}", hidden.directed_edge_count()));
+    println!("\n-- plan: partitioners on n={n} --");
+
+    let m = bench.bench("partition/metis_order", || {
+        std::hint::black_box(metis_order(&hidden, COMMUNITY, 1));
+    });
+    report.push("partition/metis_order", m.median_s() * 1e6, "us", Direction::Lower);
+    let m = bench.bench("partition/rabbit_order", || {
+        std::hint::black_box(rabbit_order(&hidden, COMMUNITY));
+    });
+    report.push("partition/rabbit_order", m.median_s() * 1e6, "us", Direction::Lower);
+
+    // ordering quality is deterministic — exact regression gates
+    for (name, perm) in [
+        ("metis", metis_order(&hidden, COMMUNITY, 1)),
+        ("rabbit", rabbit_order(&hidden, COMMUNITY)),
+    ] {
+        let reordered = hidden.relabel(&perm);
+        let split = stats::density_split(&reordered, COMMUNITY);
+        let parts = quality::parts_from_order(&perm, COMMUNITY);
+        let intra_frac = split.intra_edges as f64 / hidden.edge_count().max(1) as f64;
+        report.push(
+            format!("partition/{name}/intra_frac"),
+            intra_frac,
+            "frac",
+            Direction::Higher,
+        );
+        report.push(
+            format!("partition/{name}/modularity"),
+            quality::modularity(&hidden, &parts),
+            "q",
+            Direction::Higher,
+        );
+        println!("   quality/{name}: intra_frac={intra_frac:.3}");
+    }
+
+    // ---- planner latency over the decomposed graph
+    let d = Decomposition::build(&hidden, Reorder::Metis, Propagation::GcnNormalized, COMMUNITY, 1);
+    let bucket = bucket_for(&d);
+    let req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+
+    let m = bench.bench("planner/simcost", || {
+        std::hint::black_box(SimCostPlanner::new(&A100).plan(&req).unwrap());
+    });
+    report.push("planner/simcost", m.median_s() * 1e6, "us", Direction::Lower);
+
+    let mut monitor = MonitorPlanner::sim(&A100, 3);
+    let m = bench.bench("planner/monitor_sim", || {
+        std::hint::black_box(monitor.plan(&req).unwrap());
+    });
+    report.push("planner/monitor_sim", m.median_s() * 1e6, "us", Direction::Lower);
+
+    // ---- hybrid threshold sweep on a mixed-density diagonal
+    let n_mixed = if cfg.quick { 4096 } else { 32768 };
+    let mut rng = Rng::new(cfg.seed ^ 0x4217);
+    let gm =
+        planted_partition_mixed(n_mixed, COMMUNITY, 0.9, 0.01, 3, 0.3 / n_mixed as f64, &mut rng);
+    let dm = Decomposition::build(&gm, Reorder::Identity, Propagation::GcnNormalized, COMMUNITY, 0);
+    let profile = dm.intra_block_profile();
+    let m = bench.bench("planner/hybrid_sweep", || {
+        std::hint::black_box(hybrid::sweep(&profile, &dm.inter, &[32, 32], usize::MAX, &A100));
+    });
+    report.push("planner/hybrid_sweep", m.median_s() * 1e6, "us", Direction::Lower);
+
+    // ---- plan store: save, on-disk hit, and warm cached-planner plan
+    let plan = SimCostPlanner::new(&A100).plan(&req)?;
+    let store_dir =
+        std::env::temp_dir().join(format!("adaptgear-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = PlanStore::new(&store_dir);
+    let m = bench.bench("store/save", || {
+        store.save(&plan).unwrap();
+    });
+    report.push("store/save", m.median_s() * 1e6, "us", Direction::Lower);
+    let fp = plan.fingerprint;
+    let m = bench.bench("store/hit", || {
+        std::hint::black_box(store.load(fp).unwrap());
+    });
+    report.push("store/hit", m.median_s() * 1e6, "us", Direction::Lower);
+
+    let mut cached = CachedPlanner::new(store.clone(), MonitorPlanner::sim(&A100, 3));
+    cached.plan(&req)?; // warm
+    let m = bench.bench("planner/cached_warm", || {
+        std::hint::black_box(cached.plan(&req).unwrap());
+    });
+    report.push("planner/cached_warm", m.median_s() * 1e6, "us", Direction::Lower);
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    // ---- deterministic decision surface (noise-free gates)
+    report.push(
+        "plan/projected_fwd_us",
+        plan.projected.total_us(),
+        "us",
+        Direction::Lower,
+    );
+    report.push(
+        "plan/assignment_cost_us",
+        plan.assignment.total_cost_us(),
+        "us",
+        Direction::Lower,
+    );
+    report.note("plan.chosen", plan.chosen.to_string());
+    println!(
+        "plan: chosen {} | projected {:.1}us/fwd (deterministic)",
+        plan.chosen,
+        plan.projected.total_us()
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn quick_run_is_schema_valid_and_deterministic_where_promised() {
+        let cfg = BenchConfig { quick: true, out: PathBuf::from("."), ..Default::default() };
+        let a = run(&cfg).unwrap();
+        assert_eq!(a.suite, "plan");
+        for name in [
+            "partition/metis_order",
+            "partition/metis/intra_frac",
+            "planner/simcost",
+            "planner/hybrid_sweep",
+            "store/hit",
+            "planner/cached_warm",
+            "plan/projected_fwd_us",
+        ] {
+            assert!(a.get(name).is_some(), "missing metric {name}");
+        }
+        // the decision-surface metrics are bit-deterministic across runs
+        let b = run(&cfg).unwrap();
+        for name in
+            ["plan/projected_fwd_us", "plan/assignment_cost_us", "partition/metis/intra_frac"]
+        {
+            assert_eq!(a.get(name).unwrap().value, b.get(name).unwrap().value, "{name} drifted");
+        }
+    }
+}

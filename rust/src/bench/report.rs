@@ -1,0 +1,339 @@
+//! Schema-versioned benchmark reports — the one `BENCH_*.json` shape.
+//!
+//! Every suite (and every wrapper under `rust/benches/`) emits results
+//! through [`BenchReport`], so baselines recorded by one PR stay
+//! comparable against numbers emitted by the next. The schema is
+//! deliberately flat: a suite id, the run profile, free-form string
+//! context, and a list of named scalar [`Metric`]s each tagged with the
+//! direction that counts as *better* — which is all the comparator
+//! (`bench::compare`) needs to gate a regression.
+//!
+//! [`SCHEMA_VERSION`] gates decoding: a file written by a different
+//! schema fails to load with a distinct error instead of silently
+//! comparing incompatible shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Bump when the report shape changes incompatibly; the comparator
+/// refuses to diff across versions.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Which way a metric improves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller is better (latency, cost).
+    Lower,
+    /// Larger is better (throughput, quality fractions).
+    Higher,
+    /// Informational only — recorded and diffed but never gated
+    /// (calibration ratios, losses without a quality contract).
+    None,
+}
+
+impl Direction {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Direction::Lower => "lower",
+            Direction::Higher => "higher",
+            Direction::None => "none",
+        }
+    }
+}
+
+impl std::str::FromStr for Direction {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Direction, Self::Err> {
+        match s {
+            "lower" => Ok(Direction::Lower),
+            "higher" => Ok(Direction::Higher),
+            "none" => Ok(Direction::None),
+            other => Err(anyhow!("unknown direction {other:?} (expected lower|higher|none)")),
+        }
+    }
+}
+
+/// One named scalar result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+    pub better: Direction,
+}
+
+/// One suite's results for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Suite id; the file name is derived from it (`BENCH_<suite>.json`).
+    pub suite: String,
+    /// True when the run used the reduced `--quick` workload profile.
+    /// Quick and full numbers are not comparable; the comparator warns
+    /// when the profiles differ.
+    pub quick: bool,
+    /// Free-form provenance (workload dims, skip reasons, chosen plans).
+    pub context: BTreeMap<String, String>,
+    pub metrics: Vec<Metric>,
+}
+
+impl BenchReport {
+    pub fn new(suite: impl Into<String>, quick: bool) -> BenchReport {
+        BenchReport {
+            suite: suite.into(),
+            quick,
+            context: BTreeMap::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Record a context string (overwrites an existing key).
+    pub fn note(&mut self, key: impl Into<String>, value: impl Into<String>) {
+        self.context.insert(key.into(), value.into());
+    }
+
+    /// Append a metric. Names must be unique within a report and values
+    /// finite — both are suite programming errors, caught loudly here
+    /// rather than emitted as an unparseable or ambiguous file.
+    pub fn push(&mut self, name: impl Into<String>, value: f64, unit: &str, better: Direction) {
+        let name = name.into();
+        assert!(value.is_finite(), "metric {name:?} has non-finite value {value}");
+        assert!(
+            self.get(&name).is_none(),
+            "duplicate metric name {name:?} in suite {}",
+            self.suite
+        );
+        self.metrics.push(Metric { name, value, unit: unit.to_string(), better });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// Canonical file name for a suite.
+    pub fn file_name(suite: &str) -> String {
+        format!("BENCH_{suite}.json")
+    }
+
+    /// Canonical path of a suite's report inside `dir`.
+    pub fn path_in(dir: &Path, suite: &str) -> PathBuf {
+        dir.join(Self::file_name(suite))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
+            ("suite", Json::str(self.suite.clone())),
+            ("quick", Json::Bool(self.quick)),
+            (
+                "context",
+                Json::Obj(
+                    self.context
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "metrics",
+                Json::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("name", Json::str(m.name.clone())),
+                                ("value", Json::num(m.value)),
+                                ("unit", Json::str(m.unit.clone())),
+                                ("better", Json::str(m.better.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Strict decode: this IS the schema validator — every rule a report
+    /// must satisfy is enforced here, so `load` and `--validate` cannot
+    /// drift apart.
+    pub fn from_json(v: &Json) -> Result<BenchReport> {
+        let version = v
+            .get("schema_version")
+            .as_f64()
+            .ok_or_else(|| anyhow!("report missing schema_version"))?;
+        if version != SCHEMA_VERSION as f64 {
+            bail!(
+                "schema version mismatch: file is v{version}, this binary reads v{SCHEMA_VERSION} — re-record the baseline"
+            );
+        }
+        let suite = v
+            .get("suite")
+            .as_str()
+            .ok_or_else(|| anyhow!("report missing suite"))?;
+        if suite.is_empty() {
+            bail!("report suite must be non-empty");
+        }
+        let quick = v
+            .get("quick")
+            .as_bool()
+            .ok_or_else(|| anyhow!("report missing quick flag"))?;
+        let mut context = BTreeMap::new();
+        if let Some(obj) = v.get("context").as_obj() {
+            for (k, val) in obj {
+                let s = val
+                    .as_str()
+                    .ok_or_else(|| anyhow!("context entry {k:?} must be a string"))?;
+                context.insert(k.clone(), s.to_string());
+            }
+        }
+        let raw = v
+            .get("metrics")
+            .as_arr()
+            .ok_or_else(|| anyhow!("report missing metrics array"))?;
+        let mut metrics: Vec<Metric> = Vec::with_capacity(raw.len());
+        for m in raw {
+            let name = m
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("metric missing name"))?;
+            if name.is_empty() {
+                bail!("metric name must be non-empty");
+            }
+            if metrics.iter().any(|x| x.name == name) {
+                bail!("duplicate metric name {name:?}");
+            }
+            let value = m
+                .get("value")
+                .as_f64()
+                .ok_or_else(|| anyhow!("metric {name:?} missing numeric value"))?;
+            if !value.is_finite() {
+                bail!("metric {name:?} has non-finite value");
+            }
+            metrics.push(Metric {
+                name: name.to_string(),
+                value,
+                unit: m
+                    .get("unit")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("metric {name:?} missing unit"))?
+                    .to_string(),
+                better: m
+                    .get("better")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("metric {name:?} missing better"))?
+                    .parse()
+                    .with_context(|| format!("metric {name:?}"))?,
+            });
+        }
+        Ok(BenchReport { suite: suite.to_string(), quick, context, metrics })
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir`; returns the path.
+    pub fn write_at(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating report dir {}", dir.display()))?;
+        let path = Self::path_in(dir, &self.suite);
+        std::fs::write(&path, json::write(&self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load and validate one report file.
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v).with_context(|| format!("validating {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        let mut r = BenchReport::new("kernels", true);
+        r.note("workload.dense", "n=2048 f=32");
+        r.push("spmm/csr_intra/dense", 12.5, "us", Direction::Lower);
+        r.push("serve/throughput", 810.0, "rps", Direction::Higher);
+        r.push("calib/ratio", 0.4, "x", Direction::None);
+        r
+    }
+
+    #[test]
+    fn roundtrips_losslessly() {
+        let r = sample();
+        let text = json::write(&r.to_json());
+        let back = BenchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn schema_version_mismatch_is_a_distinct_error() {
+        let Json::Obj(mut obj) = sample().to_json() else { unreachable!() };
+        obj.insert("schema_version".into(), Json::num(99.0));
+        let err = BenchReport::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(err.to_string().contains("schema version mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_malformed_reports() {
+        for text in [
+            "{}",
+            r#"{"schema_version":1}"#,
+            r#"{"schema_version":1,"suite":"","quick":false,"metrics":[]}"#,
+            r#"{"schema_version":1,"suite":"k","quick":false}"#,
+            r#"{"schema_version":1,"suite":"k","quick":false,
+                "metrics":[{"name":"a","value":1,"unit":"us","better":"sideways"}]}"#,
+            r#"{"schema_version":1,"suite":"k","quick":false,
+                "metrics":[{"name":"a","value":1,"unit":"us","better":"lower"},
+                            {"name":"a","value":2,"unit":"us","better":"lower"}]}"#,
+            r#"{"schema_version":1,"suite":"k","quick":false,
+                "metrics":[{"name":"a","unit":"us","better":"lower"}]}"#,
+        ] {
+            let v = json::parse(text).unwrap();
+            assert!(BenchReport::from_json(&v).is_err(), "accepted: {text}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate metric name")]
+    fn push_rejects_duplicate_names() {
+        let mut r = BenchReport::new("x", false);
+        r.push("a", 1.0, "us", Direction::Lower);
+        r.push("a", 2.0, "us", Direction::Lower);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn push_rejects_non_finite_values() {
+        let mut r = BenchReport::new("x", false);
+        r.push("a", f64::INFINITY, "us", Direction::Lower);
+    }
+
+    #[test]
+    fn write_and_load() {
+        let dir = std::env::temp_dir().join(format!(
+            "adaptgear-benchreport-{}-{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = sample();
+        let path = r.write_at(&dir).unwrap();
+        assert_eq!(path, BenchReport::path_in(&dir, "kernels"));
+        assert_eq!(BenchReport::load(&path).unwrap(), r);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_names_are_canonical() {
+        assert_eq!(BenchReport::file_name("serve"), "BENCH_serve.json");
+    }
+}

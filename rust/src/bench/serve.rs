@@ -1,0 +1,129 @@
+//! Serve suite: closed-loop loadgen against the micro-batched serving
+//! runtime at max-batch 1 (no coalescing) and max-batch 16 — throughput,
+//! tail latency, and the batching win.
+//!
+//! Needs built artifacts (a PJRT engine); on a bare checkout it emits a
+//! schema-valid report with zero metrics and a `skipped` context note, so
+//! `bench --validate` still passes and the comparator simply has nothing
+//! to gate until a machine with artifacts records a baseline.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::ModelKind;
+use crate::graph::datasets;
+use crate::runtime::Engine;
+use crate::serve::{
+    loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession, SloReport,
+};
+
+use super::report::{BenchReport, Direction};
+use super::BenchConfig;
+
+fn serve_once(
+    engine: &Engine,
+    registry: &mut ModelRegistry,
+    deployment: &str,
+    n: usize,
+    f_data: usize,
+    max_batch: usize,
+    requests: usize,
+) -> Result<SloReport> {
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 256,
+    };
+    let load = LoadGenConfig { requests, clients: 32, ..Default::default() };
+    let (session, client) = ServeSession::new(engine, registry, cfg);
+    let gen = loadgen::spawn(client, deployment.to_string(), n, f_data, load);
+    let report = session.run()?;
+    gen.join();
+    Ok(report)
+}
+
+fn push_slo(report: &mut BenchReport, tag: &str, r: &SloReport) {
+    report.push(format!("serve/{tag}/throughput_rps"), r.throughput_rps, "rps", Direction::Higher);
+    report.push(format!("serve/{tag}/p50_ms"), r.p50_ms, "ms", Direction::Lower);
+    report.push(format!("serve/{tag}/p99_ms"), r.p99_ms, "ms", Direction::Lower);
+    report.push(format!("serve/{tag}/mean_occupancy"), r.mean_occupancy, "reqs", Direction::Higher);
+    report.push(format!("serve/{tag}/shed_rate"), r.shed_rate, "frac", Direction::Lower);
+    report.push(
+        format!("serve/{tag}/forward_calls"),
+        r.forward_calls as f64,
+        "calls",
+        Direction::None,
+    );
+}
+
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new("serve", cfg.quick);
+    let engine = match Engine::new(&cfg.artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            report.note("skipped", format!("artifacts not available: {e:#}"));
+            println!("serve: skipping (artifacts not built — run `make artifacts`)");
+            return Ok(report);
+        }
+    };
+
+    let requests = if cfg.quick { 120 } else { 400 };
+    let spec = datasets::find("citeseer").expect("registry dataset");
+    let mut registry = ModelRegistry::new();
+    let mut dspec = DeploymentSpec::new("bench", spec, ModelKind::Gcn);
+    dspec.steps = if cfg.quick { 20 } else { 40 };
+    let dep = registry.deploy(&engine, dspec)?;
+    let (n, f_data) = (dep.n, dep.f_data);
+    println!(
+        "serve: deployed {} on {} ({} vertices, kernels {})",
+        dep.model.as_str(),
+        spec.name,
+        n,
+        dep.chosen()
+    );
+    report.note("dataset", spec.name);
+    report.note("requests", requests.to_string());
+
+    let unbatched = serve_once(&engine, &mut registry, "bench", n, f_data, 1, requests)?;
+    println!("\n-- max-batch 1 (no coalescing) --\n{}", unbatched.render());
+    let batched = serve_once(&engine, &mut registry, "bench", n, f_data, 16, requests)?;
+    println!("\n-- max-batch 16 --\n{}", batched.render());
+
+    push_slo(&mut report, "mb1", &unbatched);
+    push_slo(&mut report, "mb16", &batched);
+    if unbatched.throughput_rps > 0.0 {
+        let speedup = batched.throughput_rps / unbatched.throughput_rps;
+        report.push("serve/batching_speedup", speedup, "x", Direction::Higher);
+        println!(
+            "batching speedup {speedup:.2}x ({:.1} -> {:.1} req/s, {} -> {} forwards)",
+            unbatched.throughput_rps,
+            batched.throughput_rps,
+            unbatched.forward_calls,
+            batched.forward_calls
+        );
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn bare_checkout_emits_schema_valid_skip_report() {
+        let cfg = BenchConfig {
+            quick: true,
+            artifacts: "definitely-not-an-artifacts-dir".to_string(),
+            out: PathBuf::from("."),
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.suite, "serve");
+        assert!(report.metrics.is_empty());
+        assert!(report.context.contains_key("skipped"));
+        let text = crate::util::json::write(&report.to_json());
+        assert!(BenchReport::from_json(&crate::util::json::parse(&text).unwrap()).is_ok());
+    }
+}

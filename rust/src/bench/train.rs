@@ -1,0 +1,182 @@
+//! Train suite: end-to-end trainer metrics on cora and planted-mixed.
+//!
+//! Two measurement tiers, so the suite emits a gateable report on a bare
+//! checkout AND deepens when artifacts exist:
+//!
+//! * **Engine-free (always)** — preprocessing wall time, a native-kernel
+//!   "epoch" (one full aggregate pass over both subgraphs on the CPU
+//!   mirrors), and the deterministic projected forward cost of the
+//!   planned decision.
+//! * **PJRT (artifacts built)** — a short real training run through
+//!   [`crate::coordinator::Run`]; mean step time gates, final loss is
+//!   recorded informationally.
+
+use anyhow::Result;
+
+use crate::coordinator::{preprocess, ModelKind, Run, Strategy};
+use crate::graph::datasets;
+use crate::gpusim::A100;
+use crate::kernels::native;
+use crate::plan::{MonitorPlanner, PlanRequest, Planner, SimCostPlanner};
+use crate::runtime::{BucketInfo, Engine};
+use crate::util::rng::Rng;
+
+use super::report::{BenchReport, Direction};
+use super::BenchConfig;
+
+const COMMUNITY: usize = 16;
+
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new("train", cfg.quick);
+    let bench = super::measurer(cfg.quick);
+    let engine = Engine::new(&cfg.artifacts).ok();
+    report.note("engine", if engine.is_some() { "pjrt" } else { "native-only" });
+
+    let target_n = if cfg.quick { 1024 } else { 4096 };
+    for name in ["cora", "planted-mixed"] {
+        let spec = datasets::find(name).expect("registry dataset");
+        let scale = (target_n as f64 / spec.vertices as f64).min(1.0);
+        let data = spec.build_scaled(scale, cfg.seed);
+        println!(
+            "\n-- train/{name}: scale={scale:.4} vertices={} edges={} --",
+            data.graph.n,
+            data.graph.directed_edge_count()
+        );
+
+        // preprocessing (reorder + decompose) under the AdaptGear strategy
+        let m = bench.bench(&format!("prep/{name}"), || {
+            std::hint::black_box(preprocess(
+                Strategy::AdaptGear,
+                &data.graph,
+                crate::coordinator::pipeline::propagation_for(ModelKind::Gcn),
+                COMMUNITY,
+                cfg.seed,
+            ));
+        });
+        report.push(format!("prep/{name}"), m.median_s() * 1e3, "ms", Direction::Lower);
+
+        let (d, _) = preprocess(
+            Strategy::AdaptGear,
+            &data.graph,
+            crate::coordinator::pipeline::propagation_for(ModelKind::Gcn),
+            COMMUNITY,
+            cfg.seed,
+        );
+
+        // one native "epoch": the full aggregate over both subgraphs at
+        // the bucket width — the CPU-mirror cost a trainer step pays
+        let f = 32;
+        let mut rng = Rng::new(cfg.seed);
+        let x: Vec<f32> = (0..d.graph.n * f).map(|_| rng.normal_f32()).collect();
+        let m = bench.bench(&format!("native_epoch/{name}"), || {
+            std::hint::black_box(native::csr_intra_spmm(&d.intra, &x, f, COMMUNITY));
+            std::hint::black_box(native::csr_inter_spmm(&d.inter, &x, f));
+        });
+        report.push(format!("native_epoch/{name}"), m.median_s() * 1e3, "ms", Direction::Lower);
+
+        // deterministic planned decision for this dataset at this scale
+        let bucket = BucketInfo {
+            name: "bench".to_string(),
+            vertices: d.graph.n,
+            edges: d.intra.nnz().max(d.inter.nnz()),
+            features: f,
+            hidden: f,
+            classes: spec.classes.min(8),
+            blocks: d.graph.n.div_ceil(COMMUNITY),
+        };
+        let req = PlanRequest::labeled(
+            &d,
+            ModelKind::Gcn,
+            &bucket,
+            spec.name,
+            scale,
+            Strategy::AdaptGear.reorder(),
+            cfg.seed,
+        );
+        let plan = SimCostPlanner::new(&A100).plan(&req)?;
+        report.push(
+            format!("plan/{name}/projected_fwd_us"),
+            plan.projected.total_us(),
+            "us",
+            Direction::Lower,
+        );
+        report.note(format!("plan.{name}"), plan.chosen.to_string());
+
+        // real PJRT training when the artifacts exist
+        if let Some(engine) = engine.as_ref() {
+            let steps = if cfg.quick { 5 } else { 25 };
+            match Run::new(engine)
+                .dataset(spec)
+                .model(ModelKind::Gcn)
+                .steps(steps)
+                .seed(cfg.seed)
+                .planner(MonitorPlanner::sim(&A100, 2))
+                .train()
+            {
+                Ok(r) => {
+                    report.push(
+                        format!("train/{name}/mean_step_ms"),
+                        r.train.mean_step_secs() * 1e3,
+                        "ms",
+                        Direction::Lower,
+                    );
+                    report.push(
+                        format!("train/{name}/pack_ms"),
+                        r.train.pack_secs * 1e3,
+                        "ms",
+                        Direction::Lower,
+                    );
+                    let loss = r.train.final_loss() as f64;
+                    if loss.is_finite() {
+                        report.push(
+                            format!("train/{name}/final_loss"),
+                            loss,
+                            "loss",
+                            Direction::None,
+                        );
+                    }
+                    println!(
+                        "train/{name}: {} steps, mean {:.2}ms/step, final loss {:.4}",
+                        steps,
+                        r.train.mean_step_secs() * 1e3,
+                        r.train.final_loss()
+                    );
+                }
+                Err(e) => {
+                    report.note(format!("train.{name}.skipped"), format!("{e:#}"));
+                    println!("train/{name}: PJRT run skipped ({e:#})");
+                }
+            }
+        }
+    }
+    if engine.is_none() {
+        println!("train: artifacts not built — PJRT metrics omitted (native + sim tiers only)");
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn quick_run_emits_engine_free_tiers_on_bare_checkout() {
+        let cfg = BenchConfig {
+            quick: true,
+            artifacts: "definitely-not-an-artifacts-dir".to_string(),
+            out: PathBuf::from("."),
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.suite, "train");
+        assert_eq!(report.context.get("engine").map(String::as_str), Some("native-only"));
+        for name in ["cora", "planted-mixed"] {
+            assert!(report.get(&format!("prep/{name}")).is_some());
+            assert!(report.get(&format!("native_epoch/{name}")).is_some());
+            assert!(report.get(&format!("plan/{name}/projected_fwd_us")).is_some());
+        }
+        // and no PJRT metrics leaked in without an engine
+        assert!(report.get("train/cora/mean_step_ms").is_none());
+    }
+}

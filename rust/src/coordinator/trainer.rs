@@ -21,7 +21,7 @@ use crate::kernels::pack::{
 use crate::kernels::KernelPair;
 use crate::partition::Decomposition;
 use crate::plan::GearPlan;
-use crate::runtime::{literal_scalar_f32, Engine, Manifest, Tensor};
+use crate::runtime::{literal_scalar_f32, BucketInfo, Engine, Manifest, Tensor};
 use crate::util::rng::Rng;
 
 use super::modeldims::ModelKind;
@@ -212,23 +212,21 @@ fn init_param(shape: &[usize], rng: &mut Rng) -> Result<Tensor> {
     Ok(Tensor::f32(data, shape))
 }
 
-/// Run a forward pass honoring a plan's full class assignment — the
-/// hybrid-aware twin of [`forward`]: uniform plans pack identically,
-/// hybrid plans pack the dense class + merged sparse/inter operands the
-/// trainer executed.
-pub fn forward_planned(
-    engine: &Engine,
+/// Resolve the forward artifact and pack a plan's STATIC graph operands
+/// once: bucket fit + staleness guard, artifact name, and the class
+/// assignment's operand tensors. The per-call remainder of a forward is
+/// only feature packing + execution ([`forward_packed`]), so serving
+/// deployments cache this result instead of re-splitting and re-packing
+/// the topology on every micro-batch.
+pub fn plan_forward_operands(
+    manifest: &Manifest,
     d: &Decomposition,
     plan: &GearPlan,
     model: ModelKind,
-    params: &[Tensor],
-    x: &[f32],
-    f_data: usize,
-) -> Result<Vec<f32>> {
+) -> Result<(String, BucketInfo, Vec<Tensor>)> {
     let n = d.graph.n;
     let needed_edges = d.intra.nnz().max(d.inter.nnz());
-    let bucket = engine
-        .manifest
+    let bucket = manifest
         .fit_bucket(n, needed_edges)
         .context("no bucket fits")?
         .clone();
@@ -249,17 +247,54 @@ pub fn forward_planned(
         &chosen.inter.to_string(),
         &bucket.name,
     );
-    let mut args: Vec<Tensor> = params.to_vec();
+    let mut ops: Vec<Tensor> = Vec::new();
     if chosen.intra.is_some() {
         let (intra_ops, inter_ops) = pack_assignment(d, &plan.assignment, &bucket)?;
-        args.extend(intra_ops);
-        args.extend(inter_ops);
+        ops.extend(intra_ops);
+        ops.extend(inter_ops);
     } else {
-        args.extend(pack_kernel_operands(chosen.inter, &d.whole(), d.community, &bucket)?);
+        ops.extend(pack_kernel_operands(chosen.inter, &d.whole(), d.community, &bucket)?);
     }
-    args.push(pack_features(x, n, f_data, &bucket)?);
-    let out = engine.run(&name, &args)?;
+    Ok((name, bucket, ops))
+}
+
+/// Execute a forward whose graph operands were packed up front by
+/// [`plan_forward_operands`] — the serving hot path: per call it packs
+/// only the (mutable) feature matrix and runs the artifact. `x` is the
+/// full `[n, f_data]` row-major feature state (`n = x.len() / f_data`).
+pub fn forward_packed(
+    engine: &Engine,
+    name: &str,
+    bucket: &BucketInfo,
+    params: &[Tensor],
+    graph_ops: &[Tensor],
+    x: &[f32],
+    f_data: usize,
+) -> Result<Vec<f32>> {
+    let n = x.len() / f_data.max(1);
+    let mut args: Vec<Tensor> = params.to_vec();
+    args.extend_from_slice(graph_ops);
+    args.push(pack_features(x, n, f_data, bucket)?);
+    let out = engine.run(name, &args)?;
     Ok(out[0].to_vec::<f32>()?)
+}
+
+/// Run a forward pass honoring a plan's full class assignment — the
+/// hybrid-aware twin of [`forward`]: uniform plans pack identically,
+/// hybrid plans pack the dense class + merged sparse/inter operands the
+/// trainer executed. One-shot convenience over
+/// [`plan_forward_operands`] + [`forward_packed`].
+pub fn forward_planned(
+    engine: &Engine,
+    d: &Decomposition,
+    plan: &GearPlan,
+    model: ModelKind,
+    params: &[Tensor],
+    x: &[f32],
+    f_data: usize,
+) -> Result<Vec<f32>> {
+    let (name, bucket, ops) = plan_forward_operands(&engine.manifest, d, plan, model)?;
+    forward_packed(engine, &name, &bucket, params, &ops, x, f_data)
 }
 
 /// Run a forward (inference) pass with trained parameters.

@@ -14,14 +14,17 @@
 //!   METIS-like partitioner, GPU cost simulator, PJRT runtime), the
 //!   [`plan`] subsystem that makes the kernel decision a first-class,
 //!   cacheable artifact (`GearPlan` + pluggable planners + on-disk
-//!   `PlanStore`), and the [`serve`] inference-serving runtime (model
+//!   `PlanStore`), the [`serve`] inference-serving runtime (model
 //!   registry, micro-batching, admission control, SLO metrics) layered on
-//!   top.
+//!   top, and the [`bench`] subsystem — fixed-workload suites emitting
+//!   schema-versioned `BENCH_*.json` reports with a baseline comparator
+//!   that gates perf regressions in CI.
 //!
 //! See `rust/DESIGN.md` for the full architecture inventory, including
-//! the plan lifecycle (Sec. 7) and the serving subsystem's channel
-//! topology and SLO semantics.
+//! the plan lifecycle (Sec. 7), the serving subsystem's channel
+//! topology and SLO semantics, and the benchmarking/CI contract (Sec. 9).
 
+pub mod bench;
 pub mod coordinator;
 pub mod graph;
 pub mod gpusim;

@@ -37,6 +37,7 @@ fn main() {
         "plan" => cmd_plan(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" => {
             print_help();
@@ -75,6 +76,13 @@ fn print_help() {
          \x20       [--seed N (loadgen)] [--train-seed N]\n\
          \x20                                   micro-batched serving loop + SLO report\n\
          \x20                                   (deploys plan through the plan cache)\n\
+         \x20 bench [--quick] [--suite all|kernels|plan|train|serve] [--out DIR]\n\
+         \x20                                   run the fixed workload suites, emit\n\
+         \x20                                   schema-versioned BENCH_*.json reports\n\
+         \x20 bench --validate [--out DIR]      schema-check emitted BENCH_*.json\n\
+         \x20 bench --check --baseline DIR [--tolerance F] [--out DIR]\n\
+         \x20                                   diff emitted reports against committed\n\
+         \x20                                   baselines; non-zero exit on regression\n\
          \x20 selftest                          verify artifacts + runtime numerics\n\n\
          Figures: cargo bench --bench figures -- <fig2b|fig3a|fig3b|fig4|fig8|\n\
          \x20        fig9|fig10|fig11|fig12|table2|overhead|all>"
@@ -516,6 +524,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.served as f64 / report.forward_calls.max(1) as f64
         );
     }
+    Ok(())
+}
+
+/// The benchmark subsystem front end (DESIGN.md Sec. 9): run the fixed
+/// workload suites and emit `BENCH_*.json`, or — in `--validate` /
+/// `--check` mode — schema-check / regression-gate already-emitted
+/// reports without re-running anything.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use adaptgear::bench::{self, BenchConfig, Tolerance};
+    use std::path::Path;
+
+    let out = std::path::PathBuf::from(args.get_or("out", "."));
+    let suites: Vec<&str> = match args.get_or("suite", "all") {
+        "all" => bench::SUITES.to_vec(),
+        one => vec![one],
+    };
+    for &s in &suites {
+        if !bench::SUITES.contains(&s) {
+            bail!("--suite must be all|{}, got {s:?}", bench::SUITES.join("|"));
+        }
+    }
+
+    if args.flag("validate") {
+        let reports = bench::validate_dir(&out, &suites)?;
+        for r in &reports {
+            println!(
+                "{}: schema v{} ok ({} metrics{})",
+                adaptgear::bench::BenchReport::file_name(&r.suite),
+                adaptgear::bench::SCHEMA_VERSION,
+                r.metrics.len(),
+                if r.quick { ", quick profile" } else { "" },
+            );
+        }
+        return Ok(());
+    }
+
+    if args.flag("check") {
+        let baseline = args
+            .get("baseline")
+            .context("bench --check requires --baseline DIR")?;
+        let tol = Tolerance { rel: args.get_f64("tolerance", Tolerance::default().rel) };
+        let outcome = bench::check_dirs(Path::new(baseline), &out, &suites, tol)?;
+        print!("{}", outcome.render());
+        if outcome.failures() > 0 {
+            bail!(
+                "{} metric(s) regressed beyond the {:.0}% tolerance",
+                outcome.failures(),
+                tol.rel * 100.0
+            );
+        }
+        println!("bench check passed");
+        return Ok(());
+    }
+
+    let cfg = BenchConfig {
+        quick: args.flag("quick"),
+        artifacts: artifacts_dir(args),
+        out,
+        seed: args.get_u64("seed", BenchConfig::default().seed),
+    };
+    bench::run_and_write(&suites, &cfg)?;
     Ok(())
 }
 

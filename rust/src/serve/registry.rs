@@ -22,7 +22,7 @@ use crate::gpusim::A100;
 use crate::kernels::KernelPair;
 use crate::partition::Decomposition;
 use crate::plan::{CachedPlanner, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner};
-use crate::runtime::{Engine, Manifest, Tensor};
+use crate::runtime::{BucketInfo, Engine, Tensor};
 
 /// What to deploy: the identity of a servable model plus its training
 /// budget. `name` is the registry key clients address requests to.
@@ -78,6 +78,14 @@ pub struct Deployment {
     /// which case `plan.monitor_iters == 0`).
     pub plan: GearPlan,
     pub params: Vec<Tensor>,
+    /// Forward artifact this deployment executes.
+    pub fwd_name: String,
+    /// AOT bucket the forward executes in.
+    pub fwd_bucket: BucketInfo,
+    /// Static graph operands, packed ONCE at deploy time
+    /// (`trainer::plan_forward_operands`) — the serving hot path must
+    /// never re-split or re-pack topology per micro-batch.
+    pub graph_ops: Vec<Tensor>,
     /// Padded vertex count of the AOT bucket (logits row stride divisor).
     pub bucket_vertices: usize,
     pub classes: usize,
@@ -185,14 +193,11 @@ impl ModelRegistry {
         let (x, labels) = apply_perm(&d.perm, &data.features(f_data), &data.labels(), f_data);
         let report = trainer::train(engine, &d, &x, f_data, &labels, &cfg, &plan)
             .with_context(|| format!("training deployment {:?}", spec.name))?;
-        let bucket = &engine.manifest.buckets[&report.bucket];
-        let chosen = report.chosen();
-        let fwd_name = Manifest::fwd_name(
-            spec.model.as_str(),
-            chosen.intra_str(),
-            &chosen.inter.to_string(),
-            &report.bucket,
-        );
+        // Resolve the forward artifact and pack the static graph operands
+        // ONCE — execute_group reuses them for every served batch.
+        let (fwd_name, fwd_bucket, graph_ops) =
+            trainer::plan_forward_operands(&engine.manifest, &d, &report.plan, spec.model)
+                .with_context(|| format!("packing forward operands for {:?}", spec.name))?;
         let warm_secs = engine
             .warm(&fwd_name)
             .with_context(|| format!("warming forward executable for {:?}", spec.name))?;
@@ -209,8 +214,11 @@ impl ModelRegistry {
             n,
             plan: report.plan,
             params: report.params,
-            bucket_vertices: bucket.vertices,
-            classes: bucket.classes,
+            bucket_vertices: fwd_bucket.vertices,
+            classes: fwd_bucket.classes,
+            fwd_name,
+            fwd_bucket,
+            graph_ops,
             final_loss,
             warm_secs,
         })
@@ -295,6 +303,9 @@ mod tests {
             n,
             plan,
             params: Vec::new(),
+            fwd_name: "fwd_dummy".to_string(),
+            fwd_bucket: bucket,
+            graph_ops: Vec::new(),
             bucket_vertices: n,
             classes: 4,
             final_loss: 0.0,

@@ -283,14 +283,15 @@ impl<'a> ServeSession<'a> {
         for req in &valid {
             dep.x[req.vertex * dep.f_data + req.feature] += req.delta;
         }
-        // Hybrid-aware forward: deployments execute their plan's full
-        // class assignment, not just the lowered kernel pair.
-        let logits = trainer::forward_planned(
+        // Hybrid-aware forward over the operands packed at deploy time:
+        // the hot path packs only the mutated feature matrix — never the
+        // topology (deploy_planned did that once via plan_forward_operands).
+        let logits = trainer::forward_packed(
             self.engine,
-            &dep.d,
-            &dep.plan,
-            dep.model,
+            &dep.fwd_name,
+            &dep.fwd_bucket,
             &dep.params,
+            &dep.graph_ops,
             &dep.x,
             dep.f_data,
         );

@@ -1,0 +1,202 @@
+//! End-to-end tests of the `adaptgear bench` check/validate CLI — the
+//! exact exit-code contract `./ci.sh bench` and the GitHub workflow gate
+//! on — plus a JSON roundtrip property test over randomized reports.
+//!
+//! The CLI tests fabricate reports through the library API (no timing,
+//! so they are fully deterministic) and drive the real binary via
+//! `CARGO_BIN_EXE_adaptgear`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use adaptgear::bench::{BenchReport, Direction};
+use adaptgear::util::{json, prop};
+use adaptgear::util::rng::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("adaptgear-benchcli-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_report(dir: &Path, suite: &str, metrics: &[(&str, f64)]) {
+    let mut r = BenchReport::new(suite, true);
+    for &(name, value) in metrics {
+        r.push(name, value, "us", Direction::Lower);
+    }
+    r.write_at(dir).unwrap();
+}
+
+fn bench(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_adaptgear"))
+        .arg("bench")
+        .args(args)
+        .output()
+        .expect("spawning the adaptgear binary")
+}
+
+fn check(baseline: &Path, current: &Path, extra: &[&str]) -> Output {
+    let mut args = vec![
+        "--check",
+        "--suite",
+        "kernels",
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--out",
+        current.to_str().unwrap(),
+    ];
+    args.extend_from_slice(extra);
+    bench(&args)
+}
+
+#[test]
+fn check_passes_on_identical_reports() {
+    let root = tmpdir("identical");
+    let (base, cur) = (root.join("base"), root.join("cur"));
+    for dir in [&base, &cur] {
+        write_report(dir, "kernels", &[("spmm/a", 100.0), ("spmm/b", 5.0)]);
+    }
+    let out = check(&base, &cur, &[]);
+    assert!(
+        out.status.success(),
+        "identical reports must pass: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("bench check passed"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn check_fails_on_injected_2x_regression() {
+    // The acceptance shape: current is 2x worse than baseline on a
+    // lower-is-better metric — far past the default tolerance.
+    let root = tmpdir("regression");
+    let (base, cur) = (root.join("base"), root.join("cur"));
+    write_report(&base, "kernels", &[("spmm/hot", 100.0)]);
+    write_report(&cur, "kernels", &[("spmm/hot", 200.0)]);
+    let out = check(&base, &cur, &[]);
+    assert!(!out.status.success(), "2x regression must exit non-zero");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("spmm/hot"), "report must name the metric: {stdout}");
+    assert!(stdout.contains("REGR"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn check_respects_the_tolerance_flag() {
+    let root = tmpdir("tolerance");
+    let (base, cur) = (root.join("base"), root.join("cur"));
+    write_report(&base, "kernels", &[("spmm/hot", 100.0)]);
+    write_report(&cur, "kernels", &[("spmm/hot", 140.0)]);
+    // 40% worse: passes the default 50%, fails an explicit 25%
+    assert!(check(&base, &cur, &[]).status.success());
+    assert!(!check(&base, &cur, &["--tolerance", "0.25"]).status.success());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn check_fails_on_schema_version_mismatch() {
+    let root = tmpdir("schema");
+    let (base, cur) = (root.join("base"), root.join("cur"));
+    write_report(&cur, "kernels", &[("spmm/a", 1.0)]);
+    std::fs::create_dir_all(&base).unwrap();
+    std::fs::write(
+        base.join("BENCH_kernels.json"),
+        r#"{"schema_version":99,"suite":"kernels","quick":true,"context":{},"metrics":[]}"#,
+    )
+    .unwrap();
+    let out = check(&base, &cur, &[]);
+    assert!(!out.status.success(), "old-schema baseline must fail the check");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("schema version mismatch"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn check_without_baseline_file_skips_with_message() {
+    let root = tmpdir("nobaseline");
+    let (base, cur) = (root.join("base"), root.join("cur"));
+    std::fs::create_dir_all(&base).unwrap();
+    write_report(&cur, "kernels", &[("spmm/a", 1.0)]);
+    let out = check(&base, &cur, &[]);
+    assert!(out.status.success(), "missing baseline is a skip, not a failure");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("no baseline file"));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn validate_accepts_good_and_rejects_corrupt_reports() {
+    let root = tmpdir("validate");
+    write_report(&root, "kernels", &[("spmm/a", 1.0)]);
+    let out = bench(&["--validate", "--suite", "kernels", "--out", root.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("BENCH_kernels.json"));
+
+    // corrupt the file: validation must now fail
+    std::fs::write(root.join("BENCH_kernels.json"), "{not json").unwrap();
+    let out = bench(&["--validate", "--suite", "kernels", "--out", root.to_str().unwrap()]);
+    assert!(!out.status.success());
+
+    // and a report claiming the wrong suite is rejected too
+    write_report(&root, "plan", &[]);
+    std::fs::rename(root.join("BENCH_plan.json"), root.join("BENCH_kernels.json")).unwrap();
+    let out = bench(&["--validate", "--suite", "kernels", "--out", root.to_str().unwrap()]);
+    assert!(!out.status.success());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn unknown_suite_is_rejected() {
+    let out = bench(&["--validate", "--suite", "nope"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--suite"));
+}
+
+// ---------------------------------------------------------------------------
+// Property: every representable report survives the JSON roundtrip exactly.
+// ---------------------------------------------------------------------------
+
+fn random_report(rng: &mut Rng) -> BenchReport {
+    let suites = ["kernels", "plan", "train", "serve", "figures"];
+    let units = ["us", "ms", "rps", "x", "frac", ""];
+    let directions = [Direction::Lower, Direction::Higher, Direction::None];
+    let mut r = BenchReport::new(suites[rng.usize_below(suites.len())], rng.below(2) == 1);
+    if rng.below(2) == 1 {
+        // exercise string escaping in context values
+        r.note("workload", "n=2048 \"quoted\" \\ caf\u{e9} \u{2713}\n tab\t");
+    }
+    for i in 0..rng.usize_below(8) {
+        let value = match rng.below(4) {
+            0 => 0.0,
+            1 => rng.normal() * 1e6,
+            2 => -(rng.f64() * 1e-9),
+            _ => rng.f64() * 1e12,
+        };
+        r.push(
+            format!("m{i}/{}", ["lat", "thr", "q"][rng.usize_below(3)]),
+            value,
+            units[rng.usize_below(units.len())],
+            directions[rng.usize_below(directions.len())],
+        );
+    }
+    r
+}
+
+#[test]
+fn report_json_roundtrip_property() {
+    prop::check("bench report JSON roundtrip", 200, |rng| {
+        let r = random_report(rng);
+        let text = json::write(&r.to_json());
+        let back = BenchReport::from_json(
+            &json::parse(&text).map_err(|e| format!("reparse failed: {e}"))?,
+        )
+        .map_err(|e| format!("decode failed: {e:#}"))?;
+        prop::require(back == r, "report != roundtripped report")?;
+        // and the canonical text is a fixed point
+        prop::require(
+            json::write(&back.to_json()) == text,
+            "canonical JSON text not a fixed point",
+        )
+    });
+}
