@@ -4,9 +4,10 @@
 # hit), and a hybrid-split smoke on a mixed-density planted graph —
 # all against synthetic bucket-only manifests.
 #
-#   ./ci.sh          # build + test + fmt + clippy + plan/hybrid smokes
+#   ./ci.sh          # build + test + fmt + clippy + rustdoc (warnings
+#                    # denied) + plan/hybrid/sampled/help smokes
 #   ./ci.sh bench    # additionally run the quick bench suite: emit the
-#                    # four BENCH_*.json reports, schema-validate them,
+#                    # five BENCH_*.json reports, schema-validate them,
 #                    # self-check the comparator, and gate against
 #                    # committed baselines/ when present
 #
@@ -59,6 +60,9 @@ run cargo build --release
 run cargo test -q
 run cargo fmt --check
 run cargo clippy -- -D warnings
+# Rustdoc gate: module docs and intra-doc links must stay warning-free
+# (README.md and DESIGN.md point into these docs).
+run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 find_bin() {
     local candidate
@@ -75,7 +79,8 @@ find_bin() {
 # CI log shows what the command actually said instead of a bare exit 1.
 expect_grep() {
     local pattern="$1" file="$2" what="$3"
-    if ! grep -q "$pattern" "$file"; then
+    # -e so patterns that start with a dash (e.g. "--sampled") work
+    if ! grep -q -e "$pattern" "$file"; then
         echo "FAILED: $what (pattern '$pattern' not found). Output was:" >&2
         cat "$file" >&2
         exit 1
@@ -147,9 +152,60 @@ EOF
 }
 hybrid_smoke
 
+# --- sampled-training smoke: `train --sampled` must complete an epoch on
+# a bare checkout (native CPU backend) and report an amortized plan-cache
+# hit rate; the >50% bar itself is enforced by the bench suite's unit
+# test, so the smoke only asserts the loop ran end to end.
+sampled_smoke() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "sampled smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
+    echo "==> $bin train --sampled (native backend, one epoch)"
+    "$bin" train --dataset planted-mixed --sampled --fanout 10,10 \
+        --batch-size 128 --scale 0.004 --artifacts "$tmp/none" \
+        | tee "$tmp/sampled.txt"
+    expect_grep "sampled training \[native\]" "$tmp/sampled.txt" \
+        "sampled smoke: the sampled loop did not complete"
+    expect_grep "plan cache: " "$tmp/sampled.txt" \
+        "sampled smoke: no amortized plan-cache report"
+    expect_grep "epoch   0" "$tmp/sampled.txt" \
+        "sampled smoke: no epoch loss line"
+}
+sampled_smoke
+
+# --- help smoke: every subcommand documents itself with an example the
+# README can point at (`adaptgear <cmd> --help`).
+help_smoke() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "help smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
+    echo "==> help smoke: per-subcommand examples"
+    for cmd in datasets decompose plan train serve bench selftest; do
+        "$bin" "$cmd" --help > "$tmp/help_$cmd.txt"
+        expect_grep "EXAMPLE" "$tmp/help_$cmd.txt" \
+            "help smoke: $cmd --help has no EXAMPLE section"
+        expect_grep "adaptgear $cmd" "$tmp/help_$cmd.txt" \
+            "help smoke: $cmd --help example does not invoke the command"
+    done
+    "$bin" --help > "$tmp/help_top.txt"
+    expect_grep "\-\-sampled" "$tmp/help_top.txt" \
+        "help smoke: top-level help does not mention --sampled"
+    expect_grep "sample" "$tmp/help_top.txt" \
+        "help smoke: top-level help does not mention the sample suite"
+}
+help_smoke
+
 # --- `./ci.sh bench`: the quick benchmark suite end to end.
-# Emits BENCH_{kernels,plan,train,serve}.json at the repo root, schema-
-# validates all four, proves the comparator on a known-identical baseline
+# Emits BENCH_{kernels,plan,train,serve,sample}.json at the repo root,
+# schema-validates all five, proves the comparator on a known-identical baseline
 # (must pass), and gates against committed baselines/ when they exist.
 bench_mode() {
     local bin

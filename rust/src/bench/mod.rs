@@ -1,7 +1,7 @@
 //! Deterministic benchmark subsystem — the measurement backbone every
 //! perf PR gates on (DESIGN.md Sec. 9).
 //!
-//! Four fixed-workload suites emit schema-versioned `BENCH_*.json`
+//! Five fixed-workload suites emit schema-versioned `BENCH_*.json`
 //! reports through one writer ([`report::BenchReport`]):
 //!
 //! | suite     | covers                                                |
@@ -13,6 +13,8 @@
 //! | `train`   | preprocess + native epoch + projected cost; real PJRT |
 //! |           | steps when artifacts exist                            |
 //! | `serve`   | loadgen p50/p99/throughput at max-batch 1 and 16      |
+//! | `sample`  | sampler throughput, amortized per-batch plan-cache    |
+//! |           | hit rate, sampled vs full-graph epoch cost            |
 //!
 //! The `adaptgear bench` subcommand runs them; `bench --check --baseline
 //! <dir>` diffs fresh reports against committed baselines with
@@ -31,6 +33,7 @@ pub mod compare;
 pub mod kernels;
 pub mod plan;
 pub mod report;
+pub mod sample;
 pub mod serve;
 pub mod train;
 
@@ -44,7 +47,7 @@ pub use report::{BenchReport, Direction, Metric, SCHEMA_VERSION};
 use crate::util::bench::Bench;
 
 /// The suites `bench` runs (and `--validate`/`--check` expect) by default.
-pub const SUITES: [&str; 4] = ["kernels", "plan", "train", "serve"];
+pub const SUITES: [&str; 5] = ["kernels", "plan", "train", "serve", "sample"];
 
 /// Shared knobs for one suite invocation.
 #[derive(Debug, Clone)]
@@ -87,6 +90,7 @@ pub fn run_suite(name: &str, cfg: &BenchConfig) -> Result<BenchReport> {
         "plan" => plan::run(cfg),
         "train" => train::run(cfg),
         "serve" => serve::run(cfg),
+        "sample" => sample::run(cfg),
         other => bail!("unknown bench suite {other:?} (expected one of {SUITES:?})"),
     }
 }

@@ -1,0 +1,200 @@
+//! Sample suite: sampler throughput, amortized plan-cache hit rate, and
+//! sampled-vs-full epoch cost — all engine-free (native schedules), so
+//! the suite gates on a bare checkout.
+//!
+//! Fixed-seed workload: `planted-mixed` scaled to the profile's target
+//! size, fanout 10,10, two epochs of batches. The headline metric is
+//! `plan_cache/hit_rate_after_epoch1` — the fraction of epoch-2 batches
+//! served from the profile-keyed [`crate::plan::BatchPlanner`] without
+//! re-running the threshold sweep; the acceptance bar (> 0.5) is
+//! enforced by this module's unit test, so tier-1 fails if amortization
+//! regresses.
+
+use anyhow::Result;
+
+use crate::coordinator::{preprocess, ModelKind, Strategy};
+use crate::graph::datasets;
+use crate::gpusim::A100;
+use crate::kernels::{native, AssignmentExec};
+use crate::plan::{BatchPlanner, PlanRequest, Planner, SimCostPlanner};
+use crate::runtime::BucketInfo;
+use crate::sample::{Fanout, NeighborSampler};
+use crate::util::rng::Rng;
+
+use super::report::{BenchReport, Direction};
+use super::BenchConfig;
+
+const COMMUNITY: usize = 16;
+
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new("sample", cfg.quick);
+    report.note("engine", "native-only");
+    let bench = super::measurer(cfg.quick);
+
+    let target_n = if cfg.quick { 1024 } else { 4096 };
+    let batch_size = if cfg.quick { 128 } else { 256 };
+    let spec = datasets::find("planted-mixed").expect("registry dataset");
+    let scale = (target_n as f64 / spec.vertices as f64).min(1.0);
+    let data = spec.build_scaled(scale, cfg.seed);
+    let (d, _) = preprocess(
+        Strategy::AdaptGear,
+        &data.graph,
+        crate::coordinator::pipeline::propagation_for(ModelKind::Gcn),
+        COMMUNITY,
+        cfg.seed,
+    );
+    let n = d.graph.n;
+    println!(
+        "\n-- sample/planted-mixed: scale={scale:.4} vertices={n} edges={} batch={batch_size} --",
+        data.graph.directed_edge_count()
+    );
+    let prop = d.whole();
+    let fanouts = vec![Fanout::Uniform(10), Fanout::Uniform(10)];
+    let sampler = NeighborSampler::new(&prop, fanouts)?;
+
+    // ---- sampler throughput on one fixed batch
+    let targets: Vec<u32> = (0..batch_size.min(n) as u32).collect();
+    let reference = sampler.sample(&targets, &mut Rng::new(cfg.seed));
+    let m = bench.bench("sample/batch", || {
+        std::hint::black_box(sampler.sample(&targets, &mut Rng::new(cfg.seed)));
+    });
+    report.push("sampler/batch_ms", m.median_s() * 1e3, "ms", Direction::Lower);
+    let edges_per_s = reference.nnz() as f64 / m.median_s().max(1e-12);
+    report.push("sampler/edges_per_s", edges_per_s, "edges/s", Direction::Higher);
+    report.note(
+        "batch.shape",
+        format!("{} nodes, {} nnz", reference.n(), reference.nnz()),
+    );
+
+    // ---- two epochs of sample -> decompose -> amortized plan
+    let mut planner = BatchPlanner::new(SimCostPlanner::new(&A100), &A100);
+    let mut rng = Rng::new(cfg.seed ^ 0xba7c);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut plan_us_epoch2 = Vec::new();
+    let mut sampled_agg_s = 0.0f64;
+    let f = 32;
+    let mut hits_before_epoch2 = 0;
+    let mut plans_before_epoch2 = 0;
+    for epoch in 0..2 {
+        rng.shuffle(&mut order);
+        if epoch == 1 {
+            hits_before_epoch2 = planner.hits();
+            plans_before_epoch2 = planner.hits() + planner.misses();
+        }
+        for chunk in order.chunks(batch_size) {
+            let batch = sampler.sample(chunk, &mut rng);
+            let bd = batch.decompose(crate::partition::Reorder::Metis, COMMUNITY, cfg.seed);
+            let bucket = BucketInfo {
+                name: "sample-bench".to_string(),
+                vertices: bd.graph.n,
+                edges: bd.intra.nnz() + bd.inter.nnz(),
+                features: f,
+                hidden: f,
+                classes: 4,
+                blocks: bd.graph.n.div_ceil(COMMUNITY),
+            };
+            let req = PlanRequest::labeled(
+                &bd,
+                ModelKind::Gcn,
+                &bucket,
+                spec.name,
+                scale,
+                crate::partition::Reorder::Metis,
+                cfg.seed,
+            );
+            let t0 = std::time::Instant::now();
+            let plan = planner.plan(&req)?;
+            let plan_elapsed = t0.elapsed().as_secs_f64();
+            if epoch == 1 {
+                plan_us_epoch2.push(plan_elapsed * 1e6);
+            }
+            // sampled "epoch" aggregate cost: run the planned assignment
+            // on the native schedules (second epoch only, one pass)
+            if epoch == 1 {
+                let exec = AssignmentExec::build(&bd, &plan.assignment)?;
+                let x: Vec<f32> = vec![0.5; bd.graph.n * f];
+                let t1 = std::time::Instant::now();
+                std::hint::black_box(exec.aggregate(&x, f));
+                sampled_agg_s += t1.elapsed().as_secs_f64();
+            }
+        }
+    }
+    let total = planner.hits() + planner.misses();
+    let epoch2_plans = total - plans_before_epoch2;
+    let epoch2_hits = planner.hits() - hits_before_epoch2;
+    let hit_rate = epoch2_hits as f64 / epoch2_plans.max(1) as f64;
+    report.push(
+        "plan_cache/hit_rate_after_epoch1",
+        hit_rate,
+        "frac",
+        Direction::Higher,
+    );
+    report.push(
+        "plan_cache/distinct_profiles",
+        planner.len() as f64,
+        "profiles",
+        Direction::None,
+    );
+    if !plan_us_epoch2.is_empty() {
+        let mean_us = plan_us_epoch2.iter().sum::<f64>() / plan_us_epoch2.len() as f64;
+        report.push("plan_cache/epoch2_plan_us", mean_us, "us", Direction::Lower);
+    }
+    println!(
+        "sample: {} plans over 2 epochs, epoch-2 hit rate {:.2} ({} hits / {} plans, {} profiles)",
+        total,
+        hit_rate,
+        epoch2_hits,
+        epoch2_plans,
+        planner.len()
+    );
+
+    // ---- sampled epoch vs full-graph epoch, native aggregate cost
+    report.push(
+        "epoch/sampled_agg_ms",
+        sampled_agg_s * 1e3,
+        "ms",
+        Direction::Lower,
+    );
+    let x_full: Vec<f32> = vec![0.5; n * f];
+    let m = bench.bench("sample/full_epoch", || {
+        std::hint::black_box(native::csr_intra_spmm(&d.intra, &x_full, f, COMMUNITY));
+        std::hint::black_box(native::csr_inter_spmm(&d.inter, &x_full, f));
+    });
+    report.push("epoch/full_agg_ms", m.median_s() * 1e3, "ms", Direction::Lower);
+
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn quick_suite_meets_the_amortization_bar() {
+        let cfg = BenchConfig {
+            quick: true,
+            artifacts: "definitely-not-an-artifacts-dir".to_string(),
+            out: PathBuf::from("."),
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.suite, "sample");
+        for name in [
+            "sampler/batch_ms",
+            "sampler/edges_per_s",
+            "plan_cache/hit_rate_after_epoch1",
+            "epoch/sampled_agg_ms",
+            "epoch/full_agg_ms",
+        ] {
+            assert!(report.get(name).is_some(), "missing metric {name}");
+        }
+        // THE acceptance bar: after the first epoch, most batches must be
+        // served from the profile-keyed cache.
+        let hit_rate = report.get("plan_cache/hit_rate_after_epoch1").unwrap().value;
+        assert!(
+            hit_rate > 0.5,
+            "epoch-2 plan-cache hit rate {hit_rate:.2} must exceed 0.5"
+        );
+    }
+}

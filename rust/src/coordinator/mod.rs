@@ -6,6 +6,8 @@
 //!   iteration-cost assemblies over gpusim.
 //! * [`trainer`]: the real PJRT training loop executing a
 //!   [`GearPlan`](crate::plan::GearPlan)'s kernel decision.
+//! * [`sampled`]: mini-batch neighbor-sampled training — per-batch
+//!   subgraphs planned through the amortized profile-keyed cache.
 //! * [`pipeline`]: dataset → preprocess → plan → train, end to end, and
 //!   [`pipeline::Run`] — the one builder entrypoint for train/serve/bench.
 //! * [`metrics`]: memory/overhead accounting (Fig. 12, Sec. 6.3).
@@ -13,6 +15,7 @@
 pub mod metrics;
 pub mod modeldims;
 pub mod pipeline;
+pub mod sampled;
 pub mod selector;
 pub mod strategy;
 pub mod trainer;
@@ -20,6 +23,7 @@ pub mod trainer;
 pub use crate::plan::Clock;
 pub use modeldims::{ModelDims, ModelKind};
 pub use pipeline::Run;
+pub use sampled::{train_sampled, SampleConfig, SampledBackend, SampledTrainReport};
 pub use selector::{select, KernelTimer, Role, SelectorReport};
 pub use strategy::{best_adaptive_pair, forward_cost, preprocess, PreprocessTimes, Strategy};
 pub use trainer::{train, TrainConfig, TrainReport};

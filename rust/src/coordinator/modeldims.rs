@@ -16,7 +16,7 @@ impl ModelKind {
         }
     }
 
-    /// Thin wrapper over the canonical [`FromStr`] path.
+    /// Thin wrapper over the canonical [`FromStr`](std::str::FromStr) path.
     pub fn parse(s: &str) -> Option<ModelKind> {
         s.parse().ok()
     }

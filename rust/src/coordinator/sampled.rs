@@ -1,0 +1,498 @@
+//! Mini-batch neighbor-sampled training (DESIGN.md Sec. 10).
+//!
+//! [`train_sampled`] is the sampled twin of [`trainer::train`]: per
+//! epoch it shuffles the vertex ids, chunks them into target batches,
+//! samples each batch's subgraph from the full propagation matrix
+//! ([`NeighborSampler`]), decomposes it, plans it through the amortized
+//! [`BatchPlanner`] (profile hits skip the threshold sweep), and runs
+//! ONE optimizer step per batch. Parameters persist across batches and
+//! epochs.
+//!
+//! Two step backends ([`SampledBackend`]):
+//!
+//! * **PJRT** — packs the batch through `pack_assignment` and executes
+//!   the AOT train-step artifact of the planned kernel pair, exactly
+//!   like full-graph training. All batches must land in buckets with
+//!   the same (features, hidden, classes) widths, because the trained
+//!   parameters are shared.
+//! * **Native** — the CPU fallback: a [`GcnModel`] whose aggregation
+//!   runs the plan's class assignment on the native kernel schedules
+//!   ([`AssignmentExec`]). This keeps `train --sampled` runnable on a
+//!   bare checkout (no artifacts) and gives the equivalence tests an
+//!   executable reference.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gpusim::A100;
+use crate::kernels::native_model::GcnModel;
+use crate::kernels::pack::{pack_assignment, pack_features, pack_labels_masked};
+use crate::kernels::AssignmentExec;
+use crate::partition::{Decomposition, Reorder};
+use crate::plan::{BatchPlanner, GearPlan, PlanRequest, Planner, SimCostPlanner};
+use crate::runtime::{literal_scalar_f32, BucketInfo, Engine, Manifest, Tensor, TensorSpec};
+use crate::sample::{Fanout, NeighborSampler};
+use crate::util::rng::Rng;
+
+use super::modeldims::ModelKind;
+use super::trainer::{self, TrainConfig};
+
+/// Sampling-loop knobs, on top of the shared [`TrainConfig`] budget.
+#[derive(Debug, Clone)]
+pub struct SampleConfig {
+    /// Per-layer neighbor budgets, outermost first (`--fanout 10,10`).
+    pub fanouts: Vec<Fanout>,
+    /// Target vertices per batch.
+    pub batch_size: usize,
+    /// Full passes over the vertex set.
+    pub epochs: usize,
+    /// Reordering applied to each batch subgraph before splitting.
+    pub reorder: Reorder,
+}
+
+impl Default for SampleConfig {
+    fn default() -> Self {
+        SampleConfig {
+            fanouts: vec![Fanout::Uniform(10), Fanout::Uniform(10)],
+            batch_size: 256,
+            epochs: 1,
+            reorder: Reorder::Metis,
+        }
+    }
+}
+
+/// Where sampled batch steps execute.
+pub enum SampledBackend<'e> {
+    /// AOT artifacts through PJRT (the production path).
+    Pjrt(&'e Engine),
+    /// Native CPU model at the given hidden/class widths (bare-checkout
+    /// fallback; GCN only).
+    Native { hidden: usize, classes: usize },
+}
+
+impl<'e> SampledBackend<'e> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SampledBackend::Pjrt(_) => "pjrt",
+            SampledBackend::Native { .. } => "native",
+        }
+    }
+}
+
+/// Outcome of one sampled training run.
+#[derive(Debug)]
+pub struct SampledTrainReport {
+    /// Which backend executed the steps ("pjrt" | "native").
+    pub backend: &'static str,
+    pub epochs: usize,
+    pub batches: usize,
+    /// Per-batch training loss, in execution order.
+    pub losses: Vec<f32>,
+    /// Mean loss per epoch.
+    pub epoch_mean_loss: Vec<f32>,
+    /// Amortized-planner cache statistics across the whole run.
+    pub plan_hits: usize,
+    pub plan_misses: usize,
+    /// Wall time split of the loop.
+    pub sample_secs: f64,
+    pub plan_secs: f64,
+    pub step_secs: f64,
+    /// Final parameters (host copies).
+    pub params: Vec<Tensor>,
+}
+
+impl SampledTrainReport {
+    /// Plan-cache hit rate over the whole run.
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+}
+
+/// Per-run step state of the PJRT backend: parameters persist across
+/// batches, so every batch must execute in a bucket with the widths the
+/// parameters were initialized for.
+struct PjrtState {
+    params: Vec<xla::Literal>,
+    param_specs: Vec<TensorSpec>,
+    /// (features, hidden, classes) of the initializing bucket.
+    widths: (usize, usize, usize),
+}
+
+/// Train `cfg.model` on `d_full`'s graph with layer-wise neighbor
+/// sampling. `x`/`labels` are `[n, f_data]` / `[n]` in `d_full`'s vertex
+/// order (the same contract as [`trainer::train`]).
+pub fn train_sampled(
+    backend: &mut SampledBackend,
+    d_full: &Decomposition,
+    x: &[f32],
+    f_data: usize,
+    labels: &[i32],
+    cfg: &TrainConfig,
+    scfg: &SampleConfig,
+) -> Result<SampledTrainReport> {
+    let n = d_full.graph.n;
+    if n == 0 {
+        bail!("cannot sample from an empty graph");
+    }
+    if scfg.batch_size == 0 || scfg.epochs == 0 {
+        bail!("sampled training needs batch_size > 0 and epochs > 0");
+    }
+    if matches!(backend, SampledBackend::Native { .. }) && cfg.model != ModelKind::Gcn {
+        bail!("the native sampled backend supports gcn only (build artifacts for gin)");
+    }
+
+    let prop = d_full.whole();
+    let sampler = NeighborSampler::new(&prop, scfg.fanouts.clone())?;
+    let mut planner = BatchPlanner::new(SimCostPlanner::new(&A100), &A100);
+    let mut rng = Rng::new(cfg.seed ^ 0x5a11);
+
+    let mut pjrt: Option<PjrtState> = None;
+    let mut native: Option<GcnModel> = None;
+
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut losses = Vec::new();
+    let mut epoch_mean_loss = Vec::new();
+    let (mut sample_secs, mut plan_secs, mut step_secs) = (0.0f64, 0.0f64, 0.0f64);
+
+    for _epoch in 0..scfg.epochs {
+        rng.shuffle(&mut order);
+        let epoch_start = losses.len();
+        for chunk in order.chunks(scfg.batch_size) {
+            let t0 = Instant::now();
+            let batch = sampler.sample(chunk, &mut rng);
+            let bd = batch.decompose(scfg.reorder, d_full.community, cfg.seed);
+            sample_secs += t0.elapsed().as_secs_f64();
+
+            let t1 = Instant::now();
+            let bucket = bucket_for(backend, &bd, f_data)?;
+            let req = PlanRequest::labeled(
+                &bd,
+                cfg.model,
+                &bucket,
+                "sampled-batch",
+                1.0,
+                scfg.reorder,
+                cfg.seed,
+            );
+            let plan = planner.plan(&req).context("planning a sampled batch")?;
+            plan_secs += t1.elapsed().as_secs_f64();
+
+            let (bx, blabels, bmask) = batch.permute_for(&bd, x, f_data, labels);
+            let t2 = Instant::now();
+            let loss = match backend {
+                SampledBackend::Pjrt(engine) => pjrt_step(
+                    *engine, &mut pjrt, &bd, &plan, &bucket, &bx, f_data, &blabels, &bmask, cfg,
+                )?,
+                SampledBackend::Native { hidden, classes } => {
+                    let model = native.get_or_insert_with(|| {
+                        GcnModel::init(f_data, *hidden, *classes, cfg.seed)
+                    });
+                    native_step(model, &bd, &plan, &bx, &blabels, &bmask, cfg.lr)?
+                }
+            };
+            step_secs += t2.elapsed().as_secs_f64();
+            losses.push(loss);
+        }
+        let epoch_losses = &losses[epoch_start..];
+        let mean = epoch_losses.iter().sum::<f32>() / epoch_losses.len().max(1) as f32;
+        epoch_mean_loss.push(mean);
+    }
+
+    let params = match backend {
+        SampledBackend::Pjrt(_) => match pjrt {
+            Some(state) => trainer::literals_to_tensors(&state.params, &state.param_specs)?,
+            None => Vec::new(),
+        },
+        SampledBackend::Native { .. } => match native {
+            Some(m) => vec![
+                Tensor::f32(m.w1.clone(), &[m.f, m.h]),
+                Tensor::f32(m.b1.clone(), &[m.h]),
+                Tensor::f32(m.w2.clone(), &[m.h, m.c]),
+                Tensor::f32(m.b2.clone(), &[m.c]),
+            ],
+            None => Vec::new(),
+        },
+    };
+
+    Ok(SampledTrainReport {
+        backend: backend.name(),
+        epochs: scfg.epochs,
+        batches: losses.len(),
+        losses,
+        epoch_mean_loss,
+        plan_hits: planner.hits(),
+        plan_misses: planner.misses(),
+        sample_secs,
+        plan_secs,
+        step_secs,
+        params,
+    })
+}
+
+/// The AOT bucket a batch plans against. PJRT fits the manifest; the
+/// native backend synthesizes a bucket from the batch itself (planning
+/// needs widths and an edge capacity, not real artifacts).
+fn bucket_for(
+    backend: &SampledBackend,
+    bd: &Decomposition,
+    f_data: usize,
+) -> Result<BucketInfo> {
+    match backend {
+        SampledBackend::Pjrt(engine) => {
+            let needed = bd.intra.nnz().max(bd.inter.nnz());
+            Ok(engine
+                .manifest
+                .fit_bucket(bd.graph.n, needed)
+                .with_context(|| {
+                    format!(
+                        "no AOT bucket fits a sampled batch (n={}, edges={needed}); \
+                         lower --batch-size or --fanout",
+                        bd.graph.n
+                    )
+                })?
+                .clone())
+        }
+        SampledBackend::Native { hidden, classes } => Ok(BucketInfo {
+            name: format!("native-{}", bd.graph.n),
+            vertices: bd.graph.n,
+            // intra + inter so every admissible hybrid merge fits
+            edges: bd.intra.nnz() + bd.inter.nnz(),
+            features: f_data,
+            hidden: *hidden,
+            classes: *classes,
+            blocks: bd.graph.n.div_ceil(bd.community.max(1)),
+        }),
+    }
+}
+
+/// One PJRT optimizer step over a batch: pack the plan's operands, run
+/// the train-step artifact, feed the updated parameters forward.
+#[allow(clippy::too_many_arguments)]
+fn pjrt_step(
+    engine: &Engine,
+    state: &mut Option<PjrtState>,
+    bd: &Decomposition,
+    plan: &GearPlan,
+    bucket: &BucketInfo,
+    bx: &[f32],
+    f_data: usize,
+    blabels: &[i32],
+    bmask: &[f32],
+    cfg: &TrainConfig,
+) -> Result<f32> {
+    let chosen = plan.chosen;
+    let name = Manifest::train_name(
+        cfg.model.as_str(),
+        chosen.intra_str(),
+        &chosen.inter.to_string(),
+        &bucket.name,
+    );
+    let meta = engine.manifest.get(&name)?.clone();
+    let loaded = engine.load(&name)?;
+
+    // Initialize parameters on the first batch; afterwards only check
+    // that this batch's bucket kept the widths they were shaped for.
+    let n_params = trainer::graph_arg_start(&meta);
+    let widths = (bucket.features, bucket.hidden, bucket.classes);
+    let state = match state {
+        Some(s) => {
+            if s.widths != widths {
+                bail!(
+                    "sampled batch landed in bucket {} with widths {:?}, but parameters \
+                     were initialized for {:?}; use a manifest with uniform widths",
+                    bucket.name,
+                    widths,
+                    s.widths
+                );
+            }
+            if s.params.len() != n_params {
+                bail!(
+                    "artifact {name} expects {n_params} parameters, run carries {}",
+                    s.params.len()
+                );
+            }
+            s
+        }
+        None => {
+            let mut rng = Rng::new(cfg.seed ^ 0x9a9a);
+            let mut params: Vec<xla::Literal> = Vec::with_capacity(n_params);
+            for spec in &meta.inputs[..n_params] {
+                params.push(trainer::init_param(&spec.shape, &mut rng)?.to_literal()?);
+            }
+            state.insert(PjrtState {
+                params,
+                param_specs: meta.inputs[..n_params].to_vec(),
+                widths,
+            })
+        }
+    };
+
+    // ---- per-batch statics: graph operands + features + labels + mask + lr
+    let (intra_ops, inter_ops) =
+        pack_assignment(bd, &plan.assignment, bucket).context("packing a sampled batch")?;
+    let bn = bd.graph.n;
+    let mut static_lits: Vec<xla::Literal> = Vec::new();
+    for t in intra_ops.iter().chain(inter_ops.iter()) {
+        static_lits.push(t.to_literal()?);
+    }
+    static_lits.push(pack_features(bx, bn, f_data, bucket)?.to_literal()?);
+    let (labels_t, mask_t) = pack_labels_masked(blabels, bmask, bucket)?;
+    static_lits.push(labels_t.to_literal()?);
+    static_lits.push(mask_t.to_literal()?);
+    static_lits.push(Tensor::scalar_f32(cfg.lr).to_literal()?);
+    if state.params.len() + static_lits.len() != meta.inputs.len() {
+        bail!(
+            "operand mismatch for {name}: {} params + {} statics != {} inputs",
+            state.params.len(),
+            static_lits.len(),
+            meta.inputs.len()
+        );
+    }
+
+    let mut args: Vec<&xla::Literal> = Vec::with_capacity(meta.inputs.len());
+    args.extend(state.params.iter());
+    args.extend(static_lits.iter());
+    let mut outputs = engine.run_literals(&loaded, &args, meta.outputs.len())?;
+    let loss = outputs.pop().context("train_step returns params + loss")?;
+    state.params = outputs;
+    literal_scalar_f32(&loss)
+}
+
+/// One native CPU step: execute the plan's class assignment for `A·` and
+/// the transposed whole batch matrix for `Aᵀ·`.
+fn native_step(
+    model: &mut GcnModel,
+    bd: &Decomposition,
+    plan: &GearPlan,
+    bx: &[f32],
+    blabels: &[i32],
+    bmask: &[f32],
+    lr: f32,
+) -> Result<f32> {
+    if model.f * bd.graph.n != bx.len() {
+        bail!(
+            "feature width mismatch: model expects f={}, batch carries {}",
+            model.f,
+            bx.len() / bd.graph.n.max(1)
+        );
+    }
+    let exec = AssignmentExec::build(bd, &plan.assignment)
+        .context("compiling the batch plan to native schedules")?;
+    let at = bd.whole().transpose();
+    let n = bd.graph.n;
+    Ok(model.train_step(
+        |t, w| exec.aggregate(t, w),
+        |t, w| at.spmm(t, w),
+        bx,
+        n,
+        blabels,
+        bmask,
+        lr,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{apply_perm, preprocess, Strategy};
+    use crate::graph::datasets;
+    use crate::partition::Propagation;
+
+    fn staged(scale: f64, seed: u64) -> (Decomposition, Vec<f32>, Vec<i32>, usize) {
+        let spec = datasets::find("cora").unwrap();
+        let data = spec.build_scaled(scale, seed);
+        let (d, _) = preprocess(
+            Strategy::AdaptGear,
+            &data.graph,
+            Propagation::GcnNormalized,
+            16,
+            seed,
+        );
+        let f = 16;
+        let (x, labels) = apply_perm(&d.perm, &data.features(f), &data.labels(), f);
+        (d, x, labels, f)
+    }
+
+    #[test]
+    fn native_sampled_epoch_trains_and_amortizes_plans() {
+        let (d, x, labels, f) = staged(0.25, 3);
+        let cfg = TrainConfig { model: ModelKind::Gcn, steps: 0, lr: 0.1, seed: 7 };
+        let scfg = SampleConfig {
+            fanouts: vec![Fanout::Uniform(8), Fanout::Uniform(8)],
+            batch_size: 64,
+            epochs: 2,
+            reorder: Reorder::Metis,
+        };
+        let mut backend = SampledBackend::Native { hidden: 16, classes: 7 };
+        let report = train_sampled(&mut backend, &d, &x, f, &labels, &cfg, &scfg).unwrap();
+        assert_eq!(report.backend, "native");
+        assert_eq!(report.epochs, 2);
+        assert_eq!(report.batches, 2 * d.graph.n.div_ceil(64));
+        assert_eq!(report.losses.len(), report.batches);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(report.epoch_mean_loss.len(), 2);
+        // training makes progress across epochs on the homophilous data
+        assert!(
+            report.epoch_mean_loss[1] < report.epoch_mean_loss[0],
+            "epoch losses {:?} did not improve",
+            report.epoch_mean_loss
+        );
+        // plan cache amortizes across same-workload batches
+        assert_eq!(report.plan_hits + report.plan_misses, report.batches);
+        assert!(
+            report.plan_hit_rate() > 0.5,
+            "hit rate {:.2} (hits {}, misses {})",
+            report.plan_hit_rate(),
+            report.plan_hits,
+            report.plan_misses
+        );
+        // native GCN params round-trip as 4 tensors
+        assert_eq!(report.params.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (d, x, labels, f) = staged(0.15, 5);
+        let cfg = TrainConfig { model: ModelKind::Gcn, steps: 0, lr: 0.05, seed: 11 };
+        let scfg = SampleConfig {
+            fanouts: vec![Fanout::Uniform(5)],
+            batch_size: 48,
+            epochs: 1,
+            reorder: Reorder::Metis,
+        };
+        let run = |seed: u64| {
+            let cfg = TrainConfig { seed, ..cfg.clone() };
+            let mut backend = SampledBackend::Native { hidden: 8, classes: 7 };
+            train_sampled(&mut backend, &d, &x, f, &labels, &cfg, &scfg)
+                .unwrap()
+                .losses
+        };
+        assert_eq!(run(11), run(11), "same seed must reproduce the epoch");
+        assert_ne!(run(11), run(12), "different seeds must differ");
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let (d, x, labels, f) = staged(0.1, 1);
+        let cfg = TrainConfig { model: ModelKind::Gcn, steps: 0, lr: 0.05, seed: 0 };
+        let mut backend = SampledBackend::Native { hidden: 8, classes: 4 };
+        let bad = SampleConfig { batch_size: 0, ..SampleConfig::default() };
+        assert!(train_sampled(&mut backend, &d, &x, f, &labels, &cfg, &bad).is_err());
+        let gin = TrainConfig { model: ModelKind::Gin, ..cfg };
+        assert!(
+            train_sampled(&mut backend, &d, &x, f, &labels, &gin, &SampleConfig::default())
+                .is_err(),
+            "native backend must reject gin"
+        );
+    }
+}

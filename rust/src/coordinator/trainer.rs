@@ -140,13 +140,7 @@ pub fn train(
     let compile_secs = t_compile.elapsed().as_secs_f64();
 
     // ---- initialize parameters from the manifest's operand specs
-    let graph_arg_start = meta
-        .inputs
-        .iter()
-        .position(|s| {
-            s.name.starts_with("intra_") || s.name.starts_with("inter_") || s.name == "x"
-        })
-        .unwrap_or(meta.inputs.len());
+    let graph_arg_start = graph_arg_start(&meta);
     let mut rng = Rng::new(cfg.seed ^ 0x9a9a);
     let mut params: Vec<xla::Literal> = Vec::new();
     for spec in &meta.inputs[..graph_arg_start] {
@@ -199,9 +193,21 @@ pub fn train(
     })
 }
 
+/// Index of the first non-parameter operand in an artifact's input list
+/// (graph operands, then features/labels/mask/lr); everything before it
+/// is a trainable parameter.
+pub(crate) fn graph_arg_start(meta: &crate::runtime::ArtifactMeta) -> usize {
+    meta.inputs
+        .iter()
+        .position(|s| {
+            s.name.starts_with("intra_") || s.name.starts_with("inter_") || s.name == "x"
+        })
+        .unwrap_or(meta.inputs.len())
+}
+
 /// Glorot-uniform for matrices, zeros for vectors/scalars — mirrors
 /// `python/compile/model.py::init_params`.
-fn init_param(shape: &[usize], rng: &mut Rng) -> Result<Tensor> {
+pub(crate) fn init_param(shape: &[usize], rng: &mut Rng) -> Result<Tensor> {
     let count: usize = shape.iter().product();
     let data = if shape.len() == 2 {
         let scale = (6.0 / (shape[0] + shape[1]) as f64).sqrt() as f32;

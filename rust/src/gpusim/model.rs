@@ -78,7 +78,7 @@ impl std::str::FromStr for &'static GpuModel {
 }
 
 impl GpuModel {
-    /// Thin wrapper over the canonical [`FromStr`] path.
+    /// Thin wrapper over the canonical [`FromStr`](std::str::FromStr) path.
     pub fn by_name(name: &str) -> Option<&'static GpuModel> {
         name.parse().ok()
     }

@@ -186,6 +186,25 @@ impl Csr {
         y
     }
 
+    /// Apply a vertex relabeling to a square matrix: entry `(r, c)` moves
+    /// to `(perm[r], perm[c])` with its weight intact. `perm[old] = new`
+    /// must be a permutation of `0..n` — the matrix twin of
+    /// [`Graph::relabel`], used to reorder an already-normalized
+    /// propagation matrix without recomputing its weights (sampled
+    /// batches carry the FULL graph's normalization).
+    pub fn permuted(&self, perm: &[u32]) -> Csr {
+        assert_eq!(self.n_rows, self.n_cols, "permuted() needs a square matrix");
+        assert_eq!(perm.len(), self.n_rows);
+        debug_assert!(crate::graph::is_permutation(perm));
+        Csr::from_triplets(
+            self.n_rows,
+            self.n_cols,
+            self.to_triplets()
+                .into_iter()
+                .map(|(r, c, w)| (perm[r as usize], perm[c as usize], w)),
+        )
+    }
+
     /// COO triplets `(dst, src, w)` in row order.
     pub fn to_triplets(&self) -> Vec<(u32, u32, f32)> {
         let mut out = Vec::with_capacity(self.nnz());
@@ -359,6 +378,28 @@ mod tests {
                     let expect = if any { best } else { 0.0 };
                     prop::require_close(y[r * f + j] as f64, expect as f64, 1e-6, "max elem")?;
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn permuted_preserves_spmm_up_to_reordering() {
+        prop::check("permuted csr == relabeled graph", 20, |rng| {
+            let g = sample_graph(rng, 48);
+            let a = Csr::gcn_normalized(&g);
+            let mut perm: Vec<u32> = (0..g.n as u32).collect();
+            rng.shuffle(&mut perm);
+            // permuting the matrix == normalizing the relabeled graph
+            let direct = Csr::gcn_normalized(&g.relabel(&perm));
+            let moved = a.permuted(&perm);
+            prop::require(moved.nnz() == direct.nnz(), "nnz preserved")?;
+            let f = 2;
+            let x: Vec<f32> = (0..g.n * f).map(|_| rng.normal_f32()).collect();
+            let y1 = direct.spmm(&x, f);
+            let y2 = moved.spmm(&x, f);
+            for (a, b) in y1.iter().zip(&y2) {
+                prop::require_close(*a as f64, *b as f64, 1e-5, "permuted spmm elem")?;
             }
             Ok(())
         });

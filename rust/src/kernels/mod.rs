@@ -1,9 +1,12 @@
 //! Subgraph-level kernels: taxonomy ([`spec`]), native CPU executions
-//! mirroring the GPU schedules ([`native`]), and AOT operand packing
-//! ([`pack`]).
+//! mirroring the GPU schedules ([`native`]), a native 2-layer GCN with a
+//! hand-derived backward pass for engine-free training
+//! ([`native_model`]), and AOT operand packing ([`pack`]).
 
 pub mod native;
+pub mod native_model;
 pub mod pack;
 pub mod spec;
 
+pub use native::AssignmentExec;
 pub use spec::{KernelKind, KernelPair, INTER_CANDIDATES, INTRA_CANDIDATES};

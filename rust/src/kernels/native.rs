@@ -8,6 +8,7 @@
 //! path.
 
 use crate::graph::{Csr, DenseBlocks};
+use crate::partition::Decomposition;
 
 /// Vertex-parallel CSR aggregate (inter-community schedule): row blocks of
 /// 16, each row walks its neighbor list and gathers feature rows.
@@ -78,6 +79,112 @@ pub fn coo_spmm(n: usize, edges: &[(u32, u32, f32)], x: &[f32], f: usize) -> Vec
 /// paper trades for regularity at high density.
 pub fn dense_block_spmm(blocks: &DenseBlocks, x: &[f32], f: usize) -> Vec<f32> {
     blocks.spmm(x, f)
+}
+
+/// One pre-materialized part of a plan's class assignment, bound to its
+/// native schedule.
+enum PartExec {
+    Dense(DenseBlocks),
+    IntraCsr(Csr),
+    InterCsr(Csr),
+    Coo { n: usize, edges: Vec<(u32, u32, f32)> },
+}
+
+/// A plan's class assignment compiled to the native CPU schedules: the
+/// intra classes (one or two, per the plan's density threshold) plus the
+/// inter part, each in its assigned kernel's format. Built once per
+/// (decomposition, plan) and reused across aggregate calls — the native
+/// twin of `pack_assignment` + artifact execution, used by the sampled
+/// trainer's CPU backend and the equivalence property tests.
+pub struct AssignmentExec {
+    community: usize,
+    parts: Vec<PartExec>,
+}
+
+impl AssignmentExec {
+    /// Compile `assignment` against `d`. Fails only on an assignment that
+    /// does not cover `d` (wrong class stats) or routes a class to a
+    /// kernel with no native schedule.
+    pub fn build(
+        d: &Decomposition,
+        assignment: &crate::plan::GearAssignment,
+    ) -> anyhow::Result<AssignmentExec> {
+        assignment.covers(d)?;
+        let n = d.graph.n;
+        let part_for = |kind: crate::kernels::KernelKind, m: &Csr| -> anyhow::Result<PartExec> {
+            use crate::kernels::KernelKind;
+            Ok(match kind {
+                KernelKind::DenseBlock => {
+                    PartExec::Dense(DenseBlocks::from_block_diagonal_csr(m, d.community))
+                }
+                KernelKind::CsrIntra => PartExec::IntraCsr(m.clone()),
+                KernelKind::CsrInter => PartExec::InterCsr(m.clone()),
+                KernelKind::Coo => PartExec::Coo { n, edges: m.to_triplets() },
+                KernelKind::DenseFull => {
+                    anyhow::bail!("dense_full has no class-level native schedule")
+                }
+            })
+        };
+        let mut parts = Vec::new();
+        if assignment.is_hybrid() {
+            let split = d.split_intra(assignment.threshold);
+            for class in &split.classes {
+                let slot = match class.label {
+                    crate::partition::DensityClass::Dense => crate::plan::SubgraphClass::DenseIntra,
+                    crate::partition::DensityClass::Sparse => {
+                        crate::plan::SubgraphClass::SparseIntra
+                    }
+                };
+                let kind = assignment.kernel_for(slot).ok_or_else(|| {
+                    anyhow::anyhow!("assignment has no kernel for {}", slot.as_str())
+                })?;
+                parts.push(part_for(kind, &class.matrix)?);
+            }
+        } else {
+            let intra = assignment
+                .intra_classes()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("assignment has no intra class"))?;
+            parts.push(part_for(intra.kernel, &d.intra)?);
+        }
+        let inter = assignment.inter_class()?;
+        parts.push(part_for(inter.kernel, &d.inter)?);
+        Ok(AssignmentExec { community: d.community, parts })
+    }
+
+    /// `y = A @ x` where `A` is the whole propagation matrix, executed as
+    /// the plan's parts and summed (exact: the parts partition the
+    /// entries and zero padding is exact for aggregate-sum).
+    pub fn aggregate(&self, x: &[f32], f: usize) -> Vec<f32> {
+        let mut acc: Option<Vec<f32>> = None;
+        for part in &self.parts {
+            let y = match part {
+                PartExec::Dense(blocks) => dense_block_spmm(blocks, x, f),
+                PartExec::IntraCsr(m) => csr_intra_spmm(m, x, f, self.community),
+                PartExec::InterCsr(m) => csr_inter_spmm(m, x, f),
+                PartExec::Coo { n, edges } => coo_spmm(*n, edges, x, f),
+            };
+            match acc.as_mut() {
+                None => acc = Some(y),
+                Some(a) => {
+                    for (o, v) in a.iter_mut().zip(y) {
+                        *o += v;
+                    }
+                }
+            }
+        }
+        acc.unwrap_or_default()
+    }
+}
+
+/// One-shot convenience over [`AssignmentExec::build`] + aggregate.
+pub fn aggregate_assignment(
+    d: &Decomposition,
+    assignment: &crate::plan::GearAssignment,
+    x: &[f32],
+    f: usize,
+) -> anyhow::Result<Vec<f32>> {
+    Ok(AssignmentExec::build(d, assignment)?.aggregate(x, f))
 }
 
 #[cfg(test)]
@@ -170,6 +277,51 @@ mod tests {
             let got = csr_intra_spmm(&intra, &x, f, 16);
             for (a, b) in got.iter().zip(&intra.spmm(&x, f)) {
                 prop::require_close(*a as f64, *b as f64, 1e-4, "ragged intra elem")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assignment_exec_matches_whole_spmm() {
+        // A planner-produced assignment (uniform or hybrid) executed on
+        // the native schedules equals the whole-matrix reference.
+        use crate::coordinator::ModelKind;
+        use crate::gpusim::A100;
+        use crate::partition::{Propagation, Reorder};
+        use crate::plan::{PlanRequest, Planner, SimCostPlanner};
+        use crate::runtime::BucketInfo;
+
+        prop::check("AssignmentExec == whole spmm", 10, |rng| {
+            let n = (rng.usize_below(8) + 3) * 16;
+            let g = planted_partition(n, 16, 0.4 + rng.f64() * 0.4, 0.02, rng);
+            let d = crate::partition::Decomposition::build(
+                &g,
+                Reorder::Metis,
+                Propagation::GcnNormalized,
+                16,
+                1,
+            );
+            let bucket = BucketInfo {
+                name: "t".into(),
+                vertices: n,
+                edges: d.intra.nnz() + d.inter.nnz() + 8,
+                features: 16,
+                hidden: 16,
+                classes: 4,
+                blocks: n / 16,
+            };
+            let plan = SimCostPlanner::new(&A100)
+                .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+                .map_err(|e| e.to_string())?;
+            let exec = super::AssignmentExec::build(&d, &plan.assignment)
+                .map_err(|e| e.to_string())?;
+            let f = 3;
+            let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+            let got = exec.aggregate(&x, f);
+            let expect = d.whole().spmm(&x, f);
+            for (a, b) in got.iter().zip(&expect) {
+                prop::require_close(*a as f64, *b as f64, 1e-4, "assignment exec elem")?;
             }
             Ok(())
         });

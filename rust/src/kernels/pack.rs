@@ -161,17 +161,33 @@ pub fn pack_features(x: &[f32], n: usize, f_data: usize, bucket: &BucketInfo) ->
 /// Pad labels to `[V]` (clamping into the bucket's class range) and build
 /// the matching mask (1.0 for real vertices, 0.0 for padding).
 pub fn pack_labels_mask(labels: &[i32], bucket: &BucketInfo) -> Result<(Tensor, Tensor)> {
+    let ones = vec![1.0f32; labels.len()];
+    pack_labels_masked(labels, &ones, bucket)
+}
+
+/// [`pack_labels_mask`] with a caller-supplied per-row mask — sampled
+/// batches mask their support rows out of the loss (only target rows
+/// carry 1.0). One implementation owns the label clamp/padding contract
+/// for both the full-graph and sampled paths.
+pub fn pack_labels_masked(
+    labels: &[i32],
+    mask: &[f32],
+    bucket: &BucketInfo,
+) -> Result<(Tensor, Tensor)> {
+    if labels.len() != mask.len() {
+        bail!("labels ({}) and mask ({}) lengths differ", labels.len(), mask.len());
+    }
     if labels.len() > bucket.vertices {
         bail!("labels exceed bucket vertex capacity");
     }
     let v = bucket.vertices;
     let mut lab = vec![0i32; v];
-    let mut mask = vec![0f32; v];
+    let mut m = vec![0f32; v];
     for (i, &l) in labels.iter().enumerate() {
         lab[i] = l.rem_euclid(bucket.classes as i32);
-        mask[i] = 1.0;
+        m[i] = mask[i];
     }
-    Ok((Tensor::i32(lab, &[v]), Tensor::f32(mask, &[v])))
+    Ok((Tensor::i32(lab, &[v]), Tensor::f32(m, &[v])))
 }
 
 /// Pack only the listed diagonal `blocks` of a block-diagonal matrix for
@@ -368,6 +384,16 @@ mod tests {
         assert_eq!(&l[..3], &[0, 1, 3]); // 5 % 4 = 1, -1 -> 3
         let m = mask.as_f32().unwrap();
         assert_eq!(&m[..4], &[1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn custom_mask_packs_verbatim() {
+        // the sampled path: support rows masked out of the loss
+        let b = bucket();
+        let (lab, mask) = pack_labels_masked(&[1, 2, 3], &[1.0, 0.0, 1.0], &b).unwrap();
+        assert_eq!(&lab.as_i32().unwrap()[..3], &[1, 2, 3]);
+        assert_eq!(&mask.as_f32().unwrap()[..4], &[1.0, 0.0, 1.0, 0.0]);
+        assert!(pack_labels_masked(&[1], &[1.0, 1.0], &b).is_err());
     }
 
     #[test]

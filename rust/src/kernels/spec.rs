@@ -30,7 +30,7 @@ impl KernelKind {
         }
     }
 
-    /// Thin wrapper over the canonical [`FromStr`] path.
+    /// Thin wrapper over the canonical [`FromStr`](std::str::FromStr) path.
     pub fn parse(s: &str) -> Option<KernelKind> {
         s.parse().ok()
     }

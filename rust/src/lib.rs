@@ -16,9 +16,12 @@
 //!   cacheable artifact (`GearPlan` + pluggable planners + on-disk
 //!   `PlanStore`), the [`serve`] inference-serving runtime (model
 //!   registry, micro-batching, admission control, SLO metrics) layered on
-//!   top, and the [`bench`] subsystem — fixed-workload suites emitting
-//!   schema-versioned `BENCH_*.json` reports with a baseline comparator
-//!   that gates perf regressions in CI.
+//!   top, the [`sample`] subsystem (layer-wise neighbor sampling for
+//!   mini-batch training and sampled inference, with a profile-keyed
+//!   amortized batch planner in [`plan`]), and the [`bench`] subsystem —
+//!   fixed-workload suites emitting schema-versioned `BENCH_*.json`
+//!   reports with a baseline comparator that gates perf regressions in
+//!   CI.
 //!
 //! See `rust/DESIGN.md` for the full architecture inventory, including
 //! the plan lifecycle (Sec. 7), the serving subsystem's channel
@@ -32,5 +35,6 @@ pub mod kernels;
 pub mod partition;
 pub mod plan;
 pub mod runtime;
+pub mod sample;
 pub mod serve;
 pub mod util;

@@ -6,10 +6,15 @@
 //! adaptgear plan --dataset cora --model gcn [--explain]
 //!                                            # compute + persist a GearPlan
 //! adaptgear train --dataset cora --model gcn --steps 200 [--planner cached]
+//! adaptgear train --dataset planted-mixed --sampled --fanout 10,10
+//!                                            # mini-batch neighbor-sampled training
 //! adaptgear serve --dataset citeseer --requests 500 --max-batch 16
 //!                                            # micro-batched serving + SLO report
+//! adaptgear bench --quick --suite sample     # fixed workload suites -> BENCH_*.json
 //! adaptgear selftest                         # artifact <-> runtime smoke check
 //! ```
+//!
+//! `adaptgear help <command>` prints the full per-command flag reference.
 //!
 //! Figure regeneration lives in the bench harness: `cargo bench --bench
 //! figures -- <fig2b|fig3a|...|all>`.
@@ -31,6 +36,14 @@ use adaptgear::util::json;
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    // `adaptgear <command> --help` and `adaptgear help <command>` both
+    // print the focused per-command reference.
+    if args.flag("help") && cmd != "help" {
+        if let Some(text) = command_help(cmd) {
+            println!("{text}");
+            return;
+        }
+    }
     let result = match cmd {
         "datasets" => cmd_datasets(&args),
         "decompose" => cmd_decompose(&args),
@@ -40,7 +53,10 @@ fn main() {
         "bench" => cmd_bench(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" => {
-            print_help();
+            match args.positional.get(1).and_then(|c| command_help(c)) {
+                Some(text) => println!("{text}"),
+                None => print_help(),
+            }
             Ok(())
         }
         other => {
@@ -52,6 +68,112 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Focused reference for one subcommand: every flag it accepts and one
+/// copy-pasteable example (smoke-checked by ci.sh).
+fn command_help(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "datasets" => {
+            "adaptgear datasets — list the Table 1 registry plus synthetic stand-ins.\n\n\
+             FLAGS: none.\n\n\
+             EXAMPLE:\n  adaptgear datasets"
+        }
+        "decompose" => {
+            "adaptgear decompose — reorder a dataset, split intra/inter, print the\n\
+             density report and an adjacency heat map.\n\n\
+             FLAGS:\n\
+             \x20 --dataset NAME      dataset or figure code (required)\n\
+             \x20 --scale S           vertex-count scale factor (default: fits ~20k)\n\
+             \x20 --community C       community width (default 16)\n\
+             \x20 --seed N            generation + reorder seed (default 0)\n\n\
+             EXAMPLE:\n  adaptgear decompose --dataset cora --community 16"
+        }
+        "plan" => {
+            "adaptgear plan — compute a GearPlan (kernel decision) without training,\n\
+             print it, and persist it to <artifacts>/plans/. Needs only the bucket\n\
+             manifest unless --clock wall.\n\n\
+             FLAGS:\n\
+             \x20 --dataset NAME      dataset (default cora)\n\
+             \x20 --model gcn|gin     model kind (default gcn)\n\
+             \x20 --planner cached|monitor|sim   planning strategy (default cached)\n\
+             \x20 --clock sim|wall    monitor timing source (default sim)\n\
+             \x20 --gpu a100|v100     simulated GPU (default a100)\n\
+             \x20 --monitor-repeats N monitored iterations per candidate (default 3)\n\
+             \x20 --scale S           dataset scale override\n\
+             \x20 --seed N            generation seed (default 0)\n\
+             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
+             \x20 --explain           per-candidate costs, density histogram,\n\
+             \x20                     per-class hybrid assignment\n\
+             \x20 --no-save           do not write the plan store\n\
+             \x20 --out FILE          also write the plan JSON to FILE\n\n\
+             EXAMPLE:\n  adaptgear plan --dataset planted-mixed --explain"
+        }
+        "train" => {
+            "adaptgear train — plan (or load a cached plan), then train through PJRT.\n\
+             With --sampled, run mini-batch neighbor-sampled training instead: each\n\
+             batch subgraph is planned through the amortized profile-keyed cache and\n\
+             executed on the hybrid pack/forward paths (PJRT when artifacts exist,\n\
+             the native CPU backend otherwise).\n\n\
+             FLAGS:\n\
+             \x20 --dataset NAME      dataset (default cora)\n\
+             \x20 --model gcn|gin     model kind (default gcn)\n\
+             \x20 --steps N           full-graph training steps (default 200)\n\
+             \x20 --lr F              learning rate (default 0.05)\n\
+             \x20 --planner monitor|cached|sim  (default monitor)\n\
+             \x20 --clock sim|wall    monitor timing source (default sim)\n\
+             \x20 --gpu a100|v100     simulated GPU (default a100)\n\
+             \x20 --scale S           dataset scale override\n\
+             \x20 --seed N            generation + init seed (default 0)\n\
+             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
+             \x20 --sampled           mini-batch neighbor-sampled training\n\
+             \x20 --fanout K1,K2,...  per-layer neighbor budgets; 'full' or 0 keeps\n\
+             \x20                     every neighbor (default 10,10)\n\
+             \x20 --batch-size N      target vertices per batch (default 256)\n\
+             \x20 --epochs N          passes over the vertex set (default 1)\n\n\
+             EXAMPLE:\n  adaptgear train --dataset planted-mixed --sampled --fanout 10,10"
+        }
+        "serve" => {
+            "adaptgear serve — deploy (plan + train + warm) through the registry,\n\
+             then drive the micro-batched serving loop with the closed-loop load\n\
+             generator and print the SLO report.\n\n\
+             FLAGS:\n\
+             \x20 --dataset NAME      dataset (default citeseer)\n\
+             \x20 --model gcn|gin     model kind (default gcn)\n\
+             \x20 --requests N        total requests (default 500)\n\
+             \x20 --clients N         closed-loop client threads (default 32)\n\
+             \x20 --max-batch N       micro-batch size cap (default 16)\n\
+             \x20 --max-wait-us N     micro-batch wait cap (default 2000)\n\
+             \x20 --queue-depth N     admission bound on in-flight requests (default 256)\n\
+             \x20 --steps N           training budget before serving (default 60)\n\
+             \x20 --seed N            loadgen seed (default 99)\n\
+             \x20 --train-seed N      training seed (default 0)\n\
+             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\n\
+             EXAMPLE:\n  adaptgear serve --dataset citeseer --requests 500 --max-batch 16"
+        }
+        "bench" => {
+            "adaptgear bench — run the fixed workload suites and emit schema-versioned\n\
+             BENCH_*.json reports; validate or regression-gate emitted reports.\n\n\
+             FLAGS:\n\
+             \x20 --quick             reduced CI workload profile\n\
+             \x20 --suite all|kernels|plan|train|serve|sample  (default all)\n\
+             \x20 --out DIR           report directory (default .)\n\
+             \x20 --seed N            workload seed (default 7)\n\
+             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
+             \x20 --validate          schema-check emitted reports, run nothing\n\
+             \x20 --check             diff against --baseline DIR; non-zero exit on\n\
+             \x20                     regression beyond --tolerance F (default 0.5)\n\n\
+             EXAMPLE:\n  adaptgear bench --quick --suite sample"
+        }
+        "selftest" => {
+            "adaptgear selftest — execute every kernel artifact against the native\n\
+             Rust kernels on a random decomposed graph and compare numerics.\n\n\
+             FLAGS:\n\
+             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\n\
+             EXAMPLE:\n  adaptgear selftest"
+        }
+        _ => return None,
+    })
 }
 
 fn print_help() {
@@ -70,13 +192,16 @@ fn print_help() {
          \x20 train --dataset NAME [--model gcn|gin] [--steps N] [--lr F]\n\
          \x20       [--planner monitor|cached|sim] [--clock sim|wall]\n\
          \x20       [--gpu a100|v100] [--scale S] [--seed N]\n\
-         \x20                                   plan (or load a cached plan), then train\n\
+         \x20       [--sampled [--fanout 10,10] [--batch-size N] [--epochs N]]\n\
+         \x20                                   plan (or load a cached plan), then train;\n\
+         \x20                                   --sampled runs mini-batch neighbor-sampled\n\
+         \x20                                   training with amortized per-batch plans\n\
          \x20 serve --dataset NAME [--model gcn|gin] [--requests N] [--clients N]\n\
          \x20       [--max-batch N] [--max-wait-us N] [--queue-depth N] [--steps N]\n\
          \x20       [--seed N (loadgen)] [--train-seed N]\n\
          \x20                                   micro-batched serving loop + SLO report\n\
          \x20                                   (deploys plan through the plan cache)\n\
-         \x20 bench [--quick] [--suite all|kernels|plan|train|serve] [--out DIR]\n\
+         \x20 bench [--quick] [--suite all|kernels|plan|train|serve|sample] [--out DIR]\n\
          \x20                                   run the fixed workload suites, emit\n\
          \x20                                   schema-versioned BENCH_*.json reports\n\
          \x20 bench --validate [--out DIR]      schema-check emitted BENCH_*.json\n\
@@ -84,6 +209,8 @@ fn print_help() {
          \x20                                   diff emitted reports against committed\n\
          \x20                                   baselines; non-zero exit on regression\n\
          \x20 selftest                          verify artifacts + runtime numerics\n\n\
+         Run `adaptgear help <command>` (or `adaptgear <command> --help`) for every\n\
+         flag plus a copy-pasteable example.\n\n\
          Figures: cargo bench --bench figures -- <fig2b|fig3a|fig3b|fig4|fig8|\n\
          \x20        fig9|fig10|fig11|fig12|table2|overhead|all>"
     );
@@ -402,6 +529,9 @@ fn planner_from_args<'e>(args: &Args, engine: &'e Engine) -> Result<Box<dyn Plan
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    if args.flag("sampled") {
+        return cmd_train_sampled(args);
+    }
     let name = args.get("dataset").unwrap_or("cora");
     let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
     let model: ModelKind = args.get_or("model", "gcn").parse()?;
@@ -452,6 +582,141 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.train.compile_secs,
         report.train.pack_secs,
     );
+    Ok(())
+}
+
+/// `train --sampled`: mini-batch neighbor-sampled training. Batches are
+/// planned through the amortized profile-keyed cache and execute on the
+/// PJRT artifacts when they exist, else on the native CPU backend — so
+/// the sampled loop runs end to end on a bare checkout.
+fn cmd_train_sampled(args: &Args) -> Result<()> {
+    use adaptgear::coordinator::{
+        apply_perm, preprocess, train_sampled, SampleConfig, SampledBackend,
+        SampledTrainReport, TrainConfig,
+    };
+    use adaptgear::partition::Reorder;
+    use adaptgear::sample::parse_fanouts;
+
+    let name = args.get("dataset").unwrap_or("cora");
+    let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
+    let model: ModelKind = args.get_or("model", "gcn").parse()?;
+    let fanouts = parse_fanouts(args.get_or("fanout", "10,10"))?;
+    let scfg = SampleConfig {
+        fanouts,
+        batch_size: args.get_usize("batch-size", 256),
+        epochs: args.get_usize("epochs", 1),
+        reorder: Reorder::Metis,
+    };
+    let cfg = TrainConfig {
+        model,
+        steps: 0, // sampled training budgets in epochs, not steps
+        lr: args.get_f64("lr", 0.05) as f32,
+        seed: args.get_u64("seed", 0),
+    };
+    let scale_override = args.get("scale").map(|s| s.parse::<f64>()).transpose()?;
+
+    let print_report = |report: &SampledTrainReport, scfg: &SampleConfig| {
+        for (e, mean) in report.epoch_mean_loss.iter().enumerate() {
+            println!("epoch {e:>3}  mean loss {mean:.5}");
+        }
+        println!(
+            "sampled training [{}]: {} epochs (fanout {}, batch {}) = {} batches | final loss {:.5}",
+            report.backend,
+            report.epochs,
+            scfg.fanouts
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+            scfg.batch_size,
+            report.batches,
+            report.final_loss(),
+        );
+        println!(
+            "plan cache: {} hits / {} misses (hit rate {:.2}) | sample {:.3}s plan {:.3}s step {:.3}s",
+            report.plan_hits,
+            report.plan_misses,
+            report.plan_hit_rate(),
+            report.sample_secs,
+            report.plan_secs,
+            report.step_secs,
+        );
+    };
+
+    match Engine::new(artifacts_dir(args)) {
+        Ok(engine) => {
+            println!(
+                "platform={} artifacts={}",
+                engine.platform(),
+                engine.manifest.artifacts.len()
+            );
+            // Unlike full-graph training, the FULL graph does not need to
+            // fit an AOT bucket — only each sampled batch does (fitted
+            // per batch inside train_sampled). So no pipeline::stage /
+            // auto-scale-to-bucket here: materialize at the requested
+            // scale and preprocess with the manifest's community width.
+            let scale = scale_override
+                .unwrap_or_else(|| (50_000.0 / spec.vertices as f64).min(1.0));
+            let data = spec.build_scaled(scale, cfg.seed);
+            let (d, times) = preprocess(
+                Strategy::AdaptGear,
+                &data.graph,
+                pipeline::propagation_for(model),
+                engine.manifest.community,
+                cfg.seed,
+            );
+            println!(
+                "dataset={} scale={:.4} vertices={} edges={} | reorder {:.3}s decompose {:.3}s",
+                spec.name,
+                scale,
+                data.graph.n,
+                data.graph.directed_edge_count(),
+                times.reorder_secs,
+                times.decompose_secs
+            );
+            let f_data = engine
+                .manifest
+                .buckets
+                .values()
+                .map(|b| b.features)
+                .max()
+                .context("manifest has no buckets")?;
+            let (x, labels) = apply_perm(&d.perm, &data.features(f_data), &data.labels(), f_data);
+            let mut backend = SampledBackend::Pjrt(&engine);
+            let report = train_sampled(&mut backend, &d, &x, f_data, &labels, &cfg, &scfg)?;
+            print_report(&report, &scfg);
+        }
+        Err(e) => {
+            println!("artifacts unavailable ({e:#}); running the native CPU backend");
+            let scale =
+                scale_override.unwrap_or_else(|| (4096.0 / spec.vertices as f64).min(1.0));
+            let data = spec.build_scaled(scale, cfg.seed);
+            let (d, times) = preprocess(
+                Strategy::AdaptGear,
+                &data.graph,
+                pipeline::propagation_for(model),
+                datasets::COMMUNITY,
+                cfg.seed,
+            );
+            println!(
+                "dataset={} scale={:.4} vertices={} edges={} | reorder {:.3}s decompose {:.3}s",
+                spec.name,
+                scale,
+                data.graph.n,
+                data.graph.directed_edge_count(),
+                times.reorder_secs,
+                times.decompose_secs
+            );
+            let f_data = 32;
+            let (x, labels) = apply_perm(&d.perm, &data.features(f_data), &data.labels(), f_data);
+            let mut backend = SampledBackend::Native {
+                hidden: 32,
+                classes: spec.classes.clamp(2, 8),
+            };
+            let report = train_sampled(&mut backend, &d, &x, f_data, &labels, &cfg, &scfg)?;
+            print_report(&report, &scfg);
+        }
+    }
     Ok(())
 }
 

@@ -27,7 +27,7 @@ impl Reorder {
         }
     }
 
-    /// Thin wrapper over the canonical [`FromStr`] path.
+    /// Thin wrapper over the canonical [`FromStr`](std::str::FromStr) path.
     pub fn parse(s: &str) -> Option<Reorder> {
         s.parse().ok()
     }
@@ -235,6 +235,34 @@ impl Decomposition {
         Decomposition { graph, perm, intra, inter, community }
     }
 
+    /// Decompose an already-built propagation matrix, preserving its
+    /// weights: derive the (symmetrized) topology from the off-diagonal
+    /// entries, reorder it, permute the matrix, and split. Sampled batch
+    /// subgraphs come through here — their edge weights carry the FULL
+    /// graph's normalization, which [`Decomposition::build`] would
+    /// destroy by renormalizing over batch-local degrees.
+    pub fn from_propagation(
+        matrix: &Csr,
+        reorder: Reorder,
+        community: usize,
+        seed: u64,
+    ) -> Decomposition {
+        assert_eq!(matrix.n_rows, matrix.n_cols, "propagation matrix must be square");
+        let topo = Graph::from_edges(
+            matrix.n_rows,
+            matrix
+                .to_triplets()
+                .into_iter()
+                .filter(|&(r, c, _)| r != c)
+                .map(|(r, c, _)| (r, c)),
+        );
+        let perm = reorder.order(&topo, community, seed);
+        let graph = topo.relabel(&perm);
+        let moved = matrix.permuted(&perm);
+        let (intra, inter) = moved.split_block_diagonal(community);
+        Decomposition { graph, perm, intra, inter, community }
+    }
+
     /// The whole propagation matrix (intra + inter) — used by full-graph
     /// baselines and for invariant checks.
     pub fn whole(&self) -> Csr {
@@ -336,6 +364,40 @@ mod tests {
             let y2 = rebuilt.spmm(&x, f);
             for (a, b) in y1.iter().zip(&y2) {
                 prop::require_close(*a as f64, *b as f64, 1e-4, "spmm elem")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_propagation_preserves_weights_and_entries() {
+        prop::check("from_propagation keeps the matrix", 8, |rng| {
+            let n = (rng.usize_below(6) + 3) * 16;
+            let g = hidden_graph(rng, n);
+            let matrix = Csr::gcn_normalized(&g);
+            let d = Decomposition::from_propagation(&matrix, Reorder::Metis, 16, 2);
+            prop::require(d.whole().nnz() == matrix.nnz(), "nnz preserved")?;
+            // the recombined matrix is the input permuted by d.perm: spmm
+            // on permuted inputs matches the original spmm, row-permuted
+            let f = 2;
+            let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+            let mut xp = vec![0.0f32; n * f];
+            for old in 0..n {
+                let new = d.perm[old] as usize;
+                xp[new * f..(new + 1) * f].copy_from_slice(&x[old * f..(old + 1) * f]);
+            }
+            let y = matrix.spmm(&x, f);
+            let yp = d.whole().spmm(&xp, f);
+            for old in 0..n {
+                let new = d.perm[old] as usize;
+                for j in 0..f {
+                    prop::require_close(
+                        yp[new * f + j] as f64,
+                        y[old * f + j] as f64,
+                        1e-4,
+                        "permuted propagation elem",
+                    )?;
+                }
             }
             Ok(())
         });

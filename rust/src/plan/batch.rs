@@ -1,0 +1,550 @@
+//! Amortized per-batch planning: a plan cache keyed by density *profile*.
+//!
+//! Exact topology fingerprints ([`Fingerprint`](super::Fingerprint)) are
+//! the right cache key for full-graph plans — the same graph recurs run
+//! after run. Sampled mini-batches are the opposite regime: every batch
+//! is a fresh subgraph that will *never* recur exactly, but batches drawn
+//! from the same graph with the same fanout have near-identical density
+//! profiles, and the kernel decision depends only on that profile. So the
+//! [`BatchPlanner`] keys its cache on a [`BatchProfile`] — coarsely
+//! bucketed rows / nnz / intra fraction / block-density histogram — and,
+//! on a hit, *re-derives* a valid [`GearPlan`] for the new batch from the
+//! cached **decision** (threshold + per-class kernels): the class stats
+//! are recomputed from the batch's real block profile, the bucket
+//! admissibility is re-checked, and the plan carries the batch's own
+//! fingerprint, so a served plan always validates against the batch it
+//! executes. Inadmissible or degenerate adaptations fall back to the
+//! inner planner (a full threshold sweep) and refresh the cache.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::ModelKind;
+use crate::gpusim::{class_kernel_cost, kernel_cost, ClassDims, GpuModel, IterationCost};
+use crate::kernels::{KernelKind, KernelPair};
+use crate::partition::{BlockProfile, Decomposition, DensityClass};
+
+use super::{
+    ClassAssignment, GearAssignment, GearPlan, PlanRequest, Planner, Provenance, SubgraphClass,
+};
+
+/// Coarse density profile of one batch decomposition — the cache key for
+/// amortized planning. Deliberately lossy: batches from the same
+/// (graph, fanout, batch-size) workload should collide, and safety comes
+/// from the per-batch re-derivation, not from key precision.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchProfile {
+    pub model: ModelKind,
+    pub community: usize,
+    /// `ceil(log2(rows))` — batch size class.
+    pub rows_log2: u32,
+    /// `ceil(log2(total nnz + 1))` — edge budget class.
+    pub nnz_log2: u32,
+    /// Intra share of the nnz, quantized to quarters (0..=4). Coarse on
+    /// purpose: a spurious collision only re-derives a plan, a spurious
+    /// miss re-runs the whole threshold sweep.
+    pub intra_quarters: u8,
+    /// Block-density histogram over 4 equal-width bins, each quantized to
+    /// quarters of the block count.
+    pub hist_quarters: [u8; 4],
+}
+
+fn ceil_log2(v: usize) -> u32 {
+    let v = v.max(1) as u64;
+    64 - (v - 1).leading_zeros().min(64)
+}
+
+impl BatchProfile {
+    pub fn of(d: &Decomposition, model: ModelKind) -> BatchProfile {
+        BatchProfile::of_profile(&d.intra_block_profile(), d, model)
+    }
+
+    /// [`BatchProfile::of`] over an already-computed block profile, so
+    /// the planner's hot path walks the intra part once per batch.
+    pub fn of_profile(
+        profile: &BlockProfile,
+        d: &Decomposition,
+        model: ModelKind,
+    ) -> BatchProfile {
+        let blocks = profile.len().max(1);
+        let hist4 = profile.histogram(4);
+        let mut hist_quarters = [0u8; 4];
+        for (i, &count) in hist4.iter().enumerate() {
+            hist_quarters[i] = ((count * 4 + blocks / 2) / blocks).min(4) as u8;
+        }
+        let intra = d.intra.nnz();
+        let total = intra + d.inter.nnz();
+        let intra_quarters = if total == 0 {
+            0
+        } else {
+            ((intra * 4 + total / 2) / total).min(4) as u8
+        };
+        BatchProfile {
+            model,
+            community: d.community,
+            rows_log2: ceil_log2(d.graph.n),
+            nnz_log2: ceil_log2(total + 1),
+            intra_quarters,
+            hist_quarters,
+        }
+    }
+
+    /// FNV-1a digest for map keying / diagnostics.
+    pub fn key(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut put = |b: u64| {
+            for byte in b.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        put(self.model as u64);
+        put(self.community as u64);
+        put(self.rows_log2 as u64);
+        put(self.nnz_log2 as u64);
+        put(self.intra_quarters as u64);
+        for &e in &self.hist_quarters {
+            put(e as u64);
+        }
+        h
+    }
+}
+
+/// The part of a plan worth remembering across similar batches: the
+/// density threshold and which kernel runs each class. Everything else
+/// (stats, fingerprint, costs) is batch-specific and re-derived.
+#[derive(Debug, Clone)]
+struct CachedDecision {
+    threshold: f64,
+    dense: Option<KernelKind>,
+    sparse: Option<KernelKind>,
+    inter: KernelKind,
+}
+
+impl CachedDecision {
+    fn of(a: &GearAssignment, inter: KernelKind) -> CachedDecision {
+        CachedDecision {
+            threshold: a.threshold,
+            dense: a.kernel_for(SubgraphClass::DenseIntra),
+            sparse: a.kernel_for(SubgraphClass::SparseIntra),
+            inter,
+        }
+    }
+}
+
+/// Profile-keyed amortized planner for mini-batch workloads.
+///
+/// A hit costs one block-profile pass + closed-form class pricing; a
+/// miss delegates to `inner` (typically
+/// [`SimCostPlanner`](super::SimCostPlanner), whose threshold sweep is
+/// the expensive step being amortized) and caches the resulting
+/// decision. Hit/miss counters feed the `sample` bench suite's
+/// `plan_cache/hit_rate` metric.
+pub struct BatchPlanner<P> {
+    gpu: &'static GpuModel,
+    inner: P,
+    cache: HashMap<u64, CachedDecision>,
+    hits: usize,
+    misses: usize,
+}
+
+impl<P: Planner> BatchPlanner<P> {
+    pub fn new(inner: P, gpu: &'static GpuModel) -> BatchPlanner<P> {
+        BatchPlanner { gpu, inner, cache: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Distinct cached profiles.
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+
+    /// Hits over total plans served so far (0.0 before the first plan).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Adapt a cached decision to `req`'s actual batch: reclassify the
+    /// blocks at the cached threshold, rebuild the class stats, and
+    /// re-check bucket admissibility. `None` means the decision does not
+    /// transfer (degenerate split with no usable kernel, or the operands
+    /// would overflow the bucket) and the inner planner must run.
+    fn adapt(
+        &self,
+        decision: &CachedDecision,
+        req: &PlanRequest,
+        profile: &BlockProfile,
+    ) -> Option<GearAssignment> {
+        let d = req.d;
+        let bucket = req.bucket;
+        if d.graph.n > bucket.vertices {
+            return None;
+        }
+        let widths = req.widths();
+        let labels = profile.classify(decision.threshold);
+        let mut dense = (0usize, 0usize, 0usize); // (blocks, rows, nnz)
+        let mut sparse = (0usize, 0usize, 0usize);
+        for (b, label) in labels.iter().enumerate() {
+            let (rows, nnz) = profile.blocks[b];
+            let side = match label {
+                DensityClass::Dense => &mut dense,
+                DensityClass::Sparse => &mut sparse,
+            };
+            side.0 += 1;
+            side.1 += rows;
+            side.2 += nnz;
+        }
+        let mean_class = |kind: KernelKind, blocks: usize, rows: usize, nnz: usize| -> f64 {
+            let dims = ClassDims { kind, blocks, rows, nnz };
+            widths
+                .iter()
+                .map(|&w| class_kernel_cost(&dims, w, d.community, self.gpu).time_us)
+                .sum::<f64>()
+                / widths.len().max(1) as f64
+        };
+        let inter_time = widths
+            .iter()
+            .map(|&w| kernel_cost(decision.inter, &d.inter, w, d.community, self.gpu).time_us)
+            .sum::<f64>()
+            / widths.len().max(1) as f64;
+        let inter_class = ClassAssignment {
+            class: SubgraphClass::Inter,
+            kernel: decision.inter,
+            blocks: 0,
+            rows: d.inter.n_rows,
+            nnz: d.inter.nnz(),
+            time_us: inter_time,
+        };
+
+        if dense.0 > 0 && sparse.0 > 0 {
+            // Genuinely hybrid on this batch too: needs both kernels and
+            // the merged sparse+inter operand must fit the bucket.
+            let (dk, sk) = (decision.dense?, decision.sparse?);
+            if dense.2 > bucket.edges || sparse.2 + d.inter.nnz() > bucket.edges {
+                return None;
+            }
+            return Some(GearAssignment {
+                threshold: decision.threshold,
+                classes: vec![
+                    ClassAssignment {
+                        class: SubgraphClass::DenseIntra,
+                        kernel: dk,
+                        blocks: dense.0,
+                        rows: dense.1,
+                        nnz: dense.2,
+                        time_us: mean_class(dk, dense.0, dense.1, dense.2),
+                    },
+                    ClassAssignment {
+                        class: SubgraphClass::SparseIntra,
+                        kernel: sk,
+                        blocks: sparse.0,
+                        rows: sparse.1,
+                        nnz: sparse.2,
+                        time_us: mean_class(sk, sparse.0, sparse.1, sparse.2),
+                    },
+                    inter_class,
+                ],
+            });
+        }
+
+        // One-sided split on this batch: collapse to the uniform plan for
+        // whichever side is populated (the uniform extremes are always
+        // executable when the subgraphs fit the bucket). The class kernel
+        // must be able to run in the intra artifact slot — a sparse class
+        // that ran as COO under the merged-operand lowering cannot.
+        let (kernel, stats) = if dense.0 > 0 {
+            (decision.dense?, dense)
+        } else {
+            (decision.sparse?, sparse)
+        };
+        if !crate::kernels::INTRA_CANDIDATES.contains(&kernel) {
+            return None;
+        }
+        if stats.2 > bucket.edges || d.inter.nnz() > bucket.edges {
+            return None;
+        }
+        let pair = KernelPair::new(kernel, decision.inter);
+        Some(GearAssignment::uniform(
+            pair,
+            (profile.len(), stats.1, stats.2, mean_class(kernel, stats.0, stats.1, stats.2)),
+            (d.inter.n_rows, d.inter.nnz(), inter_time),
+        ))
+    }
+
+    /// Assemble a served plan around an adapted assignment.
+    fn plan_from(&self, req: &PlanRequest, assignment: GearAssignment) -> Result<GearPlan> {
+        let chosen = assignment.executed_pair()?;
+        let widths = req.widths();
+        let mut per_width = std::collections::BTreeMap::new();
+        for &w in &widths {
+            per_width.insert(w, chosen);
+        }
+        let mut intra_times = std::collections::BTreeMap::new();
+        for c in assignment.intra_classes() {
+            intra_times.insert(c.kernel.as_str().to_string(), c.time_us);
+        }
+        let mut inter_times = std::collections::BTreeMap::new();
+        let inter = assignment.inter_class()?;
+        inter_times.insert(inter.kernel.as_str().to_string(), inter.time_us);
+        // Cheap projection from the class-cost basis (one launch set per
+        // aggregate width) — amortized plans must not pay a cache sim.
+        let projected = IterationCost {
+            aggregate_us: assignment.total_cost_us() * widths.len() as f64,
+            update_us: 0.0,
+            overhead_us: 0.0,
+            l2_hits: 0,
+            l2_accesses: 0,
+            kernel_launches: assignment.classes.len() * widths.len(),
+        };
+        Ok(GearPlan {
+            fingerprint: req.fingerprint(),
+            dataset: req.dataset.clone(),
+            model: req.model,
+            scale: req.scale,
+            community: req.d.community,
+            reorder: req.reorder,
+            seed: req.seed,
+            bucket: req.bucket.name.clone(),
+            chosen,
+            assignment,
+            per_width,
+            intra_times,
+            inter_times,
+            projected,
+            monitor_iters: 0,
+            monitor_overhead_us: 0.0,
+            provenance: Provenance {
+                planner: "batch".to_string(),
+                clock: "analytic".to_string(),
+                gpu: self.gpu.name.to_string(),
+                cached: true,
+            },
+        })
+    }
+}
+
+impl<P: Planner> Planner for BatchPlanner<P> {
+    fn name(&self) -> &'static str {
+        "batch"
+    }
+
+    fn plan(&mut self, req: &PlanRequest) -> Result<GearPlan> {
+        // ONE block-profile pass per batch, shared by the key and the
+        // hit-path re-derivation.
+        let profile = req.d.intra_block_profile();
+        let key = BatchProfile::of_profile(&profile, req.d, req.model).key();
+        let cached = self.cache.get(&key).cloned();
+        if let Some(decision) = cached {
+            if let Some(assignment) = self.adapt(&decision, req, &profile) {
+                self.hits += 1;
+                return self.plan_from(req, assignment);
+            }
+            // Inadmissible adaptation: fall through, replan, refresh.
+        }
+        let plan = self.inner.plan(req)?;
+        self.misses += 1;
+        self.cache
+            .insert(key, CachedDecision::of(&plan.assignment, plan.chosen.inter));
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{small_bucket, small_decomposition};
+    use super::super::SimCostPlanner;
+    use super::*;
+    use crate::graph::generate::planted_partition_mixed;
+    use crate::gpusim::A100;
+    use crate::partition::{Propagation, Reorder};
+    use crate::runtime::BucketInfo;
+    use crate::util::rng::Rng;
+
+    /// A topology-identical twin whose weights differ: the density
+    /// PROFILE (pure counts) is unchanged, the exact FINGERPRINT (weights
+    /// included) is not — exactly the "similar but not identical batch"
+    /// the amortized planner exists for, with no quantization luck.
+    fn weight_tweaked(d: &Decomposition) -> Decomposition {
+        let mut out = d.clone();
+        if let Some(v) = out.intra.vals.first_mut() {
+            *v += 0.001;
+        } else if let Some(v) = out.inter.vals.first_mut() {
+            *v += 0.001;
+        }
+        out
+    }
+
+    #[test]
+    fn ceil_log2_buckets() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn profile_is_stable_and_weight_blind() {
+        let d = small_decomposition(3);
+        let p1 = BatchProfile::of(&d, ModelKind::Gcn);
+        let p2 = BatchProfile::of(&d, ModelKind::Gcn);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.key(), p2.key());
+        // model participates in the key
+        let gin = BatchProfile::of(&d, ModelKind::Gin);
+        assert_ne!(p1.key(), gin.key());
+        // weights do not: the profile sees counts only
+        let twin = weight_tweaked(&d);
+        assert_eq!(p1.key(), BatchProfile::of(&twin, ModelKind::Gcn).key());
+        assert_ne!(
+            crate::plan::Fingerprint::of(&d, ModelKind::Gcn),
+            crate::plan::Fingerprint::of(&twin, ModelKind::Gcn),
+            "the exact fingerprint must see the weight change"
+        );
+    }
+
+    #[test]
+    fn same_profile_different_fingerprint_hits_and_validates() {
+        let bucket = small_bucket();
+        let mut planner = BatchPlanner::new(SimCostPlanner::new(&A100), &A100);
+        let d1 = small_decomposition(5);
+        let cold = planner
+            .plan(&PlanRequest::new(&d1, ModelKind::Gcn, &bucket))
+            .unwrap();
+        assert_eq!(planner.misses(), 1);
+        assert!(!cold.provenance.cached);
+        // identical profile, different exact fingerprint: must be served
+        // from the profile cache AND carry the new batch's fingerprint
+        let d2 = weight_tweaked(&d1);
+        let warm = planner
+            .plan(&PlanRequest::new(&d2, ModelKind::Gcn, &bucket))
+            .unwrap();
+        assert_eq!(planner.hits(), 1, "same-profile batch must hit");
+        assert!(warm.provenance.cached);
+        assert_eq!(warm.provenance.planner, "batch");
+        assert_eq!(warm.monitor_iters, 0);
+        assert!(warm.validate(&d2, ModelKind::Gcn).is_ok());
+        assert!(warm.validate(&d1, ModelKind::Gcn).is_err());
+        assert_eq!(warm.chosen, cold.chosen);
+        assert!(planner.hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn hybrid_decision_transfers_across_similar_batches() {
+        // A mixed-density graph plans hybrid; a topology-identical twin
+        // with different weights must adapt the cached threshold into a
+        // plan that validates against the twin.
+        // Same scale the planners' hybrid acceptance test asserts splits.
+        let mut rng = Rng::new(5);
+        let n = 131072;
+        let g = planted_partition_mixed(n, 64, 0.95, 0.005, 3, 0.3 / n as f64, &mut rng);
+        let d = Decomposition::build(
+            &g,
+            Reorder::Identity,
+            Propagation::GcnNormalized,
+            64,
+            0,
+        );
+        let bucket = BucketInfo {
+            name: "bb".to_string(),
+            vertices: n,
+            edges: 8 * 1024 * 1024,
+            features: 32,
+            hidden: 32,
+            classes: 4,
+            blocks: n / 64,
+        };
+        let mut planner = BatchPlanner::new(SimCostPlanner::new(&A100), &A100);
+        let cold = planner
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        assert!(cold.assignment.is_hybrid(), "mixed graph must plan hybrid");
+        let twin = weight_tweaked(&d);
+        let warm = planner
+            .plan(&PlanRequest::new(&twin, ModelKind::Gcn, &bucket))
+            .unwrap();
+        assert_eq!(planner.misses(), 1);
+        assert_eq!(planner.hits(), 1, "twin batch must reuse the swept decision");
+        assert!(warm.provenance.cached);
+        assert!(warm.assignment.is_hybrid());
+        assert!(warm.validate(&twin, ModelKind::Gcn).is_ok());
+        // the adapted assignment agrees with the donor's decision
+        assert_eq!(warm.assignment.threshold, cold.assignment.threshold);
+        assert_eq!(warm.assignment.intra_kernels(), cold.assignment.intra_kernels());
+        assert_eq!(warm.chosen, cold.chosen);
+    }
+
+    #[test]
+    fn inadmissible_adaptation_falls_back_to_inner() {
+        let mut planner = BatchPlanner::new(SimCostPlanner::new(&A100), &A100);
+        let d = small_decomposition(7);
+        let bucket = small_bucket();
+        planner
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        // same profile, but a bucket too small for the batch: adapt()
+        // must refuse and the inner planner must run again
+        let d2 = weight_tweaked(&d);
+        let mut tiny = small_bucket();
+        tiny.edges = 1;
+        let plan = planner
+            .plan(&PlanRequest::new(&d2, ModelKind::Gcn, &tiny))
+            .unwrap();
+        assert_eq!(planner.misses(), 2, "tiny bucket must force a replan");
+        assert!(!plan.provenance.cached);
+    }
+
+    #[test]
+    fn degenerate_split_collapses_to_uniform() {
+        // Cache a decision, then serve a batch whose blocks all land on
+        // one side of the threshold: the adapted plan must be uniform and
+        // still validate.
+        let mut planner = BatchPlanner::new(SimCostPlanner::new(&A100), &A100);
+        let bucket = small_bucket();
+        let d1 = small_decomposition(10);
+        let p1 = planner
+            .plan(&PlanRequest::new(&d1, ModelKind::Gcn, &bucket))
+            .unwrap();
+        let d2 = small_decomposition(11);
+        let p2 = planner
+            .plan(&PlanRequest::new(&d2, ModelKind::Gcn, &bucket))
+            .unwrap();
+        // small planted graphs stay uniform; the adaptation path is the
+        // one-sided branch either way
+        assert!(!p1.assignment.is_hybrid());
+        assert!(!p2.assignment.is_hybrid());
+        assert!(p2.validate(&d2, ModelKind::Gcn).is_ok());
+        assert_eq!(planner.hits() + planner.misses(), 2);
+    }
+
+    #[test]
+    fn planner_name_and_counters() {
+        let mut planner = BatchPlanner::new(SimCostPlanner::new(&A100), &A100);
+        assert_eq!(planner.name(), "batch");
+        assert!(planner.is_empty());
+        assert_eq!(planner.hit_rate(), 0.0);
+        let d = small_decomposition(12);
+        let bucket = small_bucket();
+        planner
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        assert_eq!(planner.len(), 1);
+    }
+}

@@ -19,17 +19,23 @@
 //! * [`CachedPlanner`] — a [`PlanStore`] on disk keyed by fingerprint,
 //!   delegating to an inner planner on miss; a cache hit costs zero
 //!   monitor iterations.
+//! * [`BatchPlanner`] — amortized mini-batch planning: an in-memory
+//!   cache keyed by density *profile* ([`BatchProfile`]) instead of
+//!   exact topology, for sampled subgraphs that never recur exactly
+//!   (see [`batch`] and DESIGN.md Sec. 10).
 //!
 //! Consumers: `coordinator::trainer::train` executes a plan,
 //! `coordinator::pipeline::Run` builds one end to end,
 //! `serve::ModelRegistry::deploy` plans through `CachedPlanner`, and the
 //! `adaptgear plan` subcommand computes/prints/persists them.
 
+pub mod batch;
 pub mod fingerprint;
 pub mod hybrid;
 pub mod planners;
 pub mod store;
 
+pub use batch::{BatchPlanner, BatchProfile};
 pub use fingerprint::Fingerprint;
 pub use hybrid::HybridDecision;
 pub use planners::{best_adaptive_pair, CachedPlanner, MonitorPlanner, SimCostPlanner};

@@ -1,0 +1,168 @@
+//! The per-batch induced subgraph and its bridges back to the full graph.
+//!
+//! A [`BatchSubgraph`] is what one mini-batch executes: a local-id CSR
+//! slice of the full propagation matrix holding exactly the sampled
+//! entries (weights included — normalization stays global), the
+//! local→global node map, and the target prefix. [`BatchSubgraph::decompose`]
+//! turns it into a regular [`Decomposition`] via
+//! [`Decomposition::from_propagation`], after which the whole existing
+//! stack applies unchanged: block profiles, hybrid splits, plan
+//! fingerprints, operand packing, and the native kernel mirrors.
+
+use crate::coordinator::apply_perm;
+use crate::graph::Csr;
+use crate::partition::{Decomposition, Reorder};
+
+/// One sampled batch: local-id subgraph + mapping back to global ids.
+#[derive(Debug, Clone)]
+pub struct BatchSubgraph {
+    /// Local→global vertex ids, in discovery order; the first
+    /// [`BatchSubgraph::n_targets`] entries are the batch's targets.
+    pub nodes: Vec<u32>,
+    /// How many leading `nodes` are targets (loss/classification rows).
+    pub n_targets: usize,
+    /// Sampled propagation slice in local ids. Weights are copied from
+    /// the full matrix, so aggregation semantics match full-graph
+    /// execution restricted to the sampled entries.
+    pub csr: Csr,
+}
+
+impl BatchSubgraph {
+    /// Vertices in the batch (targets + sampled support nodes).
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Sampled propagation entries.
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// The deduplicated target ids (global), in input order.
+    pub fn targets(&self) -> &[u32] {
+        &self.nodes[..self.n_targets]
+    }
+
+    /// Gather the batch's rows out of a full `[n_full, f]` feature
+    /// buffer, producing `[n_batch, f]` in local order.
+    pub fn gather_features(&self, x_full: &[f32], f: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n() * f];
+        for (i, &g) in self.nodes.iter().enumerate() {
+            let g = g as usize;
+            out[i * f..(i + 1) * f].copy_from_slice(&x_full[g * f..(g + 1) * f]);
+        }
+        out
+    }
+
+    /// Gather the batch's labels out of a full label buffer.
+    pub fn gather_labels(&self, labels_full: &[i32]) -> Vec<i32> {
+        self.nodes.iter().map(|&g| labels_full[g as usize]).collect()
+    }
+
+    /// Loss mask in LOCAL order: 1.0 for target rows, 0.0 for support
+    /// nodes (they exist only to feed aggregation, not the loss).
+    pub fn target_mask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.n()];
+        for v in m.iter_mut().take(self.n_targets) {
+            *v = 1.0;
+        }
+        m
+    }
+
+    /// Decompose the batch for kernel execution: reorder to concentrate
+    /// density, split block-diagonal — weights preserved. The returned
+    /// decomposition's `perm` maps LOCAL old→new ids; see
+    /// [`BatchSubgraph::permute_for`] and [`BatchSubgraph::target_rows`].
+    pub fn decompose(&self, reorder: Reorder, community: usize, seed: u64) -> Decomposition {
+        Decomposition::from_propagation(&self.csr, reorder, community, seed)
+    }
+
+    /// Gather + permute features, labels, and the target mask into `d`'s
+    /// reordered id space, ready for packing/execution. `d` must come
+    /// from [`BatchSubgraph::decompose`] on this batch.
+    pub fn permute_for(
+        &self,
+        d: &Decomposition,
+        x_full: &[f32],
+        f: usize,
+        labels_full: &[i32],
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+        debug_assert_eq!(d.perm.len(), self.n());
+        let (x, labels) = apply_perm(
+            &d.perm,
+            &self.gather_features(x_full, f),
+            &self.gather_labels(labels_full),
+            f,
+        );
+        let mut mask = vec![0.0f32; self.n()];
+        for i in 0..self.n_targets {
+            mask[d.perm[i] as usize] = 1.0;
+        }
+        (x, labels, mask)
+    }
+
+    /// Row index of each target in `d`'s reordered space (for reading
+    /// logits back out), in [`BatchSubgraph::targets`] order.
+    pub fn target_rows(&self, d: &Decomposition) -> Vec<usize> {
+        (0..self.n_targets).map(|i| d.perm[i] as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::sample::{Fanout, NeighborSampler};
+    use crate::util::rng::Rng;
+
+    fn batch(seed: u64) -> BatchSubgraph {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition(96, 16, 0.4, 0.03, &mut rng);
+        let a = Csr::gcn_normalized(&g);
+        let sampler =
+            NeighborSampler::new(&a, vec![Fanout::Uniform(5), Fanout::Uniform(5)]).unwrap();
+        sampler.sample(&[3, 10, 40, 77], &mut rng)
+    }
+
+    #[test]
+    fn gather_and_mask_follow_local_order() {
+        let b = batch(1);
+        let n_full = 96;
+        let f = 3;
+        let x: Vec<f32> = (0..n_full * f).map(|i| i as f32).collect();
+        let gx = b.gather_features(&x, f);
+        assert_eq!(gx.len(), b.n() * f);
+        for (i, &g) in b.nodes.iter().enumerate() {
+            assert_eq!(gx[i * f], (g as usize * f) as f32);
+        }
+        let labels: Vec<i32> = (0..n_full as i32).collect();
+        let gl = b.gather_labels(&labels);
+        assert_eq!(gl.len(), b.n());
+        assert_eq!(gl[0], b.nodes[0] as i32);
+        let m = b.target_mask();
+        assert_eq!(m.iter().filter(|&&v| v == 1.0).count(), b.n_targets);
+        assert!(m[..b.n_targets].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn decompose_preserves_batch_entries_and_targets() {
+        let b = batch(2);
+        let d = b.decompose(Reorder::Metis, 16, 7);
+        assert_eq!(d.graph.n, b.n());
+        assert_eq!(d.intra.nnz() + d.inter.nnz(), b.nnz());
+        // target rows address the same global vertices after reordering
+        let rows = b.target_rows(&d);
+        assert_eq!(rows.len(), b.n_targets);
+        for (i, &r) in rows.iter().enumerate() {
+            assert_eq!(d.perm[i] as usize, r);
+        }
+        // permuted mask marks exactly the target rows
+        let labels = vec![0i32; 96];
+        let xf = vec![0.0f32; 96 * 2];
+        let (_, _, mask) = b.permute_for(&d, &xf, 2, &labels);
+        assert_eq!(mask.iter().filter(|&&v| v == 1.0).count(), b.n_targets);
+        for &r in &rows {
+            assert_eq!(mask[r], 1.0);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Mini-batch neighbor sampling — the workload that stresses
+//! subgraph-level kernel adaptivity hardest.
+//!
+//! Full-graph training decides kernels once; neighbor-sampled training
+//! (GraphSAGE-style) materializes a fresh induced subgraph per batch,
+//! each with its own density profile. This module provides the sampling
+//! substrate:
+//!
+//! * [`sampler`] — layer-wise neighbor samplers over a propagation
+//!   matrix: uniform fanout ([`Fanout::Uniform`]) and the full-neighbor
+//!   fallback ([`Fanout::Full`]), deterministic under a seed.
+//! * [`batch`] — [`BatchSubgraph`], the per-batch induced subgraph: a
+//!   local-id CSR whose weights are copied from the FULL graph's
+//!   propagation matrix (so full-fanout batches reproduce full-graph
+//!   results exactly), plus the local→global node mapping.
+//!
+//! Downstream, `plan::BatchPlanner` amortizes kernel planning across
+//! batches with similar density *profiles*,
+//! `coordinator::sampled::train_sampled` runs the mini-batch training
+//! loop, and `serve::SampledInference` serves target-node inference on
+//! graphs too large to pack whole. See `rust/DESIGN.md` Sec. 10.
+
+pub mod batch;
+pub mod sampler;
+
+pub use batch::BatchSubgraph;
+pub use sampler::{parse_fanouts, Fanout, NeighborSampler};

@@ -1,0 +1,284 @@
+//! Layer-wise neighbor samplers over a propagation matrix.
+//!
+//! The sampler walks the propagation CSR (row = destination, columns =
+//! in-neighbors, weights = normalized propagation coefficients), so a
+//! "neighbor" here is an *entry of the propagation row* — for GCN that
+//! includes the self-loop the normalization added. Sampling happens
+//! layer by layer: layer `l` draws up to `fanout[l]` entries from the
+//! row of every node reached so far, so after `L` layers the batch holds
+//! everything an `L`-layer aggregation of the targets can touch (under
+//! [`Fanout::Full`], *exactly* everything — which is what makes sampled
+//! and full-graph forwards agree on the targets; see
+//! `rust/tests/sample_prop.rs`).
+//!
+//! Determinism: the same seed, targets, and fanouts reproduce the same
+//! [`BatchSubgraph`] bit for bit — batches are identified by profile in
+//! the plan cache, and the fixed-seed bench workload depends on it.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+use super::batch::BatchSubgraph;
+
+/// Per-layer neighbor budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fanout {
+    /// Keep every propagation entry of the row (full-neighbor fallback —
+    /// sampled execution becomes exact for the batch targets).
+    Full,
+    /// Uniformly sample up to `k` distinct entries per row.
+    Uniform(usize),
+}
+
+impl Fanout {
+    pub fn as_string(&self) -> String {
+        match self {
+            Fanout::Full => "full".to_string(),
+            Fanout::Uniform(k) => k.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Fanout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.as_string())
+    }
+}
+
+impl FromStr for Fanout {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Fanout, Self::Err> {
+        match s.trim() {
+            "full" | "0" => Ok(Fanout::Full),
+            other => {
+                let k: usize = other
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad fanout {other:?}: {e}"))?;
+                Ok(Fanout::Uniform(k))
+            }
+        }
+    }
+}
+
+/// Parse a `--fanout` CLI list: comma-separated per-layer budgets, e.g.
+/// `"10,10"` (two layers of 10) or `"full,full"`; `0` also means full.
+pub fn parse_fanouts(s: &str) -> Result<Vec<Fanout>> {
+    let out: Vec<Fanout> = s
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| p.parse())
+        .collect::<Result<_>>()
+        .with_context(|| format!("parsing fanout list {s:?}"))?;
+    if out.is_empty() {
+        bail!("fanout list {s:?} is empty (expected e.g. \"10,10\" or \"full\")");
+    }
+    Ok(out)
+}
+
+/// Layer-wise neighbor sampler bound to one propagation matrix.
+pub struct NeighborSampler<'a> {
+    prop: &'a Csr,
+    fanouts: Vec<Fanout>,
+}
+
+impl<'a> NeighborSampler<'a> {
+    /// `prop` is the full graph's (square) propagation matrix; `fanouts`
+    /// holds one per-layer budget per model layer, outermost first.
+    pub fn new(prop: &'a Csr, fanouts: Vec<Fanout>) -> Result<NeighborSampler<'a>> {
+        if prop.n_rows != prop.n_cols {
+            bail!(
+                "sampler needs a square propagation matrix, got {}x{}",
+                prop.n_rows,
+                prop.n_cols
+            );
+        }
+        if fanouts.is_empty() {
+            bail!("sampler needs at least one layer fanout");
+        }
+        Ok(NeighborSampler { prop, fanouts })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Sample one batch subgraph for `targets` (global vertex ids;
+    /// duplicates are dropped). Local ids are assigned in discovery
+    /// order, targets first, so `BatchSubgraph::targets()` is the
+    /// deduplicated input prefix.
+    pub fn sample(&self, targets: &[u32], rng: &mut Rng) -> BatchSubgraph {
+        let n_full = self.prop.n_rows;
+        let mut nodes: Vec<u32> = Vec::with_capacity(targets.len());
+        let mut local: HashMap<u32, u32> = HashMap::with_capacity(targets.len() * 2);
+        for &t in targets {
+            debug_assert!((t as usize) < n_full, "target {t} out of range (n={n_full})");
+            if let std::collections::hash_map::Entry::Vacant(slot) = local.entry(t) {
+                slot.insert(nodes.len() as u32);
+                nodes.push(t);
+            }
+        }
+        let n_targets = nodes.len();
+
+        // (dst_local, src_local, w) with global dedup across layers: the
+        // same propagation entry reached twice must appear once, not sum.
+        let mut triplets: Vec<(u32, u32, f32)> = Vec::new();
+        let mut seen: HashSet<(u32, u32)> = HashSet::new();
+        for &fanout in &self.fanouts {
+            // Layer l samples the rows of EVERY node reached so far, so
+            // after the last layer the rows needed by an L-layer
+            // aggregation over the targets are all present.
+            let frontier_len = nodes.len();
+            for idx in 0..frontier_len {
+                let u = nodes[idx];
+                let (cols, vals) = self.prop.row(u as usize);
+                let deg = cols.len();
+                if deg == 0 {
+                    continue;
+                }
+                let pick_all = match fanout {
+                    Fanout::Full => true,
+                    Fanout::Uniform(k) => deg <= k,
+                };
+                let chosen: Vec<usize> = if pick_all {
+                    (0..deg).collect()
+                } else {
+                    let Fanout::Uniform(k) = fanout else { unreachable!() };
+                    rng.sample_indices(deg, k)
+                };
+                let lu = idx as u32;
+                for i in chosen {
+                    let (v, w) = (cols[i], vals[i]);
+                    if !seen.insert((u, v)) {
+                        continue;
+                    }
+                    let lv = match local.entry(v) {
+                        std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+                        std::collections::hash_map::Entry::Vacant(slot) => {
+                            let id = nodes.len() as u32;
+                            slot.insert(id);
+                            nodes.push(v);
+                            id
+                        }
+                    };
+                    triplets.push((lu, lv, w));
+                }
+            }
+        }
+
+        let n = nodes.len();
+        let csr = Csr::from_triplets(n, n, triplets);
+        BatchSubgraph { nodes, n_targets, csr }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::graph::Graph;
+
+    fn prop_matrix(seed: u64, n: usize) -> Csr {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition(n, 16, 0.4, 0.02, &mut rng);
+        Csr::gcn_normalized(&g)
+    }
+
+    #[test]
+    fn fanout_parsing_roundtrips() {
+        assert_eq!(
+            parse_fanouts("10,10").unwrap(),
+            vec![Fanout::Uniform(10), Fanout::Uniform(10)]
+        );
+        assert_eq!(parse_fanouts("full").unwrap(), vec![Fanout::Full]);
+        assert_eq!(parse_fanouts("0,5").unwrap(), vec![Fanout::Full, Fanout::Uniform(5)]);
+        assert!(parse_fanouts("").is_err());
+        assert!(parse_fanouts("ten").is_err());
+        assert_eq!(Fanout::Uniform(7).to_string(), "7");
+        assert_eq!(Fanout::Full.to_string(), "full");
+    }
+
+    #[test]
+    fn fixed_seed_reproduces_identical_batches() {
+        let a = prop_matrix(3, 128);
+        let sampler =
+            NeighborSampler::new(&a, vec![Fanout::Uniform(4), Fanout::Uniform(4)]).unwrap();
+        let targets: Vec<u32> = (0..32).collect();
+        let b1 = sampler.sample(&targets, &mut Rng::new(42));
+        let b2 = sampler.sample(&targets, &mut Rng::new(42));
+        assert_eq!(b1.nodes, b2.nodes);
+        assert_eq!(b1.csr, b2.csr);
+        let b3 = sampler.sample(&targets, &mut Rng::new(43));
+        // a different seed almost surely samples a different subgraph
+        assert!(b1.csr != b3.csr || b1.nodes != b3.nodes);
+    }
+
+    #[test]
+    fn duplicate_targets_are_deduplicated() {
+        let a = prop_matrix(4, 64);
+        let sampler = NeighborSampler::new(&a, vec![Fanout::Uniform(3)]).unwrap();
+        let batch = sampler.sample(&[5, 5, 9, 5], &mut Rng::new(1));
+        assert_eq!(batch.targets(), &[5, 9]);
+        assert_eq!(batch.n_targets, 2);
+    }
+
+    #[test]
+    fn fanout_bounds_row_degree() {
+        let a = prop_matrix(5, 128);
+        let sampler = NeighborSampler::new(&a, vec![Fanout::Uniform(3)]).unwrap();
+        let batch = sampler.sample(&(0..64).collect::<Vec<_>>(), &mut Rng::new(7));
+        // every sampled row holds at most `fanout` entries
+        for r in 0..batch.n_targets {
+            let (cols, _) = batch.csr.row(r);
+            assert!(cols.len() <= 3, "row {r} has {} entries", cols.len());
+        }
+    }
+
+    #[test]
+    fn full_fanout_keeps_every_target_row_entry() {
+        let a = prop_matrix(6, 96);
+        let sampler = NeighborSampler::new(&a, vec![Fanout::Full]).unwrap();
+        let targets: Vec<u32> = vec![0, 17, 33];
+        let batch = sampler.sample(&targets, &mut Rng::new(0));
+        for (i, &t) in targets.iter().enumerate() {
+            let (gcols, gvals) = a.row(t as usize);
+            let (bcols, bvals) = batch.csr.row(i);
+            assert_eq!(bcols.len(), gcols.len(), "target {t} row incomplete");
+            // same multiset of (global col, weight)
+            let mut got: Vec<(u32, f32)> = bcols
+                .iter()
+                .map(|&lc| batch.nodes[lc as usize])
+                .zip(bvals.iter().copied())
+                .collect();
+            got.sort_by_key(|&(c, _)| c);
+            let mut want: Vec<(u32, f32)> =
+                gcols.iter().copied().zip(gvals.iter().copied()).collect();
+            want.sort_by_key(|&(c, _)| c);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn isolated_targets_sample_empty_rows() {
+        let g = Graph::empty(32);
+        let a = Csr::adjacency(&g); // no entries at all
+        let sampler = NeighborSampler::new(&a, vec![Fanout::Uniform(5)]).unwrap();
+        let batch = sampler.sample(&[1, 2, 3], &mut Rng::new(0));
+        assert_eq!(batch.n(), 3);
+        assert_eq!(batch.csr.nnz(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_construction() {
+        let a = prop_matrix(7, 32);
+        assert!(NeighborSampler::new(&a, vec![]).is_err());
+        let rect = Csr::from_triplets(2, 3, vec![(0, 1, 1.0)]);
+        assert!(NeighborSampler::new(&rect, vec![Fanout::Full]).is_err());
+    }
+}

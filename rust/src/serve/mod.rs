@@ -19,6 +19,9 @@
 //!   rate, and the batch-occupancy histogram.
 //! * [`loadgen`] — closed-loop synthetic load for the `serve` subcommand,
 //!   the serve bench, and the integration tests.
+//! * [`sampled`] — sampled inference for target nodes on graphs too
+//!   large to pack whole: one forward over the targets' sampled
+//!   receptive field, planned through the amortized batch planner.
 //!
 //! See `rust/DESIGN.md` (Serving subsystem) for the channel topology and
 //! SLO semantics. Entry points: the `serve` subcommand in `main.rs` and
@@ -29,6 +32,7 @@ pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
 pub mod registry;
+pub mod sampled;
 pub mod session;
 
 pub use admission::Admission;
@@ -36,4 +40,5 @@ pub use batcher::MicroBatcher;
 pub use loadgen::{LoadGen, LoadGenConfig, LoadGenSummary};
 pub use metrics::{SloMetrics, SloReport};
 pub use registry::{Deployment, DeploymentSpec, ModelRegistry};
+pub use sampled::SampledInference;
 pub use session::{Request, Response, ServeClient, ServeConfig, ServeError, ServeSession};

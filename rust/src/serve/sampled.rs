@@ -1,0 +1,174 @@
+//! Sampled inference: classify target vertices without packing the whole
+//! graph.
+//!
+//! A deployment's full graph must normally fit an AOT bucket. When it
+//! does not — or when only a handful of vertices need fresh logits —
+//! [`SampledInference`] samples the targets' receptive field out of the
+//! deployment's propagation matrix, decomposes the batch, plans it
+//! through the amortized [`BatchPlanner`] (profile hits skip the
+//! threshold sweep), and executes ONE forward artifact sized to the
+//! batch's bucket. The deployment's trained parameters are reused as-is,
+//! which requires the batch bucket to share the deployment's
+//! (features, hidden, classes) widths — a mismatch is an error, not a
+//! silent quality drop.
+//!
+//! Under full fanouts the sampled logits for the targets equal the
+//! full-graph forward's (the zero-padding/merging argument of DESIGN.md
+//! Sec. 10); uniform fanouts trade exactness for a bounded batch size.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::apply_perm;
+use crate::graph::Csr;
+use crate::gpusim::A100;
+use crate::kernels::pack::{pack_assignment, pack_features};
+use crate::partition::Reorder;
+use crate::plan::{BatchPlanner, PlanRequest, Planner, SimCostPlanner};
+use crate::runtime::{Engine, Manifest, Tensor};
+use crate::sample::{Fanout, NeighborSampler};
+use crate::util::rng::Rng;
+
+use super::registry::Deployment;
+
+/// Reusable sampled-inference state: fanouts, the per-deployment
+/// propagation cache, and the amortized batch planner.
+pub struct SampledInference {
+    fanouts: Vec<Fanout>,
+    reorder: Reorder,
+    rng: Rng,
+    planner: BatchPlanner<SimCostPlanner>,
+    /// Deployment name → its whole propagation matrix (built once; the
+    /// decomposition stores intra/inter separately).
+    props: HashMap<String, Csr>,
+}
+
+impl SampledInference {
+    pub fn new(fanouts: Vec<Fanout>, seed: u64) -> SampledInference {
+        SampledInference {
+            fanouts,
+            reorder: Reorder::Metis,
+            rng: Rng::new(seed ^ 0x5e7e),
+            planner: BatchPlanner::new(SimCostPlanner::new(&A100), &A100),
+            props: HashMap::new(),
+        }
+    }
+
+    /// Amortized-planner hit rate across every inference served so far.
+    pub fn plan_hit_rate(&self) -> f64 {
+        self.planner.hit_rate()
+    }
+
+    /// Classify `targets` (deployment-order vertex ids) through one
+    /// sampled forward. Returns `(vertex, class)` per deduplicated
+    /// target, in input order.
+    pub fn infer(
+        &mut self,
+        engine: &Engine,
+        dep: &Deployment,
+        targets: &[u32],
+    ) -> Result<Vec<(u32, i32)>> {
+        if targets.is_empty() {
+            return Ok(Vec::new());
+        }
+        if targets.iter().any(|&t| (t as usize) >= dep.n) {
+            bail!("target vertex out of range (deployment {} has n={})", dep.name, dep.n);
+        }
+        let prop = self
+            .props
+            .entry(dep.name.clone())
+            .or_insert_with(|| dep.d.whole());
+        let sampler = NeighborSampler::new(prop, self.fanouts.clone())?;
+        let batch = sampler.sample(targets, &mut self.rng);
+        let bd = batch.decompose(self.reorder, dep.d.community, 0);
+
+        let needed = bd.intra.nnz().max(bd.inter.nnz());
+        let bucket = engine
+            .manifest
+            .fit_bucket(bd.graph.n, needed)
+            .with_context(|| {
+                format!(
+                    "no AOT bucket fits the sampled batch (n={}, edges={needed}); \
+                     lower the fanout or batch fewer targets",
+                    bd.graph.n
+                )
+            })?
+            .clone();
+        let dep_widths = (
+            dep.fwd_bucket.features,
+            dep.fwd_bucket.hidden,
+            dep.fwd_bucket.classes,
+        );
+        if (bucket.features, bucket.hidden, bucket.classes) != dep_widths {
+            bail!(
+                "batch bucket {} widths {:?} differ from deployment bucket {} widths {:?}; \
+                 the trained parameters do not transfer",
+                bucket.name,
+                (bucket.features, bucket.hidden, bucket.classes),
+                dep.fwd_bucket.name,
+                dep_widths
+            );
+        }
+
+        let req = PlanRequest::labeled(
+            &bd,
+            dep.model,
+            &bucket,
+            &format!("sampled:{}", dep.name),
+            1.0,
+            self.reorder,
+            0,
+        );
+        let plan = self.planner.plan(&req).context("planning the sampled batch")?;
+
+        let (intra_ops, inter_ops) =
+            pack_assignment(&bd, &plan.assignment, &bucket).context("packing the sampled batch")?;
+        let gx = batch.gather_features(&dep.x, dep.f_data);
+        let zeros = vec![0i32; batch.n()];
+        let (bx, _) = apply_perm(&bd.perm, &gx, &zeros, dep.f_data);
+
+        let name = Manifest::fwd_name(
+            dep.model.as_str(),
+            plan.chosen.intra_str(),
+            &plan.chosen.inter.to_string(),
+            &bucket.name,
+        );
+        let mut args: Vec<Tensor> = dep.params.to_vec();
+        args.extend(intra_ops);
+        args.extend(inter_ops);
+        args.push(pack_features(&bx, batch.n(), dep.f_data, &bucket)?);
+        let out = engine.run(&name, &args)?;
+        let logits: Vec<f32> = out[0].to_vec()?;
+
+        let width = logits.len() / bucket.vertices.max(1);
+        let span = bucket.classes.min(width);
+        let rows = batch.target_rows(&bd);
+        let mut result = Vec::with_capacity(rows.len());
+        for (i, &r) in rows.iter().enumerate() {
+            let row = &logits[r * width..r * width + span];
+            let class = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(j, _)| j as i32)
+                .unwrap_or(0);
+            result.push((batch.targets()[i], class));
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sample::parse_fanouts;
+
+    #[test]
+    fn construction_and_counters() {
+        let s = SampledInference::new(parse_fanouts("5,5").unwrap(), 3);
+        assert_eq!(s.plan_hit_rate(), 0.0);
+        assert_eq!(s.fanouts.len(), 2);
+        assert!(s.props.is_empty());
+    }
+}

@@ -1,0 +1,227 @@
+//! Sampling properties (DESIGN.md Sec. 10):
+//!
+//! 1. **Determinism** — a fixed seed reproduces identical batches,
+//!    including through decomposition.
+//! 2. **Induced edges are exactly the sampled adjacency** — every batch
+//!    CSR entry is an entry of the full propagation matrix (same weight,
+//!    mapped through the node table), with no duplicates and no
+//!    fabricated edges; under full fanout the sampled rows are complete.
+//! 3. **Sampled forward == full-graph forward on the targets** — with
+//!    full fanouts at every layer, a 2-layer GCN forward over the batch
+//!    subgraph (executed through a planner-produced class assignment,
+//!    i.e. the real hybrid execution path) matches the full-graph
+//!    forward restricted to the batch's target rows within 1e-4.
+//!
+//! Engine-free: the native kernel schedules stand in for the PJRT
+//! artifacts exactly as in `hybrid_prop.rs`.
+
+use std::collections::HashSet;
+
+use adaptgear::coordinator::ModelKind;
+use adaptgear::graph::generate::planted_partition_mixed;
+use adaptgear::graph::Csr;
+use adaptgear::gpusim::A100;
+use adaptgear::kernels::native_model::GcnModel;
+use adaptgear::kernels::AssignmentExec;
+use adaptgear::partition::Reorder;
+use adaptgear::plan::{PlanRequest, Planner, SimCostPlanner};
+use adaptgear::runtime::BucketInfo;
+use adaptgear::sample::{Fanout, NeighborSampler};
+use adaptgear::util::prop;
+use adaptgear::util::rng::Rng;
+
+fn full_propagation(rng: &mut Rng) -> (Csr, usize) {
+    let n = rng.usize_below(200) + 40;
+    let g = planted_partition_mixed(
+        n,
+        16,
+        0.3 + rng.f64() * 0.6,
+        rng.f64() * 0.08,
+        rng.usize_below(3) + 2,
+        rng.f64() * 0.02,
+        rng,
+    );
+    (Csr::gcn_normalized(&g), n)
+}
+
+#[test]
+fn fixed_seed_implies_identical_batches() {
+    prop::check("sampling is deterministic under a seed", 15, |rng| {
+        let (a, n) = full_propagation(rng);
+        let fanouts = vec![
+            Fanout::Uniform(rng.usize_below(6) + 2),
+            Fanout::Uniform(rng.usize_below(6) + 2),
+        ];
+        let sampler = NeighborSampler::new(&a, fanouts).map_err(|e| e.to_string())?;
+        let k = rng.usize_below(n.min(40)) + 1;
+        let targets: Vec<u32> = (0..k as u32).collect();
+        let seed = rng.next_u64();
+        let b1 = sampler.sample(&targets, &mut Rng::new(seed));
+        let b2 = sampler.sample(&targets, &mut Rng::new(seed));
+        prop::require(b1.nodes == b2.nodes, "node tables differ")?;
+        prop::require(b1.csr == b2.csr, "batch matrices differ")?;
+        // and the decomposition downstream is byte-identical too
+        let d1 = b1.decompose(Reorder::Metis, 16, 3);
+        let d2 = b2.decompose(Reorder::Metis, 16, 3);
+        prop::require(d1.perm == d2.perm, "decomposition perms differ")?;
+        prop::require(d1.intra == d2.intra && d1.inter == d2.inter, "splits differ")
+    });
+}
+
+#[test]
+fn induced_subgraph_edges_are_exactly_the_sampled_adjacency() {
+    prop::check("batch csr == sampled slice of the full matrix", 15, |rng| {
+        let (a, n) = full_propagation(rng);
+        let full_fanout = rng.chance(0.5);
+        let fanouts = if full_fanout {
+            vec![Fanout::Full, Fanout::Full]
+        } else {
+            vec![Fanout::Uniform(4), Fanout::Uniform(4)]
+        };
+        let sampler = NeighborSampler::new(&a, fanouts).map_err(|e| e.to_string())?;
+        let k = rng.usize_below(n.min(30)) + 1;
+        let targets: Vec<u32> = (0..k as u32).collect();
+        let batch = sampler.sample(&targets, rng);
+
+        // every batch entry maps to a full-matrix entry with its weight
+        let mut seen: HashSet<(u32, u32)> = HashSet::new();
+        for (lr, lc, w) in batch.csr.to_triplets() {
+            let gr = batch.nodes[lr as usize];
+            let gc = batch.nodes[lc as usize];
+            prop::require(seen.insert((gr, gc)), "duplicate sampled edge")?;
+            let (cols, vals) = a.row(gr as usize);
+            let pos = cols.iter().position(|&c| c == gc);
+            let Some(pos) = pos else {
+                return Err(format!("batch edge ({gr},{gc}) is not in the full matrix"));
+            };
+            prop::require_close(
+                vals[pos] as f64,
+                w as f64,
+                0.0,
+                "sampled weight must equal the full matrix's",
+            )?;
+        }
+        // under full fanout, the target rows carry EVERY full-matrix entry
+        if full_fanout {
+            for (i, &t) in batch.targets().iter().enumerate() {
+                let (gcols, _) = a.row(t as usize);
+                let (bcols, _) = batch.csr.row(i);
+                prop::require(
+                    bcols.len() == gcols.len(),
+                    "full-fanout target row is incomplete",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Plan a batch decomposition with the real planner and execute its class
+/// assignment on the native schedules — the same path `train_sampled`
+/// drives, so equivalence covers hybrid splits when they occur.
+fn planned_aggregate(
+    bd: &adaptgear::partition::Decomposition,
+) -> impl Fn(&[f32], usize) -> Vec<f32> {
+    let bucket = BucketInfo {
+        name: "prop".to_string(),
+        vertices: bd.graph.n,
+        edges: bd.intra.nnz() + bd.inter.nnz() + 8,
+        features: 8,
+        hidden: 8,
+        classes: 4,
+        blocks: bd.graph.n.div_ceil(16),
+    };
+    let plan = SimCostPlanner::new(&A100)
+        .plan(&PlanRequest::new(bd, ModelKind::Gcn, &bucket))
+        .expect("planning a batch");
+    let exec = AssignmentExec::build(bd, &plan.assignment).expect("compiling the plan");
+    move |x: &[f32], f: usize| exec.aggregate(x, f)
+}
+
+#[test]
+fn sampled_forward_equals_full_forward_on_targets() {
+    prop::check("full-fanout sampled forward == full-graph forward", 12, |rng| {
+        let (a, n) = full_propagation(rng);
+        let layers = 2; // matches the 2-layer GCN
+        let sampler = NeighborSampler::new(&a, vec![Fanout::Full; layers])
+            .map_err(|e| e.to_string())?;
+        let k = rng.usize_below(n.min(24)) + 1;
+        let mut targets: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut targets);
+        targets.truncate(k);
+        let batch = sampler.sample(&targets, rng);
+        let bd = batch.decompose(Reorder::Metis, 16, 5);
+
+        let f = 6;
+        let model = GcnModel::init(f, 8, 4, rng.next_u64());
+        let x_full: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+
+        // full-graph forward (reference aggregate = whole-matrix spmm)
+        let y_full = model.forward(|t: &[f32], w: usize| a.spmm(t, w), &x_full, n);
+
+        // sampled forward through the planned hybrid execution path
+        let bx = batch.gather_features(&x_full, f);
+        let zeros = vec![0i32; batch.n()];
+        let (bx, _) = adaptgear::coordinator::apply_perm(&bd.perm, &bx, &zeros, f);
+        let agg = planned_aggregate(&bd);
+        let y_batch = model.forward(&agg, &bx, batch.n());
+
+        let rows = batch.target_rows(&bd);
+        for (i, &t) in batch.targets().iter().enumerate() {
+            let r = rows[i];
+            for j in 0..model.c {
+                prop::require_close(
+                    y_batch[r * model.c + j] as f64,
+                    y_full[t as usize * model.c + j] as f64,
+                    1e-4,
+                    "sampled vs full logits",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uniform_fanout_bounds_batch_growth() {
+    // Not an equivalence property — a budget one: with fanout k the batch
+    // can hold at most sum over layers of frontier * k new edges.
+    prop::check("fanout caps sampled edges per layer", 10, |rng| {
+        let (a, n) = full_propagation(rng);
+        let k = rng.usize_below(4) + 1;
+        let sampler =
+            NeighborSampler::new(&a, vec![Fanout::Uniform(k)]).map_err(|e| e.to_string())?;
+        let t = rng.usize_below(n.min(20)) + 1;
+        let targets: Vec<u32> = (0..t as u32).collect();
+        let batch = sampler.sample(&targets, rng);
+        prop::require(
+            batch.nnz() <= t * k,
+            "one layer at fanout k samples at most k edges per target",
+        )?;
+        prop::require(batch.n() <= t + t * k, "node growth bounded by fanout")
+    });
+}
+
+#[test]
+fn native_model_on_whole_equals_assignment_exec_path() {
+    // Cross-check the two aggregate implementations the equivalence test
+    // composes: planned class execution vs whole-matrix spmm on the SAME
+    // decomposition.
+    prop::check("planned aggregate == whole spmm", 10, |rng| {
+        let (a, n) = full_propagation(rng);
+        let sampler = NeighborSampler::new(&a, vec![Fanout::Uniform(6), Fanout::Uniform(6)])
+            .map_err(|e| e.to_string())?;
+        let targets: Vec<u32> = (0..n.min(32) as u32).collect();
+        let batch = sampler.sample(&targets, rng);
+        let bd = batch.decompose(Reorder::Metis, 16, 2);
+        let agg = planned_aggregate(&bd);
+        let f = 3;
+        let x: Vec<f32> = (0..batch.n() * f).map(|_| rng.normal_f32()).collect();
+        let got = agg(&x, f);
+        let expect = bd.whole().spmm(&x, f);
+        for (g, e) in got.iter().zip(&expect) {
+            prop::require_close(*g as f64, *e as f64, 1e-4, "aggregate elem")?;
+        }
+        Ok(())
+    });
+}
