@@ -177,6 +177,50 @@ sampled_smoke() {
 }
 sampled_smoke
 
+# --- trace smoke: `train --sampled --trace-out` must emit a parseable
+# Chrome trace (Perfetto-loadable) carrying the sampled-loop span
+# taxonomy and a non-zero epoch-2 plan-cache-hit counter. The trace is
+# written to the repo root so CI uploads it alongside BENCH_*.json.
+trace_smoke() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "trace smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
+    local trace="$ROOT/TRACE_sampled.json"
+    echo "==> $bin train --sampled --trace-out (two epochs, native backend)"
+    "$bin" train --dataset planted-mixed --sampled --fanout 10,10 \
+        --batch-size 128 --scale 0.004 --epochs 2 \
+        --artifacts "$tmp/none" --trace-out "$trace" \
+        | tee "$tmp/traced.txt"
+    expect_grep "trace: " "$tmp/traced.txt" \
+        "trace smoke: the run did not report writing a trace"
+    expect_grep '"traceEvents"' "$trace" \
+        "trace smoke: not a Chrome trace-event file"
+    expect_grep '"name":"train.sample"' "$trace" \
+        "trace smoke: no train.sample span"
+    expect_grep '"name":"train.plan"' "$trace" \
+        "trace smoke: no train.plan span"
+    expect_grep '"name":"train.step"' "$trace" \
+        "trace smoke: no train.step span"
+    # epoch 2 must be served from the per-batch plan cache
+    expect_grep '"plan.cache.hit":[1-9]' "$trace" \
+        "trace smoke: epoch 2 recorded zero plan-cache hits"
+    # the embedded metrics snapshot must survive a real JSON parser
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - "$trace" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    t = json.load(f)
+assert isinstance(t["traceEvents"], list) and t["traceEvents"], "empty traceEvents"
+assert {e["ph"] for e in t["traceEvents"]} <= {"B", "E"}, "unexpected phase"
+EOF
+    fi
+}
+trace_smoke
+
 # --- help smoke: every subcommand documents itself with an example the
 # README can point at (`adaptgear <cmd> --help`).
 help_smoke() {

@@ -83,16 +83,23 @@ pub(crate) fn measurer(quick: bool) -> Bench {
     }
 }
 
-/// Run one suite by name.
+/// Run one suite by name. Every report carries an observability
+/// snapshot in its context (`obs.counters`): what the plan caches,
+/// sampler, and batcher did while the suite ran.
 pub fn run_suite(name: &str, cfg: &BenchConfig) -> Result<BenchReport> {
-    match name {
+    let mut report = match name {
         "kernels" => kernels::run(cfg),
         "plan" => plan::run(cfg),
         "train" => train::run(cfg),
         "serve" => serve::run(cfg),
         "sample" => sample::run(cfg),
         other => bail!("unknown bench suite {other:?} (expected one of {SUITES:?})"),
+    }?;
+    let counters = crate::obs::snapshot().counters_line();
+    if !counters.is_empty() {
+        report.note("obs.counters", counters);
     }
+    Ok(report)
 }
 
 /// Run `names` (or every suite when empty) and write each report into

@@ -138,6 +138,15 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     report.push("planner/cached_warm", m.median_s() * 1e6, "us", Direction::Lower);
     let _ = std::fs::remove_dir_all(&store_dir);
 
+    // ---- observability overhead: a span guard with no subscriber
+    // installed must stay near-free (one relaxed atomic load, no
+    // allocation). Gated so instrumentation creep shows up here first.
+    let m = bench.bench("obs/span_disabled", || {
+        std::hint::black_box(crate::obs::span("bench.probe.disabled"));
+    });
+    report.push("obs/span_disabled_ns", m.median_s() * 1e9, "ns", Direction::Lower);
+    report.note("obs.span_subscriber", crate::obs::enabled().to_string());
+
     // ---- deterministic decision surface (noise-free gates)
     report.push(
         "plan/projected_fwd_us",
@@ -177,6 +186,7 @@ mod tests {
             "planner/hybrid_sweep",
             "store/hit",
             "planner/cached_warm",
+            "obs/span_disabled_ns",
             "plan/projected_fwd_us",
         ] {
             assert!(a.get(name).is_some(), "missing metric {name}");

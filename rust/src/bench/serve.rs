@@ -16,6 +16,7 @@ use crate::graph::datasets;
 use crate::runtime::Engine;
 use crate::serve::{
     loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeSession, SloReport,
+    Stage,
 };
 
 use super::report::{BenchReport, Direction};
@@ -55,6 +56,16 @@ fn push_slo(report: &mut BenchReport, tag: &str, r: &SloReport) {
         "calls",
         Direction::None,
     );
+    // Four-way stage split: where the latency went, not just how big
+    // it was. Informational — stage shares shift with batching config.
+    for stage in Stage::ALL {
+        report.push(
+            format!("serve/{tag}/stage_{}_p50_ms", stage.name()),
+            r.stage(stage).p50_ms,
+            "ms",
+            Direction::None,
+        );
+    }
 }
 
 pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {

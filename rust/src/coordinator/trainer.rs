@@ -19,6 +19,7 @@ use crate::kernels::pack::{
     pack_assignment, pack_features, pack_kernel_operands, pack_labels_mask,
 };
 use crate::kernels::KernelPair;
+use crate::obs;
 use crate::partition::Decomposition;
 use crate::plan::GearPlan;
 use crate::runtime::{literal_scalar_f32, BucketInfo, Engine, Manifest, Tensor};
@@ -264,6 +265,15 @@ pub fn plan_forward_operands(
     Ok((name, bucket, ops))
 }
 
+/// Wall-time split of one packed forward call: feature packing vs.
+/// artifact execution. Serving feeds these into its per-stage latency
+/// histograms ([`crate::serve::SloMetrics`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ForwardTiming {
+    pub pack_secs: f64,
+    pub execute_secs: f64,
+}
+
 /// Execute a forward whose graph operands were packed up front by
 /// [`plan_forward_operands`] — the serving hot path: per call it packs
 /// only the (mutable) feature matrix and runs the artifact. `x` is the
@@ -277,12 +287,36 @@ pub fn forward_packed(
     x: &[f32],
     f_data: usize,
 ) -> Result<Vec<f32>> {
+    Ok(forward_packed_timed(engine, name, bucket, params, graph_ops, x, f_data)?.0)
+}
+
+/// [`forward_packed`] with the pack/execute wall-time split exposed.
+pub fn forward_packed_timed(
+    engine: &Engine,
+    name: &str,
+    bucket: &BucketInfo,
+    params: &[Tensor],
+    graph_ops: &[Tensor],
+    x: &[f32],
+    f_data: usize,
+) -> Result<(Vec<f32>, ForwardTiming)> {
     let n = x.len() / f_data.max(1);
-    let mut args: Vec<Tensor> = params.to_vec();
-    args.extend_from_slice(graph_ops);
-    args.push(pack_features(x, n, f_data, bucket)?);
-    let out = engine.run(name, &args)?;
-    Ok(out[0].to_vec::<f32>()?)
+    let t_pack = Instant::now();
+    let args = {
+        let _sp = obs::span("forward.pack");
+        let mut args: Vec<Tensor> = params.to_vec();
+        args.extend_from_slice(graph_ops);
+        args.push(pack_features(x, n, f_data, bucket)?);
+        args
+    };
+    let pack_secs = t_pack.elapsed().as_secs_f64();
+    let t_exec = Instant::now();
+    let out = {
+        let _sp = obs::span("forward.execute");
+        engine.run(name, &args)?
+    };
+    let execute_secs = t_exec.elapsed().as_secs_f64();
+    Ok((out[0].to_vec::<f32>()?, ForwardTiming { pack_secs, execute_secs }))
 }
 
 /// Run a forward pass honoring a plan's full class assignment — the

@@ -21,7 +21,9 @@
 //!   amortized batch planner in [`plan`]), and the [`bench`] subsystem —
 //!   fixed-workload suites emitting schema-versioned `BENCH_*.json`
 //!   reports with a baseline comparator that gates perf regressions in
-//!   CI.
+//!   CI — all observable through [`obs`], the unified tracing/metrics
+//!   layer (spans with Chrome-trace export, a global metrics registry,
+//!   and persisted plan-decision provenance).
 //!
 //! See `rust/DESIGN.md` for the full architecture inventory, including
 //! the plan lifecycle (Sec. 7), the serving subsystem's channel
@@ -32,6 +34,7 @@ pub mod coordinator;
 pub mod graph;
 pub mod gpusim;
 pub mod kernels;
+pub mod obs;
 pub mod partition;
 pub mod plan;
 pub mod runtime;

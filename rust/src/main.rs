@@ -44,6 +44,13 @@ fn main() {
             return;
         }
     }
+    // `--trace-out FILE`: subscribe the span recorder before the command
+    // runs; the trace document (spans + metrics snapshot) is written
+    // after it finishes, whether it succeeded or failed.
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        adaptgear::obs::install();
+    }
     let result = match cmd {
         "datasets" => cmd_datasets(&args),
         "decompose" => cmd_decompose(&args),
@@ -64,6 +71,16 @@ fn main() {
             Err(anyhow::anyhow!("unknown command {other:?}"))
         }
     };
+    if let Some(path) = &trace_out {
+        match adaptgear::obs::write_trace(path) {
+            Ok(trace) => {
+                println!("\nspan summary:");
+                print!("{}", trace.render_tree());
+                println!("trace: {} events -> {}", trace.events.len(), path.display());
+            }
+            Err(e) => eprintln!("warning: trace export failed: {e:#}"),
+        }
+    }
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -104,9 +121,11 @@ fn command_help(cmd: &str) -> Option<&'static str> {
              \x20 --seed N            generation seed (default 0)\n\
              \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
              \x20 --explain           per-candidate costs, density histogram,\n\
-             \x20                     per-class hybrid assignment\n\
+             \x20                     per-class hybrid assignment, and the sweep\n\
+             \x20                     provenance persisted with the plan\n\
              \x20 --no-save           do not write the plan store\n\
-             \x20 --out FILE          also write the plan JSON to FILE\n\n\
+             \x20 --out FILE          also write the plan JSON to FILE\n\
+             \x20 --trace-out FILE    write a Chrome trace (spans + metrics) of the run\n\n\
              EXAMPLE:\n  adaptgear plan --dataset planted-mixed --explain"
         }
         "train" => {
@@ -130,7 +149,8 @@ fn command_help(cmd: &str) -> Option<&'static str> {
              \x20 --fanout K1,K2,...  per-layer neighbor budgets; 'full' or 0 keeps\n\
              \x20                     every neighbor (default 10,10)\n\
              \x20 --batch-size N      target vertices per batch (default 256)\n\
-             \x20 --epochs N          passes over the vertex set (default 1)\n\n\
+             \x20 --epochs N          passes over the vertex set (default 1)\n\
+             \x20 --trace-out FILE    write a Chrome trace (spans + metrics) of the run\n\n\
              EXAMPLE:\n  adaptgear train --dataset planted-mixed --sampled --fanout 10,10"
         }
         "serve" => {
@@ -148,7 +168,8 @@ fn command_help(cmd: &str) -> Option<&'static str> {
              \x20 --steps N           training budget before serving (default 60)\n\
              \x20 --seed N            loadgen seed (default 99)\n\
              \x20 --train-seed N      training seed (default 0)\n\
-             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\n\
+             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
+             \x20 --trace-out FILE    write a Chrome trace (spans + metrics) of the run\n\n\
              EXAMPLE:\n  adaptgear serve --dataset citeseer --requests 500 --max-batch 16"
         }
         "bench" => {
@@ -209,6 +230,8 @@ fn print_help() {
          \x20                                   diff emitted reports against committed\n\
          \x20                                   baselines; non-zero exit on regression\n\
          \x20 selftest                          verify artifacts + runtime numerics\n\n\
+         OBSERVABILITY: pass --trace-out FILE to plan/train/serve to record spans\n\
+         and a metrics snapshot into a Perfetto-loadable Chrome trace file.\n\n\
          Run `adaptgear help <command>` (or `adaptgear <command> --help`) for every\n\
          flag plus a copy-pasteable example.\n\n\
          Figures: cargo bench --bench figures -- <fig2b|fig3a|fig3b|fig4|fig8|\n\
@@ -461,13 +484,27 @@ fn explain_plan(
         "intra classes: {} ({kernels})",
         plan.assignment.intra_classes().count()
     );
-    let sweep = adaptgear::plan::hybrid::sweep(&profile, &d.inter, &widths, bucket.edges, gpu);
-    println!(
-        "intra+inter simulated: chosen {:.2}us | all-dense_block {:.2}us | all-csr_intra {:.2}us",
-        plan.assignment.total_cost_us(),
-        sweep.all_dense_us,
-        sweep.all_sparse_us
-    );
+    // Prefer the provenance persisted WITH the decision (per-class
+    // candidate costs, evaluated/rejected thresholds) — a plan loaded
+    // from the store explains itself without re-running the sweep. Plans
+    // from before provenance existed fall back to a live re-sweep.
+    match &plan.assignment.provenance {
+        Some(p) => {
+            println!("\nthreshold sweep (persisted with the plan):");
+            print!("{}", p.render());
+        }
+        None => {
+            let sweep =
+                adaptgear::plan::hybrid::sweep(&profile, &d.inter, &widths, bucket.edges, gpu);
+            println!(
+                "intra+inter simulated (re-swept; plan has no provenance): chosen {:.2}us | \
+                 all-dense_block {:.2}us | all-csr_intra {:.2}us",
+                plan.assignment.total_cost_us(),
+                sweep.all_dense_us,
+                sweep.all_sparse_us
+            );
+        }
+    }
 }
 
 /// The monitoring planner for a clock; wall needs a live engine.
@@ -633,14 +670,17 @@ fn cmd_train_sampled(args: &Args) -> Result<()> {
             report.final_loss(),
         );
         println!(
-            "plan cache: {} hits / {} misses (hit rate {:.2}) | sample {:.3}s plan {:.3}s step {:.3}s",
+            "plan cache: {} hits / {} misses (hit rate {:.2})",
             report.plan_hits,
             report.plan_misses,
             report.plan_hit_rate(),
-            report.sample_secs,
-            report.plan_secs,
-            report.step_secs,
         );
+        println!("stages: {}", report.stages.render());
+        if report.epoch_stages.len() > 1 {
+            for (e, es) in report.epoch_stages.iter().enumerate() {
+                println!("  epoch {e:>3}  {}", es.render());
+            }
+        }
     };
 
     match Engine::new(artifacts_dir(args)) {

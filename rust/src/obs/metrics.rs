@@ -1,0 +1,458 @@
+//! Process-global metrics registry: named counters, gauges, and
+//! reservoir-sampled histograms.
+//!
+//! Unlike spans, metrics are *always* live — a counter bump is one
+//! relaxed atomic `fetch_add` whether or not a trace subscriber is
+//! installed, so subsystems increment unconditionally. Names follow
+//! the `subsystem.noun.verb` convention (`plan.cache.hit`,
+//! `serve.batch.close_full`, `sample.edges`); DESIGN.md Sec. 11 lists
+//! the registered set.
+//!
+//! Handles are interned: `counter("plan.cache.hit")` leaks one
+//! `Counter` per distinct name and returns `&'static` references, so
+//! hot paths can look a handle up once and reuse it without lifetime
+//! plumbing. [`snapshot`] captures everything for export into trace
+//! files and bench-report context.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as f64 bits).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-capacity uniform sample of a value stream (Vitter's
+/// algorithm R) with a deterministic xorshift PRNG. Every observation
+/// still updates exact count/sum/min/max; only the percentile basis
+/// is sampled, so memory stays bounded on unbounded streams.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    state: u64,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        // xorshift state must be non-zero.
+        Reservoir { cap, seen: 0, samples: Vec::new(), state: seed | 1 }
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x
+    }
+
+    /// Observe one value: kept verbatim until `cap` observations, then
+    /// each later value replaces a random slot with probability
+    /// `cap/seen` (uniform over the stream).
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.next_rand() % self.seen;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Total observations (may exceed `samples().len()`).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+#[derive(Debug)]
+struct HistInner {
+    res: Reservoir,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Histogram over a value stream: exact count/sum/min/max plus
+/// reservoir-sampled percentiles.
+#[derive(Debug)]
+pub struct Histogram(Mutex<HistInner>);
+
+/// Default reservoir capacity for registry histograms and
+/// [`crate::serve::SloMetrics`] latency collections.
+pub const DEFAULT_RESERVOIR_CAP: usize = 4096;
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::with_capacity(DEFAULT_RESERVOIR_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Histogram {
+        Histogram(Mutex::new(HistInner {
+            res: Reservoir::new(cap, 0x9e3779b97f4a7c15),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }))
+    }
+
+    pub fn record(&self, x: f64) {
+        let mut h = self.0.lock().unwrap();
+        h.res.push(x);
+        h.count += 1;
+        h.sum += x;
+        h.min = h.min.min(x);
+        h.max = h.max.max(x);
+    }
+
+    pub fn stats(&self) -> HistStats {
+        let h = self.0.lock().unwrap();
+        if h.count == 0 {
+            return HistStats::default();
+        }
+        let ps = stats::percentiles(h.res.samples(), &[50.0, 90.0, 99.0]);
+        HistStats {
+            count: h.count,
+            sum: h.sum,
+            min: h.min,
+            max: h.max,
+            p50: ps[0],
+            p90: ps[1],
+            p99: ps[2],
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Point-in-time summary of one histogram.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistStats {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl HistStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("min", Json::num(self.min)),
+            ("max", Json::num(self.max)),
+            ("p50", Json::num(self.p50)),
+            ("p90", Json::num(self.p90)),
+            ("p99", Json::num(self.p99)),
+        ])
+    }
+}
+
+struct Registry {
+    counters: BTreeMap<String, &'static Counter>,
+    gauges: BTreeMap<String, &'static Gauge>,
+    histograms: BTreeMap<String, &'static Histogram>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        Mutex::new(Registry {
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+        })
+    })
+}
+
+/// Interned counter handle for `name` (created on first use).
+pub fn counter(name: &str) -> &'static Counter {
+    let mut r = registry().lock().unwrap();
+    if let Some(c) = r.counters.get(name) {
+        return c;
+    }
+    let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+    r.counters.insert(name.to_string(), c);
+    c
+}
+
+/// Interned gauge handle for `name` (created on first use).
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut r = registry().lock().unwrap();
+    if let Some(g) = r.gauges.get(name) {
+        return g;
+    }
+    let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+    r.gauges.insert(name.to_string(), g);
+    g
+}
+
+/// Interned histogram handle for `name` (created on first use).
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut r = registry().lock().unwrap();
+    if let Some(h) = r.histograms.get(name) {
+        return h;
+    }
+    let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+    r.histograms.insert(name.to_string(), h);
+    h
+}
+
+/// Point-in-time copy of every registered metric. The registry is
+/// process-global and never resets; consumers wanting interval deltas
+/// diff two snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistStats>,
+}
+
+/// Capture the current value of every registered metric.
+pub fn snapshot() -> MetricsSnapshot {
+    let r = registry().lock().unwrap();
+    MetricsSnapshot {
+        counters: r.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+        gauges: r.gauges.iter().map(|(k, g)| (k.clone(), g.get())).collect(),
+        histograms: r.histograms.iter().map(|(k, h)| (k.clone(), h.stats())).collect(),
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::num(*v as f64))).collect(),
+        );
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect());
+        let histograms =
+            Json::Obj(self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect());
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+
+    /// Compact single-line `name=value` form for bench-report context
+    /// (counters only — the stable, comparable part of a snapshot).
+    pub fn counters_line(&self) -> String {
+        self.counters
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Multi-line human-readable rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in &self.counters {
+                out.push_str(&format!("  {k:<32} {v}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            for (k, v) in &self.gauges {
+                out.push_str(&format!("  {k:<32} {v:.3}\n"));
+            }
+        }
+        if !self.histograms.is_empty() {
+            out.push_str("histograms:\n");
+            for (k, h) in &self.histograms {
+                out.push_str(&format!(
+                    "  {k:<32} n={} p50={:.3} p90={:.3} p99={:.3} max={:.3}\n",
+                    h.count, h.p50, h.p90, h.p99, h.max
+                ));
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(no metrics recorded)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and tests run in parallel, so
+    // every test uses names unique to itself and asserts on deltas.
+
+    #[test]
+    fn counters_accumulate_and_intern() {
+        let c = counter("test.metrics.counter_a");
+        let before = c.get();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get() - before, 5);
+        // Same name returns the same interned cell.
+        let again = counter("test.metrics.counter_a");
+        assert!(std::ptr::eq(c, again));
+    }
+
+    #[test]
+    fn gauges_hold_last_value() {
+        let g = gauge("test.metrics.gauge_a");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.set(-1.0);
+        assert_eq!(g.get(), -1.0);
+    }
+
+    #[test]
+    fn reservoir_below_capacity_keeps_everything() {
+        let mut r = Reservoir::new(8, 42);
+        for i in 0..8 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.seen(), 8);
+        assert_eq!(r.samples(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_samples_the_stream() {
+        let mut r = Reservoir::new(16, 7);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 16, "never exceeds capacity");
+        assert_eq!(r.seen(), 10_000);
+        // Replacement must actually happen: samples can't all be the
+        // first 16 values.
+        assert!(r.samples().iter().any(|&x| x >= 16.0));
+        // And every retained sample came from the stream.
+        assert!(r.samples().iter().all(|&x| (0.0..10_000.0).contains(&x)));
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_under_seed() {
+        let mut a = Reservoir::new(8, 99);
+        let mut b = Reservoir::new(8, 99);
+        for i in 0..1000 {
+            a.push(i as f64);
+            b.push(i as f64);
+        }
+        assert_eq!(a.samples(), b.samples());
+    }
+
+    #[test]
+    fn histogram_percentiles_exact_at_reservoir_boundary() {
+        // Exactly at capacity: no sampling has kicked in, percentiles
+        // are exact — identical to util::stats on the full stream.
+        let h = Histogram::with_capacity(100);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        let s = h.stats();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.p50, stats::percentile(&xs, 50.0));
+        assert_eq!(s.p99, stats::percentile(&xs, 99.0));
+    }
+
+    #[test]
+    fn histogram_one_past_boundary_keeps_exact_extremes() {
+        let h = Histogram::with_capacity(4);
+        for x in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            h.record(x);
+        }
+        let s = h.stats();
+        // count/sum/min/max are exact even though one sample may have
+        // been dropped from the percentile basis.
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 110.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.stats(), HistStats::default());
+    }
+
+    #[test]
+    fn snapshot_serializes_counters_as_integers() {
+        let c = counter("test.metrics.snapshot_int");
+        c.add(3);
+        let snap = snapshot();
+        let text = crate::util::json::write(&snap.to_json());
+        // Integer counters must serialize without a fraction so trace
+        // greps like "name":3 work.
+        assert!(
+            text.contains("\"test.metrics.snapshot_int\":"),
+            "counter missing from {text}"
+        );
+        let v = snap.counters["test.metrics.snapshot_int"];
+        assert!(text.contains(&format!("\"test.metrics.snapshot_int\":{v}")));
+        assert!(snap.counters_line().contains(&format!("test.metrics.snapshot_int={v}")));
+    }
+}

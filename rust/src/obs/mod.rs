@@ -1,0 +1,57 @@
+//! Unified observability layer: spans, metrics, and trace export
+//! (DESIGN.md Sec. 11).
+//!
+//! Three pieces, one registry:
+//!
+//! * [`span`] — thread-local hierarchical spans with RAII guards
+//!   (`obs::span("plan.sweep")`). Inert until [`install`] is called;
+//!   the disabled path is one relaxed atomic load and no allocation.
+//! * [`metrics`] — always-live named counters/gauges/histograms
+//!   (`obs::counter("plan.cache.hit").inc()`); histograms bound
+//!   memory with reservoir sampling and reuse `util::stats`
+//!   percentiles.
+//! * [`trace`] — Chrome trace-event JSON export (Perfetto-loadable),
+//!   begin/end pairing validation, and a rendered summary tree.
+//!
+//! The `--trace-out FILE` flag on `plan`/`train`/`serve` calls
+//! [`install`] before the run and [`write_trace`] after; the written
+//! document carries both the span events and a full metrics snapshot,
+//! so one file answers "where did the time go" and "what did the
+//! caches do" together. Plan-decision provenance — the *why* behind
+//! each kernel choice — rides on the plan artifact itself
+//! ([`crate::plan::SweepProvenance`]), not on this registry.
+
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use metrics::{
+    counter, gauge, histogram, snapshot, Counter, Gauge, HistStats, Histogram, MetricsSnapshot,
+    Reservoir, DEFAULT_RESERVOIR_CAP,
+};
+pub use span::{enabled, install, local_events, span, take_trace, Phase, SpanGuard, TraceEvent};
+pub use trace::Trace;
+
+use crate::util::json::{self, Json};
+
+/// Drain the recorded spans, attach a metrics snapshot, and write the
+/// combined Chrome trace-event document to `path`. Returns the trace
+/// for summary rendering. Pairing is validated defensively — a
+/// corrupt trace is a bug, not a user error.
+pub fn write_trace(path: &Path) -> Result<Trace> {
+    let trace = Trace { events: take_trace() };
+    trace
+        .validate_pairing()
+        .context("recorded span events are not properly nested")?;
+    let mut doc = trace.to_chrome_json();
+    if let Json::Obj(map) = &mut doc {
+        map.insert("metrics".to_string(), snapshot().to_json());
+    }
+    std::fs::write(path, json::write(&doc))
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(trace)
+}

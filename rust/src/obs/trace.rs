@@ -1,0 +1,279 @@
+//! Chrome trace-event export, pairing validation, and the text
+//! summary tree.
+//!
+//! The export format is the Chrome/Perfetto trace-event JSON object
+//! form: `{"traceEvents":[{"ph":"B"|"E","name":...,"ts":...,"pid":1,
+//! "tid":...,"cat":"adaptgear","args":{...}},...]}`. Duration is
+//! implied by pairing each `B` with the next matching `E` on the same
+//! tid — exactly the invariant the RAII guards in [`super::span`]
+//! maintain, and the one [`Trace::validate_pairing`] checks.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::span::{Phase, TraceEvent};
+use crate::util::json::{self, Json};
+
+/// An ordered event list ready for export or analysis.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// The `traceEvents` array as JSON.
+    pub fn events_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(event_json).collect())
+    }
+
+    /// Full Chrome trace-event document (object form, so extra
+    /// top-level keys like a metrics snapshot stay Perfetto-valid).
+    pub fn to_chrome_json(&self) -> Json {
+        Json::obj(vec![("traceEvents", self.events_json())])
+    }
+
+    /// Parse a Chrome trace-event document back into a [`Trace`].
+    /// Events with phases other than `B`/`E` are skipped (Perfetto
+    /// tooling may add metadata events).
+    pub fn from_chrome_json(doc: &Json) -> Result<Trace> {
+        let arr = doc
+            .get("traceEvents")
+            .as_arr()
+            .context("trace document has no traceEvents array")?;
+        let mut events = Vec::new();
+        for (i, ev) in arr.iter().enumerate() {
+            let phase = match ev.get("ph").as_str() {
+                Some("B") => Phase::Begin,
+                Some("E") => Phase::End,
+                Some(_) => continue,
+                None => bail!("traceEvents[{i}] missing ph"),
+            };
+            let name = ev
+                .get("name")
+                .as_str()
+                .with_context(|| format!("traceEvents[{i}] missing name"))?
+                .to_string();
+            let ts_us = ev
+                .get("ts")
+                .as_f64()
+                .with_context(|| format!("traceEvents[{i}] missing ts"))?;
+            let tid = ev
+                .get("tid")
+                .as_f64()
+                .with_context(|| format!("traceEvents[{i}] missing tid"))?
+                as u64;
+            let args = match ev.get("args").as_obj() {
+                Some(map) => map.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+                None => Vec::new(),
+            };
+            events.push(TraceEvent { tid, phase, name, ts_us, args });
+        }
+        Ok(Trace { events })
+    }
+
+    /// Check that every begin has a matching end on the same tid, in
+    /// LIFO order, with no dangling opens — the invariant guard drops
+    /// guarantee even across panics.
+    pub fn validate_pairing(&self) -> Result<()> {
+        let mut stacks: BTreeMap<u64, Vec<&str>> = BTreeMap::new();
+        for (i, ev) in self.events.iter().enumerate() {
+            let stack = stacks.entry(ev.tid).or_default();
+            match ev.phase {
+                Phase::Begin => stack.push(&ev.name),
+                Phase::End => match stack.pop() {
+                    Some(open) if open == ev.name => {}
+                    Some(open) => bail!(
+                        "event {i}: end of {:?} while {open:?} is open on tid {}",
+                        ev.name,
+                        ev.tid
+                    ),
+                    None => bail!(
+                        "event {i}: end of {:?} with no open span on tid {}",
+                        ev.name,
+                        ev.tid
+                    ),
+                },
+            }
+        }
+        for (tid, stack) in &stacks {
+            if !stack.is_empty() {
+                bail!("tid {tid} ends with unclosed spans: {stack:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregate spans into a text tree: one line per distinct span
+    /// path, with call count and total inclusive wall time.
+    pub fn render_tree(&self) -> String {
+        // (depth, path) -> (count, total_us); insertion order kept so
+        // parents print before children in first-seen order.
+        let mut order: Vec<String> = Vec::new();
+        let mut agg: BTreeMap<String, (usize, usize, f64)> = BTreeMap::new();
+        let mut stacks: BTreeMap<u64, Vec<(String, f64)>> = BTreeMap::new();
+        for ev in &self.events {
+            let stack = stacks.entry(ev.tid).or_default();
+            match ev.phase {
+                Phase::Begin => {
+                    let path = match stack.last() {
+                        Some((parent, _)) => format!("{parent}/{}", ev.name),
+                        None => ev.name.clone(),
+                    };
+                    // Register at begin time so parents print before
+                    // their children.
+                    let depth = path.matches('/').count();
+                    agg.entry(path.clone()).or_insert_with(|| {
+                        order.push(path.clone());
+                        (depth, 0, 0.0)
+                    });
+                    stack.push((path, ev.ts_us));
+                }
+                Phase::End => {
+                    if let Some((path, t0)) = stack.pop() {
+                        if let Some(entry) = agg.get_mut(&path) {
+                            entry.1 += 1;
+                            entry.2 += ev.ts_us - t0;
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = String::new();
+        for path in &order {
+            let (depth, count, total_us) = agg[path];
+            let name = path.rsplit('/').next().unwrap_or(path);
+            out.push_str(&format!(
+                "{:indent$}{name:<24} x{count:<6} {:>10.3} ms\n",
+                "",
+                total_us / 1000.0,
+                indent = depth * 2
+            ));
+        }
+        if out.is_empty() {
+            out.push_str("(no spans recorded)\n");
+        }
+        out
+    }
+}
+
+/// One event in Chrome trace-event form.
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut fields = vec![
+        ("cat", Json::str("adaptgear")),
+        ("name", Json::str(ev.name.clone())),
+        (
+            "ph",
+            Json::str(match ev.phase {
+                Phase::Begin => "B",
+                Phase::End => "E",
+            }),
+        ),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(ev.tid as f64)),
+        ("ts", Json::Num(ev.ts_us)),
+    ];
+    if !ev.args.is_empty() {
+        fields.push((
+            "args",
+            Json::Obj(ev.args.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
+        ));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(tid: u64, phase: Phase, name: &str, ts_us: f64) -> TraceEvent {
+        TraceEvent { tid, phase, name: name.to_string(), ts_us, args: Vec::new() }
+    }
+
+    fn nested_trace() -> Trace {
+        let mut outer_end =
+            ev(1, Phase::End, "train.batch", 50.0);
+        outer_end.args = vec![("rows".to_string(), Json::num(128.0))];
+        Trace {
+            events: vec![
+                ev(1, Phase::Begin, "train.batch", 0.0),
+                ev(1, Phase::Begin, "train.sample", 1.0),
+                ev(1, Phase::End, "train.sample", 11.0),
+                ev(1, Phase::Begin, "train.step", 12.0),
+                ev(1, Phase::End, "train.step", 40.0),
+                outer_end,
+                ev(2, Phase::Begin, "serve.execute", 5.0),
+                ev(2, Phase::End, "serve.execute", 9.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_json_roundtrips_through_util_json() {
+        let trace = nested_trace();
+        let text = json::write(&trace.to_chrome_json());
+        let parsed = json::parse(&text).expect("trace output must be valid JSON");
+        let back = Trace::from_chrome_json(&parsed).unwrap();
+        assert_eq!(back.events.len(), trace.events.len());
+        for (a, b) in trace.events.iter().zip(&back.events) {
+            assert_eq!(a.tid, b.tid);
+            assert_eq!(a.phase, b.phase);
+            assert_eq!(a.name, b.name);
+            assert!((a.ts_us - b.ts_us).abs() < 1e-9);
+            assert_eq!(a.args, b.args);
+        }
+        back.validate_pairing().unwrap();
+        // Second roundtrip is byte-stable (BTreeMap objects).
+        let text2 = json::write(&back.to_chrome_json());
+        assert_eq!(text, text2);
+    }
+
+    #[test]
+    fn pairing_accepts_interleaved_tids() {
+        nested_trace().validate_pairing().unwrap();
+    }
+
+    #[test]
+    fn pairing_rejects_crossed_spans() {
+        let t = Trace {
+            events: vec![
+                ev(1, Phase::Begin, "a", 0.0),
+                ev(1, Phase::Begin, "b", 1.0),
+                ev(1, Phase::End, "a", 2.0),
+                ev(1, Phase::End, "b", 3.0),
+            ],
+        };
+        assert!(t.validate_pairing().is_err());
+    }
+
+    #[test]
+    fn pairing_rejects_dangling_begin_and_stray_end() {
+        let dangling = Trace { events: vec![ev(1, Phase::Begin, "a", 0.0)] };
+        assert!(dangling.validate_pairing().is_err());
+        let stray = Trace { events: vec![ev(1, Phase::End, "a", 0.0)] };
+        assert!(stray.validate_pairing().is_err());
+    }
+
+    #[test]
+    fn metadata_phases_are_skipped_on_parse() {
+        let text = r#"{"traceEvents":[
+            {"ph":"M","name":"process_name","pid":1,"tid":1,"ts":0},
+            {"ph":"B","name":"a","pid":1,"tid":1,"ts":0},
+            {"ph":"E","name":"a","pid":1,"tid":1,"ts":5}
+        ]}"#;
+        let t = Trace::from_chrome_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(t.events.len(), 2);
+        t.validate_pairing().unwrap();
+    }
+
+    #[test]
+    fn render_tree_nests_and_aggregates() {
+        let tree = nested_trace().render_tree();
+        let lines: Vec<&str> = tree.lines().collect();
+        assert!(lines[0].starts_with("train.batch"));
+        assert!(lines[1].starts_with("  train.sample"), "child indented: {tree}");
+        assert!(lines[2].starts_with("  train.step"));
+        assert!(lines[3].starts_with("serve.execute"));
+        assert!(lines[0].contains("x1"));
+    }
+}

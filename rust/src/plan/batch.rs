@@ -261,6 +261,9 @@ impl<P: Planner> BatchPlanner<P> {
                     },
                     inter_class,
                 ],
+                // Adapted from a cached decision — the donor's sweep
+                // record does not describe THIS batch's candidates.
+                provenance: None,
             });
         }
 
@@ -354,12 +357,14 @@ impl<P: Planner> Planner for BatchPlanner<P> {
         if let Some(decision) = cached {
             if let Some(assignment) = self.adapt(&decision, req, &profile) {
                 self.hits += 1;
+                crate::obs::counter("plan.cache.hit").inc();
                 return self.plan_from(req, assignment);
             }
             // Inadmissible adaptation: fall through, replan, refresh.
         }
         let plan = self.inner.plan(req)?;
         self.misses += 1;
+        crate::obs::counter("plan.cache.miss").inc();
         self.cache
             .insert(key, CachedDecision::of(&plan.assignment, plan.chosen.inter));
         Ok(plan)

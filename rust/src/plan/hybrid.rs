@@ -31,9 +31,17 @@ use crate::graph::Csr;
 use crate::kernels::{KernelKind, INTER_CANDIDATES};
 use crate::partition::BlockProfile;
 
+use crate::obs;
+
 use super::{
-    ClassAssignment, GearAssignment, SubgraphClass, ALL_DENSE_THRESHOLD, ALL_SPARSE_THRESHOLD,
+    CandidateThreshold, ClassAssignment, ClassCandidates, GearAssignment, SubgraphClass,
+    SweepProvenance, ALL_DENSE_THRESHOLD, ALL_SPARSE_THRESHOLD,
 };
+
+/// Interior candidates / edge-cap rejections recorded verbatim in
+/// provenance; beyond this only the counts are kept (a 32k-block sweep
+/// must not inflate the plan file).
+const PROVENANCE_CANDIDATE_CAP: usize = 4;
 
 /// Outcome of one threshold sweep.
 #[derive(Debug, Clone)]
@@ -65,6 +73,9 @@ pub fn sweep(
 ) -> HybridDecision {
     let community = profile.community;
     let nb = profile.len();
+    let mut sweep_span = obs::span("plan.sweep");
+    sweep_span.attr_num("blocks", nb as f64);
+    sweep_span.attr_num("inter_nnz", inter.nnz() as f64);
     let mean_class = |kind: KernelKind, blocks: usize, rows: usize, nnz: usize| -> f64 {
         let dims = ClassDims { kind, blocks, rows, nnz };
         widths
@@ -149,22 +160,31 @@ pub fn sweep(
 
     // Interior splits: only at strict density boundaries (a threshold
     // must reproduce the exact block set when the trainer re-splits).
+    // Provenance bookkeeping rides the same walk: every priced split,
+    // every edge-cap veto, every tie skip.
+    let mut priced: Vec<(f64, f64)> = Vec::new(); // (threshold, total incl. inter)
+    let mut vetoed: Vec<f64> = Vec::new();
+    let mut skipped_ties = 0usize;
     for k in 1..nb {
         if densities[k - 1] <= densities[k] {
+            skipped_ties += 1;
             continue; // tie: not representable by a >= threshold
         }
+        let threshold = (densities[k - 1] + densities[k]) / 2.0;
         let sparse_nnz = total_nnz - nnz_pfx[k];
         if sparse_nnz + inter.nnz() > edge_cap {
+            vetoed.push(threshold);
             continue; // merged inter operand would overflow the bucket
         }
         let dense_us = mean_class(KernelKind::DenseBlock, k, rows_pfx[k], nnz_pfx[k]);
         let (sk, sparse_us) =
             sparse_best(nb - k, total_rows - rows_pfx[k], sparse_nnz);
         let total = dense_us + sparse_us;
+        priced.push((threshold, total + inter_us));
         if total < best.total {
             best = Candidate {
                 k,
-                threshold: (densities[k - 1] + densities[k]) / 2.0,
+                threshold,
                 dense_us,
                 sparse: Some((sk, sparse_us)),
                 total,
@@ -204,8 +224,83 @@ pub fn sweep(
         time_us: inter_us,
     });
 
+    // Per-class candidate costs at the winning split: every kernel a
+    // class could have run, priced on that class's exact dimensions.
+    let class_costs = classes
+        .iter()
+        .map(|c| {
+            let costs = match c.class {
+                SubgraphClass::Inter => INTER_CANDIDATES
+                    .into_iter()
+                    .map(|k| (k.as_str().to_string(), inter_cost(k)))
+                    .collect(),
+                _ => [KernelKind::DenseBlock, KernelKind::CsrIntra, KernelKind::Coo]
+                    .into_iter()
+                    .map(|k| (k.as_str().to_string(), mean_class(k, c.blocks, c.rows, c.nnz)))
+                    .collect(),
+            };
+            ClassCandidates { class: c.class, costs }
+        })
+        .collect();
+
+    // Candidate threshold record: both uniform extremes always, the
+    // winner, then the best runner-up splits and a sample of vetoes.
+    let label = |thr: f64, uniform: &str| -> String {
+        if thr == best.threshold { "chosen".to_string() } else { uniform.to_string() }
+    };
+    let mut candidates = vec![
+        CandidateThreshold {
+            threshold: ALL_SPARSE_THRESHOLD,
+            total_us: Some(all_sparse_us + inter_us),
+            outcome: label(ALL_SPARSE_THRESHOLD, "uniform_sparse"),
+        },
+        CandidateThreshold {
+            threshold: ALL_DENSE_THRESHOLD,
+            total_us: Some(all_dense_us + inter_us),
+            outcome: label(ALL_DENSE_THRESHOLD, "uniform_dense"),
+        },
+    ];
+    let evaluated = priced.len();
+    if best.k > 0 && best.k < nb {
+        candidates.push(CandidateThreshold {
+            threshold: best.threshold,
+            total_us: Some(best.total + inter_us),
+            outcome: "chosen".to_string(),
+        });
+    }
+    priced.retain(|&(thr, _)| thr != best.threshold);
+    priced.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for &(threshold, total_us) in priced.iter().take(PROVENANCE_CANDIDATE_CAP) {
+        candidates.push(CandidateThreshold {
+            threshold,
+            total_us: Some(total_us),
+            outcome: "considered".to_string(),
+        });
+    }
+    for &threshold in vetoed.iter().take(PROVENANCE_CANDIDATE_CAP) {
+        candidates.push(CandidateThreshold {
+            threshold,
+            total_us: None,
+            outcome: "rejected_edge_cap".to_string(),
+        });
+    }
+    let provenance = SweepProvenance {
+        threshold: best.threshold,
+        class_costs,
+        candidates,
+        evaluated,
+        rejected_edge_cap: vetoed.len(),
+        skipped_ties,
+    };
+
+    sweep_span.attr_num("threshold", best.threshold);
+    sweep_span.attr_bool("hybrid", best.k > 0 && best.k < nb);
     HybridDecision {
-        assignment: GearAssignment { threshold: best.threshold, classes },
+        assignment: GearAssignment {
+            threshold: best.threshold,
+            classes,
+            provenance: Some(provenance),
+        },
         total_us: best.total + inter_us,
         all_dense_us: all_dense_us + inter_us,
         all_sparse_us: all_sparse_us + inter_us,
@@ -282,6 +377,35 @@ mod tests {
         assert_eq!(d.assignment.intra_classes().count(), 1);
         let pair = d.assignment.executed_pair().unwrap();
         assert!(crate::kernels::INTRA_CANDIDATES.contains(&pair.intra.unwrap()));
+    }
+
+    #[test]
+    fn sweep_records_provenance() {
+        let profile = fake_profile(16, 10922, 244, 21846, 20);
+        let d = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, &A100);
+        let p = d.assignment.provenance.as_ref().expect("sweep attaches provenance");
+        assert_eq!(p.threshold, d.assignment.threshold);
+        let chosen: Vec<_> = p.candidates.iter().filter(|c| c.outcome == "chosen").collect();
+        assert_eq!(chosen.len(), 1, "exactly one winning candidate");
+        assert!((chosen[0].total_us.unwrap() - d.total_us).abs() < 1e-9);
+        assert!(p.candidates.iter().any(|c| c.outcome == "uniform_dense"));
+        assert!(p.candidates.iter().any(|c| c.outcome == "uniform_sparse"));
+        // every executed class has candidate costs including its kernel,
+        // plus at least one priced alternative
+        for c in &d.assignment.classes {
+            let cc = p.class_costs.iter().find(|cc| cc.class == c.class).unwrap();
+            assert!(cc.costs.contains_key(c.kernel.as_str()), "{:?}", c.class);
+            assert!(cc.costs.len() >= 2, "{:?} needs alternatives", c.class);
+        }
+
+        // vetoed splits are counted and sampled with the reason
+        let capped = sweep(&profile, &small_inter(), &[32, 32], 1000, &A100);
+        let cp = capped.assignment.provenance.as_ref().unwrap();
+        assert!(cp.rejected_edge_cap > 0);
+        assert!(cp
+            .candidates
+            .iter()
+            .any(|c| c.outcome == "rejected_edge_cap" && c.total_us.is_none()));
     }
 
     #[test]

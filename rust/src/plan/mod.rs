@@ -204,6 +204,180 @@ pub struct GearAssignment {
     pub threshold: f64,
     /// Intra classes first (dense before sparse), inter last.
     pub classes: Vec<ClassAssignment>,
+    /// How the sweep reached this decision (`None` on plans adapted from
+    /// a cached decision, and on plan files written before provenance
+    /// existed — old cache entries must keep loading).
+    pub provenance: Option<SweepProvenance>,
+}
+
+/// Decision provenance recorded by the hybrid threshold sweep: the
+/// candidate kernel costs per class at the winning split, the candidate
+/// thresholds the sweep weighed (capped sample), and why rejected
+/// splits lost. Persisted inside the plan JSON and printed by
+/// `adaptgear plan --explain`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepProvenance {
+    /// Threshold the decision executes (mirrors the assignment's).
+    pub threshold: f64,
+    /// Per-class candidate costs at the winning split (us), every
+    /// eligible kernel priced on that class's dimensions.
+    pub class_costs: Vec<ClassCandidates>,
+    /// Capped candidate list: both uniform extremes, the winner, the
+    /// best admissible alternatives, and a sample of vetoed splits.
+    pub candidates: Vec<CandidateThreshold>,
+    /// Interior splits the sweep priced (uniform extremes excluded).
+    pub evaluated: usize,
+    /// Splits vetoed because `sparse nnz + inter nnz` overflowed the
+    /// bucket's edge capacity.
+    pub rejected_edge_cap: usize,
+    /// Block boundaries skipped as density ties (no representable
+    /// threshold separates equal densities).
+    pub skipped_ties: usize,
+}
+
+/// Candidate kernel costs for one class of the winning split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassCandidates {
+    pub class: SubgraphClass,
+    /// Kernel name -> mean cost over the monitored widths (us).
+    pub costs: BTreeMap<String, f64>,
+}
+
+/// One threshold the sweep considered and what happened to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateThreshold {
+    pub threshold: f64,
+    /// Total classes + inter cost (us); `None` when the split was
+    /// vetoed before pricing.
+    pub total_us: Option<f64>,
+    /// `chosen` | `uniform_dense` | `uniform_sparse` | `considered` |
+    /// `rejected_edge_cap`.
+    pub outcome: String,
+}
+
+impl SweepProvenance {
+    pub fn to_json(&self) -> Json {
+        let class_costs = Json::Arr(
+            self.class_costs
+                .iter()
+                .map(|cc| {
+                    Json::obj(vec![
+                        ("class", Json::str(cc.class.as_str())),
+                        (
+                            "costs",
+                            Json::Obj(
+                                cc.costs
+                                    .iter()
+                                    .map(|(k, v)| (k.clone(), Json::num(*v)))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let candidates = Json::Arr(
+            self.candidates
+                .iter()
+                .map(|c| {
+                    let mut fields = vec![
+                        ("outcome", Json::str(c.outcome.clone())),
+                        ("threshold", Json::num(c.threshold)),
+                    ];
+                    if let Some(t) = c.total_us {
+                        fields.push(("total_us", Json::num(t)));
+                    }
+                    Json::obj(fields)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("threshold", Json::num(self.threshold)),
+            ("class_costs", class_costs),
+            ("candidates", candidates),
+            ("evaluated", Json::num(self.evaluated as f64)),
+            ("rejected_edge_cap", Json::num(self.rejected_edge_cap as f64)),
+            ("skipped_ties", Json::num(self.skipped_ties as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SweepProvenance> {
+        let threshold = v
+            .get("threshold")
+            .as_f64()
+            .ok_or_else(|| anyhow!("provenance missing threshold"))?;
+        let mut class_costs = Vec::new();
+        for cc in v.get("class_costs").as_arr().unwrap_or(&[]) {
+            let class: SubgraphClass = cc
+                .get("class")
+                .as_str()
+                .ok_or_else(|| anyhow!("provenance class_costs entry missing class"))?
+                .parse()?;
+            let mut costs = BTreeMap::new();
+            if let Some(map) = cc.get("costs").as_obj() {
+                for (k, t) in map {
+                    let t = t
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("bad provenance cost for {k}"))?;
+                    costs.insert(k.clone(), t);
+                }
+            }
+            class_costs.push(ClassCandidates { class, costs });
+        }
+        let mut candidates = Vec::new();
+        for c in v.get("candidates").as_arr().unwrap_or(&[]) {
+            candidates.push(CandidateThreshold {
+                threshold: c
+                    .get("threshold")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("provenance candidate missing threshold"))?,
+                total_us: c.get("total_us").as_f64(),
+                outcome: c
+                    .get("outcome")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("provenance candidate missing outcome"))?
+                    .to_string(),
+            });
+        }
+        Ok(SweepProvenance {
+            threshold,
+            class_costs,
+            candidates,
+            evaluated: v.get("evaluated").as_usize().unwrap_or(0),
+            rejected_edge_cap: v.get("rejected_edge_cap").as_usize().unwrap_or(0),
+            skipped_ties: v.get("skipped_ties").as_usize().unwrap_or(0),
+        })
+    }
+
+    /// Multi-line rendering for `plan --explain`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "sweep: {} interior splits priced, {} vetoed by edge cap, {} tie boundaries skipped\n",
+            self.evaluated, self.rejected_edge_cap, self.skipped_ties
+        ));
+        out.push_str("candidate thresholds:\n");
+        for c in &self.candidates {
+            match c.total_us {
+                Some(t) => out.push_str(&format!(
+                    "  thr {:>7.4} -> {:>10.1}us  [{}]\n",
+                    c.threshold, t, c.outcome
+                )),
+                None => out.push_str(&format!(
+                    "  thr {:>7.4} -> {:>12}  [{}]\n",
+                    c.threshold, "-", c.outcome
+                )),
+            }
+        }
+        out.push_str("per-class candidate costs at the winning split:\n");
+        for cc in &self.class_costs {
+            out.push_str(&format!("  {}:\n", cc.class.as_str()));
+            for (kernel, us) in &cc.costs {
+                out.push_str(&format!("    {kernel:<12} {us:>10.1}us\n"));
+            }
+        }
+        out
+    }
 }
 
 /// Threshold that puts every block in the dense class.
@@ -244,6 +418,7 @@ impl GearAssignment {
                     time_us: inter_time_us,
                 },
             ],
+            provenance: None,
         }
     }
 
@@ -338,7 +513,7 @@ impl GearAssignment {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("threshold", Json::num(self.threshold)),
             (
                 "classes",
@@ -358,7 +533,11 @@ impl GearAssignment {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(p) = &self.provenance {
+            fields.push(("provenance", p.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<GearAssignment> {
@@ -397,7 +576,13 @@ impl GearAssignment {
                     .ok_or_else(|| anyhow!("class missing time_us"))?,
             });
         }
-        let a = GearAssignment { threshold, classes };
+        // Absent provenance is valid (adapted plans, pre-provenance
+        // files); present-but-malformed provenance is not.
+        let provenance = match v.get("provenance") {
+            Json::Null => None,
+            p => Some(SweepProvenance::from_json(p).context("assignment field 'provenance'")?),
+        };
+        let a = GearAssignment { threshold, classes, provenance };
         if a.intra_classes().next().is_none() {
             bail!("assignment has no intra class");
         }
@@ -821,6 +1006,55 @@ mod tests {
         obj.remove("assignment");
         let err = GearPlan::from_json(&Json::Obj(obj)).unwrap_err();
         assert!(err.to_string().contains("assignment"), "{err:#}");
+    }
+
+    #[test]
+    fn provenance_roundtrips_and_plans_without_it_still_load() {
+        let d = small_decomposition(9);
+        let bucket = small_bucket();
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        let prov = plan
+            .assignment
+            .provenance
+            .as_ref()
+            .expect("planned assignments carry sweep provenance");
+        assert_eq!(prov.threshold, plan.assignment.threshold);
+        // every executed class has candidate costs including the kernel
+        // that won it
+        for c in &plan.assignment.classes {
+            let cc = prov.class_costs.iter().find(|cc| cc.class == c.class).unwrap();
+            assert!(cc.costs.contains_key(c.kernel.as_str()));
+        }
+
+        // provenance survives the JSON roundtrip exactly
+        let text = json::write(&plan.to_json());
+        let back = GearPlan::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.assignment.provenance.as_ref(), Some(prov));
+
+        // a plan file written before provenance existed (assignment has
+        // no "provenance" key) still decodes, covers, and validates —
+        // old cache entries must keep loading
+        let Json::Obj(mut obj) = plan.to_json() else { unreachable!() };
+        let Some(Json::Obj(mut a)) = obj.remove("assignment") else { unreachable!() };
+        a.remove("provenance");
+        obj.insert("assignment".to_string(), Json::Obj(a));
+        let old = GearPlan::from_json(&Json::Obj(obj)).unwrap();
+        assert!(old.assignment.provenance.is_none());
+        assert!(old.assignment.covers(&d).is_ok());
+        assert!(old.validate(&d, ModelKind::Gcn).is_ok());
+    }
+
+    #[test]
+    fn malformed_provenance_is_rejected_not_ignored() {
+        // present-but-broken provenance must fail the decode (silent
+        // acceptance would hide corrupt plan files)
+        let bad = json::parse(r#"{"class_costs":[],"candidates":[]}"#).unwrap();
+        assert!(SweepProvenance::from_json(&bad).is_err(), "missing threshold");
+        let bad_candidate =
+            json::parse(r#"{"threshold":0.5,"candidates":[{"threshold":0.1}]}"#).unwrap();
+        assert!(SweepProvenance::from_json(&bad_candidate).is_err(), "missing outcome");
     }
 
     #[test]

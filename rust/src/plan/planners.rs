@@ -130,11 +130,21 @@ fn resolve_assignment(
     }
     let blocks = profile.len();
     let rows: usize = profile.blocks.iter().map(|&(r, _)| r).sum();
-    GearAssignment::uniform(
+    let mut a = GearAssignment::uniform(
         pair,
         (blocks, rows, req.d.intra.nnz(), intra_time_us),
         (req.d.inter.n_rows, req.d.inter.nnz(), inter_time_us),
-    )
+    );
+    // The uniform outcome still keeps the sweep's evaluation record —
+    // that IS the explanation of why no split happened. The recorded
+    // threshold follows the planner's winner (the sweep's uniform pick
+    // and the planner's measured pick can differ on which extreme won).
+    let thr = a.threshold;
+    a.provenance = decision.assignment.provenance.map(|mut p| {
+        p.threshold = thr;
+        p
+    });
+    a
 }
 
 /// Deterministic planner over the gpusim cost surface — no monitoring, no
@@ -484,6 +494,7 @@ impl<P: Planner> Planner for CachedPlanner<P> {
         if let Some(mut plan) = self.store.load(fp) {
             if plan.matches_bucket(req.bucket) {
                 // Served from cache: zero monitor iterations this run.
+                crate::obs::counter("plan.store.hit").inc();
                 plan.monitor_iters = 0;
                 plan.monitor_overhead_us = 0.0;
                 plan.provenance.cached = true;
@@ -491,6 +502,7 @@ impl<P: Planner> Planner for CachedPlanner<P> {
             }
             // Stale bucket geometry: fall through, replan, overwrite.
         }
+        crate::obs::counter("plan.store.miss").inc();
         let plan = self.inner.plan(req)?;
         if self.write {
             self.store

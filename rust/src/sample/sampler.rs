@@ -174,6 +174,9 @@ impl<'a> NeighborSampler<'a> {
 
         let n = nodes.len();
         let csr = Csr::from_triplets(n, n, triplets);
+        crate::obs::counter("sample.batches").inc();
+        crate::obs::counter("sample.nodes").add(n as u64);
+        crate::obs::counter("sample.edges").add(csr.nnz() as u64);
         BatchSubgraph { nodes, n_targets, csr }
     }
 }
@@ -217,6 +220,21 @@ mod tests {
         let b3 = sampler.sample(&targets, &mut Rng::new(43));
         // a different seed almost surely samples a different subgraph
         assert!(b1.csr != b3.csr || b1.nodes != b3.nodes);
+    }
+
+    #[test]
+    fn sampling_bumps_fanout_counters() {
+        // Counters are process-global; assert on deltas.
+        let batches = crate::obs::counter("sample.batches");
+        let nodes = crate::obs::counter("sample.nodes");
+        let edges = crate::obs::counter("sample.edges");
+        let (b0, n0, e0) = (batches.get(), nodes.get(), edges.get());
+        let a = prop_matrix(8, 64);
+        let sampler = NeighborSampler::new(&a, vec![Fanout::Uniform(4)]).unwrap();
+        let batch = sampler.sample(&(0..16).collect::<Vec<_>>(), &mut Rng::new(2));
+        assert!(batches.get() > b0);
+        assert!(nodes.get() - n0 >= batch.n() as u64);
+        assert!(edges.get() - e0 >= batch.csr.nnz() as u64);
     }
 
     #[test]

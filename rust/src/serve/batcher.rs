@@ -45,7 +45,11 @@ impl<T> MicroBatcher<T> {
         }
         self.pending.push(item);
         if self.pending.len() >= self.max_batch {
-            self.take()
+            let batch = self.take();
+            if batch.is_some() {
+                crate::obs::counter("serve.batch.close_full").inc();
+            }
+            batch
         } else {
             None
         }
@@ -54,14 +58,24 @@ impl<T> MicroBatcher<T> {
     /// Close the open batch if its deadline has passed at time `now`.
     pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
         match self.deadline {
-            Some(d) if now >= d => self.take(),
+            Some(d) if now >= d => {
+                let batch = self.take();
+                if batch.is_some() {
+                    crate::obs::counter("serve.batch.close_deadline").inc();
+                }
+                batch
+            }
             _ => None,
         }
     }
 
     /// Close whatever is pending regardless of size or age (shutdown).
     pub fn flush(&mut self) -> Option<Vec<T>> {
-        self.take()
+        let batch = self.take();
+        if batch.is_some() {
+            crate::obs::counter("serve.batch.close_flush").inc();
+        }
+        batch
     }
 
     /// When the event loop must wake to honor max-wait; `None` while the
@@ -135,6 +149,27 @@ mod tests {
         assert_eq!(b.flush(), None::<Vec<u8>>);
         assert_eq!(b.push(9, Instant::now()), None);
         assert_eq!(b.flush(), Some(vec![9]));
+    }
+
+    #[test]
+    fn close_causes_are_counted() {
+        // Counters are process-global; other tests may bump them in
+        // parallel, so assert on at-least deltas.
+        let full = crate::obs::counter("serve.batch.close_full");
+        let deadline = crate::obs::counter("serve.batch.close_deadline");
+        let flush = crate::obs::counter("serve.batch.close_flush");
+        let (f0, d0, l0) = (full.get(), deadline.get(), flush.get());
+        let t0 = Instant::now();
+        let mut b = MicroBatcher::new(1, Duration::from_millis(1));
+        assert!(b.push(1, t0).is_some());
+        let mut b2 = MicroBatcher::new(4, Duration::from_millis(1));
+        assert_eq!(b2.push(1, t0), None);
+        assert!(b2.poll(t0 + Duration::from_millis(1)).is_some());
+        assert_eq!(b2.push(2, t0), None);
+        assert!(b2.flush().is_some());
+        assert!(full.get() > f0);
+        assert!(deadline.get() > d0);
+        assert!(flush.get() > l0);
     }
 
     #[test]

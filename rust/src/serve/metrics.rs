@@ -1,6 +1,12 @@
 //! SLO metrics: per-request latency percentiles, throughput, shed rate,
-//! and the batch-occupancy histogram that shows whether micro-batching is
-//! actually amortizing artifact executions.
+//! the four-way per-stage latency split (queue wait / batch wait /
+//! feature pack / execute), and the batch-occupancy histogram that shows
+//! whether micro-batching is actually amortizing artifact executions.
+//!
+//! Latency series are bounded: every collection keeps an exact
+//! count/sum/max but samples its percentile basis through a fixed-size
+//! [`Reservoir`] ([`DEFAULT_RESERVOIR_CAP`] slots), so a long loadgen
+//! run cannot grow collector memory without bound.
 //!
 //! Recording is single-threaded (the coordinator event loop owns the
 //! collector); [`SloMetrics::report`] folds in the admission counters at
@@ -9,18 +15,105 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::obs::{Reservoir, DEFAULT_RESERVOIR_CAP};
 use crate::util::json::Json;
 use crate::util::stats;
 
+/// The serving pipeline stages a request's latency decomposes into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Channel time: submit -> picked up by the event loop.
+    Queue,
+    /// Batcher time: picked up -> the micro-batch closed.
+    Batch,
+    /// Feature packing inside the forward call.
+    Pack,
+    /// Artifact execution inside the forward call.
+    Execute,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [Stage::Queue, Stage::Batch, Stage::Pack, Stage::Execute];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Pack => "pack",
+            Stage::Execute => "execute",
+        }
+    }
+}
+
+/// Bounded latency series: exact count/sum/max, reservoir-sampled
+/// percentile basis.
+#[derive(Debug)]
+struct Series {
+    res: Reservoir,
+    count: usize,
+    sum_ms: f64,
+    max_ms: f64,
+}
+
+impl Series {
+    fn new(seed: u64) -> Series {
+        Series {
+            res: Reservoir::new(DEFAULT_RESERVOIR_CAP, seed),
+            count: 0,
+            sum_ms: 0.0,
+            max_ms: 0.0,
+        }
+    }
+
+    fn record(&mut self, ms: f64) {
+        self.count += 1;
+        self.sum_ms += ms;
+        self.max_ms = self.max_ms.max(ms);
+        self.res.push(ms);
+    }
+
+    fn stats(&self) -> StageStats {
+        let ps = stats::percentiles(self.res.samples(), &[50.0, 99.0]);
+        StageStats {
+            count: self.count,
+            mean_ms: if self.count > 0 { self.sum_ms / self.count as f64 } else { 0.0 },
+            p50_ms: ps[0],
+            p99_ms: ps[1],
+            max_ms: self.max_ms,
+        }
+    }
+}
+
 /// Mutable collector owned by the serve event loop.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct SloMetrics {
-    latencies_ms: Vec<f64>,
+    latencies: Series,
+    error_latencies: Series,
+    stages: [Series; 4],
     /// batch size -> number of forward executions at that occupancy
     occupancy: BTreeMap<usize, usize>,
     forward_calls: usize,
     served: usize,
     errors: usize,
+}
+
+impl Default for SloMetrics {
+    fn default() -> Self {
+        SloMetrics {
+            latencies: Series::new(0x510_0),
+            error_latencies: Series::new(0x510_1),
+            stages: [
+                Series::new(0x510_2),
+                Series::new(0x510_3),
+                Series::new(0x510_4),
+                Series::new(0x510_5),
+            ],
+            occupancy: BTreeMap::new(),
+            forward_calls: 0,
+            served: 0,
+            errors: 0,
+        }
+    }
 }
 
 impl SloMetrics {
@@ -31,13 +124,21 @@ impl SloMetrics {
     /// One request answered successfully; `latency` is enqueue -> reply.
     pub fn record_reply(&mut self, latency: Duration) {
         self.served += 1;
-        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        self.latencies.record(latency.as_secs_f64() * 1e3);
     }
 
-    /// One request answered with an error (still counts toward depth
-    /// release, not toward latency percentiles).
-    pub fn record_error(&mut self) {
+    /// One request answered with an error. Error latencies land in their
+    /// own histogram — a fast-fail storm must not flatter the success
+    /// percentiles.
+    pub fn record_error(&mut self, latency: Duration) {
         self.errors += 1;
+        self.error_latencies.record(latency.as_secs_f64() * 1e3);
+    }
+
+    /// One request's time in `stage` of the serving pipeline.
+    pub fn record_stage(&mut self, stage: Stage, dur: Duration) {
+        let idx = Stage::ALL.iter().position(|s| *s == stage).unwrap();
+        self.stages[idx].record(dur.as_secs_f64() * 1e3);
     }
 
     /// One forward artifact execution serving `occupancy` requests.
@@ -58,6 +159,7 @@ impl SloMetrics {
     /// `offered`/`shed` come from the admission controller.
     pub fn report(&self, wall_secs: f64, offered: usize, shed: usize) -> SloReport {
         let batched: usize = self.occupancy.iter().map(|(size, count)| size * count).sum();
+        let ps = stats::percentiles(self.latencies.res.samples(), &[50.0, 95.0, 99.0]);
         SloReport {
             offered,
             shed,
@@ -65,10 +167,10 @@ impl SloMetrics {
             errors: self.errors,
             forward_calls: self.forward_calls,
             wall_secs,
-            p50_ms: stats::percentile(&self.latencies_ms, 50.0),
-            p95_ms: stats::percentile(&self.latencies_ms, 95.0),
-            p99_ms: stats::percentile(&self.latencies_ms, 99.0),
-            max_ms: if self.latencies_ms.is_empty() { 0.0 } else { stats::max(&self.latencies_ms) },
+            p50_ms: ps[0],
+            p95_ms: ps[1],
+            p99_ms: ps[2],
+            max_ms: self.latencies.max_ms,
             throughput_rps: if wall_secs > 0.0 { self.served as f64 / wall_secs } else { 0.0 },
             mean_occupancy: if self.forward_calls > 0 {
                 batched as f64 / self.forward_calls as f64
@@ -76,8 +178,37 @@ impl SloMetrics {
                 0.0
             },
             shed_rate: if offered > 0 { shed as f64 / offered as f64 } else { 0.0 },
+            stages: [
+                self.stages[0].stats(),
+                self.stages[1].stats(),
+                self.stages[2].stats(),
+                self.stages[3].stats(),
+            ],
+            error_ms: self.error_latencies.stats(),
             occupancy: self.occupancy.clone(),
         }
+    }
+}
+
+/// Summary of one latency series (a pipeline stage or the error stream).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl StageStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+        ])
     }
 }
 
@@ -98,10 +229,21 @@ pub struct SloReport {
     /// Mean requests amortized per forward execution (1.0 = no batching).
     pub mean_occupancy: f64,
     pub shed_rate: f64,
+    /// Per-stage latency split, indexed like [`Stage::ALL`]
+    /// (queue / batch / pack / execute).
+    pub stages: [StageStats; 4],
+    /// Latency distribution of errored requests (separate from the
+    /// success percentiles above).
+    pub error_ms: StageStats,
     pub occupancy: BTreeMap<usize, usize>,
 }
 
 impl SloReport {
+    /// Stats for one named pipeline stage.
+    pub fn stage(&self, stage: Stage) -> &StageStats {
+        &self.stages[Stage::ALL.iter().position(|s| *s == stage).unwrap()]
+    }
+
     /// Multi-line human-readable summary (the `serve` subcommand output).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -113,6 +255,19 @@ impl SloReport {
             "latency    p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | max {:.2} ms\n",
             self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
         ));
+        out.push_str("stages    ");
+        for (stage, st) in Stage::ALL.iter().zip(self.stages.iter()) {
+            out.push_str(&format!(" {} p50 {:.2} ms |", stage.name(), st.p50_ms));
+        }
+        out.pop();
+        out.push('\n');
+        if self.errors > 0 {
+            out.push_str(&format!(
+                "errors     {} requests | p50 {:.2} ms | p99 {:.2} ms | max {:.2} ms\n",
+                self.error_ms.count, self.error_ms.p50_ms, self.error_ms.p99_ms,
+                self.error_ms.max_ms
+            ));
+        }
         out.push_str(&format!(
             "throughput {:.1} req/s | shed rate {:.2}%\n",
             self.throughput_rps,
@@ -134,6 +289,13 @@ impl SloReport {
 
     /// JSON encoding for `BENCH_serve.json` and downstream tooling.
     pub fn to_json(&self) -> Json {
+        let stages = Json::Obj(
+            Stage::ALL
+                .iter()
+                .zip(self.stages.iter())
+                .map(|(stage, st)| (stage.name().to_string(), st.to_json()))
+                .collect(),
+        );
         Json::obj(vec![
             ("offered", Json::num(self.offered as f64)),
             ("shed", Json::num(self.shed as f64)),
@@ -148,6 +310,8 @@ impl SloReport {
             ("throughput_rps", Json::num(self.throughput_rps)),
             ("mean_occupancy", Json::num(self.mean_occupancy)),
             ("shed_rate", Json::num(self.shed_rate)),
+            ("stages", stages),
+            ("error_latency", self.error_ms.to_json()),
             (
                 "occupancy",
                 Json::Arr(
@@ -178,7 +342,7 @@ mod tests {
         }
         m.record_forward(3);
         m.record_forward(1);
-        m.record_error();
+        m.record_error(Duration::from_millis(9));
         let r = m.report(2.0, 6, 1);
         assert_eq!(r.served, 4);
         assert_eq!(r.errors, 1);
@@ -189,6 +353,47 @@ mod tests {
         assert!((r.p50_ms - 2.5).abs() < 1e-9);
         assert_eq!(r.max_ms, 4.0);
         assert_eq!(r.occupancy.get(&3), Some(&1));
+        // error latencies live in their own histogram
+        assert_eq!(r.error_ms.count, 1);
+        assert!((r.error_ms.max_ms - 9.0).abs() < 1e-9);
+        // ... and never leak into the success percentiles
+        assert!(r.max_ms < 9.0);
+    }
+
+    #[test]
+    fn stage_split_is_per_stage() {
+        let mut m = SloMetrics::new();
+        m.record_stage(Stage::Queue, Duration::from_millis(1));
+        m.record_stage(Stage::Queue, Duration::from_millis(3));
+        m.record_stage(Stage::Batch, Duration::from_millis(2));
+        m.record_stage(Stage::Pack, Duration::from_millis(4));
+        m.record_stage(Stage::Execute, Duration::from_millis(8));
+        let r = m.report(1.0, 0, 0);
+        assert_eq!(r.stage(Stage::Queue).count, 2);
+        assert!((r.stage(Stage::Queue).mean_ms - 2.0).abs() < 1e-9);
+        assert!((r.stage(Stage::Queue).max_ms - 3.0).abs() < 1e-9);
+        assert_eq!(r.stage(Stage::Batch).count, 1);
+        assert!((r.stage(Stage::Pack).p50_ms - 4.0).abs() < 1e-9);
+        assert!((r.stage(Stage::Execute).max_ms - 8.0).abs() < 1e-9);
+        // the render shows the four-way split on one line
+        let text = r.render();
+        assert!(text.contains("queue p50"));
+        assert!(text.contains("execute p50"));
+    }
+
+    #[test]
+    fn latency_memory_stays_bounded_under_load() {
+        let mut m = SloMetrics::new();
+        for i in 0..3 * DEFAULT_RESERVOIR_CAP {
+            m.record_reply(Duration::from_secs_f64(1e-3 + (i % 100) as f64 * 1e-5));
+        }
+        assert!(m.latencies.res.len() <= DEFAULT_RESERVOIR_CAP);
+        let r = m.report(1.0, 0, 0);
+        assert_eq!(r.served, 3 * DEFAULT_RESERVOIR_CAP);
+        // percentiles stay inside the observed value range
+        assert!(r.p50_ms >= 1.0 && r.p50_ms <= 2.0, "p50 {}", r.p50_ms);
+        assert!(r.p99_ms >= 1.0 && r.p99_ms <= 2.0, "p99 {}", r.p99_ms);
+        assert!(r.max_ms <= 2.0);
     }
 
     #[test]
@@ -200,6 +405,11 @@ mod tests {
         assert_eq!(r.throughput_rps, 0.0);
         assert_eq!(r.mean_occupancy, 0.0);
         assert_eq!(r.shed_rate, 0.0);
+        assert_eq!(r.error_ms.count, 0);
+        for stage in Stage::ALL {
+            assert_eq!(r.stage(stage).count, 0);
+            assert_eq!(r.stage(stage).p50_ms, 0.0);
+        }
     }
 
     #[test]
@@ -207,9 +417,12 @@ mod tests {
         let mut m = SloMetrics::new();
         m.record_reply(Duration::from_millis(2));
         m.record_forward(1);
+        m.record_stage(Stage::Execute, Duration::from_millis(1));
         let text = crate::util::json::write(&m.report(1.0, 1, 0).to_json());
         let parsed = crate::util::json::parse(&text).unwrap();
         assert_eq!(parsed.get("served").as_usize(), Some(1));
         assert_eq!(parsed.get("occupancy").idx(0).get("batch").as_usize(), Some(1));
+        assert_eq!(parsed.get("stages").get("execute").get("count").as_usize(), Some(1));
+        assert_eq!(parsed.get("error_latency").get("count").as_usize(), Some(0));
     }
 }

@@ -38,7 +38,7 @@ pub mod session;
 pub use admission::Admission;
 pub use batcher::MicroBatcher;
 pub use loadgen::{LoadGen, LoadGenConfig, LoadGenSummary};
-pub use metrics::{SloMetrics, SloReport};
+pub use metrics::{SloMetrics, SloReport, Stage, StageStats};
 pub use registry::{Deployment, DeploymentSpec, ModelRegistry};
 pub use sampled::SampledInference;
 pub use session::{Request, Response, ServeClient, ServeConfig, ServeError, ServeSession};

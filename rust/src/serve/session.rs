@@ -35,7 +35,7 @@ use crate::runtime::Engine;
 
 use super::admission::Admission;
 use super::batcher::MicroBatcher;
-use super::metrics::{SloMetrics, SloReport};
+use super::metrics::{SloMetrics, SloReport, Stage};
 use super::registry::ModelRegistry;
 
 /// Serving-loop knobs.
@@ -68,6 +68,9 @@ pub struct Request {
     pub feature: usize,
     pub delta: f32,
     enqueued: Instant,
+    /// Set by the event loop when the request enters the open batch
+    /// (queue-wait / batch-wait boundary for the stage split).
+    batched_at: Option<Instant>,
     reply: mpsc::Sender<Reply>,
 }
 
@@ -134,6 +137,7 @@ impl ServeClient {
             feature,
             delta,
             enqueued: Instant::now(),
+            batched_at: None,
             reply: reply_tx,
         };
         match self.tx.send(req) {
@@ -227,7 +231,12 @@ impl<'a> ServeSession<'a> {
             };
             let now = Instant::now();
             let ready = match msg {
-                Some(req) => batcher.push(req, now),
+                Some(mut req) => {
+                    // Queue wait: submit -> picked up by the event loop.
+                    self.metrics.record_stage(Stage::Queue, now.duration_since(req.enqueued));
+                    req.batched_at = Some(now);
+                    batcher.push(req, now)
+                }
                 None => batcher.poll(now),
             };
             if let Some(batch) = ready {
@@ -245,6 +254,13 @@ impl<'a> ServeSession<'a> {
 
     /// Execute one closed batch: group by deployment, one forward each.
     fn execute(&mut self, batch: Vec<Request>) {
+        // Batch wait: entered the open batch -> the batch closed.
+        let closed = Instant::now();
+        for req in &batch {
+            if let Some(at) = req.batched_at {
+                self.metrics.record_stage(Stage::Batch, closed.duration_since(at));
+            }
+        }
         let mut groups: BTreeMap<String, Vec<Request>> = BTreeMap::new();
         for req in batch {
             groups.entry(req.deployment.clone()).or_default().push(req);
@@ -286,7 +302,7 @@ impl<'a> ServeSession<'a> {
         // Hybrid-aware forward over the operands packed at deploy time:
         // the hot path packs only the mutated feature matrix — never the
         // topology (deploy_planned did that once via plan_forward_operands).
-        let logits = trainer::forward_packed(
+        let logits = trainer::forward_packed_timed(
             self.engine,
             &dep.fwd_name,
             &dep.fwd_bucket,
@@ -296,8 +312,19 @@ impl<'a> ServeSession<'a> {
             dep.f_data,
         );
         match logits {
-            Ok(logits) => {
+            Ok((logits, timing)) => {
                 self.metrics.record_forward(size);
+                // Pack/execute are shared by the whole group; recording
+                // them per request keeps stage counts comparable to the
+                // per-request latency percentiles.
+                for _ in 0..size {
+                    self.metrics
+                        .record_stage(Stage::Pack, Duration::from_secs_f64(timing.pack_secs));
+                    self.metrics.record_stage(
+                        Stage::Execute,
+                        Duration::from_secs_f64(timing.execute_secs),
+                    );
+                }
                 for req in valid {
                     let class = dep.classify(&logits, req.vertex);
                     let latency = req.enqueued.elapsed();
@@ -320,7 +347,7 @@ impl<'a> ServeSession<'a> {
 
     fn fail_group(&mut self, group: Vec<Request>, msg: &str) {
         for req in group {
-            self.metrics.record_error();
+            self.metrics.record_error(req.enqueued.elapsed());
             let _ = req.reply.send(Err(msg.to_string()));
             self.admission.release();
         }

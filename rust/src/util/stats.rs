@@ -29,19 +29,30 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile, `q` in [0,100]. Sorts a copy.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    percentiles(xs, &[q])[0]
+}
+
+/// Several linear-interpolated percentiles from one sort — the shape
+/// every latency report needs (p50/p90/p99 off the same samples).
+/// Empty input yields 0.0 for every quantile.
+pub fn percentiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
     if xs.is_empty() {
-        return 0.0;
+        return vec![0.0; qs.len()];
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pos = q / 100.0 * (v.len() - 1) as f64;
-    let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        v[lo]
-    } else {
-        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
-    }
+    qs.iter()
+        .map(|&q| {
+            let pos = q / 100.0 * (v.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                v[lo]
+            } else {
+                v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+            }
+        })
+        .collect()
 }
 
 pub fn median(xs: &[f64]) -> f64 {
@@ -104,6 +115,17 @@ mod tests {
         for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
             assert_eq!(percentile(&xs, q), 7.25, "q={q}");
         }
+    }
+
+    #[test]
+    fn percentiles_matches_single_percentile() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        let qs = [0.0, 25.0, 50.0, 95.0, 100.0];
+        let many = percentiles(&xs, &qs);
+        for (i, &q) in qs.iter().enumerate() {
+            assert_eq!(many[i], percentile(&xs, q), "q={q}");
+        }
+        assert_eq!(percentiles(&[], &qs), vec![0.0; qs.len()]);
     }
 
     #[test]
