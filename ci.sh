@@ -7,7 +7,7 @@
 #   ./ci.sh          # build + test + fmt + clippy + rustdoc (warnings
 #                    # denied) + plan/hybrid/sampled/help smokes
 #   ./ci.sh bench    # additionally run the quick bench suite: emit the
-#                    # five BENCH_*.json reports, schema-validate them,
+#                    # six BENCH_*.json reports, schema-validate them,
 #                    # self-check the comparator, and gate against
 #                    # committed baselines/ when present
 #
@@ -221,6 +221,30 @@ EOF
 }
 trace_smoke
 
+# --- stream smoke: the deterministic mutation workload must drift one
+# side of the plan (not all classes), re-plan it online, swap the live
+# plan, and stay numerically faithful — asserted via the "plan swapped"
+# line, a non-zero plan.replan.class counter, and the forward check.
+stream_smoke() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "stream smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
+    echo "==> $bin stream (deterministic mutation workload, native backend)"
+    "$bin" stream --dataset planted-mixed --reweights 200 \
+        | tee "$tmp/stream.txt"
+    expect_grep "plan swapped" "$tmp/stream.txt" \
+        "stream smoke: no plan swap line"
+    expect_grep "plan.replan.class=[1-9]" "$tmp/stream.txt" \
+        "stream smoke: plan.replan.class counter did not move"
+    expect_grep "forward max err" "$tmp/stream.txt" \
+        "stream smoke: no forward equivalence check"
+}
+stream_smoke
+
 # --- help smoke: every subcommand documents itself with an example the
 # README can point at (`adaptgear <cmd> --help`).
 help_smoke() {
@@ -232,7 +256,7 @@ help_smoke() {
     new_tmpdir
     local tmp="$NEW_TMPDIR"
     echo "==> help smoke: per-subcommand examples"
-    for cmd in datasets decompose plan train serve bench selftest; do
+    for cmd in datasets decompose plan train serve stream bench selftest; do
         "$bin" "$cmd" --help > "$tmp/help_$cmd.txt"
         expect_grep "EXAMPLE" "$tmp/help_$cmd.txt" \
             "help smoke: $cmd --help has no EXAMPLE section"
@@ -248,9 +272,10 @@ help_smoke() {
 help_smoke
 
 # --- `./ci.sh bench`: the quick benchmark suite end to end.
-# Emits BENCH_{kernels,plan,train,serve,sample}.json at the repo root,
-# schema-validates all five, proves the comparator on a known-identical baseline
-# (must pass), and gates against committed baselines/ when they exist.
+# Emits BENCH_{kernels,plan,train,serve,sample,stream}.json at the repo
+# root, schema-validates all six, proves the comparator on a
+# known-identical baseline (must pass), and gates against committed
+# baselines/ when they exist.
 bench_mode() {
     local bin
     if ! bin="$(find_bin)"; then

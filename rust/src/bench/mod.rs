@@ -1,7 +1,7 @@
 //! Deterministic benchmark subsystem — the measurement backbone every
 //! perf PR gates on (DESIGN.md Sec. 9).
 //!
-//! Five fixed-workload suites emit schema-versioned `BENCH_*.json`
+//! Six fixed-workload suites emit schema-versioned `BENCH_*.json`
 //! reports through one writer ([`report::BenchReport`]):
 //!
 //! | suite     | covers                                                |
@@ -15,6 +15,8 @@
 //! | `serve`   | loadgen p50/p99/throughput at max-batch 1 and 16      |
 //! | `sample`  | sampler throughput, amortized per-batch plan-cache    |
 //! |           | hit rate, sampled vs full-graph epoch cost            |
+//! | `stream`  | delta-apply throughput, overlay read overhead, drift- |
+//! |           | triggered replan rate, live plan-swap latency         |
 //!
 //! The `adaptgear bench` subcommand runs them; `bench --check --baseline
 //! <dir>` diffs fresh reports against committed baselines with
@@ -35,6 +37,7 @@ pub mod plan;
 pub mod report;
 pub mod sample;
 pub mod serve;
+pub mod stream;
 pub mod train;
 
 use std::path::PathBuf;
@@ -47,7 +50,7 @@ pub use report::{BenchReport, Direction, Metric, SCHEMA_VERSION};
 use crate::util::bench::Bench;
 
 /// The suites `bench` runs (and `--validate`/`--check` expect) by default.
-pub const SUITES: [&str; 5] = ["kernels", "plan", "train", "serve", "sample"];
+pub const SUITES: [&str; 6] = ["kernels", "plan", "train", "serve", "sample", "stream"];
 
 /// Shared knobs for one suite invocation.
 #[derive(Debug, Clone)]
@@ -93,6 +96,7 @@ pub fn run_suite(name: &str, cfg: &BenchConfig) -> Result<BenchReport> {
         "train" => train::run(cfg),
         "serve" => serve::run(cfg),
         "sample" => sample::run(cfg),
+        "stream" => stream::run(cfg),
         other => bail!("unknown bench suite {other:?} (expected one of {SUITES:?})"),
     }?;
     let counters = crate::obs::snapshot().counters_line();

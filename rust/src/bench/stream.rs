@@ -1,0 +1,227 @@
+//! Stream suite: delta-apply throughput, overlay read overhead against
+//! the frozen CSR, drift-triggered replan rate, and live plan-swap
+//! latency — all engine-free (native kernels + the cost simulator), so
+//! the suite gates on a bare checkout.
+//!
+//! Fixed-seed workload: `planted-mixed` scaled to the profile's target
+//! size, then rounds of block densification plus random edge churn
+//! through a [`crate::stream::StreamSession`], re-planning whenever the
+//! drift tracker fires. The acceptance bar — the workload must trigger
+//! at least one replan and the swapped plan's forward must match the
+//! whole-graph reference within 1e-4 — is enforced by this module's
+//! unit test, so tier-1 fails if streaming replans regress.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{preprocess, ModelKind, Strategy};
+use crate::graph::datasets;
+use crate::gpusim::A100;
+use crate::kernels::native::aggregate_assignment;
+use crate::plan::{PlanRequest, Planner, SimCostPlanner};
+use crate::runtime::BucketInfo;
+use crate::serve::{Deployment, PlanSwap};
+use crate::stream::{CsrOverlay, DeltaLog, DeltaOp, Replanned, StreamConfig, StreamSession};
+use crate::util::rng::Rng;
+
+use super::report::{BenchReport, Direction};
+use super::BenchConfig;
+
+const COMMUNITY: usize = 16;
+
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new("stream", cfg.quick);
+    report.note("engine", "native-only");
+    let bench = super::measurer(cfg.quick);
+
+    let target_n = if cfg.quick { 1024 } else { 4096 };
+    let rounds = if cfg.quick { 4 } else { 8 };
+    let churn = if cfg.quick { 64 } else { 256 };
+    let spec = datasets::find("planted-mixed").expect("registry dataset");
+    let scale = (target_n as f64 / spec.vertices as f64).min(1.0);
+    let data = spec.build_scaled(scale, cfg.seed);
+    let (d, _) = preprocess(
+        Strategy::AdaptGear,
+        &data.graph,
+        crate::coordinator::pipeline::propagation_for(ModelKind::Gcn),
+        COMMUNITY,
+        cfg.seed,
+    );
+    let n = d.graph.n;
+    let nnz = d.intra.nnz() + d.inter.nnz();
+    println!("\n-- stream/planted-mixed: scale={scale:.4} vertices={n} edges={nnz} rounds={rounds} --");
+    let bucket = BucketInfo {
+        name: "stream-bench".to_string(),
+        vertices: n,
+        edges: nnz + rounds * COMMUNITY * COMMUNITY + 64,
+        features: 16,
+        hidden: 16,
+        classes: 4,
+        blocks: n.div_ceil(COMMUNITY),
+    };
+    let plan = SimCostPlanner::new(&A100)
+        .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))?;
+
+    // ---- overlay read overhead vs the frozen CSR: stage ~1/8 of the
+    // rows copy-on-write via reweights (same structure, same flops — the
+    // measured delta is purely the staged-row indirection)
+    let f = 16;
+    let base = d.whole();
+    let mut overlay = CsrOverlay::new(base.clone());
+    let mut log = DeltaLog::new();
+    for (r, c, w) in base.to_triplets().into_iter().step_by(8).take(n / 8) {
+        overlay.apply(&log.append(DeltaOp::Reweight { u: r, v: c, w }))?;
+    }
+    let x: Vec<f32> = vec![0.5; n * f];
+    let m_base = bench.bench("stream/base_spmm", || {
+        std::hint::black_box(base.spmm(&x, f));
+    });
+    let m_overlay = bench.bench("stream/overlay_spmm", || {
+        std::hint::black_box(overlay.spmm(&x, f));
+    });
+    let overhead = m_overlay.median_s() / m_base.median_s().max(1e-12);
+    report.push("overlay/read_overhead", overhead, "x", Direction::Lower);
+    report.note("overlay.staged", format!("{} of {} rows", overlay.staged_rows(), n));
+
+    // ---- mutation workload: rounds of one-block densification + random
+    // churn, re-planning whenever the tracker reports drift
+    let mut session = StreamSession::new(
+        &d,
+        plan.clone(),
+        bucket.clone(),
+        StreamConfig::new(ModelKind::Gcn, &A100),
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0x57e4);
+    let n_blocks = n / COMMUNITY;
+    let mut total_deltas = 0usize;
+    let mut replans = 0usize;
+    let mut apply_secs = 0.0f64;
+    let mut last: Option<Replanned> = None;
+    for round in 0..rounds {
+        let lo = (((round * 3 + 1) % n_blocks) * COMMUNITY) as u32;
+        let t0 = Instant::now();
+        for u in lo..lo + COMMUNITY as u32 {
+            for v in (u + 1)..lo + COMMUNITY as u32 {
+                session.apply(DeltaOp::InsertEdge { u, v, w: 0.3 })?;
+                total_deltas += 1;
+            }
+        }
+        for _ in 0..churn {
+            let (u, v) = (rng.below(n as u64) as u32, rng.below(n as u64) as u32);
+            session.apply(DeltaOp::DeleteEdge { u, v })?;
+            total_deltas += 1;
+        }
+        apply_secs += t0.elapsed().as_secs_f64();
+        if let Some(r) = session.maybe_replan()? {
+            replans += 1;
+            last = Some(r);
+        }
+    }
+    report.push(
+        "delta/apply_per_s",
+        total_deltas as f64 / apply_secs.max(1e-12),
+        "deltas/s",
+        Direction::Higher,
+    );
+    report.push(
+        "replan/per_10k_deltas",
+        replans as f64 * 10_000.0 / total_deltas.max(1) as f64,
+        "replans",
+        Direction::None,
+    );
+    println!(
+        "stream: {total_deltas} deltas over {rounds} rounds -> {replans} replans, \
+         graph version {}",
+        session.graph_version()
+    );
+    let r = last.context("mutation workload triggered no replan")?;
+
+    // ---- swapped-plan forward vs the whole-graph reference
+    let xs: Vec<f32> = (0..r.d.graph.n * f).map(|_| 0.25).collect();
+    let swapped = aggregate_assignment(&r.d, &r.plan.assignment, &xs, f)?;
+    let whole = r.d.whole().spmm(&xs, f);
+    let max_err = swapped
+        .iter()
+        .zip(&whole)
+        .map(|(p, q)| (p - q).abs() as f64)
+        .fold(0.0f64, f64::max);
+    report.push("replan/forward_max_err", max_err, "abs", Direction::Lower);
+
+    // ---- live swap latency: install the replanned graph into a
+    // registry-shaped deployment (validation + state swap, the exact
+    // work the serve event loop does at its linearization point)
+    let f_data = 8;
+    let mut dep = Deployment {
+        name: "stream-bench".to_string(),
+        model: ModelKind::Gcn,
+        strategy: Strategy::AdaptGear,
+        d: d.clone(),
+        x: vec![0.0; n * f_data],
+        labels: vec![0; n],
+        f_data,
+        n,
+        plan,
+        params: Vec::new(),
+        fwd_name: "fwd_native".to_string(),
+        fwd_bucket: bucket.clone(),
+        graph_ops: Vec::new(),
+        bucket_vertices: n,
+        classes: 4,
+        final_loss: 0.0,
+        warm_secs: 0.0,
+    };
+    let added = r.d.graph.n - n;
+    let swap = PlanSwap {
+        plan: r.plan.clone(),
+        d: r.d.clone(),
+        graph_ops: Vec::new(),
+        fwd_name: "fwd_native".to_string(),
+        fwd_bucket: bucket,
+        new_rows: vec![0.0; added * f_data],
+        new_labels: vec![0; added],
+    };
+    let t0 = Instant::now();
+    dep.apply_swap(swap)?;
+    let swap_us = t0.elapsed().as_secs_f64() * 1e6;
+    report.push("swap/latency_us", swap_us, "us", Direction::Lower);
+    println!(
+        "stream: swap installed {} in {swap_us:.0}us, forward max err {max_err:.2e}",
+        dep.plan.fingerprint
+    );
+
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn quick_suite_replans_and_stays_numerically_faithful() {
+        let cfg = BenchConfig {
+            quick: true,
+            artifacts: "definitely-not-an-artifacts-dir".to_string(),
+            out: PathBuf::from("."),
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.suite, "stream");
+        for name in [
+            "overlay/read_overhead",
+            "delta/apply_per_s",
+            "replan/per_10k_deltas",
+            "replan/forward_max_err",
+            "swap/latency_us",
+        ] {
+            assert!(report.get(name).is_some(), "missing metric {name}");
+        }
+        // THE acceptance bars: the workload must actually trigger online
+        // replans, and the swapped plan must stay numerically faithful.
+        let replans = report.get("replan/per_10k_deltas").unwrap().value;
+        assert!(replans > 0.0, "workload must trigger at least one replan");
+        let err = report.get("replan/forward_max_err").unwrap().value;
+        assert!(err < 1e-4, "swapped plan diverged: max err {err:.2e}");
+    }
+}

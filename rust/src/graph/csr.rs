@@ -205,6 +205,25 @@ impl Csr {
         )
     }
 
+    /// Grow a square matrix to `n` vertices by appending empty rows and
+    /// columns — streaming vertex adds (`DeltaOp::AddVertices`) land
+    /// here so the overlay invariant `overlay.n == base.n_rows` holds
+    /// without rebuilding the base. Existing entries are untouched.
+    pub fn expanded(&self, n: usize) -> Csr {
+        assert_eq!(self.n_rows, self.n_cols, "expanded() needs a square matrix");
+        assert!(n >= self.n_rows, "expanded() cannot shrink ({n} < {})", self.n_rows);
+        let mut row_ptr = self.row_ptr.clone();
+        let last = *row_ptr.last().expect("row_ptr is never empty");
+        row_ptr.resize(n + 1, last);
+        Csr {
+            n_rows: n,
+            n_cols: n,
+            row_ptr,
+            col_idx: self.col_idx.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
     /// COO triplets `(dst, src, w)` in row order.
     pub fn to_triplets(&self) -> Vec<(u32, u32, f32)> {
         let mut out = Vec::with_capacity(self.nnz());
@@ -403,6 +422,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn expanded_appends_empty_rows() {
+        let g = Graph::from_edges(4, vec![(0, 1), (2, 3)]);
+        let a = Csr::gcn_normalized(&g);
+        let b = a.expanded(7);
+        assert_eq!(b.n_rows, 7);
+        assert_eq!(b.n_cols, 7);
+        assert_eq!(b.nnz(), a.nnz());
+        for r in 0..4 {
+            assert_eq!(b.row(r), a.row(r));
+        }
+        for r in 4..7 {
+            assert!(b.row(r).0.is_empty());
+        }
+        // same-size expansion is the identity
+        assert_eq!(a.expanded(4), a);
+        // spmm over the expanded matrix matches the original on old rows
+        let f = 2;
+        let x_small: Vec<f32> = (0..4 * f).map(|i| i as f32 * 0.5).collect();
+        let mut x_big = x_small.clone();
+        x_big.resize(7 * f, 1.0);
+        let y_small = a.spmm(&x_small, f);
+        let y_big = b.spmm(&x_big, f);
+        assert_eq!(&y_big[..4 * f], &y_small[..]);
+        assert!(y_big[4 * f..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -23,7 +23,10 @@
 //!   reports with a baseline comparator that gates perf regressions in
 //!   CI — all observable through [`obs`], the unified tracing/metrics
 //!   layer (spans with Chrome-trace export, a global metrics registry,
-//!   and persisted plan-decision provenance).
+//!   and persisted plan-decision provenance). The [`stream`] subsystem
+//!   (Sec. 12) makes served graphs mutable: a versioned delta log and
+//!   CSR overlay, a per-block density-drift tracker, and an online
+//!   re-planner that swaps refreshed plans into live deployments.
 //!
 //! See `rust/DESIGN.md` for the full architecture inventory, including
 //! the plan lifecycle (Sec. 7), the serving subsystem's channel
@@ -40,4 +43,5 @@ pub mod plan;
 pub mod runtime;
 pub mod sample;
 pub mod serve;
+pub mod stream;
 pub mod util;

@@ -10,6 +10,8 @@
 //!                                            # mini-batch neighbor-sampled training
 //! adaptgear serve --dataset citeseer --requests 500 --max-batch 16
 //!                                            # micro-batched serving + SLO report
+//! adaptgear stream --dataset planted-mixed   # mutation workload: deltas -> drift
+//!                                            # tracking -> online replan + swap
 //! adaptgear bench --quick --suite sample     # fixed workload suites -> BENCH_*.json
 //! adaptgear selftest                         # artifact <-> runtime smoke check
 //! ```
@@ -29,7 +31,7 @@ use adaptgear::partition::{Decomposition, Propagation};
 use adaptgear::plan::{
     CachedPlanner, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner, SimCostPlanner,
 };
-use adaptgear::runtime::{Engine, Manifest};
+use adaptgear::runtime::{BucketInfo, Engine, Manifest};
 use adaptgear::util::cli::Args;
 use adaptgear::util::json;
 
@@ -57,6 +59,7 @@ fn main() {
         "plan" => cmd_plan(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "bench" => cmd_bench(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" => {
@@ -172,12 +175,32 @@ fn command_help(cmd: &str) -> Option<&'static str> {
              \x20 --trace-out FILE    write a Chrome trace (spans + metrics) of the run\n\n\
              EXAMPLE:\n  adaptgear serve --dataset citeseer --requests 500 --max-batch 16"
         }
+        "stream" => {
+            "adaptgear stream — drive a deterministic mutation workload against a\n\
+             planned graph: apply edge/vertex deltas through the CSR overlay, track\n\
+             per-block density drift, re-plan the drifted classes online, and verify\n\
+             the swapped plan's forward against a cold full re-plan. Engine-free\n\
+             (native kernels + the cost simulator).\n\n\
+             FLAGS:\n\
+             \x20 --dataset NAME      dataset (default planted-mixed)\n\
+             \x20 --model gcn|gin     model kind (default gcn)\n\
+             \x20 --gpu a100|v100     simulated GPU (default a100)\n\
+             \x20 --scale S           dataset scale override (default fits ~1k vertices)\n\
+             \x20 --community C       community width (default 16)\n\
+             \x20 --target-block B    diagonal block the workload densifies (default 1)\n\
+             \x20 --reweights N       weight-only updates sprinkled elsewhere (default 200)\n\
+             \x20 --compact-ratio F   staged-row fraction that triggers compaction\n\
+             \x20                     (default 0.25)\n\
+             \x20 --seed N            generation + reorder seed (default 0)\n\
+             \x20 --trace-out FILE    write a Chrome trace (spans + metrics) of the run\n\n\
+             EXAMPLE:\n  adaptgear stream --dataset planted-mixed --reweights 200"
+        }
         "bench" => {
             "adaptgear bench — run the fixed workload suites and emit schema-versioned\n\
              BENCH_*.json reports; validate or regression-gate emitted reports.\n\n\
              FLAGS:\n\
              \x20 --quick             reduced CI workload profile\n\
-             \x20 --suite all|kernels|plan|train|serve|sample  (default all)\n\
+             \x20 --suite all|kernels|plan|train|serve|sample|stream  (default all)\n\
              \x20 --out DIR           report directory (default .)\n\
              \x20 --seed N            workload seed (default 7)\n\
              \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
@@ -222,7 +245,10 @@ fn print_help() {
          \x20       [--seed N (loadgen)] [--train-seed N]\n\
          \x20                                   micro-batched serving loop + SLO report\n\
          \x20                                   (deploys plan through the plan cache)\n\
-         \x20 bench [--quick] [--suite all|kernels|plan|train|serve|sample] [--out DIR]\n\
+         \x20 stream --dataset NAME [--reweights N] [--target-block B] [--scale S]\n\
+         \x20                                   deterministic mutation workload: delta\n\
+         \x20                                   log -> drift tracking -> online replan\n\
+         \x20 bench [--quick] [--suite all|kernels|plan|train|serve|sample|stream] [--out DIR]\n\
          \x20                                   run the fixed workload suites, emit\n\
          \x20                                   schema-versioned BENCH_*.json reports\n\
          \x20 bench --validate [--out DIR]      schema-check emitted BENCH_*.json\n\
@@ -829,6 +855,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.served as f64 / report.forward_calls.max(1) as f64
         );
     }
+    Ok(())
+}
+
+/// Deterministic streaming-mutation workload (DESIGN.md Sec. 12):
+/// decompose + plan a dataset, densify one diagonal block through the
+/// delta log while sprinkling weight-only updates elsewhere, let the
+/// drift tracker pick out the moved class(es), re-plan online, and
+/// check the swapped plan's forward against a cold full re-plan.
+/// Engine-free: native kernels + the cost simulator.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use adaptgear::kernels::native::aggregate_assignment;
+    use adaptgear::stream::{DeltaOp, StreamConfig, StreamSession};
+    use adaptgear::util::rng::Rng;
+
+    let name = args.get_or("dataset", "planted-mixed");
+    let spec = datasets::find(name).with_context(|| format!("unknown dataset {name:?}"))?;
+    let model: ModelKind = args.get_or("model", "gcn").parse()?;
+    let gpu: &'static GpuModel = args.get_or("gpu", "a100").parse()?;
+    let scale = args.get_f64("scale", f64::min(1.0, 1024.0 / spec.vertices as f64));
+    let community = args.get_usize("community", 16);
+    let seed = args.get_u64("seed", 0);
+    let reweights = args.get_usize("reweights", 200);
+    let target_block = args.get_usize("target-block", 1);
+
+    let data = spec.build_scaled(scale, seed);
+    let (d, _times) = adaptgear::coordinator::preprocess(
+        Strategy::AdaptGear,
+        &data.graph,
+        Propagation::GcnNormalized,
+        community,
+        seed,
+    );
+    let n = d.graph.n;
+    let nnz = d.intra.nnz() + d.inter.nnz();
+    // Synthetic bucket with headroom for the mutation workload — stream
+    // planning is simulator-driven, no AOT manifest needed.
+    let bucket = BucketInfo {
+        name: format!("bstream{n}"),
+        vertices: n + community,
+        edges: nnz + community * community + 64,
+        features: 16,
+        hidden: 16,
+        classes: spec.classes,
+        blocks: (n + community).div_ceil(community),
+    };
+    let mut req = PlanRequest::new(&d, model, &bucket);
+    req.dataset = spec.name.to_string();
+    let plan = SimCostPlanner::new(gpu).plan(&req)?;
+    println!(
+        "dataset={} scale={scale:.4} vertices={n} edges={nnz} | plan {} ({} classes, threshold {})",
+        spec.name,
+        plan.chosen,
+        plan.assignment.classes.len(),
+        plan.assignment.threshold,
+    );
+
+    let mut cfg = StreamConfig::new(model, gpu);
+    cfg.compact_ratio = args.get_f64("compact-ratio", 0.25);
+    cfg.dataset = spec.name.to_string();
+    let total_classes = plan.assignment.classes.len();
+    let mut session = StreamSession::new(&d, plan, bucket.clone(), cfg);
+
+    // Deterministic workload: densify one diagonal block to near-clique...
+    let lo = (target_block * community).min(n.saturating_sub(community)) as u32;
+    let hi = (lo as usize + community).min(n) as u32;
+    let mut inserted = 0usize;
+    for u in lo..hi {
+        for v in (u + 1)..hi {
+            inserted += session.apply(DeltaOp::InsertEdge { u, v, w: 0.3 })?.changed.len();
+        }
+    }
+    // ...and touch only weights everywhere else (structurally invisible).
+    let trips = session.overlay().to_csr().to_triplets();
+    for (k, &(r, c, w)) in trips.iter().step_by(7).take(reweights).enumerate() {
+        session.apply(DeltaOp::Reweight { u: r, v: c, w: w + 0.001 * (k % 3) as f32 })?;
+    }
+    println!(
+        "applied {} deltas ({inserted} inserted entries in block {target_block}, {} reweights); \
+         overlay: {} staged rows, version {}",
+        session.log().len(),
+        reweights.min(trips.len().div_ceil(7)),
+        session.overlay().staged_rows(),
+        session.overlay().version(),
+    );
+
+    let Some(r) = session.maybe_replan()? else {
+        bail!("mutation workload produced no drift — densify more (lower --scale?)");
+    };
+    let drifted: Vec<&str> = r.drifted.iter().map(|c| c.as_str()).collect();
+    println!(
+        "drift: classes [{}] moved ({} of {} plan classes), {}",
+        drifted.join(", "),
+        r.drifted.len(),
+        total_classes,
+        if r.swept { "full sweep (cached decision inadmissible)" } else { "adapted cached decision" },
+    );
+    println!(
+        "plan swapped: {} -> {} (graph version {})",
+        r.old_fingerprint, r.plan.fingerprint, r.graph_version
+    );
+
+    // Numeric check: the swapped plan's aggregation must match both a
+    // cold full re-plan and the whole-graph reference on the mutated CSR.
+    let f = 8;
+    let mut rng = Rng::new(seed ^ 0xf00d);
+    let x: Vec<f32> = (0..r.d.graph.n * f).map(|_| rng.normal_f32()).collect();
+    let swapped = aggregate_assignment(&r.d, &r.plan.assignment, &x, f)?;
+    let mut cold_req = PlanRequest::new(&r.d, model, &bucket);
+    cold_req.graph_version = r.graph_version;
+    let cold = SimCostPlanner::new(gpu).plan(&cold_req)?;
+    let colded = aggregate_assignment(&r.d, &cold.assignment, &x, f)?;
+    let whole = r.d.whole().spmm(&x, f);
+    let max_err = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max)
+    };
+    let (vs_cold, vs_whole) = (max_err(&swapped, &colded), max_err(&swapped, &whole));
+    println!("forward max err: vs cold replan {vs_cold:.2e}, vs whole-graph spmm {vs_whole:.2e}");
+    if vs_cold > 1e-4 || vs_whole > 1e-4 {
+        bail!("swapped plan diverged from the cold re-plan (>{:.0e})", 1e-4);
+    }
+    println!("counters: {}", adaptgear::obs::snapshot().counters_line());
     Ok(())
 }
 

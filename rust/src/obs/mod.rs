@@ -13,7 +13,14 @@
 //! * [`trace`] — Chrome trace-event JSON export (Perfetto-loadable),
 //!   begin/end pairing validation, and a rendered summary tree.
 //!
-//! The `--trace-out FILE` flag on `plan`/`train`/`serve` calls
+//! The streaming subsystem reports through this registry too: the
+//! `stream.delta.applied` and `stream.compaction` counters (overlay
+//! mutation volume), the `plan.replan.class` / `plan.replan.sweep`
+//! counters under the `plan.replan` span (online re-planning), and the
+//! `serve.swap.applied` counter under the `serve.swap` span (live plan
+//! swaps at the event loop's linearization point).
+//!
+//! The `--trace-out FILE` flag on `plan`/`train`/`serve`/`stream` calls
 //! [`install`] before the run and [`write_trace`] after; the written
 //! document carries both the span events and a full metrics snapshot,
 //! so one file answers "where did the time go" and "what did the

@@ -263,6 +263,26 @@ impl Decomposition {
         Decomposition { graph, perm, intra, inter, community }
     }
 
+    /// Decompose an already-built propagation matrix WITHOUT reordering:
+    /// identity permutation, split in place. The streaming re-planner
+    /// comes through here — a mutated served graph must keep its vertex
+    /// order (features, labels, and in-flight requests all address the
+    /// served order), so only the intra/inter split is recomputed.
+    pub fn from_propagation_ordered(matrix: &Csr, community: usize) -> Decomposition {
+        assert_eq!(matrix.n_rows, matrix.n_cols, "propagation matrix must be square");
+        let topo = Graph::from_edges(
+            matrix.n_rows,
+            matrix
+                .to_triplets()
+                .into_iter()
+                .filter(|&(r, c, _)| r != c)
+                .map(|(r, c, _)| (r, c)),
+        );
+        let perm = (0..matrix.n_rows as u32).collect();
+        let (intra, inter) = matrix.split_block_diagonal(community);
+        Decomposition { graph: topo, perm, intra, inter, community }
+    }
+
     /// The whole propagation matrix (intra + inter) — used by full-graph
     /// baselines and for invariant checks.
     pub fn whole(&self) -> Csr {
@@ -401,6 +421,26 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn from_propagation_ordered_keeps_order_and_entries() {
+        let mut rng = Rng::new(21);
+        let g = hidden_graph(&mut rng, 96);
+        let matrix = Csr::gcn_normalized(&g);
+        let d = Decomposition::from_propagation_ordered(&matrix, 16);
+        // identity permutation: served vertex ids are untouched
+        assert!(d.perm.iter().enumerate().all(|(i, &p)| p == i as u32));
+        assert_eq!(d.graph.n, matrix.n_rows);
+        // the split partitions the matrix exactly
+        assert_eq!(d.intra.nnz() + d.inter.nnz(), matrix.nnz());
+        let f = 2;
+        let x: Vec<f32> = (0..96 * f).map(|_| rng.normal_f32()).collect();
+        let y1 = matrix.spmm(&x, f);
+        let y2 = d.whole().spmm(&x, f);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-5);
+        }
     }
 
     #[test]

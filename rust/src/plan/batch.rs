@@ -50,7 +50,10 @@ pub struct BatchProfile {
     pub hist_quarters: [u8; 4],
 }
 
-fn ceil_log2(v: usize) -> u32 {
+/// `ceil(log2(v))` — the coarse size-class quantizer shared by the batch
+/// profile key and the streaming drift tracker (`stream::drift` flags the
+/// inter class only when this moves).
+pub fn coarse_log2(v: usize) -> u32 {
     let v = v.max(1) as u64;
     64 - (v - 1).leading_zeros().min(64)
 }
@@ -83,8 +86,8 @@ impl BatchProfile {
         BatchProfile {
             model,
             community: d.community,
-            rows_log2: ceil_log2(d.graph.n),
-            nnz_log2: ceil_log2(total + 1),
+            rows_log2: coarse_log2(d.graph.n),
+            nnz_log2: coarse_log2(total + 1),
             intra_quarters,
             hist_quarters,
         }
@@ -113,18 +116,21 @@ impl BatchProfile {
 
 /// The part of a plan worth remembering across similar batches: the
 /// density threshold and which kernel runs each class. Everything else
-/// (stats, fingerprint, costs) is batch-specific and re-derived.
+/// (stats, fingerprint, costs) is batch-specific and re-derived. Also
+/// the unit of reuse for streaming re-planning (`stream::replan` adapts
+/// the live plan's decision to the mutated decomposition instead of
+/// re-running the sweep).
 #[derive(Debug, Clone)]
-struct CachedDecision {
-    threshold: f64,
-    dense: Option<KernelKind>,
-    sparse: Option<KernelKind>,
-    inter: KernelKind,
+pub struct PlanDecision {
+    pub threshold: f64,
+    pub dense: Option<KernelKind>,
+    pub sparse: Option<KernelKind>,
+    pub inter: KernelKind,
 }
 
-impl CachedDecision {
-    fn of(a: &GearAssignment, inter: KernelKind) -> CachedDecision {
-        CachedDecision {
+impl PlanDecision {
+    pub fn of(a: &GearAssignment, inter: KernelKind) -> PlanDecision {
+        PlanDecision {
             threshold: a.threshold,
             dense: a.kernel_for(SubgraphClass::DenseIntra),
             sparse: a.kernel_for(SubgraphClass::SparseIntra),
@@ -144,7 +150,7 @@ impl CachedDecision {
 pub struct BatchPlanner<P> {
     gpu: &'static GpuModel,
     inner: P,
-    cache: HashMap<u64, CachedDecision>,
+    cache: HashMap<u64, PlanDecision>,
     hits: usize,
     misses: usize,
 }
@@ -181,166 +187,177 @@ impl<P: Planner> BatchPlanner<P> {
         }
     }
 
-    /// Adapt a cached decision to `req`'s actual batch: reclassify the
-    /// blocks at the cached threshold, rebuild the class stats, and
-    /// re-check bucket admissibility. `None` means the decision does not
-    /// transfer (degenerate split with no usable kernel, or the operands
-    /// would overflow the bucket) and the inner planner must run.
-    fn adapt(
-        &self,
-        decision: &CachedDecision,
-        req: &PlanRequest,
-        profile: &BlockProfile,
-    ) -> Option<GearAssignment> {
-        let d = req.d;
-        let bucket = req.bucket;
-        if d.graph.n > bucket.vertices {
-            return None;
-        }
-        let widths = req.widths();
-        let labels = profile.classify(decision.threshold);
-        let mut dense = (0usize, 0usize, 0usize); // (blocks, rows, nnz)
-        let mut sparse = (0usize, 0usize, 0usize);
-        for (b, label) in labels.iter().enumerate() {
-            let (rows, nnz) = profile.blocks[b];
-            let side = match label {
-                DensityClass::Dense => &mut dense,
-                DensityClass::Sparse => &mut sparse,
-            };
-            side.0 += 1;
-            side.1 += rows;
-            side.2 += nnz;
-        }
-        let mean_class = |kind: KernelKind, blocks: usize, rows: usize, nnz: usize| -> f64 {
-            let dims = ClassDims { kind, blocks, rows, nnz };
-            widths
-                .iter()
-                .map(|&w| class_kernel_cost(&dims, w, d.community, self.gpu).time_us)
-                .sum::<f64>()
-                / widths.len().max(1) as f64
+}
+
+/// Adapt a cached decision to `req`'s actual batch: reclassify the
+/// blocks at the cached threshold, rebuild the class stats, and
+/// re-check bucket admissibility. `None` means the decision does not
+/// transfer (degenerate split with no usable kernel, or the operands
+/// would overflow the bucket) and a full sweep must run. Free function
+/// because the streaming re-planner (`stream::replan`) reuses it
+/// against the live plan's decision.
+pub fn adapt_decision(
+    decision: &PlanDecision,
+    req: &PlanRequest,
+    profile: &BlockProfile,
+    gpu: &'static GpuModel,
+) -> Option<GearAssignment> {
+    let d = req.d;
+    let bucket = req.bucket;
+    if d.graph.n > bucket.vertices {
+        return None;
+    }
+    let widths = req.widths();
+    let labels = profile.classify(decision.threshold);
+    let mut dense = (0usize, 0usize, 0usize); // (blocks, rows, nnz)
+    let mut sparse = (0usize, 0usize, 0usize);
+    for (b, label) in labels.iter().enumerate() {
+        let (rows, nnz) = profile.blocks[b];
+        let side = match label {
+            DensityClass::Dense => &mut dense,
+            DensityClass::Sparse => &mut sparse,
         };
-        let inter_time = widths
+        side.0 += 1;
+        side.1 += rows;
+        side.2 += nnz;
+    }
+    let mean_class = |kind: KernelKind, blocks: usize, rows: usize, nnz: usize| -> f64 {
+        let dims = ClassDims { kind, blocks, rows, nnz };
+        widths
             .iter()
-            .map(|&w| kernel_cost(decision.inter, &d.inter, w, d.community, self.gpu).time_us)
+            .map(|&w| class_kernel_cost(&dims, w, d.community, gpu).time_us)
             .sum::<f64>()
-            / widths.len().max(1) as f64;
-        let inter_class = ClassAssignment {
-            class: SubgraphClass::Inter,
-            kernel: decision.inter,
-            blocks: 0,
-            rows: d.inter.n_rows,
-            nnz: d.inter.nnz(),
-            time_us: inter_time,
-        };
+            / widths.len().max(1) as f64
+    };
+    let inter_time = widths
+        .iter()
+        .map(|&w| kernel_cost(decision.inter, &d.inter, w, d.community, gpu).time_us)
+        .sum::<f64>()
+        / widths.len().max(1) as f64;
+    let inter_class = ClassAssignment {
+        class: SubgraphClass::Inter,
+        kernel: decision.inter,
+        blocks: 0,
+        rows: d.inter.n_rows,
+        nnz: d.inter.nnz(),
+        time_us: inter_time,
+    };
 
-        if dense.0 > 0 && sparse.0 > 0 {
-            // Genuinely hybrid on this batch too: needs both kernels and
-            // the merged sparse+inter operand must fit the bucket.
-            let (dk, sk) = (decision.dense?, decision.sparse?);
-            if dense.2 > bucket.edges || sparse.2 + d.inter.nnz() > bucket.edges {
-                return None;
-            }
-            return Some(GearAssignment {
-                threshold: decision.threshold,
-                classes: vec![
-                    ClassAssignment {
-                        class: SubgraphClass::DenseIntra,
-                        kernel: dk,
-                        blocks: dense.0,
-                        rows: dense.1,
-                        nnz: dense.2,
-                        time_us: mean_class(dk, dense.0, dense.1, dense.2),
-                    },
-                    ClassAssignment {
-                        class: SubgraphClass::SparseIntra,
-                        kernel: sk,
-                        blocks: sparse.0,
-                        rows: sparse.1,
-                        nnz: sparse.2,
-                        time_us: mean_class(sk, sparse.0, sparse.1, sparse.2),
-                    },
-                    inter_class,
-                ],
-                // Adapted from a cached decision — the donor's sweep
-                // record does not describe THIS batch's candidates.
-                provenance: None,
-            });
-        }
-
-        // One-sided split on this batch: collapse to the uniform plan for
-        // whichever side is populated (the uniform extremes are always
-        // executable when the subgraphs fit the bucket). The class kernel
-        // must be able to run in the intra artifact slot — a sparse class
-        // that ran as COO under the merged-operand lowering cannot.
-        let (kernel, stats) = if dense.0 > 0 {
-            (decision.dense?, dense)
-        } else {
-            (decision.sparse?, sparse)
-        };
-        if !crate::kernels::INTRA_CANDIDATES.contains(&kernel) {
+    if dense.0 > 0 && sparse.0 > 0 {
+        // Genuinely hybrid on this batch too: needs both kernels and
+        // the merged sparse+inter operand must fit the bucket.
+        let (dk, sk) = (decision.dense?, decision.sparse?);
+        if dense.2 > bucket.edges || sparse.2 + d.inter.nnz() > bucket.edges {
             return None;
         }
-        if stats.2 > bucket.edges || d.inter.nnz() > bucket.edges {
-            return None;
-        }
-        let pair = KernelPair::new(kernel, decision.inter);
-        Some(GearAssignment::uniform(
-            pair,
-            (profile.len(), stats.1, stats.2, mean_class(kernel, stats.0, stats.1, stats.2)),
-            (d.inter.n_rows, d.inter.nnz(), inter_time),
-        ))
+        return Some(GearAssignment {
+            threshold: decision.threshold,
+            classes: vec![
+                ClassAssignment {
+                    class: SubgraphClass::DenseIntra,
+                    kernel: dk,
+                    blocks: dense.0,
+                    rows: dense.1,
+                    nnz: dense.2,
+                    time_us: mean_class(dk, dense.0, dense.1, dense.2),
+                },
+                ClassAssignment {
+                    class: SubgraphClass::SparseIntra,
+                    kernel: sk,
+                    blocks: sparse.0,
+                    rows: sparse.1,
+                    nnz: sparse.2,
+                    time_us: mean_class(sk, sparse.0, sparse.1, sparse.2),
+                },
+                inter_class,
+            ],
+            // Adapted from a cached decision — the donor's sweep
+            // record does not describe THIS batch's candidates.
+            provenance: None,
+        });
     }
 
-    /// Assemble a served plan around an adapted assignment.
-    fn plan_from(&self, req: &PlanRequest, assignment: GearAssignment) -> Result<GearPlan> {
-        let chosen = assignment.executed_pair()?;
-        let widths = req.widths();
-        let mut per_width = std::collections::BTreeMap::new();
-        for &w in &widths {
-            per_width.insert(w, chosen);
-        }
-        let mut intra_times = std::collections::BTreeMap::new();
-        for c in assignment.intra_classes() {
-            intra_times.insert(c.kernel.as_str().to_string(), c.time_us);
-        }
-        let mut inter_times = std::collections::BTreeMap::new();
-        let inter = assignment.inter_class()?;
-        inter_times.insert(inter.kernel.as_str().to_string(), inter.time_us);
-        // Cheap projection from the class-cost basis (one launch set per
-        // aggregate width) — amortized plans must not pay a cache sim.
-        let projected = IterationCost {
-            aggregate_us: assignment.total_cost_us() * widths.len() as f64,
-            update_us: 0.0,
-            overhead_us: 0.0,
-            l2_hits: 0,
-            l2_accesses: 0,
-            kernel_launches: assignment.classes.len() * widths.len(),
-        };
-        Ok(GearPlan {
-            fingerprint: req.fingerprint(),
-            dataset: req.dataset.clone(),
-            model: req.model,
-            scale: req.scale,
-            community: req.d.community,
-            reorder: req.reorder,
-            seed: req.seed,
-            bucket: req.bucket.name.clone(),
-            chosen,
-            assignment,
-            per_width,
-            intra_times,
-            inter_times,
-            projected,
-            monitor_iters: 0,
-            monitor_overhead_us: 0.0,
-            provenance: Provenance {
-                planner: "batch".to_string(),
-                clock: "analytic".to_string(),
-                gpu: self.gpu.name.to_string(),
-                cached: true,
-            },
-        })
+    // One-sided split on this batch: collapse to the uniform plan for
+    // whichever side is populated (the uniform extremes are always
+    // executable when the subgraphs fit the bucket). The class kernel
+    // must be able to run in the intra artifact slot — a sparse class
+    // that ran as COO under the merged-operand lowering cannot.
+    let (kernel, stats) = if dense.0 > 0 {
+        (decision.dense?, dense)
+    } else {
+        (decision.sparse?, sparse)
+    };
+    if !crate::kernels::INTRA_CANDIDATES.contains(&kernel) {
+        return None;
     }
+    if stats.2 > bucket.edges || d.inter.nnz() > bucket.edges {
+        return None;
+    }
+    let pair = KernelPair::new(kernel, decision.inter);
+    Some(GearAssignment::uniform(
+        pair,
+        (profile.len(), stats.1, stats.2, mean_class(kernel, stats.0, stats.1, stats.2)),
+        (d.inter.n_rows, d.inter.nnz(), inter_time),
+    ))
+}
+
+/// Assemble a served plan around an adapted assignment. `planner_label`
+/// names the adapting consumer in the provenance ("batch" for the
+/// amortized mini-batch cache, "replan" for the streaming re-planner).
+pub fn plan_from_decision(
+    req: &PlanRequest,
+    assignment: GearAssignment,
+    gpu: &'static GpuModel,
+    planner_label: &str,
+) -> Result<GearPlan> {
+    let chosen = assignment.executed_pair()?;
+    let widths = req.widths();
+    let mut per_width = std::collections::BTreeMap::new();
+    for &w in &widths {
+        per_width.insert(w, chosen);
+    }
+    let mut intra_times = std::collections::BTreeMap::new();
+    for c in assignment.intra_classes() {
+        intra_times.insert(c.kernel.as_str().to_string(), c.time_us);
+    }
+    let mut inter_times = std::collections::BTreeMap::new();
+    let inter = assignment.inter_class()?;
+    inter_times.insert(inter.kernel.as_str().to_string(), inter.time_us);
+    // Cheap projection from the class-cost basis (one launch set per
+    // aggregate width) — amortized plans must not pay a cache sim.
+    let projected = IterationCost {
+        aggregate_us: assignment.total_cost_us() * widths.len() as f64,
+        update_us: 0.0,
+        overhead_us: 0.0,
+        l2_hits: 0,
+        l2_accesses: 0,
+        kernel_launches: assignment.classes.len() * widths.len(),
+    };
+    Ok(GearPlan {
+        fingerprint: req.fingerprint(),
+        dataset: req.dataset.clone(),
+        model: req.model,
+        scale: req.scale,
+        community: req.d.community,
+        reorder: req.reorder,
+        seed: req.seed,
+        bucket: req.bucket.name.clone(),
+        chosen,
+        assignment,
+        per_width,
+        intra_times,
+        inter_times,
+        projected,
+        monitor_iters: 0,
+        monitor_overhead_us: 0.0,
+        graph_version: req.graph_version,
+        provenance: Provenance {
+            planner: planner_label.to_string(),
+            clock: "analytic".to_string(),
+            gpu: gpu.name.to_string(),
+            cached: true,
+        },
+    })
 }
 
 impl<P: Planner> Planner for BatchPlanner<P> {
@@ -355,10 +372,10 @@ impl<P: Planner> Planner for BatchPlanner<P> {
         let key = BatchProfile::of_profile(&profile, req.d, req.model).key();
         let cached = self.cache.get(&key).cloned();
         if let Some(decision) = cached {
-            if let Some(assignment) = self.adapt(&decision, req, &profile) {
+            if let Some(assignment) = adapt_decision(&decision, req, &profile, self.gpu) {
                 self.hits += 1;
                 crate::obs::counter("plan.cache.hit").inc();
-                return self.plan_from(req, assignment);
+                return plan_from_decision(req, assignment, self.gpu, "batch");
             }
             // Inadmissible adaptation: fall through, replan, refresh.
         }
@@ -366,7 +383,7 @@ impl<P: Planner> Planner for BatchPlanner<P> {
         self.misses += 1;
         crate::obs::counter("plan.cache.miss").inc();
         self.cache
-            .insert(key, CachedDecision::of(&plan.assignment, plan.chosen.inter));
+            .insert(key, PlanDecision::of(&plan.assignment, plan.chosen.inter));
         Ok(plan)
     }
 }
@@ -397,12 +414,12 @@ mod tests {
     }
 
     #[test]
-    fn ceil_log2_buckets() {
-        assert_eq!(ceil_log2(1), 0);
-        assert_eq!(ceil_log2(2), 1);
-        assert_eq!(ceil_log2(3), 2);
-        assert_eq!(ceil_log2(1024), 10);
-        assert_eq!(ceil_log2(1025), 11);
+    fn coarse_log2_buckets() {
+        assert_eq!(coarse_log2(1), 0);
+        assert_eq!(coarse_log2(2), 1);
+        assert_eq!(coarse_log2(3), 2);
+        assert_eq!(coarse_log2(1024), 10);
+        assert_eq!(coarse_log2(1025), 11);
     }
 
     #[test]

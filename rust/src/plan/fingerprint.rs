@@ -22,11 +22,24 @@ pub struct Fingerprint(pub u64);
 impl Fingerprint {
     /// Fingerprint the selection problem: topology + community + model.
     /// The salt names the plan schema generation — v2 added the per-class
-    /// hybrid assignment, so every pre-hybrid cache entry keys differently
-    /// and is recomputed rather than served.
+    /// hybrid assignment, v3 added the graph-version component for
+    /// streaming graphs — so every pre-stream cache entry keys
+    /// differently and is recomputed rather than served against a
+    /// mutated graph. Equivalent to [`Fingerprint::of_versioned`] at
+    /// graph version 0 (a frozen graph).
     pub fn of(d: &Decomposition, model: ModelKind) -> Fingerprint {
+        Fingerprint::of_versioned(d, model, 0)
+    }
+
+    /// Fingerprint a selection problem on a *mutating* graph: the
+    /// topology digest plus the monotonically increasing graph version
+    /// the streaming re-planner stamps on each swap. Two plans for the
+    /// same topology at different versions key differently, so a stale
+    /// pre-mutation plan can never be served from the store.
+    pub fn of_versioned(d: &Decomposition, model: ModelKind, graph_version: u64) -> Fingerprint {
         let mut h = Fnv::new();
-        h.write(b"adaptgear-plan-v2");
+        h.write(b"adaptgear-plan-v3");
+        h.write(&graph_version.to_le_bytes());
         h.write(model.as_str().as_bytes());
         h.write_usize(d.community);
         h.write_usize(d.graph.n);
@@ -125,6 +138,26 @@ mod tests {
         assert_ne!(gcn, Fingerprint::of(&other, ModelKind::Gcn));
         let plain = decomp(7, Propagation::PlainAdjacency);
         assert_ne!(gcn, Fingerprint::of(&plain, ModelKind::Gcn));
+    }
+
+    #[test]
+    fn version_zero_is_the_default_fingerprint() {
+        let d = decomp(7, Propagation::GcnNormalized);
+        assert_eq!(
+            Fingerprint::of(&d, ModelKind::Gcn),
+            Fingerprint::of_versioned(&d, ModelKind::Gcn, 0)
+        );
+    }
+
+    #[test]
+    fn graph_version_participates() {
+        let d = decomp(7, Propagation::GcnNormalized);
+        let v0 = Fingerprint::of_versioned(&d, ModelKind::Gcn, 0);
+        let v1 = Fingerprint::of_versioned(&d, ModelKind::Gcn, 1);
+        let v2 = Fingerprint::of_versioned(&d, ModelKind::Gcn, 2);
+        assert_ne!(v0, v1);
+        assert_ne!(v1, v2);
+        assert_ne!(v0, v2);
     }
 
     #[test]

@@ -35,7 +35,9 @@ pub mod hybrid;
 pub mod planners;
 pub mod store;
 
-pub use batch::{BatchPlanner, BatchProfile};
+pub use batch::{
+    adapt_decision, coarse_log2, plan_from_decision, BatchPlanner, BatchProfile, PlanDecision,
+};
 pub use fingerprint::Fingerprint;
 pub use hybrid::HybridDecision;
 pub use planners::{best_adaptive_pair, CachedPlanner, MonitorPlanner, SimCostPlanner};
@@ -94,6 +96,10 @@ pub struct PlanRequest<'a> {
     pub scale: f64,
     pub reorder: Reorder,
     pub seed: u64,
+    /// Monotonic streaming graph version (0 for frozen graphs). Part of
+    /// the fingerprint: a re-planned mutation never collides with the
+    /// pre-mutation plan in the store.
+    pub graph_version: u64,
 }
 
 impl<'a> PlanRequest<'a> {
@@ -106,6 +112,7 @@ impl<'a> PlanRequest<'a> {
             scale: 1.0,
             reorder: Reorder::Metis,
             seed: 0,
+            graph_version: 0,
         }
     }
 
@@ -120,7 +127,16 @@ impl<'a> PlanRequest<'a> {
         reorder: Reorder,
         seed: u64,
     ) -> PlanRequest<'a> {
-        PlanRequest { d, model, bucket, dataset: dataset.to_string(), scale, reorder, seed }
+        PlanRequest {
+            d,
+            model,
+            bucket,
+            dataset: dataset.to_string(),
+            scale,
+            reorder,
+            seed,
+            graph_version: 0,
+        }
     }
 
     /// Aggregate widths the selector monitors (matches the AOT kernel-only
@@ -131,7 +147,7 @@ impl<'a> PlanRequest<'a> {
     }
 
     pub fn fingerprint(&self) -> Fingerprint {
-        Fingerprint::of(self.d, self.model)
+        Fingerprint::of_versioned(self.d, self.model, self.graph_version)
     }
 }
 
@@ -640,6 +656,10 @@ pub struct GearPlan {
     pub monitor_iters: usize,
     pub monitor_overhead_us: f64,
     pub provenance: Provenance,
+    /// Streaming graph version this plan was derived at (0 for frozen
+    /// graphs). Participates in the fingerprint, so `validate` can
+    /// recompute the digest for versioned plans.
+    pub graph_version: u64,
 }
 
 impl GearPlan {
@@ -652,7 +672,7 @@ impl GearPlan {
                 d.community
             );
         }
-        let fp = Fingerprint::of(d, model);
+        let fp = Fingerprint::of_versioned(d, model, self.graph_version);
         if self.fingerprint != fp {
             bail!(
                 "plan fingerprint {} does not match graph fingerprint {fp} — replan",
@@ -726,7 +746,7 @@ impl GearPlan {
                 .collect(),
         );
         Json::obj(vec![
-            ("version", Json::num(2.0)),
+            ("version", Json::num(3.0)),
             ("fingerprint", Json::str(self.fingerprint.to_string())),
             ("dataset", Json::str(self.dataset.clone())),
             ("model", Json::str(self.model.as_str())),
@@ -735,6 +755,8 @@ impl GearPlan {
             ("reorder", Json::str(self.reorder.as_str())),
             // string, not number: u64 seeds above 2^53 don't survive f64
             ("seed", Json::str(self.seed.to_string())),
+            // same encoding rationale as seed
+            ("graph_version", Json::str(self.graph_version.to_string())),
             ("bucket", Json::str(self.bucket.clone())),
             ("chosen", pair_to_json(self.chosen)),
             ("assignment", self.assignment.to_json()),
@@ -816,6 +838,12 @@ impl GearPlan {
             projected: cost_from_json(v.get("projected")),
             monitor_iters: req_num("monitor_iters")? as usize,
             monitor_overhead_us: v.get("monitor_overhead_us").as_f64().unwrap_or(0.0),
+            // absent in pre-stream (version <= 2) files: frozen graph
+            graph_version: v
+                .get("graph_version")
+                .as_str()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0),
             provenance: Provenance {
                 planner: prov.get("planner").as_str().unwrap_or("unknown").to_string(),
                 clock: prov.get("clock").as_str().unwrap_or("unknown").to_string(),

@@ -220,6 +220,7 @@ impl Planner for SimCostPlanner {
             projected: projected_cost(req, self.gpu),
             monitor_iters: 0,
             monitor_overhead_us: 0.0,
+            graph_version: req.graph_version,
             provenance: Provenance {
                 planner: self.name().to_string(),
                 clock: "analytic".to_string(),
@@ -425,6 +426,7 @@ impl<'e> MonitorPlanner<'e> {
             projected: projected_cost(req, self.gpu),
             monitor_iters: report.monitor_iters,
             monitor_overhead_us: report.monitor_overhead_us,
+            graph_version: req.graph_version,
             provenance: Provenance {
                 planner: "monitor".to_string(),
                 clock: self.clock.as_str().to_string(),

@@ -132,6 +132,53 @@ mod tests {
     }
 
     #[test]
+    fn pre_stream_v2_entries_miss_cleanly() {
+        use crate::util::json::Json;
+        // A store populated before the v3 salt bump holds files named by
+        // the OLD fingerprint. We can't recompute the retired v2 digest,
+        // but any pre-bump digest differs from the current one, so an
+        // arbitrary distinct value reproduces the on-disk layout exactly.
+        let store = temp_store("v2-era");
+        let plan = make_plan(6);
+        let v2_fp: Fingerprint = "00000000deadbeef".parse().unwrap();
+        assert_ne!(v2_fp, plan.fingerprint);
+        let Json::Obj(mut obj) = plan.to_json() else { unreachable!() };
+        obj.insert("version".to_string(), Json::num(2.0));
+        obj.remove("graph_version");
+        obj.insert("fingerprint".to_string(), Json::str(v2_fp.to_string()));
+        std::fs::create_dir_all(store.dir()).unwrap();
+        std::fs::write(store.path_for(v2_fp), json::write(&Json::Obj(obj))).unwrap();
+
+        // The post-bump lookup keys by the v3 fingerprint: the v2 file is
+        // invisible — a clean miss, not an error.
+        assert!(store.load(plan.fingerprint).is_none());
+        // Even renamed onto the new key, the stale embedded fingerprint
+        // fails the content check and still misses.
+        std::fs::copy(store.path_for(v2_fp), store.path_for(plan.fingerprint)).unwrap();
+        assert!(store.load(plan.fingerprint).is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn graph_versioned_plans_key_separately() {
+        let store = temp_store("versioned");
+        let d = small_decomposition(7);
+        let bucket = small_bucket();
+        let mut req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+        req.graph_version = 3;
+        let plan = SimCostPlanner::new(&A100).plan(&req).unwrap();
+        assert_eq!(plan.graph_version, 3);
+        store.save(&plan).unwrap();
+        // the frozen-graph (version 0) key must miss; the versioned key
+        // must hit, roundtrip its version, and still validate
+        assert!(store.load(Fingerprint::of(&d, ModelKind::Gcn)).is_none());
+        let back = store.load(plan.fingerprint).expect("versioned key must hit");
+        assert_eq!(back.graph_version, 3);
+        assert!(back.validate(&d, ModelKind::Gcn).is_ok());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
     fn stale_or_corrupt_entries_are_invalidated() {
         let store = temp_store("invalid");
         let plan = make_plan(4);

@@ -14,7 +14,10 @@
 //!   execution per tick (max-batch / max-wait policy).
 //! * [`admission`] — bounded in-flight depth with load shedding.
 //! * [`session`] — the single-owner PJRT event loop (PJRT handles are not
-//!   `Send`) fed by `std::sync::mpsc` channels from producer threads.
+//!   `Send`) fed by `std::sync::mpsc` channels from producer threads. The
+//!   same channel carries [`registry::PlanSwap`] control messages, so a
+//!   streaming replan swaps into a live deployment in submission order
+//!   without draining the request queue.
 //! * [`metrics`] — SLO accounting: p50/p95/p99 latency, throughput, shed
 //!   rate, and the batch-occupancy histogram.
 //! * [`loadgen`] — closed-loop synthetic load for the `serve` subcommand,
@@ -39,6 +42,8 @@ pub use admission::Admission;
 pub use batcher::MicroBatcher;
 pub use loadgen::{LoadGen, LoadGenConfig, LoadGenSummary};
 pub use metrics::{SloMetrics, SloReport, Stage, StageStats};
-pub use registry::{Deployment, DeploymentSpec, ModelRegistry};
+pub use registry::{Deployment, DeploymentSpec, ModelRegistry, PlanSwap};
 pub use sampled::SampledInference;
-pub use session::{Request, Response, ServeClient, ServeConfig, ServeError, ServeSession};
+pub use session::{
+    Request, Response, ServeClient, ServeConfig, ServeError, ServeSession, SwapReceipt,
+};

@@ -21,7 +21,9 @@ use crate::graph::datasets::DatasetSpec;
 use crate::gpusim::A100;
 use crate::kernels::KernelPair;
 use crate::partition::Decomposition;
-use crate::plan::{CachedPlanner, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner};
+use crate::plan::{
+    CachedPlanner, Fingerprint, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner,
+};
 use crate::runtime::{BucketInfo, Engine, Tensor};
 
 /// What to deploy: the identity of a servable model plus its training
@@ -116,6 +118,71 @@ impl Deployment {
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
             .map(|(i, _)| i as i32)
             .unwrap_or(0)
+    }
+}
+
+/// Everything a live plan swap replaces, prepared OFF the serve thread
+/// (stream re-planner + operand packing) so the event loop's only work
+/// is validation and pointer swaps.
+///
+/// The decomposition must be in served (identity) order — appended
+/// vertices extend the feature/label state via `new_rows`/`new_labels`,
+/// existing rows are untouched, so in-flight feature perturbations
+/// survive the swap.
+#[derive(Debug)]
+pub struct PlanSwap {
+    pub plan: GearPlan,
+    /// Mutated-graph decomposition, served order.
+    pub d: Decomposition,
+    /// Static graph operands packed for the new plan.
+    pub graph_ops: Vec<Tensor>,
+    pub fwd_name: String,
+    pub fwd_bucket: BucketInfo,
+    /// Feature rows for appended vertices, `[added, f_data]` row-major.
+    pub new_rows: Vec<f32>,
+    /// Labels for appended vertices.
+    pub new_labels: Vec<i32>,
+}
+
+impl Deployment {
+    /// Atomically install a re-planned graph + plan. Every check runs
+    /// before ANY mutation, so a rejected swap leaves the deployment
+    /// exactly as it was — the event loop keeps serving the old plan.
+    pub fn apply_swap(&mut self, swap: PlanSwap) -> Result<Fingerprint> {
+        let new_n = swap.d.graph.n;
+        if new_n < self.n {
+            bail!("swap shrinks {:?} from {} to {new_n} vertices", self.name, self.n);
+        }
+        let added = new_n - self.n;
+        if swap.new_rows.len() != added * self.f_data {
+            bail!(
+                "swap for {:?} carries {} feature values for {added} new vertices (need {})",
+                self.name,
+                swap.new_rows.len(),
+                added * self.f_data
+            );
+        }
+        if swap.new_labels.len() != added {
+            bail!(
+                "swap for {:?} carries {} labels for {added} new vertices",
+                self.name,
+                swap.new_labels.len()
+            );
+        }
+        swap.plan
+            .validate(&swap.d, self.model)
+            .with_context(|| format!("swap plan for {:?} does not match its graph", self.name))?;
+        self.x.extend_from_slice(&swap.new_rows);
+        self.labels.extend_from_slice(&swap.new_labels);
+        self.n = new_n;
+        self.d = swap.d;
+        self.plan = swap.plan;
+        self.graph_ops = swap.graph_ops;
+        self.fwd_name = swap.fwd_name;
+        self.bucket_vertices = swap.fwd_bucket.vertices;
+        self.classes = swap.fwd_bucket.classes;
+        self.fwd_bucket = swap.fwd_bucket;
+        Ok(self.plan.fingerprint)
     }
 }
 
@@ -348,5 +415,85 @@ mod tests {
         let dep = dummy("planned");
         assert_eq!(dep.plan.fingerprint, Fingerprint::of(&dep.d, ModelKind::Gcn));
         assert!(!dep.plan.provenance.cached);
+    }
+
+    /// A swap payload for `dep`: its graph with 4 appended vertices
+    /// forming a clique, re-decomposed and re-planned at graph version 1.
+    fn swap_for(dep: &Deployment) -> PlanSwap {
+        use crate::stream::{CsrOverlay, DeltaLog, DeltaOp};
+        let n0 = dep.n as u32;
+        let mut overlay = CsrOverlay::new(dep.d.whole());
+        let mut log = DeltaLog::new();
+        overlay.apply(&log.append(DeltaOp::AddVertices { count: 4 })).unwrap();
+        for u in n0..n0 + 4 {
+            for v in (u + 1)..n0 + 4 {
+                overlay.apply(&log.append(DeltaOp::InsertEdge { u, v, w: 0.5 })).unwrap();
+            }
+        }
+        let d = Decomposition::from_propagation_ordered(&overlay.to_csr(), dep.d.community);
+        let mut bucket = dep.fwd_bucket.clone();
+        bucket.vertices = d.graph.n;
+        bucket.blocks = d.graph.n.div_ceil(dep.d.community);
+        let mut req = PlanRequest::new(&d, dep.model, &bucket);
+        req.graph_version = 1;
+        let plan = SimCostPlanner::new(&A100).plan(&req).unwrap();
+        PlanSwap {
+            plan,
+            d,
+            graph_ops: Vec::new(),
+            fwd_name: "fwd_dummy_v1".to_string(),
+            fwd_bucket: bucket,
+            new_rows: vec![0.5; 4 * dep.f_data],
+            new_labels: vec![1; 4],
+        }
+    }
+
+    #[test]
+    fn apply_swap_replaces_plan_and_extends_state() {
+        let mut dep = dummy("swappable");
+        let old_fp = dep.plan.fingerprint;
+        let swap = swap_for(&dep);
+        let expect = swap.plan.fingerprint;
+        let fp = dep.apply_swap(swap).unwrap();
+        assert_eq!(fp, expect);
+        assert_ne!(fp, old_fp, "graph version is in the fingerprint");
+        assert_eq!(dep.n, 68);
+        assert_eq!(dep.x.len(), 68 * dep.f_data);
+        assert_eq!(dep.labels.len(), 68);
+        assert_eq!(dep.labels[67], 1);
+        assert_eq!(dep.fwd_name, "fwd_dummy_v1");
+        assert_eq!(dep.plan.graph_version, 1);
+        assert!(dep.plan.validate(&dep.d, dep.model).is_ok());
+    }
+
+    #[test]
+    fn apply_swap_rejects_bad_payloads_without_mutating() {
+        let mut dep = dummy("guarded");
+        let (n, fp, xlen) = (dep.n, dep.plan.fingerprint, dep.x.len());
+
+        // wrong feature-row count for the appended vertices
+        let mut bad = swap_for(&dep);
+        bad.new_rows.pop();
+        let err = dep.apply_swap(bad).unwrap_err();
+        assert!(err.to_string().contains("feature values"), "{err}");
+
+        // plan does not validate against the swap's decomposition
+        let mut mismatched = swap_for(&dep);
+        mismatched.plan = dep.plan.clone(); // old plan, new graph
+        let err = dep.apply_swap(mismatched).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
+
+        // a shrinking swap is rejected outright
+        let mut rng = Rng::new(9);
+        let small_g = planted_partition(32, 4, 0.5, 0.05, &mut rng);
+        let small =
+            Decomposition::build(&small_g, Reorder::Identity, Propagation::GcnNormalized, 4, 0);
+        let mut shrink = swap_for(&dep);
+        shrink.d = small;
+        let err = dep.apply_swap(shrink).unwrap_err();
+        assert!(err.to_string().contains("shrinks"), "{err}");
+
+        // every rejection left the deployment untouched
+        assert_eq!((dep.n, dep.plan.fingerprint, dep.x.len()), (n, fp, xlen));
     }
 }

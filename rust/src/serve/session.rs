@@ -22,6 +22,15 @@
 //! Shutdown is by disconnection: when every `ServeClient` clone is
 //! dropped, `recv` reports the channel closed, the loop flushes the last
 //! partial batch, and `run` returns the [`SloReport`].
+//!
+//! The channel also carries the **control plane**: a streaming replan
+//! ships its [`PlanSwap`] through [`ServeClient::swap_plan`], which
+//! enqueues it in-band with the traffic. The event loop's handling is
+//! the linearization point of the live-swap protocol (DESIGN.md
+//! Sec. 12): the open micro-batch is closed and executed on the OLD
+//! plan — the queue is never drained or rejected — then the
+//! deployment's plan/graph/operands swap atomically and every later
+//! request sees the new plan.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -31,12 +40,14 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::trainer;
+use crate::obs::{counter, span};
+use crate::plan::Fingerprint;
 use crate::runtime::Engine;
 
 use super::admission::Admission;
 use super::batcher::MicroBatcher;
 use super::metrics::{SloMetrics, SloReport, Stage};
-use super::registry::ModelRegistry;
+use super::registry::{ModelRegistry, PlanSwap};
 
 /// Serving-loop knobs.
 #[derive(Debug, Clone)]
@@ -87,6 +98,34 @@ pub struct Response {
 
 pub type Reply = Result<Response, String>;
 
+/// What flows over the serve channel: data-plane requests interleaved
+/// with control-plane plan swaps, so ordering between them is exactly
+/// submission order.
+enum Msg {
+    Request(Request),
+    Swap(SwapCommand),
+}
+
+/// Install a re-planned graph/plan into a live deployment.
+struct SwapCommand {
+    deployment: String,
+    /// Boxed: a `PlanSwap` carries a full decomposition + packed
+    /// operands, far larger than a `Request`.
+    swap: Box<PlanSwap>,
+    ack: mpsc::Sender<Result<SwapReceipt, String>>,
+}
+
+/// The event loop's acknowledgement of an applied plan swap.
+#[derive(Debug, Clone)]
+pub struct SwapReceipt {
+    pub deployment: String,
+    /// Fingerprint now serving (the new plan's).
+    pub fingerprint: Fingerprint,
+    /// Requests that sat in the open micro-batch when the swap arrived —
+    /// executed on the OLD plan just before the swap applied.
+    pub flushed: usize,
+}
+
 /// Client-side submission failure.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
@@ -114,7 +153,7 @@ impl std::error::Error for ServeError {}
 /// Cloneable producer handle; safe to move across threads.
 #[derive(Clone)]
 pub struct ServeClient {
-    tx: mpsc::SyncSender<Request>,
+    tx: mpsc::SyncSender<Msg>,
     admission: Arc<Admission>,
 }
 
@@ -140,12 +179,38 @@ impl ServeClient {
             batched_at: None,
             reply: reply_tx,
         };
-        match self.tx.send(req) {
+        match self.tx.send(Msg::Request(req)) {
             Ok(()) => Ok(reply_rx),
             Err(_) => {
                 self.admission.release();
                 Err(ServeError::Closed)
             }
+        }
+    }
+
+    /// Ship a re-planned graph to the event loop and block until it is
+    /// serving (or rejected). Control plane: bypasses admission — a
+    /// saturated queue must not be able to starve a plan swap — and the
+    /// swap still orders in-band behind every request submitted before
+    /// it, which all finish on the old plan.
+    pub fn swap_plan(
+        &self,
+        deployment: &str,
+        swap: PlanSwap,
+    ) -> Result<SwapReceipt, ServeError> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        let cmd = SwapCommand {
+            deployment: deployment.to_string(),
+            swap: Box::new(swap),
+            ack: ack_tx,
+        };
+        if self.tx.send(Msg::Swap(cmd)).is_err() {
+            return Err(ServeError::Closed);
+        }
+        match ack_rx.recv() {
+            Ok(Ok(receipt)) => Ok(receipt),
+            Ok(Err(msg)) => Err(ServeError::Remote(msg)),
+            Err(_) => Err(ServeError::Closed),
         }
     }
 
@@ -179,7 +244,7 @@ pub struct ServeSession<'a> {
     registry: &'a mut ModelRegistry,
     cfg: ServeConfig,
     admission: Arc<Admission>,
-    rx: mpsc::Receiver<Request>,
+    rx: mpsc::Receiver<Msg>,
     metrics: SloMetrics,
 }
 
@@ -231,11 +296,24 @@ impl<'a> ServeSession<'a> {
             };
             let now = Instant::now();
             let ready = match msg {
-                Some(mut req) => {
+                Some(Msg::Request(mut req)) => {
                     // Queue wait: submit -> picked up by the event loop.
                     self.metrics.record_stage(Stage::Queue, now.duration_since(req.enqueued));
                     req.batched_at = Some(now);
                     batcher.push(req, now)
+                }
+                Some(Msg::Swap(cmd)) => {
+                    // Linearization point: the open batch closes and runs
+                    // on the OLD plan (nothing is drained or rejected),
+                    // then the deployment swaps. Requests behind the swap
+                    // in the channel see the new plan.
+                    let flushed = batcher.flush();
+                    let count = flushed.as_ref().map_or(0, Vec::len);
+                    if let Some(batch) = flushed {
+                        self.execute(batch);
+                    }
+                    self.apply_swap(cmd, count);
+                    None
                 }
                 None => batcher.poll(now),
             };
@@ -343,6 +421,26 @@ impl<'a> ServeSession<'a> {
                 self.fail_group(valid, &format!("forward failed: {e:#}"));
             }
         }
+    }
+
+    /// Apply a control-plane swap and acknowledge the sender. Failures
+    /// (unknown deployment, payload/graph mismatch) leave the deployment
+    /// serving its old plan and travel back over the ack channel.
+    fn apply_swap(&mut self, cmd: SwapCommand, flushed: usize) {
+        let SwapCommand { deployment, swap, ack } = cmd;
+        let mut sp = span("serve.swap");
+        sp.attr_str("deployment", &deployment);
+        let result = self
+            .registry
+            .get_mut(&deployment)
+            .and_then(|dep| dep.apply_swap(*swap))
+            .map(|fingerprint| {
+                counter("serve.swap.applied").inc();
+                SwapReceipt { deployment: deployment.clone(), fingerprint, flushed }
+            })
+            .map_err(|e| format!("{e:#}"));
+        // A swapper that gave up on its ack is not an error.
+        let _ = ack.send(result);
     }
 
     fn fail_group(&mut self, group: Vec<Request>, msg: &str) {

@@ -1,0 +1,591 @@
+//! Delta log + CSR overlay: the mutable view of a served graph.
+//!
+//! Every prior layer assumes a frozen [`Csr`]. Streaming mutations enter
+//! here instead: a [`DeltaLog`] records each op append-only with a
+//! monotonically increasing version (JSON-serializable, so a workload
+//! replays deterministically), and a [`CsrOverlay`] stages the applied
+//! deltas over an immutable base CSR. The overlay exposes the merged
+//! view through the same read contract as `Csr` (`row`/`nnz`/`spmm`/
+//! `to_triplets`), so readers cannot tell a mutated graph from a frozen
+//! one; [`CsrOverlay::compact`] folds the staged rows into a fresh base
+//! when the overlay grows past the caller's threshold.
+//!
+//! Delta semantics (DESIGN.md Sec. 12): deltas address the *served*
+//! (post-reorder) vertex space and preserve propagation symmetry —
+//! `InsertEdge` sets both `(u,v)` and `(v,u)` to `w` (insert or
+//! overwrite; a self loop is applied once), `DeleteEdge` removes both
+//! (no-op if absent), `Reweight` updates the weight only where the
+//! entry already exists (no structural change, so no density drift),
+//! and `AddVertices` appends isolated vertices.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::Csr;
+use crate::util::json::Json;
+
+/// One graph mutation, addressed in the served vertex order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeltaOp {
+    /// Set `(u, v)` and `(v, u)` to weight `w` (insert or overwrite).
+    InsertEdge { u: u32, v: u32, w: f32 },
+    /// Remove `(u, v)` and `(v, u)`; a no-op when absent.
+    DeleteEdge { u: u32, v: u32 },
+    /// Update the weight of an existing `(u, v)`/`(v, u)` pair; a no-op
+    /// when the entry does not exist (never inserts).
+    Reweight { u: u32, v: u32, w: f32 },
+    /// Append `count` isolated vertices to the graph.
+    AddVertices { count: usize },
+}
+
+impl DeltaOp {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DeltaOp::InsertEdge { .. } => "insert_edge",
+            DeltaOp::DeleteEdge { .. } => "delete_edge",
+            DeltaOp::Reweight { .. } => "reweight",
+            DeltaOp::AddVertices { .. } => "add_vertices",
+        }
+    }
+}
+
+/// A log entry: the op plus the version the log stamped it with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    /// Monotonic, 1-based (version 0 is the frozen base graph).
+    pub version: u64,
+    pub op: DeltaOp,
+}
+
+/// Append-only, monotonically versioned mutation log.
+#[derive(Debug, Clone)]
+pub struct DeltaLog {
+    entries: Vec<Delta>,
+    next_version: u64,
+}
+
+impl Default for DeltaLog {
+    fn default() -> Self {
+        DeltaLog::new()
+    }
+}
+
+impl DeltaLog {
+    pub fn new() -> DeltaLog {
+        DeltaLog { entries: Vec::new(), next_version: 1 }
+    }
+
+    /// Stamp `op` with the next version and append it.
+    pub fn append(&mut self, op: DeltaOp) -> Delta {
+        let delta = Delta { version: self.next_version, op };
+        self.next_version += 1;
+        self.entries.push(delta.clone());
+        delta
+    }
+
+    pub fn entries(&self) -> &[Delta] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Latest assigned version (0 when the log is empty).
+    pub fn version(&self) -> u64 {
+        self.next_version - 1
+    }
+
+    pub fn to_json(&self) -> Json {
+        let deltas = self
+            .entries
+            .iter()
+            .map(|d| {
+                let mut fields = vec![
+                    // string, not number: u64 versions above 2^53 don't
+                    // survive f64 (same rationale as plan seeds)
+                    ("version", Json::str(d.version.to_string())),
+                    ("op", Json::str(d.op.kind())),
+                ];
+                match d.op {
+                    DeltaOp::InsertEdge { u, v, w } | DeltaOp::Reweight { u, v, w } => {
+                        fields.push(("u", Json::num(u)));
+                        fields.push(("v", Json::num(v)));
+                        fields.push(("w", Json::num(w)));
+                    }
+                    DeltaOp::DeleteEdge { u, v } => {
+                        fields.push(("u", Json::num(u)));
+                        fields.push(("v", Json::num(v)));
+                    }
+                    DeltaOp::AddVertices { count } => {
+                        fields.push(("count", Json::num(count as f64)));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![("version", Json::num(1.0)), ("deltas", Json::Arr(deltas))])
+    }
+
+    pub fn from_json(v: &Json) -> Result<DeltaLog> {
+        let raw = v
+            .get("deltas")
+            .as_arr()
+            .ok_or_else(|| anyhow!("delta log missing 'deltas' array"))?;
+        let mut log = DeltaLog::new();
+        for (i, e) in raw.iter().enumerate() {
+            let version: u64 = e
+                .get("version")
+                .as_str()
+                .ok_or_else(|| anyhow!("delta {i} missing version"))?
+                .parse()
+                .map_err(|err| anyhow!("delta {i} bad version: {err}"))?;
+            if version != log.next_version {
+                bail!("delta {i} version {version} breaks monotonic order (expected {})",
+                    log.next_version);
+            }
+            let kind = e
+                .get("op")
+                .as_str()
+                .ok_or_else(|| anyhow!("delta {i} missing op"))?;
+            let vertex = |k: &str| -> Result<u32> {
+                e.get(k)
+                    .as_f64()
+                    .map(|n| n as u32)
+                    .ok_or_else(|| anyhow!("delta {i} ({kind}) missing field {k:?}"))
+            };
+            let op = match kind {
+                "insert_edge" => DeltaOp::InsertEdge {
+                    u: vertex("u")?,
+                    v: vertex("v")?,
+                    w: e
+                        .get("w")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("delta {i} missing weight"))?
+                        as f32,
+                },
+                "delete_edge" => DeltaOp::DeleteEdge { u: vertex("u")?, v: vertex("v")? },
+                "reweight" => DeltaOp::Reweight {
+                    u: vertex("u")?,
+                    v: vertex("v")?,
+                    w: e
+                        .get("w")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("delta {i} missing weight"))?
+                        as f32,
+                },
+                "add_vertices" => DeltaOp::AddVertices {
+                    count: e
+                        .get("count")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("delta {i} missing count"))?,
+                },
+                other => bail!("delta {i} has unknown op {other:?}"),
+            };
+            log.append(op);
+        }
+        Ok(log)
+    }
+}
+
+/// Realized effect of one applied delta — what actually changed, which
+/// is what the drift tracker consumes. Weight-only updates (reweights,
+/// insert-as-overwrite) produce no entries: they cannot move a block's
+/// density.
+#[derive(Debug, Clone, Default)]
+pub struct Applied {
+    pub version: u64,
+    /// Structural changes as `(row, col, ±1)` nnz movements, one per
+    /// realized directed entry (a symmetric insert yields two).
+    pub changed: Vec<(u32, u32, i32)>,
+    /// Vertices appended by this delta.
+    pub grew: usize,
+}
+
+impl Applied {
+    pub fn is_structural(&self) -> bool {
+        !self.changed.is_empty() || self.grew > 0
+    }
+}
+
+/// A fully-merged replacement row staged over the base.
+#[derive(Debug, Clone)]
+struct OverlayRow {
+    /// Sorted ascending; parallel to `vals`.
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+/// Mutable view over an immutable base [`Csr`]: touched rows are copied
+/// into the overlay on first write and replace the base row wholesale on
+/// read, so every read path sees the merged graph through the familiar
+/// `Csr` contract.
+#[derive(Debug, Clone)]
+pub struct CsrOverlay {
+    base: Csr,
+    rows: BTreeMap<u32, OverlayRow>,
+    nnz: usize,
+    version: u64,
+}
+
+impl CsrOverlay {
+    /// Stage over `base` (must be square — propagation matrices are).
+    pub fn new(base: Csr) -> CsrOverlay {
+        assert_eq!(base.n_rows, base.n_cols, "overlay base must be square");
+        let nnz = base.nnz();
+        CsrOverlay { base, rows: BTreeMap::new(), nnz, version: 0 }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.base.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.base.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Version of the last applied delta (0 before any).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Rows currently staged in the overlay (reset by `compact`).
+    pub fn staged_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Staged rows over total rows — the compaction trigger input.
+    pub fn staged_fraction(&self) -> f64 {
+        self.rows.len() as f64 / self.base.n_rows.max(1) as f64
+    }
+
+    /// Merged row `r`: the staged replacement when present, else the
+    /// base row. Columns are sorted ascending, like `Csr::row`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        match self.rows.get(&(r as u32)) {
+            Some(row) => (&row.cols, &row.vals),
+            None => self.base.row(r),
+        }
+    }
+
+    /// Apply one versioned delta. Fails on out-of-range vertices and
+    /// out-of-order versions; the overlay is unchanged on failure.
+    pub fn apply(&mut self, delta: &Delta) -> Result<Applied> {
+        if delta.version <= self.version {
+            bail!(
+                "delta version {} is not ahead of overlay version {} (replay out of order)",
+                delta.version,
+                self.version
+            );
+        }
+        let n = self.base.n_rows as u32;
+        let check = |vertex: u32| -> Result<()> {
+            if vertex >= n {
+                bail!("delta {} addresses vertex {vertex} >= n {n}", delta.version);
+            }
+            Ok(())
+        };
+        let mut applied = Applied { version: delta.version, ..Applied::default() };
+        match delta.op {
+            DeltaOp::InsertEdge { u, v, w } => {
+                check(u)?;
+                check(v)?;
+                if self.set_entry(u, v, w) {
+                    applied.changed.push((u, v, 1));
+                }
+                if u != v && self.set_entry(v, u, w) {
+                    applied.changed.push((v, u, 1));
+                }
+            }
+            DeltaOp::DeleteEdge { u, v } => {
+                check(u)?;
+                check(v)?;
+                if self.remove_entry(u, v) {
+                    applied.changed.push((u, v, -1));
+                }
+                if u != v && self.remove_entry(v, u) {
+                    applied.changed.push((v, u, -1));
+                }
+            }
+            DeltaOp::Reweight { u, v, w } => {
+                check(u)?;
+                check(v)?;
+                self.reweight_entry(u, v, w);
+                if u != v {
+                    self.reweight_entry(v, u, w);
+                }
+            }
+            DeltaOp::AddVertices { count } => {
+                self.base = self.base.expanded(self.base.n_rows + count);
+                applied.grew = count;
+            }
+        }
+        self.version = delta.version;
+        crate::obs::counter("stream.delta.applied").inc();
+        Ok(applied)
+    }
+
+    /// Copy-on-write row access (split borrow: the closure reads `base`
+    /// while the map entry is being created).
+    fn row_mut(&mut self, r: u32) -> &mut OverlayRow {
+        let Self { base, rows, .. } = self;
+        rows.entry(r).or_insert_with(|| {
+            let (cols, vals) = base.row(r as usize);
+            OverlayRow { cols: cols.to_vec(), vals: vals.to_vec() }
+        })
+    }
+
+    /// Set `(r, c)` to `w`; true when a new entry was created.
+    fn set_entry(&mut self, r: u32, c: u32, w: f32) -> bool {
+        let row = self.row_mut(r);
+        let inserted = match row.cols.binary_search(&c) {
+            Ok(i) => {
+                row.vals[i] = w;
+                false
+            }
+            Err(i) => {
+                row.cols.insert(i, c);
+                row.vals.insert(i, w);
+                true
+            }
+        };
+        if inserted {
+            self.nnz += 1;
+        }
+        inserted
+    }
+
+    /// Remove `(r, c)`; true when an entry was actually removed. An
+    /// untouched row whose base has no such entry is NOT copied into
+    /// the overlay (no-op deletes must not inflate the staged set).
+    fn remove_entry(&mut self, r: u32, c: u32) -> bool {
+        if !self.rows.contains_key(&r) {
+            let (cols, _) = self.base.row(r as usize);
+            if cols.binary_search(&c).is_err() {
+                return false;
+            }
+        }
+        let row = self.row_mut(r);
+        let removed = match row.cols.binary_search(&c) {
+            Ok(i) => {
+                row.cols.remove(i);
+                row.vals.remove(i);
+                true
+            }
+            Err(_) => false,
+        };
+        if removed {
+            self.nnz -= 1;
+        }
+        removed
+    }
+
+    /// Update the weight of an existing `(r, c)`; no-op (and no row
+    /// copy) when the entry is absent.
+    fn reweight_entry(&mut self, r: u32, c: u32, w: f32) {
+        if !self.rows.contains_key(&r) {
+            let (cols, _) = self.base.row(r as usize);
+            if cols.binary_search(&c).is_err() {
+                return;
+            }
+        }
+        let row = self.row_mut(r);
+        if let Ok(i) = row.cols.binary_search(&c) {
+            row.vals[i] = w;
+        }
+    }
+
+    /// COO triplets of the merged view, in row order (same contract as
+    /// [`Csr::to_triplets`]).
+    pub fn to_triplets(&self) -> Vec<(u32, u32, f32)> {
+        let mut out = Vec::with_capacity(self.nnz);
+        for r in 0..self.base.n_rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &w) in cols.iter().zip(vals) {
+                out.push((r as u32, c, w));
+            }
+        }
+        out
+    }
+
+    /// Materialize the merged view as a fresh CSR (read-only; the
+    /// overlay keeps its staged rows).
+    pub fn to_csr(&self) -> Csr {
+        Csr::from_triplets(self.base.n_rows, self.base.n_cols, self.to_triplets())
+    }
+
+    /// `y = A @ x` over the merged view — serial reference, mirroring
+    /// [`Csr::spmm`].
+    pub fn spmm(&self, x: &[f32], f: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.base.n_cols * f);
+        let mut y = vec![0.0f32; self.base.n_rows * f];
+        for r in 0..self.base.n_rows {
+            let (cols, vals) = self.row(r);
+            let out = &mut y[r * f..(r + 1) * f];
+            for (&c, &w) in cols.iter().zip(vals) {
+                let src = &x[c as usize * f..(c as usize + 1) * f];
+                for (o, s) in out.iter_mut().zip(src) {
+                    *o += w * s;
+                }
+            }
+        }
+        y
+    }
+
+    /// Fold the staged rows into a fresh base CSR and clear the overlay.
+    /// Reads before and after are identical; only the storage moves.
+    pub fn compact(&mut self) {
+        if self.rows.is_empty() {
+            return;
+        }
+        self.base = self.to_csr();
+        self.rows.clear();
+        debug_assert_eq!(self.nnz, self.base.nnz());
+        crate::obs::counter("stream.compaction").inc();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::graph::Graph;
+    use crate::util::json;
+    use crate::util::rng::Rng;
+
+    fn base_csr(seed: u64, n: usize) -> Csr {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition(n, 16, 0.4, 0.02, &mut rng);
+        Csr::gcn_normalized(&g)
+    }
+
+    #[test]
+    fn log_versions_are_monotonic_and_roundtrip() {
+        let mut log = DeltaLog::new();
+        assert_eq!(log.version(), 0);
+        log.append(DeltaOp::InsertEdge { u: 0, v: 1, w: 0.5 });
+        log.append(DeltaOp::DeleteEdge { u: 2, v: 3 });
+        log.append(DeltaOp::Reweight { u: 0, v: 1, w: 0.25 });
+        log.append(DeltaOp::AddVertices { count: 4 });
+        assert_eq!(log.version(), 4);
+        assert!(log.entries().windows(2).all(|w| w[1].version == w[0].version + 1));
+
+        let text = json::write(&log.to_json());
+        let back = DeltaLog::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.entries(), log.entries());
+        assert_eq!(back.version(), log.version());
+    }
+
+    #[test]
+    fn from_json_rejects_broken_logs() {
+        assert!(DeltaLog::from_json(&json::parse("{}").unwrap()).is_err());
+        let gap = r#"{"deltas":[{"version":"2","op":"add_vertices","count":1}]}"#;
+        assert!(DeltaLog::from_json(&json::parse(gap).unwrap()).is_err(), "version gap");
+        let unknown = r#"{"deltas":[{"version":"1","op":"frobnicate"}]}"#;
+        assert!(DeltaLog::from_json(&json::parse(unknown).unwrap()).is_err());
+    }
+
+    #[test]
+    fn insert_delete_reweight_semantics() {
+        let g = Graph::from_edges(6, vec![(0, 1), (2, 3)]);
+        let base = Csr::adjacency(&g);
+        let mut overlay = CsrOverlay::new(base.clone());
+        let mut log = DeltaLog::new();
+
+        // symmetric insert creates two directed entries
+        let a = overlay.apply(&log.append(DeltaOp::InsertEdge { u: 0, v: 4, w: 2.0 })).unwrap();
+        assert_eq!(a.changed, vec![(0, 4, 1), (4, 0, 1)]);
+        assert_eq!(overlay.nnz(), base.nnz() + 2);
+
+        // insert over an existing entry is an overwrite: no structure
+        let a = overlay.apply(&log.append(DeltaOp::InsertEdge { u: 0, v: 1, w: 9.0 })).unwrap();
+        assert!(a.changed.is_empty());
+        let (cols, vals) = overlay.row(0);
+        let i = cols.iter().position(|&c| c == 1).unwrap();
+        assert_eq!(vals[i], 9.0);
+
+        // self loop applies once
+        let a = overlay.apply(&log.append(DeltaOp::InsertEdge { u: 5, v: 5, w: 1.0 })).unwrap();
+        assert_eq!(a.changed, vec![(5, 5, 1)]);
+
+        // reweight touches only existing entries, no drift signal
+        let a = overlay.apply(&log.append(DeltaOp::Reweight { u: 2, v: 3, w: 0.125 })).unwrap();
+        assert!(a.changed.is_empty());
+        assert_eq!(overlay.row(2).1, &[0.125][..]);
+        // reweight of an absent entry is a silent no-op
+        let nnz = overlay.nnz();
+        overlay.apply(&log.append(DeltaOp::Reweight { u: 1, v: 5, w: 3.0 })).unwrap();
+        assert_eq!(overlay.nnz(), nnz);
+        assert!(!overlay.row(1).0.contains(&5));
+
+        // symmetric delete, then a no-op delete of the same pair
+        let a = overlay.apply(&log.append(DeltaOp::DeleteEdge { u: 0, v: 1 })).unwrap();
+        assert_eq!(a.changed, vec![(0, 1, -1), (1, 0, -1)]);
+        let a = overlay.apply(&log.append(DeltaOp::DeleteEdge { u: 0, v: 1 })).unwrap();
+        assert!(a.changed.is_empty());
+
+        // vertex growth keeps the square invariant and allows new edges
+        let a = overlay.apply(&log.append(DeltaOp::AddVertices { count: 2 })).unwrap();
+        assert_eq!(a.grew, 2);
+        assert_eq!(overlay.n_rows(), 8);
+        let a = overlay.apply(&log.append(DeltaOp::InsertEdge { u: 6, v: 7, w: 1.0 })).unwrap();
+        assert_eq!(a.changed.len(), 2);
+
+        // out-of-range vertex fails cleanly
+        assert!(overlay.apply(&log.append(DeltaOp::InsertEdge { u: 99, v: 0, w: 1.0 })).is_err());
+    }
+
+    #[test]
+    fn stale_versions_are_rejected() {
+        let mut overlay = CsrOverlay::new(base_csr(1, 32));
+        let delta = Delta { version: 1, op: DeltaOp::AddVertices { count: 1 } };
+        overlay.apply(&delta).unwrap();
+        assert!(overlay.apply(&delta).is_err(), "replayed version must fail");
+    }
+
+    #[test]
+    fn noop_deletes_do_not_stage_rows() {
+        let mut overlay = CsrOverlay::new(base_csr(2, 32));
+        let mut log = DeltaLog::new();
+        // (0, 31) is inter-community in a planted graph with overwhelming
+        // probability, but guard by deleting a pair we know is absent
+        let (cols, _) = overlay.row(0);
+        let absent = (0..32u32).find(|c| !cols.contains(c)).unwrap();
+        overlay.apply(&log.append(DeltaOp::DeleteEdge { u: 0, v: absent })).unwrap();
+        assert_eq!(overlay.staged_rows(), 0, "no-op delete must not copy rows");
+    }
+
+    #[test]
+    fn compact_preserves_the_merged_view() {
+        let base = base_csr(3, 64);
+        let mut overlay = CsrOverlay::new(base);
+        let mut log = DeltaLog::new();
+        let mut rng = Rng::new(7);
+        for _ in 0..40 {
+            let u = rng.below(64) as u32;
+            let v = rng.below(64) as u32;
+            let op = match rng.below(3) {
+                0 => DeltaOp::InsertEdge { u, v, w: rng.normal_f32().abs() + 0.1 },
+                1 => DeltaOp::DeleteEdge { u, v },
+                _ => DeltaOp::Reweight { u, v, w: 0.5 },
+            };
+            overlay.apply(&log.append(op)).unwrap();
+        }
+        let before = overlay.to_triplets();
+        let staged = overlay.staged_rows();
+        assert!(staged > 0);
+        overlay.compact();
+        assert_eq!(overlay.staged_rows(), 0);
+        assert_eq!(overlay.to_triplets(), before);
+        assert_eq!(overlay.nnz(), before.len());
+    }
+}

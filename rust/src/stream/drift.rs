@@ -1,0 +1,382 @@
+//! Per-block density-drift tracking: which plan classes did the deltas
+//! actually move?
+//!
+//! The live [`GearAssignment`](crate::plan::GearAssignment) was derived
+//! from each diagonal block's density; a mutation stream invalidates it
+//! only when some block's density moves far enough to matter. The
+//! [`DriftTracker`] maintains every block's `(rows, nnz)` incrementally
+//! from [`Applied`] deltas (O(changed entries), never a rescan) and
+//! compares against a baseline captured at the last (re)plan.
+//!
+//! Granularity (DESIGN.md Sec. 12): quantization is per **block**, not
+//! per class. Reusing the `BatchProfile` class-level quarters would hide
+//! a single block moving among many (63 vs 64 blocks in a bin rounds to
+//! the same quarter), so instead each block keeps its own 4-bin density
+//! bucket — the same equal-width binning as `BlockProfile::histogram(4)`
+//! — plus its dense/sparse label at the live threshold. A block whose
+//! bin OR label moved flags both its baseline class and its current
+//! class. The inter class reuses the `BatchProfile` coarse-key idea
+//! directly: it is flagged only when `coarse_log2(inter nnz + 1)` moves.
+//! Bins give hysteresis (weight noise and small nnz wiggles inside a
+//! bin never trigger a replan); labels catch threshold crossings that
+//! stay inside a bin.
+
+use crate::partition::{Decomposition, DensityClass};
+use crate::plan::{coarse_log2, SubgraphClass};
+
+use super::delta::Applied;
+
+/// Quantized state of one block at the last (re)plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct BlockBaseline {
+    /// Equal-width density bin over [0, 1], 4 bins.
+    bin: u8,
+    /// Dense/sparse at the baseline threshold.
+    label: DensityClass,
+}
+
+/// What drifted since the baseline — the re-planner's invalidation set.
+#[derive(Debug, Clone, Default)]
+pub struct DriftReport {
+    /// Plan classes whose membership moved, deduplicated, in
+    /// dense-intra, sparse-intra, inter order.
+    pub classes: Vec<SubgraphClass>,
+    /// Intra blocks whose bin or label moved (includes new blocks).
+    pub moved_blocks: usize,
+    /// True when the inter class's coarse size class moved.
+    pub inter_moved: bool,
+}
+
+impl DriftReport {
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+}
+
+/// Incremental per-block density state + quantized baseline.
+#[derive(Debug, Clone)]
+pub struct DriftTracker {
+    community: usize,
+    /// Density threshold of the live plan (blocks at or above are dense).
+    threshold: f64,
+    /// Live `(rows, nnz)` per diagonal block, maintained from deltas.
+    blocks: Vec<(usize, usize)>,
+    /// Live inter (off-diagonal) nnz.
+    inter_nnz: usize,
+    /// Live vertex count.
+    n: usize,
+    baseline: Vec<BlockBaseline>,
+    baseline_inter_log2: u32,
+}
+
+const BINS: usize = 4;
+
+fn density_bin(rows: usize, nnz: usize) -> u8 {
+    let density = nnz as f64 / ((rows * rows).max(1)) as f64;
+    (((density * BINS as f64) as usize).min(BINS - 1)) as u8
+}
+
+fn label(rows: usize, nnz: usize, threshold: f64) -> DensityClass {
+    let density = nnz as f64 / ((rows * rows).max(1)) as f64;
+    if density >= threshold {
+        DensityClass::Dense
+    } else {
+        DensityClass::Sparse
+    }
+}
+
+impl DriftTracker {
+    /// Capture the live state and baseline from a freshly planned
+    /// decomposition at the plan's density threshold.
+    pub fn new(d: &Decomposition, threshold: f64) -> DriftTracker {
+        let profile = d.intra_block_profile();
+        let mut t = DriftTracker {
+            community: d.community.max(1),
+            threshold,
+            blocks: profile.blocks.clone(),
+            inter_nnz: d.inter.nnz(),
+            n: d.graph.n,
+            baseline: Vec::new(),
+            baseline_inter_log2: 0,
+        };
+        t.capture_baseline();
+        t
+    }
+
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn inter_nnz(&self) -> usize {
+        self.inter_nnz
+    }
+
+    pub fn blocks(&self) -> &[(usize, usize)] {
+        &self.blocks
+    }
+
+    fn capture_baseline(&mut self) {
+        self.baseline = self
+            .blocks
+            .iter()
+            .map(|&(rows, nnz)| BlockBaseline {
+                bin: density_bin(rows, nnz),
+                label: label(rows, nnz, self.threshold),
+            })
+            .collect();
+        self.baseline_inter_log2 = coarse_log2(self.inter_nnz + 1);
+    }
+
+    /// Fold one applied delta into the live per-block state.
+    pub fn apply(&mut self, a: &Applied) {
+        if a.grew > 0 {
+            self.n += a.grew;
+            let c = self.community;
+            let n_blocks = self.n.div_ceil(c);
+            self.blocks.resize(n_blocks, (0, 0));
+            // growth changes the tail blocks' row counts (and hence
+            // their density denominators) — recompute rows everywhere
+            for (b, block) in self.blocks.iter_mut().enumerate() {
+                block.0 = c.min(self.n - b * c);
+            }
+        }
+        let c = self.community;
+        for &(r, col, dnnz) in &a.changed {
+            let (rb, cb) = (r as usize / c, col as usize / c);
+            if rb == cb {
+                let nnz = &mut self.blocks[rb].1;
+                *nnz = nnz.checked_add_signed(dnnz as isize).expect("block nnz underflow");
+            } else {
+                self.inter_nnz = self
+                    .inter_nnz
+                    .checked_add_signed(dnnz as isize)
+                    .expect("inter nnz underflow");
+            }
+        }
+    }
+
+    /// Diff the live state against the baseline. Blocks beyond the
+    /// baseline (appended vertices) always flag their current label.
+    pub fn drifted(&self) -> DriftReport {
+        let mut dense = false;
+        let mut sparse = false;
+        let mut moved_blocks = 0usize;
+        for (b, &(rows, nnz)) in self.blocks.iter().enumerate() {
+            let now_bin = density_bin(rows, nnz);
+            let now_label = label(rows, nnz, self.threshold);
+            let moved = match self.baseline.get(b) {
+                Some(base) => now_bin != base.bin || now_label != base.label,
+                None => true, // new block: no baseline, always drifted
+            };
+            if !moved {
+                continue;
+            }
+            moved_blocks += 1;
+            match now_label {
+                DensityClass::Dense => dense = true,
+                DensityClass::Sparse => sparse = true,
+            }
+            if let Some(base) = self.baseline.get(b) {
+                match base.label {
+                    DensityClass::Dense => dense = true,
+                    DensityClass::Sparse => sparse = true,
+                }
+            }
+        }
+        let inter_moved = coarse_log2(self.inter_nnz + 1) != self.baseline_inter_log2;
+        let mut classes = Vec::new();
+        if dense {
+            classes.push(SubgraphClass::DenseIntra);
+        }
+        if sparse {
+            classes.push(SubgraphClass::SparseIntra);
+        }
+        if inter_moved {
+            classes.push(SubgraphClass::Inter);
+        }
+        DriftReport { classes, moved_blocks, inter_moved }
+    }
+
+    /// Re-capture the baseline at a (possibly new) threshold — called
+    /// after a successful replan so subsequent drift is measured against
+    /// the plan that now serves.
+    pub fn rebase(&mut self, threshold: f64) {
+        self.threshold = threshold;
+        self.capture_baseline();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::delta::{CsrOverlay, DeltaLog, DeltaOp};
+    use super::*;
+    use crate::graph::generate::planted_partition;
+    use crate::graph::Csr;
+    use crate::partition::{Propagation, Reorder};
+    use crate::util::rng::Rng;
+
+    fn tracked(seed: u64, n: usize, threshold: f64) -> (Decomposition, DriftTracker) {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition(n, 16, 0.4, 0.02, &mut rng);
+        let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 16, 0);
+        let t = DriftTracker::new(&d, threshold);
+        (d, t)
+    }
+
+    /// Oracle: rebuild the tracker's live state from the overlay and
+    /// compare — the incremental path must equal a from-scratch profile.
+    fn assert_matches_rebuild(t: &DriftTracker, overlay: &CsrOverlay) {
+        let matrix = overlay.to_csr();
+        let d = Decomposition::from_propagation_ordered(&matrix, 16);
+        let profile = d.intra_block_profile();
+        assert_eq!(t.blocks(), &profile.blocks[..]);
+        assert_eq!(t.inter_nnz(), d.inter.nnz());
+        assert_eq!(t.n(), matrix.n_rows);
+    }
+
+    #[test]
+    fn incremental_state_matches_rebuild_under_random_deltas() {
+        let (d, mut t) = tracked(5, 96, 0.5);
+        let mut overlay = CsrOverlay::new(d.whole());
+        let mut log = DeltaLog::new();
+        let mut rng = Rng::new(11);
+        for step in 0..120 {
+            let n = overlay.n_rows() as u64;
+            let op = match rng.below(8) {
+                0 => DeltaOp::AddVertices { count: rng.usize_below(3) + 1 },
+                1 | 2 => DeltaOp::DeleteEdge {
+                    u: rng.below(n) as u32,
+                    v: rng.below(n) as u32,
+                },
+                3 => DeltaOp::Reweight {
+                    u: rng.below(n) as u32,
+                    v: rng.below(n) as u32,
+                    w: 0.75,
+                },
+                _ => DeltaOp::InsertEdge {
+                    u: rng.below(n) as u32,
+                    v: rng.below(n) as u32,
+                    w: 0.5,
+                },
+            };
+            let applied = overlay.apply(&log.append(op)).unwrap();
+            t.apply(&applied);
+            if step % 30 == 29 {
+                assert_matches_rebuild(&t, &overlay);
+            }
+        }
+        assert_matches_rebuild(&t, &overlay);
+    }
+
+    #[test]
+    fn reweights_never_drift() {
+        let (d, mut t) = tracked(6, 64, 0.5);
+        let mut overlay = CsrOverlay::new(d.whole());
+        let mut log = DeltaLog::new();
+        for (r, c, _) in d.whole().to_triplets().into_iter().take(50) {
+            let applied = overlay.apply(&log.append(DeltaOp::Reweight { u: r, v: c, w: 0.9 })).unwrap();
+            t.apply(&applied);
+        }
+        assert!(t.drifted().is_empty(), "weight-only updates must not drift");
+    }
+
+    #[test]
+    fn densifying_one_block_flags_one_side_only() {
+        // ALL_SPARSE-style uniform plan: labels can never change, but the
+        // per-block BIN still moves when one community densifies — the
+        // block-granular tracker sees what class-level quarters would hide.
+        let (d, mut t) = tracked(7, 128, 2.0);
+        let mut overlay = CsrOverlay::new(d.whole());
+        let mut log = DeltaLog::new();
+        // densify block 0 (vertices 0..16) to near-clique
+        for u in 0..16u32 {
+            for v in (u + 1)..16 {
+                let applied = overlay
+                    .apply(&log.append(DeltaOp::InsertEdge { u, v, w: 0.3 }))
+                    .unwrap();
+                t.apply(&applied);
+            }
+        }
+        let report = t.drifted();
+        assert!(!report.is_empty());
+        assert!(report.moved_blocks >= 1);
+        assert!(report.classes.contains(&SubgraphClass::SparseIntra));
+        assert!(
+            !report.classes.contains(&SubgraphClass::DenseIntra),
+            "an all-sparse plan has no dense class to invalidate"
+        );
+    }
+
+    #[test]
+    fn inter_drift_uses_the_coarse_size_class() {
+        let (d, mut t) = tracked(8, 64, 0.5);
+        let base_inter = d.inter.nnz();
+        let mut overlay = CsrOverlay::new(d.whole());
+        let mut log = DeltaLog::new();
+        // enough inter edges to move coarse_log2(inter nnz + 1)
+        let mut added = 0usize;
+        'outer: for u in 0..32u32 {
+            for v in 32..64u32 {
+                let applied = overlay
+                    .apply(&log.append(DeltaOp::InsertEdge { u, v, w: 0.1 }))
+                    .unwrap();
+                t.apply(&applied);
+                added += applied.changed.len();
+                if coarse_log2(base_inter + added + 1) != coarse_log2(base_inter + 1) {
+                    break 'outer;
+                }
+            }
+        }
+        let report = t.drifted();
+        assert!(report.inter_moved);
+        assert!(report.classes.contains(&SubgraphClass::Inter));
+    }
+
+    #[test]
+    fn rebase_clears_drift() {
+        let (d, mut t) = tracked(9, 64, 0.5);
+        let mut overlay = CsrOverlay::new(d.whole());
+        let mut log = DeltaLog::new();
+        for u in 0..16u32 {
+            for v in (u + 1)..16 {
+                let applied = overlay
+                    .apply(&log.append(DeltaOp::InsertEdge { u, v, w: 0.3 }))
+                    .unwrap();
+                t.apply(&applied);
+            }
+        }
+        assert!(!t.drifted().is_empty());
+        t.rebase(0.5);
+        assert!(t.drifted().is_empty(), "rebase must absorb the drift");
+        // vertex growth after rebase drifts again (new / resized blocks)
+        let applied = overlay.apply(&log.append(DeltaOp::AddVertices { count: 16 })).unwrap();
+        t.apply(&applied);
+        let applied = overlay
+            .apply(&log.append(DeltaOp::InsertEdge { u: 64, v: 65, w: 1.0 }))
+            .unwrap();
+        t.apply(&applied);
+        let report = t.drifted();
+        assert!(report.moved_blocks >= 1, "a new populated block must drift");
+    }
+
+    #[test]
+    fn bins_match_block_profile_histogram() {
+        // the tracker's bin function must agree with the profile
+        // histogram's binning (same 4 equal-width bins over [0, 1])
+        let (d, t) = tracked(10, 128, 0.5);
+        let profile = d.intra_block_profile();
+        let hist = profile.histogram(BINS);
+        let mut ours = vec![0usize; BINS];
+        for &(rows, nnz) in t.blocks() {
+            ours[density_bin(rows, nnz) as usize] += 1;
+        }
+        assert_eq!(ours, hist);
+        // and the whole graph is a Csr we can round-trip
+        let whole: Csr = d.whole();
+        assert_eq!(whole.nnz(), d.intra.nnz() + d.inter.nnz());
+    }
+}

@@ -1,0 +1,26 @@
+//! Streaming graph subsystem: mutate a served graph without replanning
+//! (or recompiling) the world.
+//!
+//! Three pieces (DESIGN.md Sec. 12):
+//!
+//! - [`delta`] — an append-only, versioned [`DeltaLog`] of edge/vertex
+//!   mutations plus a [`CsrOverlay`] that stages them over the frozen
+//!   base CSR behind the normal `Csr` read contract, with threshold-
+//!   triggered compaction.
+//! - [`drift`] — a [`DriftTracker`] that maintains per-block density
+//!   state incrementally from applied deltas and reports exactly which
+//!   plan classes moved (per-block bins + threshold crossings, coarse
+//!   size class for inter).
+//! - [`replan`] — [`replan_for_drift`] re-derives plans for drifted
+//!   classes via the PR 5 decision-adaptation path (full sweep only
+//!   when inadmissible), and [`StreamSession`] glues log, overlay,
+//!   drift, and live plan into one mutate/replan loop whose output
+//!   ([`Replanned`]) can be swapped into a serve deployment atomically.
+
+pub mod delta;
+pub mod drift;
+pub mod replan;
+
+pub use delta::{Applied, CsrOverlay, Delta, DeltaLog, DeltaOp};
+pub use drift::{DriftReport, DriftTracker};
+pub use replan::{replan_for_drift, Replanned, ReplanOutcome, StreamConfig, StreamSession};

@@ -1,0 +1,349 @@
+//! Online re-planning for mutated graphs.
+//!
+//! When the [`DriftTracker`](super::DriftTracker) reports that a plan
+//! class moved, the cheapest correct response is the PR 5 adaptation
+//! path: keep the cached decision (threshold + per-class kernels) and
+//! re-derive the class assignment against the mutated decomposition in
+//! one block-profile pass. Only when that decision goes inadmissible —
+//! the graph outgrew the bucket, or the drifted profile needs a kernel
+//! the decision never priced — does the re-planner fall back to the
+//! full [`SimCostPlanner`] hybrid sweep.
+//!
+//! Every replan bumps the graph version, which participates in the
+//! [`Fingerprint`](crate::plan::Fingerprint): a re-planned mutation can
+//! never collide with the pre-mutation plan in the store.
+//!
+//! [`StreamSession`] ties the pieces together: it owns the delta log,
+//! the CSR overlay, the drift tracker, and the live plan, and exposes
+//! `apply` (mutate) / `maybe_replan` (re-derive when drifted) to the
+//! CLI, the bench suite, and the serve swap path.
+
+use anyhow::Result;
+
+use crate::coordinator::ModelKind;
+use crate::gpusim::GpuModel;
+use crate::obs::{counter, span};
+use crate::partition::{Decomposition, Reorder};
+use crate::plan::{
+    adapt_decision, plan_from_decision, Fingerprint, GearPlan, PlanDecision, PlanRequest, Planner,
+    SimCostPlanner, SubgraphClass,
+};
+use crate::runtime::BucketInfo;
+
+use super::delta::{Applied, CsrOverlay, DeltaLog, DeltaOp};
+use super::drift::{DriftReport, DriftTracker};
+
+/// A freshly derived plan plus how it was derived.
+#[derive(Debug)]
+pub struct ReplanOutcome {
+    pub plan: GearPlan,
+    /// True when the cached decision was inadmissible and the full
+    /// hybrid sweep ran instead of the adaptation path.
+    pub swept: bool,
+}
+
+/// Re-derive a plan for a drifted graph from the live plan's decision.
+///
+/// Bumps `plan.replan.class` once per drifted class and `plan.replan.sweep`
+/// when the adaptation path is inadmissible, all under a `plan.replan`
+/// span. `req` must describe the MUTATED decomposition and carry the new
+/// graph version.
+pub fn replan_for_drift(
+    current: &GearPlan,
+    report: &DriftReport,
+    req: &PlanRequest,
+    gpu: &'static GpuModel,
+) -> Result<ReplanOutcome> {
+    let mut sp = span("plan.replan");
+    sp.attr_num("classes", report.classes.len() as f64);
+    sp.attr_num("moved_blocks", report.moved_blocks as f64);
+    for _ in &report.classes {
+        counter("plan.replan.class").inc();
+    }
+    let decision = PlanDecision::of(&current.assignment, current.chosen.inter);
+    let profile = req.d.intra_block_profile();
+    if let Some(assignment) = adapt_decision(&decision, req, &profile, gpu) {
+        let plan = plan_from_decision(req, assignment, gpu, "replan")?;
+        return Ok(ReplanOutcome { plan, swept: false });
+    }
+    counter("plan.replan.sweep").inc();
+    let plan = SimCostPlanner::new(gpu).plan(req)?;
+    Ok(ReplanOutcome { plan, swept: true })
+}
+
+/// Static configuration for a [`StreamSession`].
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    pub model: ModelKind,
+    pub gpu: &'static GpuModel,
+    /// Compact the overlay into a fresh base CSR once this fraction of
+    /// rows is staged (copy-on-write rows cost memory and a BTreeMap
+    /// probe per read).
+    pub compact_ratio: f64,
+    /// Provenance label for re-planned plans.
+    pub dataset: String,
+}
+
+impl StreamConfig {
+    pub fn new(model: ModelKind, gpu: &'static GpuModel) -> StreamConfig {
+        StreamConfig { model, gpu, compact_ratio: 0.25, dataset: String::new() }
+    }
+}
+
+/// Everything a replan produced, ready to swap into a deployment.
+#[derive(Debug)]
+pub struct Replanned {
+    pub plan: GearPlan,
+    /// Decomposition of the mutated graph in served (identity) order.
+    pub d: Decomposition,
+    pub old_fingerprint: Fingerprint,
+    /// The drifted classes that triggered this replan.
+    pub drifted: Vec<SubgraphClass>,
+    /// True when the full sweep ran (cached decision inadmissible).
+    pub swept: bool,
+    pub graph_version: u64,
+}
+
+/// Live mutation session: delta log + overlay + drift tracker + plan.
+#[derive(Debug)]
+pub struct StreamSession {
+    cfg: StreamConfig,
+    community: usize,
+    log: DeltaLog,
+    overlay: CsrOverlay,
+    drift: DriftTracker,
+    plan: GearPlan,
+    bucket: BucketInfo,
+    graph_version: u64,
+}
+
+impl StreamSession {
+    /// Start a session over a planned decomposition. `plan` must
+    /// validate against `d` (it is the plan currently serving).
+    pub fn new(
+        d: &Decomposition,
+        plan: GearPlan,
+        bucket: BucketInfo,
+        cfg: StreamConfig,
+    ) -> StreamSession {
+        let drift = DriftTracker::new(d, plan.assignment.threshold);
+        let graph_version = plan.graph_version;
+        StreamSession {
+            cfg,
+            community: d.community.max(1),
+            log: DeltaLog::new(),
+            overlay: CsrOverlay::new(d.whole()),
+            drift,
+            plan,
+            bucket,
+            graph_version,
+        }
+    }
+
+    pub fn plan(&self) -> &GearPlan {
+        &self.plan
+    }
+
+    pub fn overlay(&self) -> &CsrOverlay {
+        &self.overlay
+    }
+
+    pub fn drift(&self) -> &DriftTracker {
+        &self.drift
+    }
+
+    pub fn log(&self) -> &DeltaLog {
+        &self.log
+    }
+
+    pub fn graph_version(&self) -> u64 {
+        self.graph_version
+    }
+
+    /// Append one mutation, apply it to the overlay, fold it into the
+    /// drift state, and compact the overlay when it grew past the
+    /// configured ratio.
+    pub fn apply(&mut self, op: DeltaOp) -> Result<Applied> {
+        let delta = self.log.append(op);
+        let applied = self.overlay.apply(&delta)?;
+        self.drift.apply(&applied);
+        if self.overlay.staged_fraction() > self.cfg.compact_ratio {
+            self.overlay.compact();
+        }
+        Ok(applied)
+    }
+
+    /// Re-plan if (and only if) the drift tracker says a class moved.
+    ///
+    /// On drift: materialize the merged view, re-decompose in served
+    /// order, bump the graph version, re-derive the plan (adaptation
+    /// first, sweep on inadmissible), validate it, and rebase the drift
+    /// baseline at the new plan's threshold. The session's live plan is
+    /// swapped; the returned [`Replanned`] carries everything a serve
+    /// deployment needs to swap too.
+    pub fn maybe_replan(&mut self) -> Result<Option<Replanned>> {
+        let report = self.drift.drifted();
+        if report.is_empty() {
+            return Ok(None);
+        }
+        let matrix = self.overlay.to_csr();
+        let d = Decomposition::from_propagation_ordered(&matrix, self.community);
+        // grow the bucket template to the mutated graph — AOT buckets
+        // quantize upward, never shrink
+        self.bucket.vertices = self.bucket.vertices.max(d.graph.n);
+        self.bucket.edges = self.bucket.edges.max(matrix.nnz());
+        self.bucket.blocks = self.bucket.blocks.max(d.graph.n.div_ceil(self.community));
+        self.graph_version += 1;
+        let mut req = PlanRequest::new(&d, self.cfg.model, &self.bucket);
+        req.dataset = self.cfg.dataset.clone();
+        req.reorder = Reorder::Identity; // deltas address served order
+        req.seed = self.plan.seed;
+        req.graph_version = self.graph_version;
+        let outcome = replan_for_drift(&self.plan, &report, &req, self.cfg.gpu)?;
+        outcome.plan.validate(&d, self.cfg.model)?;
+        self.drift.rebase(outcome.plan.assignment.threshold);
+        let old_fingerprint = self.plan.fingerprint;
+        self.plan = outcome.plan.clone();
+        Ok(Some(Replanned {
+            plan: outcome.plan,
+            d,
+            old_fingerprint,
+            drifted: report.classes,
+            swept: outcome.swept,
+            graph_version: self.graph_version,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::planted_partition_mixed;
+    use crate::gpusim::A100;
+    use crate::partition::Propagation;
+    use crate::util::rng::Rng;
+
+    fn planted(seed: u64, n: usize) -> Decomposition {
+        let mut rng = Rng::new(seed);
+        let g = planted_partition_mixed(n, 16, 0.7, 0.05, 4, 0.01, &mut rng);
+        Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 16, 0)
+    }
+
+    fn bucket_for(d: &Decomposition, slack: usize) -> BucketInfo {
+        BucketInfo {
+            name: "bstream".into(),
+            vertices: d.graph.n + slack,
+            edges: d.intra.nnz() + d.inter.nnz() + 4 * slack + 4096,
+            features: 16,
+            hidden: 16,
+            classes: 4,
+            blocks: d.graph.n.div_ceil(16) + slack / 16,
+        }
+    }
+
+    fn session(seed: u64, n: usize) -> StreamSession {
+        let d = planted(seed, n);
+        let bucket = bucket_for(&d, 64);
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        StreamSession::new(&d, plan, bucket, StreamConfig::new(ModelKind::Gcn, &A100))
+    }
+
+    #[test]
+    fn no_drift_means_no_replan() {
+        let mut s = session(21, 128);
+        // weight-only churn: structurally invisible
+        let (r, c, _) = s.overlay().to_csr().to_triplets()[0];
+        for _ in 0..5 {
+            s.apply(DeltaOp::Reweight { u: r, v: c, w: 0.42 }).unwrap();
+        }
+        assert!(s.maybe_replan().unwrap().is_none());
+        assert_eq!(s.graph_version(), 0, "version only moves on replan");
+    }
+
+    #[test]
+    fn drift_replans_bumps_version_and_swaps_the_plan() {
+        let mut s = session(22, 128);
+        let before = s.plan().fingerprint;
+        let classes_before = crate::obs::snapshot().counters.get("plan.replan.class").copied();
+        // densify one sparse community (vertices 16..32) to near-clique
+        for u in 16u32..32 {
+            for v in (u + 1)..32 {
+                s.apply(DeltaOp::InsertEdge { u, v, w: 0.25 }).unwrap();
+            }
+        }
+        let r = s.maybe_replan().unwrap().expect("densified block must drift");
+        assert_ne!(r.plan.fingerprint, before);
+        assert_eq!(r.old_fingerprint, before);
+        assert_eq!(r.graph_version, 1);
+        assert_eq!(s.plan().fingerprint, r.plan.fingerprint);
+        assert!(!r.drifted.is_empty());
+        assert!(r.plan.assignment.covers(&r.d).is_ok());
+        let after = crate::obs::snapshot().counters.get("plan.replan.class").copied();
+        assert!(
+            after.unwrap_or(0) > classes_before.unwrap_or(0),
+            "replan must bump plan.replan.class"
+        );
+        // drift is rebased: immediately re-checking is quiet
+        assert!(s.maybe_replan().unwrap().is_none());
+    }
+
+    #[test]
+    fn growth_replans_and_covers_the_new_vertices() {
+        let mut s = session(23, 96);
+        let n0 = s.overlay().n_rows() as u32;
+        s.apply(DeltaOp::AddVertices { count: 16 }).unwrap();
+        for u in n0..n0 + 16 {
+            for v in (u + 1)..n0 + 16 {
+                s.apply(DeltaOp::InsertEdge { u, v, w: 0.5 }).unwrap();
+            }
+        }
+        let r = s.maybe_replan().unwrap().expect("a new populated block must drift");
+        assert_eq!(r.d.graph.n, n0 as usize + 16);
+        assert!(r.plan.assignment.covers(&r.d).is_ok());
+        assert!(r.plan.validate(&r.d, ModelKind::Gcn).is_ok());
+    }
+
+    #[test]
+    fn inadmissible_decision_falls_back_to_the_full_sweep() {
+        let d = planted(24, 128);
+        let tiny = BucketInfo {
+            name: "btiny".into(),
+            vertices: d.graph.n / 2, // graph cannot fit: adaptation inadmissible
+            edges: 64,
+            features: 16,
+            hidden: 16,
+            classes: 4,
+            blocks: 2,
+        };
+        let roomy = bucket_for(&d, 64);
+        let current = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &roomy))
+            .unwrap();
+        let sweeps_before = crate::obs::snapshot().counters.get("plan.replan.sweep").copied();
+        let report = DriftReport {
+            classes: vec![SubgraphClass::SparseIntra],
+            moved_blocks: 1,
+            inter_moved: false,
+        };
+        let req = PlanRequest::new(&d, ModelKind::Gcn, &tiny);
+        let out = replan_for_drift(&current, &report, &req, &A100).unwrap();
+        assert!(out.swept, "oversized graph must force the sweep path");
+        let sweeps_after = crate::obs::snapshot().counters.get("plan.replan.sweep").copied();
+        assert!(sweeps_after.unwrap_or(0) > sweeps_before.unwrap_or(0));
+    }
+
+    #[test]
+    fn adaptation_path_avoids_the_sweep_when_admissible() {
+        let mut s = session(25, 128);
+        for u in 16u32..32 {
+            for v in (u + 1)..32 {
+                s.apply(DeltaOp::InsertEdge { u, v, w: 0.25 }).unwrap();
+            }
+        }
+        let r = s.maybe_replan().unwrap().unwrap();
+        assert!(!r.swept, "roomy bucket + cached decision must adapt, not sweep");
+        assert_eq!(r.plan.provenance.planner, "replan");
+    }
+}

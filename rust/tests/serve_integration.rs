@@ -5,14 +5,19 @@
 
 use std::time::Duration;
 
-use adaptgear::coordinator::ModelKind;
+use adaptgear::coordinator::{trainer, ModelKind};
 use adaptgear::graph::datasets;
 use adaptgear::gpusim::A100;
-use adaptgear::plan::{CachedPlanner, MonitorPlanner, PlanStore};
+use adaptgear::partition::Decomposition;
+use adaptgear::plan::{
+    CachedPlanner, MonitorPlanner, PlanRequest, PlanStore, Planner, SimCostPlanner,
+};
 use adaptgear::runtime::Engine;
 use adaptgear::serve::{
-    loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, ServeConfig, ServeError, ServeSession,
+    loadgen, DeploymentSpec, LoadGenConfig, ModelRegistry, PlanSwap, ServeConfig, ServeError,
+    ServeSession,
 };
+use adaptgear::stream::{CsrOverlay, DeltaLog, DeltaOp};
 
 fn engine_or_skip() -> Option<Engine> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -158,6 +163,100 @@ fn registry_double_deploy_through_engine_is_rejected() {
     let err = registry.deploy(&engine, dspec).unwrap_err();
     assert!(err.to_string().contains("already exists"), "{err}");
     assert_eq!(registry.len(), 1);
+}
+
+#[test]
+fn plan_swap_lands_mid_traffic_without_draining_the_queue() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut registry = ModelRegistry::new();
+    let (n, f_data) = deploy(&engine, &mut registry, "cora-gcn");
+
+    // Prepare the swap OFF the serve thread, before the session borrows
+    // the registry: densify one community of the served graph to near-
+    // clique, re-plan the mutated decomposition, and pack the new plan's
+    // static operands — the event loop's only remaining work is
+    // validation plus pointer swaps.
+    let (swap, old_fingerprint) = {
+        let dep = registry.get("cora-gcn").expect("deployed");
+        let community = dep.d.community.max(1);
+        let mut overlay = CsrOverlay::new(dep.d.whole());
+        let mut log = DeltaLog::new();
+        let lo = community as u32;
+        for u in lo..lo + community as u32 {
+            for v in (u + 1)..lo + community as u32 {
+                overlay.apply(&log.append(DeltaOp::InsertEdge { u, v, w: 0.3 })).unwrap();
+            }
+        }
+        let matrix = overlay.to_csr();
+        let d2 = Decomposition::from_propagation_ordered(&matrix, community);
+        let bucket = engine
+            .manifest
+            .fit_bucket(d2.graph.n, d2.intra.nnz().max(d2.inter.nnz()))
+            .expect("mutated graph still fits a bucket")
+            .clone();
+        let mut req = PlanRequest::new(&d2, ModelKind::Gcn, &bucket);
+        req.graph_version = 1;
+        let plan = SimCostPlanner::new(&A100).plan(&req).expect("replan");
+        let (fwd_name, fwd_bucket, graph_ops) =
+            trainer::plan_forward_operands(&engine.manifest, &d2, &plan, ModelKind::Gcn)
+                .expect("pack swap operands");
+        let swap = PlanSwap {
+            plan,
+            d: d2,
+            graph_ops,
+            fwd_name,
+            fwd_bucket,
+            new_rows: Vec::new(),
+            new_labels: Vec::new(),
+        };
+        (swap, dep.plan.fingerprint)
+    };
+
+    let swaps_before = adaptgear::obs::snapshot()
+        .counters
+        .get("serve.swap.applied")
+        .copied()
+        .unwrap_or(0);
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 64,
+    };
+    let load = LoadGenConfig { requests: 48, clients: 6, seed: 9, ..Default::default() };
+    let (session, client) = ServeSession::new(&engine, &mut registry, cfg);
+    let swapper = client.clone();
+    let gen = loadgen::spawn(client, "cora-gcn".to_string(), n, f_data, load);
+    let swap_handle = std::thread::spawn(move || {
+        // land the swap in-band with live traffic
+        std::thread::sleep(Duration::from_millis(5));
+        swapper.swap_plan("cora-gcn", swap)
+    });
+    let report = session.run().expect("serve loop");
+    let summary = gen.join();
+    let receipt = swap_handle.join().unwrap().expect("swap must apply");
+
+    // the swap acknowledged with the NEW plan's fingerprint
+    assert_eq!(receipt.deployment, "cora-gcn");
+    assert_ne!(receipt.fingerprint, old_fingerprint);
+    let swaps_after = adaptgear::obs::snapshot()
+        .counters
+        .get("serve.swap.applied")
+        .copied()
+        .unwrap_or(0);
+    assert!(swaps_after > swaps_before, "serve.swap.applied must move");
+
+    // the queue was never drained or rejected: every request offered
+    // while the swap landed still got a real answer
+    assert_eq!(summary.sent, 48);
+    assert_eq!(summary.answered, 48, "no request may be dropped by a swap");
+    assert_eq!(summary.shed, 0);
+    assert_eq!(summary.failed, 0);
+    assert_eq!(report.served, 48);
+
+    // and the registry now serves the swapped plan
+    let dep = registry.get("cora-gcn").expect("still deployed");
+    assert_eq!(dep.plan.fingerprint, receipt.fingerprint);
+    assert_eq!(dep.plan.graph_version, 1);
 }
 
 #[test]

@@ -1,0 +1,281 @@
+//! Property + acceptance tests for the streaming subsystem
+//! (DESIGN.md Sec. 12).
+//!
+//! The overlay contract is exactness: after ANY legal delta sequence,
+//! reads through the [`adaptgear::stream::CsrOverlay`] — and reads after
+//! `compact()` — must equal a CSR rebuilt from scratch out of an
+//! independent oracle that applies the same symmetric-edge semantics.
+//! The replan contract is the paper's: a mutation workload that
+//! densifies ONE community must invalidate that block's class and only
+//! it, and the swapped plan's forward must stay within 1e-4 of both the
+//! whole-graph reference and a cold full re-plan.
+//!
+//! Engine-free: native kernels + the cost simulator only.
+
+use std::collections::BTreeMap;
+
+use adaptgear::coordinator::{pipeline, preprocess, ModelKind, Strategy};
+use adaptgear::graph::datasets;
+use adaptgear::graph::generate::planted_partition;
+use adaptgear::graph::Csr;
+use adaptgear::gpusim::A100;
+use adaptgear::kernels::native::aggregate_assignment;
+use adaptgear::partition::Decomposition;
+use adaptgear::plan::{PlanRequest, Planner, SimCostPlanner};
+use adaptgear::runtime::BucketInfo;
+use adaptgear::stream::{CsrOverlay, DeltaLog, DeltaOp, StreamConfig, StreamSession};
+use adaptgear::util::json;
+use adaptgear::util::prop;
+use adaptgear::util::rng::Rng;
+
+/// Independent model of the delta semantics: a symmetric weight map plus
+/// a vertex count. Deliberately structured nothing like the overlay.
+struct Oracle {
+    n: usize,
+    entries: BTreeMap<(u32, u32), f32>,
+}
+
+impl Oracle {
+    fn of(base: &Csr) -> Oracle {
+        let entries = base.to_triplets().into_iter().map(|(r, c, w)| ((r, c), w)).collect();
+        Oracle { n: base.n_rows, entries }
+    }
+
+    fn apply(&mut self, op: DeltaOp) {
+        match op {
+            DeltaOp::InsertEdge { u, v, w } => {
+                self.entries.insert((u, v), w);
+                self.entries.insert((v, u), w);
+            }
+            DeltaOp::DeleteEdge { u, v } => {
+                self.entries.remove(&(u, v));
+                self.entries.remove(&(v, u));
+            }
+            DeltaOp::Reweight { u, v, w } => {
+                if self.entries.contains_key(&(u, v)) {
+                    self.entries.insert((u, v), w);
+                    self.entries.insert((v, u), w);
+                }
+            }
+            DeltaOp::AddVertices { count } => self.n += count,
+        }
+    }
+
+    /// Row-major, columns ascending — the `to_triplets` read contract.
+    fn triplets(&self) -> Vec<(u32, u32, f32)> {
+        self.entries.iter().map(|(&(r, c), &w)| (r, c, w)).collect()
+    }
+
+    fn to_csr(&self) -> Csr {
+        Csr::from_triplets(self.n, self.n, self.triplets())
+    }
+}
+
+/// Draw one random op, biased toward pairs that actually exist so
+/// deletes and reweights hit the structural paths, not just no-ops.
+fn random_op(rng: &mut Rng, oracle: &Oracle) -> DeltaOp {
+    let pair = |rng: &mut Rng, oracle: &Oracle| -> (u32, u32) {
+        if !oracle.entries.is_empty() && rng.chance(0.5) {
+            let keys: Vec<(u32, u32)> = oracle.entries.keys().copied().collect();
+            keys[rng.usize_below(keys.len())]
+        } else {
+            (rng.below(oracle.n as u64) as u32, rng.below(oracle.n as u64) as u32)
+        }
+    };
+    match rng.below(8) {
+        0..=2 => {
+            let (u, v) = pair(rng, oracle);
+            DeltaOp::InsertEdge { u, v, w: rng.normal_f32().abs() + 0.05 }
+        }
+        3..=4 => {
+            let (u, v) = pair(rng, oracle);
+            DeltaOp::DeleteEdge { u, v }
+        }
+        5..=6 => {
+            let (u, v) = pair(rng, oracle);
+            DeltaOp::Reweight { u, v, w: rng.normal_f32().abs() + 0.05 }
+        }
+        _ => DeltaOp::AddVertices { count: rng.usize_below(4) + 1 },
+    }
+}
+
+#[test]
+fn overlay_reads_match_a_from_scratch_rebuild() {
+    prop::check("overlay == rebuilt CSR, pre- and post-compact", 20, |rng| {
+        let n0 = rng.usize_below(64) + 32;
+        let g = planted_partition(n0, 16, 0.3, 0.05, rng);
+        let base = Csr::gcn_normalized(&g);
+        let mut oracle = Oracle::of(&base);
+        let mut overlay = CsrOverlay::new(base);
+        let mut log = DeltaLog::new();
+
+        let ops = rng.usize_below(120) + 80;
+        for _ in 0..ops {
+            let op = random_op(rng, &oracle);
+            overlay.apply(&log.append(op)).map_err(|e| e.to_string())?;
+            oracle.apply(op);
+        }
+
+        // staged reads: triplets, nnz, and the spmm all agree
+        prop::require(overlay.n_rows() == oracle.n, "vertex counts agree")?;
+        prop::require(overlay.nnz() == oracle.entries.len(), "nnz agrees")?;
+        prop::require(overlay.to_triplets() == oracle.triplets(), "triplets agree")?;
+        let f = rng.usize_below(3) + 1;
+        let x: Vec<f32> = (0..oracle.n * f).map(|_| rng.normal_f32()).collect();
+        let want = oracle.to_csr().spmm(&x, f);
+        for (a, b) in overlay.spmm(&x, f).iter().zip(&want) {
+            prop::require_close(*a as f64, *b as f64, 1e-5, "staged spmm")?;
+        }
+
+        // compaction moves storage, never meaning
+        overlay.compact();
+        prop::require(overlay.staged_rows() == 0, "compact clears the overlay")?;
+        prop::require(overlay.to_triplets() == oracle.triplets(), "post-compact triplets")?;
+        for (a, b) in overlay.spmm(&x, f).iter().zip(&want) {
+            prop::require_close(*a as f64, *b as f64, 1e-5, "post-compact spmm")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serialized_log_replays_to_the_identical_graph() {
+    prop::check("JSON roundtrip + replay == live overlay", 15, |rng| {
+        let n0 = rng.usize_below(48) + 32;
+        let g = planted_partition(n0, 16, 0.3, 0.05, rng);
+        let base = Csr::gcn_normalized(&g);
+        let mut oracle = Oracle::of(&base);
+        let mut live = CsrOverlay::new(base.clone());
+        let mut log = DeltaLog::new();
+        for _ in 0..rng.usize_below(60) + 40 {
+            let op = random_op(rng, &oracle);
+            live.apply(&log.append(op)).map_err(|e| e.to_string())?;
+            oracle.apply(op);
+        }
+
+        let text = json::write(&log.to_json());
+        let back = DeltaLog::from_json(&json::parse(&text).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        prop::require(back.entries() == log.entries(), "entries roundtrip")?;
+
+        let mut replayed = CsrOverlay::new(base);
+        for delta in back.entries() {
+            replayed.apply(delta).map_err(|e| e.to_string())?;
+        }
+        prop::require(replayed.version() == live.version(), "versions agree")?;
+        prop::require(replayed.to_triplets() == live.to_triplets(), "replay == live")?;
+        Ok(())
+    });
+}
+
+fn bucket_for(d: &Decomposition, slack: usize) -> BucketInfo {
+    BucketInfo {
+        name: "bstream".into(),
+        vertices: d.graph.n + slack,
+        edges: d.intra.nnz() + d.inter.nnz() + 4 * slack + 4096,
+        features: 16,
+        hidden: 16,
+        classes: 4,
+        blocks: d.graph.n.div_ceil(d.community.max(1)) + slack / d.community.max(1),
+    }
+}
+
+#[test]
+fn weight_only_churn_never_triggers_a_replan() {
+    prop::check("reweights are structurally invisible", 8, |rng| {
+        let n = rng.usize_below(96) + 64;
+        let g = planted_partition(n, 16, 0.5, 0.03, rng);
+        let d = Decomposition::build(
+            &g,
+            adaptgear::partition::Reorder::Identity,
+            adaptgear::partition::Propagation::GcnNormalized,
+            16,
+            0,
+        );
+        let bucket = bucket_for(&d, 32);
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .map_err(|e| e.to_string())?;
+        let mut s = StreamSession::new(&d, plan, bucket, StreamConfig::new(ModelKind::Gcn, &A100));
+        let trips = d.whole().to_triplets();
+        for _ in 0..30 {
+            let (u, v, _) = trips[rng.usize_below(trips.len())];
+            s.apply(DeltaOp::Reweight { u, v, w: rng.normal_f32().abs() + 0.01 })
+                .map_err(|e| e.to_string())?;
+        }
+        prop::require(s.maybe_replan().map_err(|e| e.to_string())?.is_none(), "no drift")?;
+        prop::require(s.graph_version() == 0, "version untouched")?;
+        Ok(())
+    });
+}
+
+/// THE acceptance workload: on planted-mixed, densify one community and
+/// check the blast radius — at least one plan class invalidated (the
+/// `plan.replan.class` counter moves) but NOT all of them, the new
+/// assignment covers the mutated decomposition, and the swapped forward
+/// matches both a cold full re-plan and the whole-graph `spmm` to 1e-4.
+#[test]
+fn densifying_one_community_invalidates_some_but_not_all_classes() {
+    let community = 16;
+    let spec = datasets::find("planted-mixed").expect("registry dataset");
+    let scale = 768.0 / spec.vertices as f64;
+    let data = spec.build_scaled(scale, 11);
+    let (d, _) = preprocess(
+        Strategy::AdaptGear,
+        &data.graph,
+        pipeline::propagation_for(ModelKind::Gcn),
+        community,
+        11,
+    );
+    let n = d.graph.n;
+    let bucket = bucket_for(&d, 64);
+    let plan = SimCostPlanner::new(&A100)
+        .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+        .unwrap();
+    let planned_classes = plan.assignment.classes.len();
+    let mut session =
+        StreamSession::new(&d, plan, bucket.clone(), StreamConfig::new(ModelKind::Gcn, &A100));
+
+    // densify ONE community to near-clique; every other block untouched
+    let before = adaptgear::obs::snapshot().counters.get("plan.replan.class").copied().unwrap_or(0);
+    let lo = community as u32; // block 1
+    for u in lo..lo + community as u32 {
+        for v in (u + 1)..lo + community as u32 {
+            session.apply(DeltaOp::InsertEdge { u, v, w: 0.3 }).unwrap();
+        }
+    }
+    let r = session.maybe_replan().unwrap().expect("densified community must drift");
+    let after = adaptgear::obs::snapshot().counters.get("plan.replan.class").copied().unwrap_or(0);
+    let invalidated = (after - before) as usize;
+    assert!(invalidated >= 1, "at least one class must be invalidated");
+    assert!(
+        invalidated < planned_classes,
+        "one mutated community must not invalidate all {planned_classes} classes \
+         (got {invalidated})"
+    );
+    assert_eq!(r.drifted.len(), invalidated, "counter mirrors the drift report");
+    assert!(r.plan.assignment.covers(&r.d).is_ok(), "new plan covers the mutated graph");
+    assert_eq!(r.graph_version, 1);
+
+    // numerical acceptance: swapped forward vs whole graph AND vs a cold
+    // full re-plan of the mutated decomposition
+    let f = 8;
+    let mut rng = Rng::new(0xacce);
+    let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+    let swapped = aggregate_assignment(&r.d, &r.plan.assignment, &x, f).unwrap();
+    let whole = r.d.whole().spmm(&x, f);
+    let mut cold_req = PlanRequest::new(&r.d, ModelKind::Gcn, &bucket);
+    cold_req.graph_version = r.graph_version;
+    let cold = SimCostPlanner::new(&A100).plan(&cold_req).unwrap();
+    let cold_fwd = aggregate_assignment(&r.d, &cold.assignment, &x, f).unwrap();
+    for i in 0..n * f {
+        assert!(
+            (swapped[i] - whole[i]).abs() < 1e-4,
+            "swapped forward diverged from whole-graph spmm at {i}"
+        );
+        assert!(
+            (swapped[i] - cold_fwd[i]).abs() < 1e-4,
+            "swapped forward diverged from the cold re-plan at {i}"
+        );
+    }
+}
