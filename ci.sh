@@ -5,7 +5,8 @@
 # all against synthetic bucket-only manifests.
 #
 #   ./ci.sh          # build + test + fmt + clippy + rustdoc (warnings
-#                    # denied) + plan/hybrid/sampled/help smokes
+#                    # denied) + plan/hybrid/sampled/trace/stream/check/
+#                    # help smokes
 #   ./ci.sh bench    # additionally run the quick bench suite: emit the
 #                    # six BENCH_*.json reports, schema-validate them,
 #                    # self-check the comparator, and gate against
@@ -59,7 +60,7 @@ run() {
 run cargo build --release
 run cargo test -q
 run cargo fmt --check
-run cargo clippy -- -D warnings
+run cargo clippy --all-targets -- -D warnings
 # Rustdoc gate: module docs and intra-doc links must stay warning-free
 # (README.md and DESIGN.md point into these docs).
 run env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -245,6 +246,57 @@ stream_smoke() {
 }
 stream_smoke
 
+# --- check smoke: the static invariant audit end to end. A freshly
+# planned store must audit clean (exit 0); corrupting one invariant in
+# one plan file must flip the exit code and name the documented lint
+# code (AG022). A second clean run writes CHECK_report.json at the repo
+# root so CI uploads it alongside BENCH_*.json and TRACE_*.json.
+check_smoke() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "check smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
+    cat > "$tmp/manifest.json" <<'EOF'
+{
+  "version": 1, "community": 16,
+  "buckets": {
+    "b512k": {"vertices": 524288, "edges": 8388608, "features": 32,
+               "hidden": 32, "classes": 4, "blocks": 32768}
+  },
+  "artifacts": []
+}
+EOF
+    run "$bin" plan --dataset planted-mixed --artifacts "$tmp"
+    run "$bin" check --artifacts "$tmp" --out "$tmp/CHECK_clean.json"
+    expect_grep '"errors":0' "$tmp/CHECK_clean.json" \
+        "check smoke: fresh plan store did not audit clean"
+    # The repo-root report CI uploads; fold in the trace-smoke artifact
+    # so the obs analyzer audits a real exported trace when one exists.
+    if [[ -f "$ROOT/TRACE_sampled.json" ]]; then
+        run "$bin" check --artifacts "$tmp" --trace "$ROOT/TRACE_sampled.json" \
+            --out "$ROOT/CHECK_report.json"
+    else
+        run "$bin" check --artifacts "$tmp" --out "$ROOT/CHECK_report.json"
+    fi
+
+    echo "==> check smoke: a corrupted plan must exit non-zero with AG022"
+    local plan_file
+    plan_file="$(ls "$tmp"/plans/plan_*.json | head -n1)"
+    sed -E -i 's/"threshold":[-+0-9.eE]+/"threshold":-1/g' "$plan_file"
+    if "$bin" check --artifacts "$tmp" --out "$tmp/CHECK_broken.json" \
+        > "$tmp/broken.txt" 2>&1; then
+        echo "FAILED: check smoke: corrupted plan store exited zero" >&2
+        cat "$tmp/broken.txt" >&2
+        exit 1
+    fi
+    expect_grep "AG022" "$tmp/broken.txt" \
+        "check smoke: corrupted threshold did not surface AG022"
+}
+check_smoke
+
 # --- help smoke: every subcommand documents itself with an example the
 # README can point at (`adaptgear <cmd> --help`).
 help_smoke() {
@@ -256,7 +308,7 @@ help_smoke() {
     new_tmpdir
     local tmp="$NEW_TMPDIR"
     echo "==> help smoke: per-subcommand examples"
-    for cmd in datasets decompose plan train serve stream bench selftest; do
+    for cmd in datasets decompose plan train serve stream bench check selftest; do
         "$bin" "$cmd" --help > "$tmp/help_$cmd.txt"
         expect_grep "EXAMPLE" "$tmp/help_$cmd.txt" \
             "help smoke: $cmd --help has no EXAMPLE section"

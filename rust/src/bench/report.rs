@@ -237,7 +237,13 @@ impl BenchReport {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating report dir {}", dir.display()))?;
         let path = Self::path_in(dir, &self.suite);
-        std::fs::write(&path, json::write(&self.to_json()))
+        let doc = self.to_json();
+        // Writer/checker anti-drift rule (DESIGN.md Sec. 13): what the
+        // suite writes must pass the bench analyzer's schema audit.
+        crate::check::debug_self_check("BenchReport::write_at", |d| {
+            crate::check::bench::lint_report_json(&doc, &path.display().to_string(), d);
+        });
+        std::fs::write(&path, json::write(&doc))
             .with_context(|| format!("writing {}", path.display()))?;
         Ok(path)
     }

@@ -1,0 +1,180 @@
+//! Bench analyzer: `BENCH_<suite>.json` reports and their stability
+//! against a committed baseline dir (AG060–AG062).
+//!
+//! Schema validation reuses `BenchReport::from_json` — it is already
+//! the strict gate (schema version, non-empty suite, finite values,
+//! direction tags, duplicate names), so the analyzer cannot drift from
+//! the loader (AG060). With `--baseline DIR`, the *metric set* is also
+//! audited: a metric that existed in the baseline but vanished, or
+//! changed unit or direction, silently breaks the perf-gate comparator,
+//! so it warns here before the gate goes blind (AG061); a quick-profile
+//! mismatch means the two reports are not comparable at all (AG062).
+
+use std::path::Path;
+
+use crate::bench::{BenchReport, SUITES};
+use crate::check::{CheckContext, Diagnostics, LintCode};
+use crate::util::json::{self, Json};
+
+pub const CODES: &[LintCode] = &[
+    LintCode::AuditSkipped,
+    LintCode::BenchSchema,
+    LintCode::BenchBaselineDrift,
+    LintCode::BenchQuickMismatch,
+];
+
+/// Audit one bench-report document. `BenchReport::write_at` runs this
+/// as its debug-build self-check.
+pub fn lint_report_json(doc: &Json, loc: &str, diags: &mut Diagnostics) -> Option<BenchReport> {
+    match BenchReport::from_json(doc) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            diags.emit(LintCode::BenchSchema, loc, format!("{e:#}"));
+            None
+        }
+    }
+}
+
+fn load_report(path: &Path, diags: &mut Diagnostics) -> Option<BenchReport> {
+    let loc = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            diags.emit(LintCode::BenchSchema, &loc, format!("read failed: {e}"));
+            return None;
+        }
+    };
+    match json::parse(&text) {
+        Ok(doc) => lint_report_json(&doc, &loc, diags),
+        Err(e) => {
+            diags.emit(LintCode::BenchSchema, &loc, format!("parse failed: {e}"));
+            None
+        }
+    }
+}
+
+/// AG061/AG062: the current report must remain comparable to the
+/// baseline the perf gates diff against.
+pub fn lint_against_baseline(
+    current: &BenchReport,
+    baseline: &BenchReport,
+    loc: &str,
+    diags: &mut Diagnostics,
+) {
+    if current.quick != baseline.quick {
+        diags.emit(
+            LintCode::BenchQuickMismatch,
+            loc,
+            format!("quick = {} here but {} in the baseline", current.quick, baseline.quick),
+        );
+    }
+    for base in &baseline.metrics {
+        match current.get(&base.name) {
+            None => diags.emit(
+                LintCode::BenchBaselineDrift,
+                loc,
+                format!("baseline metric {:?} is gone", base.name),
+            ),
+            Some(now) => {
+                if now.unit != base.unit || now.better != base.better {
+                    diags.emit(
+                        LintCode::BenchBaselineDrift,
+                        loc,
+                        format!(
+                            "metric {:?} changed shape: {} ({}) -> {} ({})",
+                            base.name,
+                            base.unit,
+                            base.better.as_str(),
+                            now.unit,
+                            now.better.as_str()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Analyzer entry point: audit every suite report present in the bench
+/// dir, and diff each against the baseline dir when one is given.
+pub fn run(ctx: &CheckContext, diags: &mut Diagnostics) {
+    let Some(dir) = &ctx.bench_dir else {
+        diags.emit(LintCode::AuditSkipped, "bench", "no bench reports to audit");
+        return;
+    };
+    let mut found = 0usize;
+    for suite in SUITES {
+        let path = BenchReport::path_in(dir, suite);
+        if !path.exists() {
+            continue;
+        }
+        found += 1;
+        let Some(report) = load_report(&path, diags) else { continue };
+        if let Some(base_dir) = &ctx.baseline {
+            let base_path = BenchReport::path_in(base_dir, suite);
+            if base_path.exists() {
+                if let Some(base) = load_report(&base_path, diags) {
+                    lint_against_baseline(&report, &base, &path.display().to_string(), diags);
+                }
+            }
+        }
+    }
+    if found == 0 {
+        diags.emit(
+            LintCode::AuditSkipped,
+            dir.display().to_string(),
+            "no BENCH_*.json present",
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::Direction;
+
+    fn codes(d: &Diagnostics) -> Vec<&'static str> {
+        d.as_slice().iter().map(|x| x.code.code()).collect()
+    }
+
+    fn report() -> BenchReport {
+        let mut r = BenchReport::new("kernels", true);
+        r.push("spmm_us", 12.5, "us", Direction::Lower);
+        r
+    }
+
+    #[test]
+    fn fresh_report_is_clean() {
+        let mut d = Diagnostics::new("bench");
+        assert!(lint_report_json(&report().to_json(), "r", &mut d).is_some());
+        assert!(d.as_slice().is_empty(), "{:?}", d.as_slice());
+    }
+
+    #[test]
+    fn wrong_schema_version_is_ag060() {
+        let mut doc = report().to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("schema_version".into(), Json::num(99.0));
+        }
+        let mut d = Diagnostics::new("bench");
+        assert!(lint_report_json(&doc, "r", &mut d).is_none());
+        assert_eq!(codes(&d), vec!["AG060"]);
+    }
+
+    #[test]
+    fn vanished_metric_is_ag061() {
+        let mut base = report();
+        base.push("launches", 3.0, "count", Direction::Lower);
+        let mut d = Diagnostics::new("bench");
+        lint_against_baseline(&report(), &base, "r", &mut d);
+        assert_eq!(codes(&d), vec!["AG061"]);
+    }
+
+    #[test]
+    fn quick_flip_is_ag062() {
+        let full = BenchReport::new("kernels", false);
+        let mut d = Diagnostics::new("bench");
+        lint_against_baseline(&full, &report(), "r", &mut d);
+        assert_eq!(codes(&d), vec!["AG062"]);
+    }
+}

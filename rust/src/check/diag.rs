@@ -1,0 +1,490 @@
+//! Diagnostics engine for `adaptgear check` (DESIGN.md Sec. 13).
+//!
+//! Every finding is a [`Diagnostic`] carrying a stable [`LintCode`]
+//! (`AG001`, `AG024`, ...), a severity, the analyzer that emitted it, a
+//! location string (file path, plan fingerprint, delta version, ...),
+//! and a human message. Codes are append-only: a code never changes
+//! meaning and is never reused, so scripts grepping `CHECK_report.json`
+//! stay valid across releases.
+//!
+//! The same machinery backs the debug-build writer assertions
+//! ([`debug_self_check`]): an artifact writer runs its own analyzer on
+//! the document it is about to persist, so writers and checkers cannot
+//! drift apart silently.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Report schema version for `CHECK_report.json`.
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// How bad a finding is. `Error` fails the check (non-zero exit);
+/// `Warn` is advisory unless promoted by `--deny warn`; `Info` records
+/// skipped audits so "clean" is distinguishable from "not looked at".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The stable lint-code table. Blocks of ten-ish per analyzer leave
+/// room to grow without renumbering: AG00x graph, AG02x plan, AG03x
+/// stream, AG04x obs, AG06x bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LintCode {
+    /// AG000 — an audit was skipped (missing input, unresolvable
+    /// context); Info so reports show coverage, not just findings.
+    AuditSkipped,
+    /// AG001 — CSR row_ptr is malformed (wrong length, non-monotone,
+    /// first != 0, last != nnz, vals/col_idx length mismatch).
+    CsrIndptr,
+    /// AG002 — CSR column indices out of range, unsorted, or duplicated
+    /// within a row.
+    CsrCols,
+    /// AG003 — non-finite (NaN/Inf) numeric value in a persisted
+    /// artifact or matrix.
+    NonFinite,
+    /// AG004 — a matrix that claims symmetry is asymmetric.
+    AsymmetricMatrix,
+    /// AG005 — block-diagonal violation: intra entry off its diagonal
+    /// block, or inter entry on one.
+    BlockDiagonal,
+    /// AG006 — decomposition perm is not a permutation of 0..n.
+    BadPermutation,
+    /// AG020 — plan file unreadable or unparseable as a v3 GearPlan.
+    PlanUnreadable,
+    /// AG021 — plan filename fingerprint disagrees with the embedded
+    /// fingerprint.
+    PlanFilenameMismatch,
+    /// AG022 — plan structural invariant violated (threshold range,
+    /// class ordering/duplication, dense class not on dense_block).
+    PlanStructure,
+    /// AG024 — recomputed v3 fingerprint disagrees with the stored one.
+    PlanFingerprintMismatch,
+    /// AG025 — `GearAssignment::covers()` fails against the re-derived
+    /// decomposition.
+    PlanCoverage,
+    /// AG026 — assignment inadmissible under the bucket edge cap at the
+    /// recorded threshold.
+    PlanEdgeCap,
+    /// AG027 — chosen kernel is not the argmin of the persisted
+    /// candidate costs.
+    PlanNotArgmin,
+    /// AG028 — recorded per-class time drifts from the recomputed
+    /// `class_kernel_cost` beyond tolerance (cost-model drift).
+    PlanCostDrift,
+    /// AG029 — sweep provenance inconsistent with the assignment
+    /// (threshold mismatch, unknown candidate outcome).
+    PlanProvenance,
+    /// AG030 — delta log versions are not 1-based contiguous.
+    DeltaVersionGap,
+    /// AG031 — delta log entry malformed (unknown op, missing field).
+    DeltaMalformed,
+    /// AG032 — static replay of the delta log fails to apply.
+    DeltaReplayFailure,
+    /// AG033 — replayed overlay state is asymmetric (edge pairing was
+    /// lost somewhere between writer and log).
+    DeltaAsymmetry,
+    /// AG034 — overlay stages more rows than the ops address (no-op
+    /// deletes or reweights staged copies).
+    DeltaOverStaging,
+    /// AG040 — trace unparseable or B/E pairing violated.
+    TraceMalformed,
+    /// AG041 — per-thread trace timestamps are non-monotone.
+    TraceNonMonotonic,
+    /// AG042 — counter name does not match `subsystem.noun.verb`.
+    CounterNaming,
+    /// AG060 — bench report fails schema validation.
+    BenchSchema,
+    /// AG061 — metric names / units / direction tags unstable vs the
+    /// baseline dir.
+    BenchBaselineDrift,
+    /// AG062 — quick-profile flag disagrees with the baseline report.
+    BenchQuickMismatch,
+}
+
+impl LintCode {
+    /// The stable wire code. Never renumber, never reuse.
+    pub fn code(&self) -> &'static str {
+        match self {
+            LintCode::AuditSkipped => "AG000",
+            LintCode::CsrIndptr => "AG001",
+            LintCode::CsrCols => "AG002",
+            LintCode::NonFinite => "AG003",
+            LintCode::AsymmetricMatrix => "AG004",
+            LintCode::BlockDiagonal => "AG005",
+            LintCode::BadPermutation => "AG006",
+            LintCode::PlanUnreadable => "AG020",
+            LintCode::PlanFilenameMismatch => "AG021",
+            LintCode::PlanStructure => "AG022",
+            LintCode::PlanFingerprintMismatch => "AG024",
+            LintCode::PlanCoverage => "AG025",
+            LintCode::PlanEdgeCap => "AG026",
+            LintCode::PlanNotArgmin => "AG027",
+            LintCode::PlanCostDrift => "AG028",
+            LintCode::PlanProvenance => "AG029",
+            LintCode::DeltaVersionGap => "AG030",
+            LintCode::DeltaMalformed => "AG031",
+            LintCode::DeltaReplayFailure => "AG032",
+            LintCode::DeltaAsymmetry => "AG033",
+            LintCode::DeltaOverStaging => "AG034",
+            LintCode::TraceMalformed => "AG040",
+            LintCode::TraceNonMonotonic => "AG041",
+            LintCode::CounterNaming => "AG042",
+            LintCode::BenchSchema => "AG060",
+            LintCode::BenchBaselineDrift => "AG061",
+            LintCode::BenchQuickMismatch => "AG062",
+        }
+    }
+
+    /// Default severity; [`Diagnostics::emit_with`] can override per
+    /// finding (e.g. AG027 degrades to Warn for wall-clock plans whose
+    /// recorded costs are measurements, not the analytic model).
+    pub fn severity(&self) -> Severity {
+        match self {
+            LintCode::AuditSkipped => Severity::Info,
+            LintCode::PlanCostDrift
+            | LintCode::CounterNaming
+            | LintCode::BenchBaselineDrift
+            | LintCode::BenchQuickMismatch => Severity::Warn,
+            _ => Severity::Error,
+        }
+    }
+
+    /// One-line title for the rendered table and the docs.
+    pub fn title(&self) -> &'static str {
+        match self {
+            LintCode::AuditSkipped => "audit skipped",
+            LintCode::CsrIndptr => "malformed CSR row_ptr",
+            LintCode::CsrCols => "CSR cols out of range, unsorted, or duplicated",
+            LintCode::NonFinite => "non-finite value in artifact",
+            LintCode::AsymmetricMatrix => "claimed-symmetric matrix is asymmetric",
+            LintCode::BlockDiagonal => "block-diagonal split violated",
+            LintCode::BadPermutation => "perm is not a permutation",
+            LintCode::PlanUnreadable => "plan unreadable or unparseable",
+            LintCode::PlanFilenameMismatch => "plan filename/fingerprint mismatch",
+            LintCode::PlanStructure => "plan structural invariant violated",
+            LintCode::PlanFingerprintMismatch => "fingerprint does not recompute",
+            LintCode::PlanCoverage => "assignment does not cover decomposition",
+            LintCode::PlanEdgeCap => "assignment exceeds bucket edge cap",
+            LintCode::PlanNotArgmin => "chosen kernel is not the candidate-cost argmin",
+            LintCode::PlanCostDrift => "recorded class time drifts from cost model",
+            LintCode::PlanProvenance => "sweep provenance inconsistent",
+            LintCode::DeltaVersionGap => "delta versions not contiguous",
+            LintCode::DeltaMalformed => "malformed delta entry",
+            LintCode::DeltaReplayFailure => "delta replay failed",
+            LintCode::DeltaAsymmetry => "replayed overlay is asymmetric",
+            LintCode::DeltaOverStaging => "overlay staged more rows than ops address",
+            LintCode::TraceMalformed => "trace unparseable or B/E pairing violated",
+            LintCode::TraceNonMonotonic => "trace timestamps non-monotone per thread",
+            LintCode::CounterNaming => "counter name not subsystem.noun.verb",
+            LintCode::BenchSchema => "bench report fails schema validation",
+            LintCode::BenchBaselineDrift => "bench metric set unstable vs baseline",
+            LintCode::BenchQuickMismatch => "bench quick profile differs from baseline",
+        }
+    }
+}
+
+impl fmt::Display for LintCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.code())
+    }
+}
+
+/// One finding: what, how bad, who found it, where, and why.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: LintCode,
+    pub severity: Severity,
+    pub analyzer: &'static str,
+    /// Where the finding anchors: a file path, `plan <fp>`, a delta
+    /// version, a counter name, ...
+    pub location: String,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {} [{}] {}: {}",
+            self.severity,
+            self.code.code(),
+            self.analyzer,
+            self.location,
+            self.message
+        )
+    }
+}
+
+/// Collector handed to analyzers. Scoped to one analyzer name so
+/// findings attribute themselves; [`Diagnostics::emit`] uses the
+/// code's default severity, [`Diagnostics::emit_with`] overrides it.
+#[derive(Debug)]
+pub struct Diagnostics {
+    analyzer: &'static str,
+    diags: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn new(analyzer: &'static str) -> Self {
+        Diagnostics { analyzer, diags: Vec::new() }
+    }
+
+    pub fn emit(
+        &mut self,
+        code: LintCode,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) {
+        self.emit_with(code, code.severity(), location, message);
+    }
+
+    pub fn emit_with(
+        &mut self,
+        code: LintCode,
+        severity: Severity,
+        location: impl Into<String>,
+        message: impl Into<String>,
+    ) {
+        self.diags.push(Diagnostic {
+            code,
+            severity,
+            analyzer: self.analyzer,
+            location: location.into(),
+            message: message.into(),
+        });
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn as_slice(&self) -> &[Diagnostic] {
+        &self.diags
+    }
+
+    pub fn into_vec(self) -> Vec<Diagnostic> {
+        self.diags
+    }
+}
+
+/// The assembled result of a `check` run: every diagnostic from every
+/// analyzer, with `--deny warn` promotion already applied.
+#[derive(Debug)]
+pub struct CheckReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub deny_warn: bool,
+}
+
+impl CheckReport {
+    /// Promotes Warn to Error in place when `deny_warn` — the report
+    /// that is written is the report that decided the exit code.
+    pub fn new(mut diagnostics: Vec<Diagnostic>, deny_warn: bool) -> Self {
+        if deny_warn {
+            for d in &mut diagnostics {
+                if d.severity == Severity::Warn {
+                    d.severity = Severity::Error;
+                }
+            }
+        }
+        CheckReport { diagnostics, deny_warn }
+    }
+
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    pub fn infos(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    fn count(&self, s: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == s).count()
+    }
+
+    /// Machine-readable `CHECK_report.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut per_analyzer: BTreeMap<String, u64> = BTreeMap::new();
+        for d in &self.diagnostics {
+            *per_analyzer.entry(d.analyzer.to_string()).or_insert(0) += 1;
+        }
+        Json::obj(vec![
+            ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
+            ("deny_warn", Json::Bool(self.deny_warn)),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("errors", Json::num(self.errors() as f64)),
+                    ("warnings", Json::num(self.warnings() as f64)),
+                    ("infos", Json::num(self.infos() as f64)),
+                ]),
+            ),
+            (
+                "per_analyzer",
+                Json::Obj(
+                    per_analyzer
+                        .into_iter()
+                        .map(|(k, v)| (k, Json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "diagnostics",
+                Json::Arr(
+                    self.diagnostics
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("code", Json::str(d.code.code())),
+                                ("severity", Json::str(d.severity.as_str())),
+                                ("analyzer", Json::str(d.analyzer)),
+                                ("location", Json::str(&d.location)),
+                                ("message", Json::str(&d.message)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rendered table: errors first, then warns, then infos; stable
+    /// within a severity by emission order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for want in [Severity::Error, Severity::Warn, Severity::Info] {
+            for d in self.diagnostics.iter().filter(|d| d.severity == want) {
+                out.push_str(&format!("{d}\n"));
+            }
+        }
+        out.push_str(&format!(
+            "check: {} errors, {} warnings, {} infos\n",
+            self.errors(),
+            self.warnings(),
+            self.infos()
+        ));
+        out
+    }
+}
+
+/// Debug-build writer assertion: run analyzer body `f` over the
+/// document a writer is about to persist and panic if it produced any
+/// Error diagnostic. Release builds skip it entirely. This is the
+/// anti-drift rule from DESIGN.md Sec. 13 — an artifact writer cannot
+/// emit something its own analyzer rejects.
+pub fn debug_self_check(what: &str, f: impl FnOnce(&mut Diagnostics)) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    let mut diags = Diagnostics::new("self-check");
+    f(&mut diags);
+    if diags.error_count() > 0 {
+        let findings: Vec<String> = diags
+            .as_slice()
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.to_string())
+            .collect();
+        panic!("{what} wrote an artifact that fails its own analyzer:\n{}", findings.join("\n"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_stable() {
+        let all = [
+            LintCode::AuditSkipped,
+            LintCode::CsrIndptr,
+            LintCode::CsrCols,
+            LintCode::NonFinite,
+            LintCode::AsymmetricMatrix,
+            LintCode::BlockDiagonal,
+            LintCode::BadPermutation,
+            LintCode::PlanUnreadable,
+            LintCode::PlanFilenameMismatch,
+            LintCode::PlanStructure,
+            LintCode::PlanFingerprintMismatch,
+            LintCode::PlanCoverage,
+            LintCode::PlanEdgeCap,
+            LintCode::PlanNotArgmin,
+            LintCode::PlanCostDrift,
+            LintCode::PlanProvenance,
+            LintCode::DeltaVersionGap,
+            LintCode::DeltaMalformed,
+            LintCode::DeltaReplayFailure,
+            LintCode::DeltaAsymmetry,
+            LintCode::DeltaOverStaging,
+            LintCode::TraceMalformed,
+            LintCode::TraceNonMonotonic,
+            LintCode::CounterNaming,
+            LintCode::BenchSchema,
+            LintCode::BenchBaselineDrift,
+            LintCode::BenchQuickMismatch,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for c in all {
+            assert!(c.code().starts_with("AG"), "{c:?}");
+            assert!(seen.insert(c.code()), "duplicate code {}", c.code());
+            assert!(!c.title().is_empty());
+        }
+    }
+
+    #[test]
+    fn deny_warn_promotes() {
+        let mut d = Diagnostics::new("t");
+        d.emit(LintCode::CounterNaming, "x", "bad name");
+        d.emit(LintCode::AuditSkipped, "y", "skipped");
+        let plain = CheckReport::new(d.as_slice().to_vec(), false);
+        assert_eq!((plain.errors(), plain.warnings(), plain.infos()), (0, 1, 1));
+        let denied = CheckReport::new(plain.diagnostics, true);
+        assert_eq!((denied.errors(), denied.warnings(), denied.infos()), (1, 0, 1));
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let mut d = Diagnostics::new("graph");
+        d.emit(LintCode::CsrIndptr, "intra", "row_ptr truncated");
+        let rep = CheckReport::new(d.into_vec(), false);
+        let doc = rep.to_json();
+        assert_eq!(doc.get("schema_version").as_usize(), Some(REPORT_SCHEMA_VERSION as usize));
+        assert_eq!(doc.get("totals").get("errors").as_usize(), Some(1));
+        assert_eq!(doc.get("diagnostics").idx(0).get("code").as_str(), Some("AG001"));
+        assert!(rep.render().contains("AG001"));
+        assert!(rep.render().contains("1 errors"));
+    }
+
+    #[test]
+    #[should_panic(expected = "fails its own analyzer")]
+    fn self_check_panics_on_error() {
+        debug_self_check("test writer", |d| {
+            d.emit(LintCode::NonFinite, "field", "NaN");
+        });
+    }
+}

@@ -1,0 +1,309 @@
+//! Graph analyzer: CSR well-formedness and decomposition invariants
+//! (AG001–AG006).
+//!
+//! The helpers here are the shared substrate the other analyzers build
+//! on — `stream` lints its replayed overlay through [`lint_csr`] and
+//! [`lint_symmetric`] too. The analyzer's own `run` is an always-on
+//! self-audit: it builds a small planted-mixed decomposition from
+//! scratch and lints it, so a regression in reorder / normalization /
+//! block-splitting is caught even on a checkout with no artifacts at
+//! all.
+
+use crate::check::{CheckContext, Diagnostics, LintCode};
+use crate::graph::datasets;
+use crate::graph::Csr;
+use crate::partition::{Decomposition, Propagation, Reorder};
+
+pub const CODES: &[LintCode] = &[
+    LintCode::AuditSkipped,
+    LintCode::CsrIndptr,
+    LintCode::CsrCols,
+    LintCode::NonFinite,
+    LintCode::AsymmetricMatrix,
+    LintCode::BlockDiagonal,
+    LintCode::BadPermutation,
+];
+
+/// Structural CSR audit: row_ptr shape (AG001), column order/range
+/// (AG002), finite values (AG003). Returns whether the matrix is
+/// well-formed enough for the deeper audits (symmetry, block coverage)
+/// to run without slicing out of bounds.
+pub fn lint_csr(csr: &Csr, what: &str, diags: &mut Diagnostics) -> bool {
+    if csr.row_ptr.len() != csr.n_rows + 1 {
+        diags.emit(
+            LintCode::CsrIndptr,
+            what,
+            format!("row_ptr has {} entries for {} rows (want rows + 1)", csr.row_ptr.len(), csr.n_rows),
+        );
+        return false;
+    }
+    let mut ok = true;
+    if csr.row_ptr.first() != Some(&0) {
+        diags.emit(LintCode::CsrIndptr, what, "row_ptr does not start at 0");
+        ok = false;
+    }
+    if let Some(w) = csr.row_ptr.windows(2).find(|w| w[1] < w[0]) {
+        diags.emit(
+            LintCode::CsrIndptr,
+            what,
+            format!("row_ptr not monotone: {} then {}", w[0], w[1]),
+        );
+        ok = false;
+    }
+    let last = *csr.row_ptr.last().unwrap() as usize;
+    if last != csr.col_idx.len() {
+        diags.emit(
+            LintCode::CsrIndptr,
+            what,
+            format!("row_ptr ends at {last} but col_idx holds {} entries", csr.col_idx.len()),
+        );
+        ok = false;
+    }
+    if csr.vals.len() != csr.col_idx.len() {
+        diags.emit(
+            LintCode::CsrIndptr,
+            what,
+            format!("{} vals for {} col_idx entries", csr.vals.len(), csr.col_idx.len()),
+        );
+        ok = false;
+    }
+    // Non-finite values are detectable even when the structure is off.
+    if let Some((i, v)) = csr.vals.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+        diags.emit(LintCode::NonFinite, what, format!("vals[{i}] = {v}"));
+        ok = false;
+    }
+    if !ok {
+        return false;
+    }
+    // Per-row column audit, first violation only (one bad permutation
+    // would otherwise flood the report with one finding per row).
+    'rows: for r in 0..csr.n_rows {
+        let lo = csr.row_ptr[r] as usize;
+        let hi = csr.row_ptr[r + 1] as usize;
+        let cols = &csr.col_idx[lo..hi];
+        for (k, &c) in cols.iter().enumerate() {
+            if c as usize >= csr.n_cols {
+                diags.emit(
+                    LintCode::CsrCols,
+                    what,
+                    format!("row {r}: col {c} out of range (n_cols = {})", csr.n_cols),
+                );
+                ok = false;
+                break 'rows;
+            }
+            if k > 0 && cols[k - 1] >= c {
+                let msg = if cols[k - 1] == c {
+                    format!("row {r}: duplicate col {c}")
+                } else {
+                    format!("row {r}: cols unsorted ({} before {c})", cols[k - 1])
+                };
+                diags.emit(LintCode::CsrCols, what, msg);
+                ok = false;
+                break 'rows;
+            }
+        }
+    }
+    ok
+}
+
+/// AG004: audit a matrix that claims symmetry. Call only on
+/// well-formed square matrices ([`lint_csr`] gates it).
+pub fn lint_symmetric(csr: &Csr, what: &str, diags: &mut Diagnostics) {
+    if csr.n_rows != csr.n_cols {
+        diags.emit(
+            LintCode::AsymmetricMatrix,
+            what,
+            format!("claims symmetry but is {}x{}", csr.n_rows, csr.n_cols),
+        );
+        return;
+    }
+    if !csr.is_symmetric(1e-6) {
+        diags.emit(LintCode::AsymmetricMatrix, what, "matrix is not symmetric (tol 1e-6)");
+    }
+}
+
+/// Full decomposition audit: perm is a permutation (AG006), intra and
+/// inter are well-formed symmetric n×n matrices (AG001–AG004), and the
+/// block-diagonal split is honest — every intra entry on its diagonal
+/// block, every inter entry off it (AG005).
+pub fn lint_decomposition(d: &Decomposition, diags: &mut Diagnostics) {
+    let n = d.graph.n;
+    if d.perm.len() != n {
+        diags.emit(
+            LintCode::BadPermutation,
+            "perm",
+            format!("perm has {} entries for {} vertices", d.perm.len(), n),
+        );
+    } else {
+        let mut seen = vec![false; n];
+        for &p in &d.perm {
+            if p as usize >= n || seen[p as usize] {
+                diags.emit(
+                    LintCode::BadPermutation,
+                    "perm",
+                    format!("vertex {p} out of range or repeated"),
+                );
+                break;
+            }
+            seen[p as usize] = true;
+        }
+    }
+    let community = d.community.max(1);
+    for (part, csr, want_intra) in [("intra", &d.intra, true), ("inter", &d.inter, false)] {
+        if !lint_csr(csr, part, diags) {
+            continue;
+        }
+        if csr.n_rows != n || csr.n_cols != n {
+            diags.emit(
+                LintCode::BlockDiagonal,
+                part,
+                format!("{}x{} matrix for an n = {n} decomposition", csr.n_rows, csr.n_cols),
+            );
+            continue;
+        }
+        lint_symmetric(csr, part, diags);
+        'rows: for r in 0..csr.n_rows {
+            let (cols, _) = csr.row(r);
+            for &c in cols {
+                let on_block = r / community == c as usize / community;
+                if on_block != want_intra {
+                    diags.emit(
+                        LintCode::BlockDiagonal,
+                        part,
+                        format!(
+                            "entry ({r}, {c}) is {} its diagonal block (community = {community})",
+                            if on_block { "on" } else { "off" }
+                        ),
+                    );
+                    break 'rows;
+                }
+            }
+        }
+    }
+}
+
+/// Analyzer entry point: always-on self-audit over a freshly built
+/// planted-mixed decomposition (~1k vertices — milliseconds). No
+/// artifacts are needed, so a bare checkout still audits the whole
+/// reorder → normalize → split pipeline.
+pub fn run(_ctx: &CheckContext, diags: &mut Diagnostics) {
+    let Some(spec) = datasets::find("planted-mixed") else {
+        diags.emit(LintCode::AuditSkipped, "self-audit", "planted-mixed spec missing");
+        return;
+    };
+    let scale = (1024.0 / spec.vertices as f64).min(1.0);
+    let data = spec.build_scaled(scale, 0);
+    let d = Decomposition::build(
+        &data.graph,
+        Reorder::Metis,
+        Propagation::GcnNormalized,
+        datasets::COMMUNITY,
+        0,
+    );
+    lint_decomposition(&d, diags);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::Severity;
+
+    fn diags() -> Diagnostics {
+        Diagnostics::new("graph")
+    }
+
+    fn codes(d: &Diagnostics) -> Vec<&'static str> {
+        d.as_slice().iter().map(|x| x.code.code()).collect()
+    }
+
+    fn well_formed() -> Csr {
+        Csr::from_triplets(4, 4, vec![(0, 1, 1.0), (1, 0, 1.0), (2, 3, 0.5), (3, 2, 0.5)])
+    }
+
+    #[test]
+    fn clean_csr_passes() {
+        let mut d = diags();
+        assert!(lint_csr(&well_formed(), "m", &mut d));
+        lint_symmetric(&well_formed(), "m", &mut d);
+        assert!(d.as_slice().is_empty(), "{:?}", d.as_slice());
+    }
+
+    #[test]
+    fn truncated_row_ptr_is_ag001() {
+        let mut m = well_formed();
+        m.row_ptr.pop();
+        let mut d = diags();
+        assert!(!lint_csr(&m, "m", &mut d));
+        assert_eq!(codes(&d), vec!["AG001"]);
+    }
+
+    #[test]
+    fn unsorted_cols_are_ag002() {
+        let m = Csr {
+            n_rows: 2,
+            n_cols: 4,
+            row_ptr: vec![0, 2, 2],
+            col_idx: vec![3, 1],
+            vals: vec![1.0, 1.0],
+        };
+        let mut d = diags();
+        assert!(!lint_csr(&m, "m", &mut d));
+        assert_eq!(codes(&d), vec!["AG002"]);
+    }
+
+    #[test]
+    fn nan_value_is_ag003() {
+        let mut m = well_formed();
+        m.vals[1] = f32::NAN;
+        let mut d = diags();
+        assert!(!lint_csr(&m, "m", &mut d));
+        assert!(codes(&d).contains(&"AG003"));
+    }
+
+    #[test]
+    fn asymmetry_is_ag004() {
+        let m = Csr::from_triplets(2, 2, vec![(0, 1, 1.0)]);
+        let mut d = diags();
+        assert!(lint_csr(&m, "m", &mut d));
+        lint_symmetric(&m, "m", &mut d);
+        assert_eq!(codes(&d), vec!["AG004"]);
+    }
+
+    #[test]
+    fn self_audit_is_clean() {
+        let ctx = CheckContext {
+            artifacts: std::env::temp_dir(),
+            plans: false,
+            traces: vec![],
+            deltas: vec![],
+            bench_dir: None,
+            baseline: None,
+        };
+        let mut d = diags();
+        run(&ctx, &mut d);
+        assert_eq!(
+            d.as_slice().iter().filter(|x| x.severity == Severity::Error).count(),
+            0,
+            "{:?}",
+            d.as_slice()
+        );
+    }
+
+    #[test]
+    fn off_block_intra_entry_is_ag005() {
+        let spec = datasets::find("planted-mixed").unwrap();
+        let data = spec.build_scaled(256.0 / spec.vertices as f64, 0);
+        let mut dec = Decomposition::build(
+            &data.graph,
+            Reorder::Metis,
+            Propagation::GcnNormalized,
+            datasets::COMMUNITY,
+            0,
+        );
+        // Swap the parts: every "intra" entry is now off-diagonal.
+        std::mem::swap(&mut dec.intra, &mut dec.inter);
+        let mut d = diags();
+        lint_decomposition(&dec, &mut d);
+        assert!(codes(&d).contains(&"AG005"), "{:?}", d.as_slice());
+    }
+}

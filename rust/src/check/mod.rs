@@ -1,0 +1,136 @@
+//! `adaptgear check` — static invariant auditing over everything the
+//! system persists (DESIGN.md Sec. 13).
+//!
+//! The runtime already validates artifacts piecemeal at load time
+//! (`GearPlan::validate`, `DeltaLog::from_json`, ...), but those checks
+//! only fire on the artifacts a particular run happens to touch, and
+//! they stop at the first failure. This subsystem is the opposite
+//! shape: a registry of [`Analyzer`]s that each audit one artifact
+//! family exhaustively — every plan in the store, every delta log,
+//! every trace and bench report handed to it — and *keep going*,
+//! accumulating [`Diagnostic`]s with stable lint codes instead of
+//! bailing. Nothing here executes a training step or needs an engine;
+//! `adaptgear check` runs to completion on a bare checkout.
+//!
+//! Analyzer ownership:
+//!
+//! | analyzer | artifact family | codes |
+//! |---|---|---|
+//! | `graph`  | CSR / [`Decomposition`] well-formedness | AG001–AG006 |
+//! | `plan`   | plan store files, provenance, cost drift | AG020–AG029 |
+//! | `stream` | delta logs + static replay | AG030–AG034 |
+//! | `obs`    | Chrome traces + counter naming | AG040–AG042 |
+//! | `bench`  | `BENCH_*.json` + baseline stability | AG060–AG062 |
+//!
+//! The writer/checker anti-drift rule: every artifact writer
+//! (`PlanStore::save`, `DeltaLog::to_json`, `BenchReport::write_at`,
+//! `obs::write_trace`) runs its own analyzer on the document it emits
+//! under `debug_assertions` via [`diag::debug_self_check`]. A writer
+//! change that the checker rejects fails every debug test run, not a
+//! later audit.
+//!
+//! [`Decomposition`]: crate::partition::Decomposition
+
+pub mod bench;
+pub mod diag;
+pub mod graph;
+pub mod obs;
+pub mod plan;
+pub mod stream;
+
+use std::path::PathBuf;
+
+pub use diag::{debug_self_check, CheckReport, Diagnostic, Diagnostics, LintCode, Severity};
+
+/// What a `check` run should look at. Built by the CLI from flags plus
+/// filesystem discovery (plans dir, `TRACE_*.json`, `BENCH_*.json`);
+/// analyzers treat missing inputs as AG000 skips, never errors.
+#[derive(Debug, Clone)]
+pub struct CheckContext {
+    /// Artifacts dir holding `manifest.json` and `plans/`.
+    pub artifacts: PathBuf,
+    /// Audit every `plans/plan_*.json` under `artifacts`.
+    pub plans: bool,
+    /// Chrome trace files to audit.
+    pub traces: Vec<PathBuf>,
+    /// Serialized delta-log files to audit.
+    pub deltas: Vec<PathBuf>,
+    /// Directory holding `BENCH_<suite>.json` reports.
+    pub bench_dir: Option<PathBuf>,
+    /// Baseline dir to diff bench metric sets against.
+    pub baseline: Option<PathBuf>,
+}
+
+/// One registered analyzer: a name, the codes it may emit (the
+/// documented contract — tests assert emitted codes stay inside it),
+/// and an infallible entry point. Analyzers report IO failures as
+/// diagnostics; `run` never aborts the sweep.
+pub struct Analyzer {
+    pub name: &'static str,
+    pub codes: &'static [LintCode],
+    pub run: fn(&CheckContext, &mut Diagnostics),
+}
+
+/// The registry, in audit order. Order is presentation-only; analyzers
+/// are independent.
+pub const ANALYZERS: &[Analyzer] = &[
+    Analyzer { name: "graph", codes: graph::CODES, run: graph::run },
+    Analyzer { name: "plan", codes: plan::CODES, run: plan::run },
+    Analyzer { name: "stream", codes: stream::CODES, run: stream::run },
+    Analyzer { name: "obs", codes: obs::CODES, run: obs::run },
+    Analyzer { name: "bench", codes: bench::CODES, run: bench::run },
+];
+
+/// Run every registered analyzer and assemble the report (with
+/// `--deny warn` promotion applied).
+pub fn run_all(ctx: &CheckContext, deny_warn: bool) -> CheckReport {
+    let mut all = Vec::new();
+    for a in ANALYZERS {
+        let mut diags = Diagnostics::new(a.name);
+        (a.run)(ctx, &mut diags);
+        all.extend(diags.into_vec());
+    }
+    CheckReport::new(all, deny_warn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_ctx() -> CheckContext {
+        CheckContext {
+            artifacts: std::env::temp_dir().join("adaptgear-check-noexist"),
+            plans: false,
+            traces: vec![],
+            deltas: vec![],
+            bench_dir: None,
+            baseline: None,
+        }
+    }
+
+    #[test]
+    fn registry_names_unique_and_codes_disjoint() {
+        let mut names = std::collections::BTreeSet::new();
+        let mut codes = std::collections::BTreeSet::new();
+        for a in ANALYZERS {
+            assert!(names.insert(a.name), "duplicate analyzer {}", a.name);
+            for c in a.codes {
+                // AG000/AG003 are shared vocabulary; everything else is
+                // owned by exactly one analyzer.
+                if matches!(c, LintCode::AuditSkipped | LintCode::NonFinite) {
+                    continue;
+                }
+                assert!(codes.insert(c.code()), "code {} claimed twice", c.code());
+            }
+        }
+    }
+
+    #[test]
+    fn bare_run_has_zero_errors() {
+        // A bare checkout with nothing to audit: the graph self-audit
+        // runs, everything else skips with Info. Zero errors.
+        let report = run_all(&empty_ctx(), false);
+        assert_eq!(report.errors(), 0, "{}", report.render());
+        assert!(report.infos() > 0, "skips should be recorded");
+    }
+}

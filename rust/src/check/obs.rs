@@ -1,0 +1,170 @@
+//! Obs analyzer: exported Chrome traces and the metrics snapshot they
+//! carry (AG040–AG042).
+//!
+//! Traces must reparse and pass the same `validate_pairing` the writer
+//! ran (AG040) with per-thread monotone timestamps (AG041), and every
+//! counter in the embedded metrics snapshot must follow the
+//! `subsystem.noun.verb` naming rule from `obs::metrics` (AG042 —
+//! Warn, because two legacy `sample.*` counters are asserted by name
+//! in tests and renaming them is a separate, deliberate break).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::check::{CheckContext, Diagnostics, LintCode};
+use crate::obs::Trace;
+use crate::util::json::{self, Json};
+
+pub const CODES: &[LintCode] = &[
+    LintCode::AuditSkipped,
+    LintCode::TraceMalformed,
+    LintCode::TraceNonMonotonic,
+    LintCode::CounterNaming,
+];
+
+/// `subsystem.noun.verb`: exactly three non-empty dot segments of
+/// `[a-z0-9_]`.
+pub fn counter_name_ok(name: &str) -> bool {
+    let segs: Vec<&str> = name.split('.').collect();
+    segs.len() == 3
+        && segs.iter().all(|s| {
+            !s.is_empty()
+                && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        })
+}
+
+/// Audit one exported trace document. `obs::write_trace` runs this as
+/// its debug-build self-check.
+pub fn lint_trace_doc(doc: &Json, loc: &str, diags: &mut Diagnostics) {
+    let trace = match Trace::from_chrome_json(doc) {
+        Ok(t) => t,
+        Err(e) => {
+            diags.emit(LintCode::TraceMalformed, loc, format!("{e:#}"));
+            return;
+        }
+    };
+    if let Err(e) = trace.validate_pairing() {
+        diags.emit(LintCode::TraceMalformed, loc, format!("{e:#}"));
+    }
+    let mut last: BTreeMap<u64, f64> = BTreeMap::new();
+    for ev in &trace.events {
+        if let Some(&prev) = last.get(&ev.tid) {
+            if ev.ts_us < prev {
+                diags.emit(
+                    LintCode::TraceNonMonotonic,
+                    loc,
+                    format!("tid {}: ts {} after {} ({})", ev.tid, ev.ts_us, prev, ev.name),
+                );
+                break;
+            }
+        }
+        last.insert(ev.tid, ev.ts_us);
+    }
+    if let Some(counters) = doc.get("metrics").get("counters").as_obj() {
+        for name in counters.keys() {
+            if !counter_name_ok(name) {
+                diags.emit(
+                    LintCode::CounterNaming,
+                    loc,
+                    format!("counter {name:?} is not subsystem.noun.verb"),
+                );
+            }
+        }
+    }
+}
+
+/// Audit one trace file on disk.
+pub fn lint_trace_file(path: &Path, diags: &mut Diagnostics) {
+    let loc = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            diags.emit(LintCode::TraceMalformed, &loc, format!("read failed: {e}"));
+            return;
+        }
+    };
+    match json::parse(&text) {
+        Ok(doc) => lint_trace_doc(&doc, &loc, diags),
+        Err(e) => diags.emit(LintCode::TraceMalformed, &loc, format!("parse failed: {e}")),
+    }
+}
+
+/// Analyzer entry point: audit every trace file handed to the run.
+pub fn run(ctx: &CheckContext, diags: &mut Diagnostics) {
+    if ctx.traces.is_empty() {
+        diags.emit(LintCode::AuditSkipped, "obs", "no traces to audit");
+        return;
+    }
+    for p in &ctx.traces {
+        lint_trace_file(p, diags);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(text: &str) -> Vec<&'static str> {
+        let mut d = Diagnostics::new("obs");
+        lint_trace_doc(&json::parse(text).unwrap(), "trace", &mut d);
+        d.as_slice().iter().map(|x| x.code.code()).collect()
+    }
+
+    fn event(name: &str, ph: &str, ts: f64) -> String {
+        format!(
+            r#"{{"cat":"adaptgear","name":"{name}","ph":"{ph}","pid":1,"tid":1,"ts":{ts}}}"#
+        )
+    }
+
+    #[test]
+    fn naming_rule() {
+        assert!(counter_name_ok("plan.cache.hit"));
+        assert!(counter_name_ok("stream.delta.applied"));
+        assert!(!counter_name_ok("sample.batches"));
+        assert!(!counter_name_ok("a.b.c.d"));
+        assert!(!counter_name_ok("Plan.Cache.Hit"));
+        assert!(!counter_name_ok("plan..hit"));
+    }
+
+    #[test]
+    fn paired_trace_is_clean() {
+        let doc = format!(
+            r#"{{"traceEvents":[{},{}],"metrics":{{"counters":{{"plan.cache.hit":1}}}}}}"#,
+            event("plan.sweep", "B", 1.0),
+            event("plan.sweep", "E", 2.0)
+        );
+        assert!(lint(&doc).is_empty());
+    }
+
+    #[test]
+    fn crossed_spans_are_ag040() {
+        let doc = format!(
+            r#"{{"traceEvents":[{},{},{},{}]}}"#,
+            event("a", "B", 1.0),
+            event("b", "B", 2.0),
+            event("a", "E", 3.0),
+            event("b", "E", 4.0)
+        );
+        assert!(lint(&doc).contains(&"AG040"));
+    }
+
+    #[test]
+    fn backwards_clock_is_ag041() {
+        let doc = format!(
+            r#"{{"traceEvents":[{},{}]}}"#,
+            event("a", "B", 5.0),
+            event("a", "E", 1.0)
+        );
+        assert!(lint(&doc).contains(&"AG041"));
+    }
+
+    #[test]
+    fn bad_counter_name_is_ag042_warn() {
+        let doc = r#"{"traceEvents":[],"metrics":{"counters":{"bad":1}}}"#;
+        let mut d = Diagnostics::new("obs");
+        lint_trace_doc(&json::parse(doc).unwrap(), "trace", &mut d);
+        let only = &d.as_slice()[0];
+        assert_eq!(only.code.code(), "AG042");
+        assert_eq!(only.severity, crate::check::Severity::Warn);
+    }
+}

@@ -1,0 +1,444 @@
+//! Plan analyzer: audits every plan in the `PlanStore` (AG020–AG029,
+//! AG003).
+//!
+//! Three audit tiers, each gated on what can actually be re-derived:
+//!
+//! 1. **Structural** ([`lint_plan_json`], fs-free): the document parses
+//!    as a v3 `GearPlan`, its threshold and class layout are legal, all
+//!    numerics are finite, the sweep provenance is self-consistent, and
+//!    every chosen kernel is the argmin of its persisted candidate
+//!    costs. `PlanStore::save` runs exactly this tier as its
+//!    debug-build self-check.
+//! 2. **Re-derivation**: for plans labeled with a known synthetic
+//!    dataset, rebuild the graph from `(dataset, scale, seed)`,
+//!    redecompose, and re-check the v3 fingerprint (AG024) plus
+//!    `GearAssignment::covers()` (AG025). Skipped with AG000 when the
+//!    topology is unrecoverable (anonymous graphs, streamed versions).
+//! 3. **Bucket**: against the artifacts manifest, re-check edge-cap
+//!    admissibility of the lowered operands (AG026) and recompute
+//!    hybrid per-class analytic costs via `class_kernel_cost` to catch
+//!    cost-model drift (AG028, Warn).
+//!
+//! Argmin severity (AG027) honors the plan's clock: analytic/sim plans
+//! persisted the exact numbers the decision was made from, so a
+//! mismatch is an Error; wall-clock plans recorded measurements whose
+//! re-ranking is expected jitter, so it degrades to Warn.
+
+use std::path::Path;
+
+use crate::check::{CheckContext, Diagnostics, LintCode, Severity};
+use crate::coordinator::pipeline::propagation_for;
+use crate::gpusim::{class_kernel_cost, ClassDims, GpuModel};
+use crate::graph::datasets;
+use crate::kernels::KernelKind;
+use crate::partition::Decomposition;
+use crate::plan::{Fingerprint, GearPlan, SubgraphClass};
+use crate::runtime::{BucketInfo, Manifest};
+use crate::util::json::{self, Json};
+
+pub const CODES: &[LintCode] = &[
+    LintCode::AuditSkipped,
+    LintCode::NonFinite,
+    LintCode::PlanUnreadable,
+    LintCode::PlanFilenameMismatch,
+    LintCode::PlanStructure,
+    LintCode::PlanFingerprintMismatch,
+    LintCode::PlanCoverage,
+    LintCode::PlanEdgeCap,
+    LintCode::PlanNotArgmin,
+    LintCode::PlanCostDrift,
+    LintCode::PlanProvenance,
+];
+
+/// Candidate outcome labels `SweepProvenance` is allowed to record.
+const OUTCOMES: [&str; 5] =
+    ["chosen", "uniform_dense", "uniform_sparse", "considered", "rejected_edge_cap"];
+
+/// Tier-1 structural audit of one plan document. Returns the decoded
+/// plan when it parsed, so callers can continue to deeper tiers; emits
+/// and returns `None` when it did not.
+pub fn lint_plan_json(doc: &Json, loc: &str, diags: &mut Diagnostics) -> Option<GearPlan> {
+    let plan = match GearPlan::from_json(doc) {
+        Ok(p) => p,
+        Err(e) => {
+            diags.emit(LintCode::PlanUnreadable, loc, format!("{e:#}"));
+            return None;
+        }
+    };
+    lint_structure(&plan, loc, diags);
+    lint_finite(&plan, loc, diags);
+    lint_provenance(&plan, loc, diags);
+    lint_argmin(&plan, loc, diags);
+    Some(plan)
+}
+
+/// AG022: threshold range, class layout, dense-class kernel pin.
+fn lint_structure(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
+    let a = &plan.assignment;
+    if !(0.0..=2.0).contains(&a.threshold) {
+        diags.emit(
+            LintCode::PlanStructure,
+            loc,
+            format!("threshold {} outside [0, 2]", a.threshold),
+        );
+    }
+    let inter_count = a.classes.iter().filter(|c| c.class == SubgraphClass::Inter).count();
+    let last_is_inter = a.classes.last().map(|c| c.class) == Some(SubgraphClass::Inter);
+    if inter_count != 1 || !last_is_inter {
+        diags.emit(
+            LintCode::PlanStructure,
+            loc,
+            format!("want exactly one trailing inter class, got {inter_count} in {:?} order", {
+                a.classes.iter().map(|c| c.class.as_str()).collect::<Vec<_>>()
+            }),
+        );
+    }
+    for pair in a.classes.windows(2) {
+        if pair[0].class == pair[1].class {
+            diags.emit(
+                LintCode::PlanStructure,
+                loc,
+                format!("duplicate class {}", pair[0].class.as_str()),
+            );
+        }
+    }
+    for c in &a.classes {
+        if c.class == SubgraphClass::DenseIntra && c.kernel != KernelKind::DenseBlock {
+            diags.emit(
+                LintCode::PlanStructure,
+                loc,
+                format!("dense_intra class runs {} (must be dense_block)", c.kernel.as_str()),
+            );
+        }
+    }
+}
+
+/// AG003: every numeric field a plan persists must be finite. The JSON
+/// writer rejects non-finite floats outright, but plans can also arrive
+/// from other writers (`1e999` parses as +inf), so the analyzer checks
+/// semantically.
+fn lint_finite(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
+    let mut bad = |field: &str, v: f64, diags: &mut Diagnostics| {
+        if !v.is_finite() {
+            diags.emit(LintCode::NonFinite, loc, format!("{field} = {v}"));
+        }
+    };
+    bad("scale", plan.scale, diags);
+    bad("assignment.threshold", plan.assignment.threshold, diags);
+    bad("monitor_overhead_us", plan.monitor_overhead_us, diags);
+    for c in &plan.assignment.classes {
+        bad(&format!("class {} time_us", c.class.as_str()), c.time_us, diags);
+    }
+    for (name, map) in [("intra_times", &plan.intra_times), ("inter_times", &plan.inter_times)] {
+        for (k, &v) in map {
+            bad(&format!("{name}[{k}]"), v, diags);
+        }
+    }
+    for (field, v) in [
+        ("projected.aggregate_us", plan.projected.aggregate_us),
+        ("projected.update_us", plan.projected.update_us),
+        ("projected.overhead_us", plan.projected.overhead_us),
+    ] {
+        bad(field, v, diags);
+    }
+    if let Some(p) = &plan.assignment.provenance {
+        bad("provenance.threshold", p.threshold, diags);
+        for cc in &p.class_costs {
+            for (k, &v) in &cc.costs {
+                bad(&format!("provenance.class_costs[{}][{k}]", cc.class.as_str()), v, diags);
+            }
+        }
+        for cand in &p.candidates {
+            bad("provenance.candidate.threshold", cand.threshold, diags);
+            if let Some(t) = cand.total_us {
+                bad("provenance.candidate.total_us", t, diags);
+            }
+        }
+    }
+}
+
+/// AG029: the sweep provenance must describe the assignment it rides
+/// on — same threshold, only known outcome labels.
+fn lint_provenance(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
+    let Some(p) = &plan.assignment.provenance else { return };
+    if p.threshold != plan.assignment.threshold {
+        diags.emit(
+            LintCode::PlanProvenance,
+            loc,
+            format!(
+                "provenance threshold {} != assignment threshold {}",
+                p.threshold, plan.assignment.threshold
+            ),
+        );
+    }
+    for cand in &p.candidates {
+        if !OUTCOMES.contains(&cand.outcome.as_str()) {
+            diags.emit(
+                LintCode::PlanProvenance,
+                loc,
+                format!("unknown candidate outcome {:?}", cand.outcome),
+            );
+        }
+    }
+}
+
+/// AG027: each class's chosen kernel must be the argmin of the
+/// candidate costs the sweep persisted for it. Pinned slots are
+/// exempt: the dense class always runs dense_block (AG022 owns that),
+/// and a lone sparse class is pinned to csr_intra by the two-slot
+/// lowering even when coo prices lower.
+fn lint_argmin(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
+    let Some(prov) = &plan.assignment.provenance else { return };
+    let analytic = matches!(plan.provenance.clock.as_str(), "analytic" | "sim");
+    let severity = if analytic { Severity::Error } else { Severity::Warn };
+    for c in &plan.assignment.classes {
+        // Uniform plans keep the sweep's provenance but rebuild the
+        // assignment from the planner's own winner, so a class without
+        // a matching candidate row is expected — skip, don't guess.
+        let Some(cand) = prov.class_costs.iter().find(|cc| cc.class == c.class) else {
+            continue;
+        };
+        let candidates: &[KernelKind] = match c.class {
+            SubgraphClass::DenseIntra => continue,
+            SubgraphClass::SparseIntra if !plan.assignment.is_hybrid() => continue,
+            SubgraphClass::SparseIntra => &[KernelKind::CsrIntra, KernelKind::Coo],
+            SubgraphClass::Inter => &[KernelKind::CsrInter, KernelKind::Coo],
+        };
+        let Some(&chosen_cost) = cand.costs.get(c.kernel.as_str()) else {
+            diags.emit_with(
+                LintCode::PlanNotArgmin,
+                severity,
+                loc,
+                format!(
+                    "class {} chose {} but no candidate cost was recorded for it",
+                    c.class.as_str(),
+                    c.kernel.as_str()
+                ),
+            );
+            continue;
+        };
+        let min = candidates
+            .iter()
+            .filter_map(|k| cand.costs.get(k.as_str()))
+            .fold(f64::INFINITY, |m, &v| m.min(v));
+        if min.is_finite() && chosen_cost > min * (1.0 + 1e-6) + 1e-9 {
+            diags.emit_with(
+                LintCode::PlanNotArgmin,
+                severity,
+                loc,
+                format!(
+                    "class {} chose {} at {:.3}us but a candidate costs {:.3}us",
+                    c.class.as_str(),
+                    c.kernel.as_str(),
+                    chosen_cost,
+                    min
+                ),
+            );
+        }
+    }
+}
+
+/// Tier-2: rebuild the selection problem from the plan's own labels and
+/// re-check fingerprint + coverage. Emits AG000 when the topology is
+/// not re-derivable from what the plan recorded.
+fn lint_rederive(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
+    if plan.dataset.is_empty() {
+        diags.emit(LintCode::AuditSkipped, loc, "anonymous graph: fingerprint not re-derivable");
+        return;
+    }
+    let Some(spec) = datasets::find(&plan.dataset) else {
+        diags.emit(
+            LintCode::AuditSkipped,
+            loc,
+            format!("dataset {:?} unknown: fingerprint not re-derivable", plan.dataset),
+        );
+        return;
+    };
+    if !(plan.scale > 0.0 && plan.scale <= 1.0) {
+        diags.emit(LintCode::AuditSkipped, loc, format!("scale {} not stageable", plan.scale));
+        return;
+    }
+    if plan.graph_version > 0 {
+        diags.emit(
+            LintCode::AuditSkipped,
+            loc,
+            format!("graph_version {}: mutated topology not re-derivable", plan.graph_version),
+        );
+        return;
+    }
+    let data = spec.build_scaled(plan.scale, plan.seed);
+    let d = Decomposition::build(
+        &data.graph,
+        plan.reorder,
+        propagation_for(plan.model),
+        plan.community,
+        plan.seed,
+    );
+    let fp = Fingerprint::of_versioned(&d, plan.model, plan.graph_version);
+    if fp != plan.fingerprint {
+        diags.emit(
+            LintCode::PlanFingerprintMismatch,
+            loc,
+            format!("stored {} but topology re-derives {fp}", plan.fingerprint),
+        );
+        return;
+    }
+    if let Err(e) = plan.assignment.covers(&d) {
+        diags.emit(LintCode::PlanCoverage, loc, format!("{e:#}"));
+    }
+}
+
+/// Tier-3: audits that need the bucket geometry from the manifest.
+fn lint_against_bucket(plan: &GearPlan, bucket: &BucketInfo, loc: &str, diags: &mut Diagnostics) {
+    // AG026 — the two-slot lowering packs the first intra class into
+    // the intra operand and merges every later (sparse) class into the
+    // inter operand; that merged operand must fit the bucket edge cap,
+    // exactly as the sweep's admissibility veto priced it.
+    let merged: usize = plan
+        .assignment
+        .classes
+        .iter()
+        .filter(|c| c.class.is_intra())
+        .skip(1)
+        .map(|c| c.nnz)
+        .sum();
+    let inter_nnz: usize = plan
+        .assignment
+        .classes
+        .iter()
+        .filter(|c| c.class == SubgraphClass::Inter)
+        .map(|c| c.nnz)
+        .sum();
+    if merged + inter_nnz > bucket.edges {
+        diags.emit(
+            LintCode::PlanEdgeCap,
+            loc,
+            format!(
+                "inter operand holds {} edges (inter {inter_nnz} + merged {merged}) but bucket {} caps at {}",
+                merged + inter_nnz,
+                bucket.name,
+                bucket.edges
+            ),
+        );
+    }
+    // AG028 — hybrid intra classes persist the analytic sweep's
+    // mean-width class costs verbatim (whatever the plan's clock), so
+    // they must recompute from `class_kernel_cost` on today's model.
+    if !plan.assignment.is_hybrid() {
+        return;
+    }
+    let Some(gpu) = GpuModel::by_name(&plan.provenance.gpu) else {
+        diags.emit(
+            LintCode::AuditSkipped,
+            loc,
+            format!("gpu {:?} unknown: cost drift not recomputable", plan.provenance.gpu),
+        );
+        return;
+    };
+    let widths = [bucket.features, bucket.hidden];
+    for c in plan.assignment.classes.iter().filter(|c| c.class.is_intra()) {
+        if !matches!(c.kernel, KernelKind::CsrIntra | KernelKind::DenseBlock | KernelKind::Coo) {
+            continue;
+        }
+        let dims = ClassDims { kind: c.kernel, blocks: c.blocks, rows: c.rows, nnz: c.nnz };
+        let mean: f64 = widths
+            .iter()
+            .map(|&w| class_kernel_cost(&dims, w, plan.community, gpu).time_us)
+            .sum::<f64>()
+            / widths.len() as f64;
+        let rel = (mean - c.time_us).abs() / mean.abs().max(1e-12);
+        if rel > 1e-3 {
+            diags.emit(
+                LintCode::PlanCostDrift,
+                loc,
+                format!(
+                    "class {}: recorded {:.3}us, cost model now says {:.3}us (rel {:.2e})",
+                    c.class.as_str(),
+                    c.time_us,
+                    mean,
+                    rel
+                ),
+            );
+        }
+    }
+}
+
+/// Full three-tier audit of one plan file on disk.
+pub fn lint_plan_file(path: &Path, manifest: Option<&Manifest>, diags: &mut Diagnostics) {
+    let loc = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            diags.emit(LintCode::PlanUnreadable, &loc, format!("read failed: {e}"));
+            return;
+        }
+    };
+    let doc = match json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            diags.emit(LintCode::PlanUnreadable, &loc, format!("parse failed: {e}"));
+            return;
+        }
+    };
+    let Some(plan) = lint_plan_json(&doc, &loc, diags) else { return };
+    // AG021 — the store keys files by fingerprint; a renamed or
+    // hand-edited file would serve the wrong selection problem.
+    let want = format!("plan_{}.json", plan.fingerprint);
+    if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+        if name != want {
+            diags.emit(
+                LintCode::PlanFilenameMismatch,
+                &loc,
+                format!("file {name} holds fingerprint {}", plan.fingerprint),
+            );
+        }
+    }
+    lint_rederive(&plan, &loc, diags);
+    match manifest.and_then(|m| m.buckets.get(&plan.bucket)) {
+        Some(bucket) => lint_against_bucket(&plan, bucket, &loc, diags),
+        None => diags.emit(
+            LintCode::AuditSkipped,
+            &loc,
+            format!("bucket {:?} not in manifest: edge-cap/cost-drift audit skipped", plan.bucket),
+        ),
+    }
+}
+
+/// Analyzer entry point: audit every `plans/plan_*.json` under the
+/// artifacts dir.
+pub fn run(ctx: &CheckContext, diags: &mut Diagnostics) {
+    if !ctx.plans {
+        diags.emit(LintCode::AuditSkipped, "plans", "no plan store to audit");
+        return;
+    }
+    let dir = ctx.artifacts.join("plans");
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            diags.emit(
+                LintCode::AuditSkipped,
+                dir.display().to_string(),
+                format!("plan store unreadable: {e}"),
+            );
+            return;
+        }
+    };
+    let manifest = Manifest::load(&ctx.artifacts).ok();
+    let mut paths: Vec<_> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("plan_") && n.ends_with(".json"))
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        diags.emit(LintCode::AuditSkipped, dir.display().to_string(), "plan store is empty");
+        return;
+    }
+    for p in &paths {
+        lint_plan_file(p, manifest.as_ref(), diags);
+    }
+}

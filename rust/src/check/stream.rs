@@ -1,0 +1,242 @@
+//! Stream analyzer: serialized delta logs and their static replay
+//! (AG030–AG034, AG003).
+//!
+//! The audit is two-phase. A raw scan over the JSON distinguishes the
+//! failure modes `DeltaLog::from_json` folds into one error — version
+//! gaps (AG030) vs malformed entries (AG031) vs non-finite weights
+//! (AG003) — and keeps scanning past the first finding. When the scan
+//! is clean, the log is replayed through a fresh [`CsrOverlay`] over an
+//! empty base: the ops must apply (AG032), the merged result must be
+//! symmetric — the overlay mirrors every edge op, so an asymmetric
+//! replay means the pairing contract broke (AG033) — and the overlay
+//! must not stage more rows than the edge ops addressed, i.e. no-op
+//! deletes and reweights never cost a copy-on-write (AG034).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::check::{CheckContext, Diagnostics, LintCode};
+use crate::graph::Csr;
+use crate::stream::{CsrOverlay, DeltaLog, DeltaOp};
+use crate::util::json::{self, Json};
+
+pub const CODES: &[LintCode] = &[
+    LintCode::AuditSkipped,
+    LintCode::NonFinite,
+    LintCode::DeltaVersionGap,
+    LintCode::DeltaMalformed,
+    LintCode::DeltaReplayFailure,
+    LintCode::DeltaAsymmetry,
+    LintCode::DeltaOverStaging,
+];
+
+const OPS: [&str; 4] = ["insert_edge", "delete_edge", "reweight", "add_vertices"];
+
+/// Audit one serialized delta-log document. `DeltaLog::to_json` runs
+/// this as its debug-build self-check.
+pub fn lint_delta_log_json(doc: &Json, loc: &str, diags: &mut Diagnostics) {
+    let Some(raw) = doc.get("deltas").as_arr() else {
+        diags.emit(LintCode::DeltaMalformed, loc, "missing 'deltas' array");
+        return;
+    };
+    let mut clean = true;
+    for (i, e) in raw.iter().enumerate() {
+        let at = format!("{loc} delta {i}");
+        match e.get("version").as_str().and_then(|s| s.parse::<u64>().ok()) {
+            Some(v) if v == i as u64 + 1 => {}
+            Some(v) => {
+                diags.emit(
+                    LintCode::DeltaVersionGap,
+                    &at,
+                    format!("version {v}, expected {} (1-based, contiguous)", i + 1),
+                );
+                clean = false;
+            }
+            None => {
+                diags.emit(LintCode::DeltaMalformed, &at, "missing or non-numeric version string");
+                clean = false;
+            }
+        }
+        let Some(kind) = e.get("op").as_str() else {
+            diags.emit(LintCode::DeltaMalformed, &at, "missing op");
+            clean = false;
+            continue;
+        };
+        if !OPS.contains(&kind) {
+            diags.emit(LintCode::DeltaMalformed, &at, format!("unknown op {kind:?}"));
+            clean = false;
+            continue;
+        }
+        let need: &[&str] = match kind {
+            "insert_edge" | "reweight" => &["u", "v", "w"],
+            "delete_edge" => &["u", "v"],
+            _ => &["count"],
+        };
+        for field in need {
+            if e.get(field).as_f64().is_none() {
+                diags.emit(LintCode::DeltaMalformed, &at, format!("missing field {field:?}"));
+                clean = false;
+            } else if *field == "w" && !e.get(field).as_f64().unwrap().is_finite() {
+                // The writer refuses non-finite floats, but `1e999`
+                // parses as +inf, so a foreign log can still carry one.
+                diags.emit(
+                    LintCode::NonFinite,
+                    &at,
+                    format!("weight = {}", e.get(field).as_f64().unwrap()),
+                );
+                clean = false;
+            }
+        }
+    }
+    if !clean {
+        return;
+    }
+    let log = match DeltaLog::from_json(doc) {
+        Ok(l) => l,
+        Err(e) => {
+            diags.emit(LintCode::DeltaMalformed, loc, format!("{e:#}"));
+            return;
+        }
+    };
+    replay(&log, loc, diags);
+}
+
+/// Static replay over an empty base sized to cover every addressed
+/// vertex: the log must apply cleanly and land in a symmetric,
+/// minimally-staged overlay.
+fn replay(log: &DeltaLog, loc: &str, diags: &mut Diagnostics) {
+    let mut n = 1usize;
+    let mut touched: BTreeSet<u32> = BTreeSet::new();
+    for d in log.entries() {
+        match d.op {
+            DeltaOp::InsertEdge { u, v, .. } | DeltaOp::DeleteEdge { u, v } => {
+                n = n.max(u as usize + 1).max(v as usize + 1);
+                touched.insert(u);
+                touched.insert(v);
+            }
+            DeltaOp::Reweight { u, v, .. } => {
+                n = n.max(u as usize + 1).max(v as usize + 1);
+            }
+            DeltaOp::AddVertices { .. } => {}
+        }
+    }
+    let mut overlay = CsrOverlay::new(Csr::from_triplets(n, n, vec![]));
+    for d in log.entries() {
+        if let Err(e) = overlay.apply(d) {
+            diags.emit(
+                LintCode::DeltaReplayFailure,
+                loc,
+                format!("version {} ({}): {e:#}", d.version, d.op.kind()),
+            );
+            return;
+        }
+    }
+    if !overlay.to_csr().is_symmetric(1e-6) {
+        diags.emit(
+            LintCode::DeltaAsymmetry,
+            loc,
+            "replayed overlay is asymmetric: edge mirroring was lost",
+        );
+    }
+    if overlay.staged_rows() > touched.len() {
+        diags.emit(
+            LintCode::DeltaOverStaging,
+            loc,
+            format!(
+                "{} rows staged but only {} rows addressed by edge ops",
+                overlay.staged_rows(),
+                touched.len()
+            ),
+        );
+    }
+}
+
+/// Audit one delta-log file on disk.
+pub fn lint_delta_file(path: &Path, diags: &mut Diagnostics) {
+    let loc = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            diags.emit(LintCode::DeltaMalformed, &loc, format!("read failed: {e}"));
+            return;
+        }
+    };
+    match json::parse(&text) {
+        Ok(doc) => lint_delta_log_json(&doc, &loc, diags),
+        Err(e) => diags.emit(LintCode::DeltaMalformed, &loc, format!("parse failed: {e}")),
+    }
+}
+
+/// Analyzer entry point: audit every delta-log file handed to the run.
+pub fn run(ctx: &CheckContext, diags: &mut Diagnostics) {
+    if ctx.deltas.is_empty() {
+        diags.emit(LintCode::AuditSkipped, "stream", "no delta logs to audit");
+        return;
+    }
+    for p in &ctx.deltas {
+        lint_delta_file(p, diags);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(doc: &Json) -> Vec<&'static str> {
+        let mut d = Diagnostics::new("stream");
+        lint_delta_log_json(doc, "log", &mut d);
+        d.as_slice().iter().map(|x| x.code.code()).collect()
+    }
+
+    fn sample_log() -> DeltaLog {
+        let mut log = DeltaLog::new();
+        log.append(DeltaOp::InsertEdge { u: 0, v: 5, w: 1.0 });
+        log.append(DeltaOp::Reweight { u: 0, v: 5, w: 0.5 });
+        log.append(DeltaOp::DeleteEdge { u: 2, v: 3 }); // no-op delete
+        log.append(DeltaOp::AddVertices { count: 2 });
+        log
+    }
+
+    #[test]
+    fn serialized_log_is_clean() {
+        assert!(lint(&sample_log().to_json()).is_empty());
+    }
+
+    #[test]
+    fn version_gap_is_ag030() {
+        let doc = json::parse(
+            r#"{"version":1,"deltas":[
+                {"version":"1","op":"insert_edge","u":0,"v":1,"w":1},
+                {"version":"3","op":"delete_edge","u":0,"v":1}]}"#,
+        )
+        .unwrap();
+        assert!(lint(&doc).contains(&"AG030"));
+    }
+
+    #[test]
+    fn unknown_op_is_ag031() {
+        let doc = json::parse(
+            r#"{"version":1,"deltas":[{"version":"1","op":"merge_edge","u":0,"v":1}]}"#,
+        )
+        .unwrap();
+        assert!(lint(&doc).contains(&"AG031"));
+    }
+
+    #[test]
+    fn infinite_weight_is_ag003() {
+        let doc = json::parse(
+            r#"{"version":1,"deltas":[{"version":"1","op":"insert_edge","u":0,"v":1,"w":1e999}]}"#,
+        )
+        .unwrap();
+        assert!(lint(&doc).contains(&"AG003"));
+    }
+
+    #[test]
+    fn replay_stays_minimal() {
+        // The no-op delete and the reweight must not stage extra rows;
+        // symmetry must survive the round trip.
+        let mut d = Diagnostics::new("stream");
+        lint_delta_log_json(&sample_log().to_json(), "log", &mut d);
+        assert!(d.as_slice().is_empty(), "{:?}", d.as_slice());
+    }
+}

@@ -26,13 +26,30 @@
 //!   and persisted plan-decision provenance). The [`stream`] subsystem
 //!   (Sec. 12) makes served graphs mutable: a versioned delta log and
 //!   CSR overlay, a per-block density-drift tracker, and an online
-//!   re-planner that swaps refreshed plans into live deployments.
+//!   re-planner that swaps refreshed plans into live deployments. The
+//!   [`check`] subsystem (Sec. 13) statically audits everything the
+//!   others persist: `adaptgear check` runs an analyzer registry with
+//!   stable `AG*` lint codes over plans, delta logs, traces, and bench
+//!   reports, and every artifact writer re-runs its own analyzer as a
+//!   debug-build assertion.
 //!
 //! See `rust/DESIGN.md` for the full architecture inventory, including
 //! the plan lifecycle (Sec. 7), the serving subsystem's channel
 //! topology and SLO semantics, and the benchmarking/CI contract (Sec. 9).
 
+// Crate-wide lint posture (DESIGN.md Sec. 13): no unsafe anywhere —
+// this crate is pure data-structure + orchestration code, and the FFI
+// boundary lives behind the `xla` dependency — and the debug/leak
+// macros stay out of committed code. `ci.sh` enforces the rest via
+// `cargo clippy --all-targets -- -D warnings`.
+#![forbid(unsafe_code)]
+#![warn(clippy::dbg_macro)]
+#![warn(clippy::todo)]
+#![warn(clippy::unimplemented)]
+#![warn(clippy::mem_forget)]
+
 pub mod bench;
+pub mod check;
 pub mod coordinator;
 pub mod graph;
 pub mod gpusim;

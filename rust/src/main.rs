@@ -13,6 +13,7 @@
 //! adaptgear stream --dataset planted-mixed   # mutation workload: deltas -> drift
 //!                                            # tracking -> online replan + swap
 //! adaptgear bench --quick --suite sample     # fixed workload suites -> BENCH_*.json
+//! adaptgear check --plans                    # static invariant audit -> CHECK_report.json
 //! adaptgear selftest                         # artifact <-> runtime smoke check
 //! ```
 //!
@@ -20,6 +21,9 @@
 //!
 //! Figure regeneration lives in the bench harness: `cargo bench --bench
 //! figures -- <fig2b|fig3a|...|all>`.
+
+// Same lint posture as the library crate (DESIGN.md Sec. 13).
+#![forbid(unsafe_code)]
 
 use anyhow::{bail, Context, Result};
 
@@ -61,6 +65,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "stream" => cmd_stream(&args),
         "bench" => cmd_bench(&args),
+        "check" => cmd_check(&args),
         "selftest" => cmd_selftest(&args),
         "help" | "--help" => {
             match args.positional.get(1).and_then(|c| command_help(c)) {
@@ -209,6 +214,24 @@ fn command_help(cmd: &str) -> Option<&'static str> {
              \x20                     regression beyond --tolerance F (default 0.5)\n\n\
              EXAMPLE:\n  adaptgear bench --quick --suite sample"
         }
+        "check" => {
+            "adaptgear check — static invariant audit over everything the system\n\
+             persists: plans in the store (fingerprints, coverage, edge caps, sweep\n\
+             provenance, cost-model drift), delta logs (contiguity + replay), traces\n\
+             (pairing, clocks, counter naming), and BENCH_*.json reports. Runs every\n\
+             analyzer engine-free, writes CHECK_report.json, and exits non-zero when\n\
+             any Error-severity lint (stable AG* codes, DESIGN.md Sec. 13) fires.\n\n\
+             FLAGS:\n\
+             \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
+             \x20 --plans             audit <artifacts>/plans (default: on when present)\n\
+             \x20 --trace FILE        audit a trace file (default: ./TRACE_*.json)\n\
+             \x20 --delta FILE        audit a serialized delta log\n\
+             \x20 --bench DIR         audit BENCH_*.json in DIR (default: . when present)\n\
+             \x20 --baseline DIR      also diff bench metric sets against DIR\n\
+             \x20 --deny warn         promote warnings to errors\n\
+             \x20 --out FILE          report path (default CHECK_report.json)\n\n\
+             EXAMPLE:\n  adaptgear check"
+        }
         "selftest" => {
             "adaptgear selftest — execute every kernel artifact against the native\n\
              Rust kernels on a random decomposed graph and compare numerics.\n\n\
@@ -255,6 +278,11 @@ fn print_help() {
          \x20 bench --check --baseline DIR [--tolerance F] [--out DIR]\n\
          \x20                                   diff emitted reports against committed\n\
          \x20                                   baselines; non-zero exit on regression\n\
+         \x20 check [--plans] [--trace FILE] [--delta FILE] [--bench DIR]\n\
+         \x20       [--baseline DIR] [--deny warn] [--out FILE]\n\
+         \x20                                   static invariant audit (stable AG* lint\n\
+         \x20                                   codes) -> CHECK_report.json; non-zero\n\
+         \x20                                   exit on any Error diagnostic\n\
          \x20 selftest                          verify artifacts + runtime numerics\n\n\
          OBSERVABILITY: pass --trace-out FILE to plan/train/serve to record spans\n\
          and a metrics snapshot into a Perfetto-loadable Chrome trace file.\n\n\
@@ -1037,6 +1065,67 @@ fn cmd_bench(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", BenchConfig::default().seed),
     };
     bench::run_and_write(&suites, &cfg)?;
+    Ok(())
+}
+
+/// Static invariant audit (DESIGN.md Sec. 13): run every registered
+/// analyzer over whatever this checkout holds — the plan store, traces,
+/// delta logs, bench reports — write `CHECK_report.json`, and exit
+/// non-zero when any Error-severity lint fires. Engine-free by
+/// construction: analyzers re-derive, replay, and reprice, but never
+/// execute a training step.
+fn cmd_check(args: &Args) -> Result<()> {
+    use adaptgear::bench::BenchReport;
+    use adaptgear::check::{self, CheckContext};
+    use std::path::PathBuf;
+
+    let artifacts = PathBuf::from(artifacts_dir(args));
+    let deny_warn = match args.get("deny") {
+        None => false,
+        Some("warn") => true,
+        Some(other) => bail!("--deny accepts only 'warn', got {other:?}"),
+    };
+    // Flags select inputs explicitly; with no selection the audit runs
+    // over what it can discover (plans dir, ./TRACE_*.json,
+    // ./BENCH_*.json), so a bare `adaptgear check` audits everything
+    // present and skips — with Info diagnostics — everything absent.
+    let plans = args.flag("plans") || artifacts.join("plans").is_dir();
+    let mut traces: Vec<PathBuf> = args.get("trace").map(PathBuf::from).into_iter().collect();
+    if traces.is_empty() {
+        if let Ok(entries) = std::fs::read_dir(".") {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("TRACE_") && name.ends_with(".json") {
+                    traces.push(e.path());
+                }
+            }
+        }
+        traces.sort();
+    }
+    let deltas: Vec<PathBuf> = args.get("delta").map(PathBuf::from).into_iter().collect();
+    let bench_dir = match args.get("bench") {
+        Some(d) => Some(PathBuf::from(d)),
+        None => {
+            let cwd = PathBuf::from(".");
+            adaptgear::bench::SUITES
+                .iter()
+                .any(|s| BenchReport::path_in(&cwd, s).exists())
+                .then_some(cwd)
+        }
+    };
+    let baseline = args.get("baseline").map(PathBuf::from);
+
+    let ctx = CheckContext { artifacts, plans, traces, deltas, bench_dir, baseline };
+    let report = check::run_all(&ctx, deny_warn);
+    let out = args.get_or("out", "CHECK_report.json");
+    std::fs::write(out, json::write(&report.to_json()))
+        .with_context(|| format!("writing {out}"))?;
+    print!("{}", report.render());
+    println!("report: {out}");
+    if report.errors() > 0 {
+        bail!("{} error diagnostic(s) — see {out}", report.errors());
+    }
     Ok(())
 }
 

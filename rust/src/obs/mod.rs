@@ -14,7 +14,7 @@
 //!   begin/end pairing validation, and a rendered summary tree.
 //!
 //! The streaming subsystem reports through this registry too: the
-//! `stream.delta.applied` and `stream.compaction` counters (overlay
+//! `stream.delta.applied` and `stream.compaction.applied` counters (overlay
 //! mutation volume), the `plan.replan.class` / `plan.replan.sweep`
 //! counters under the `plan.replan` span (online re-planning), and the
 //! `serve.swap.applied` counter under the `serve.swap` span (live plan
@@ -58,6 +58,13 @@ pub fn write_trace(path: &Path) -> Result<Trace> {
     if let Json::Obj(map) = &mut doc {
         map.insert("metrics".to_string(), snapshot().to_json());
     }
+    // Writer/checker anti-drift rule (DESIGN.md Sec. 13): the exported
+    // document must pass the obs analyzer. Counter-naming findings are
+    // Warn-severity (two legacy `sample.*` counters predate the rule),
+    // so only structural trace defects can trip this.
+    crate::check::debug_self_check("obs::write_trace", |d| {
+        crate::check::obs::lint_trace_doc(&doc, &path.display().to_string(), d);
+    });
     std::fs::write(path, json::write(&doc))
         .with_context(|| format!("writing trace to {}", path.display()))?;
     Ok(trace)

@@ -52,7 +52,13 @@ impl PlanStore {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating plan store {}", self.dir.display()))?;
         let path = self.path_for(plan.fingerprint);
-        std::fs::write(&path, json::write(&plan.to_json()))
+        let doc = plan.to_json();
+        // Writer/checker anti-drift rule (DESIGN.md Sec. 13): what the
+        // store writes must pass the plan analyzer's structural tier.
+        crate::check::debug_self_check("PlanStore::save", |d| {
+            crate::check::plan::lint_plan_json(&doc, &path.display().to_string(), d);
+        });
+        std::fs::write(&path, json::write(&doc))
             .with_context(|| format!("writing {}", path.display()))?;
         Ok(path)
     }

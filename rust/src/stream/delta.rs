@@ -129,7 +129,14 @@ impl DeltaLog {
                 Json::obj(fields)
             })
             .collect();
-        Json::obj(vec![("version", Json::num(1.0)), ("deltas", Json::Arr(deltas))])
+        let doc = Json::obj(vec![("version", Json::num(1.0)), ("deltas", Json::Arr(deltas))]);
+        // Writer/checker anti-drift rule (DESIGN.md Sec. 13): the
+        // serialized log must survive the stream analyzer, including
+        // its static replay.
+        crate::check::debug_self_check("DeltaLog::to_json", |d| {
+            crate::check::stream::lint_delta_log_json(&doc, "DeltaLog::to_json", d);
+        });
+        doc
     }
 
     pub fn from_json(v: &Json) -> Result<DeltaLog> {
@@ -450,7 +457,7 @@ impl CsrOverlay {
         self.base = self.to_csr();
         self.rows.clear();
         debug_assert_eq!(self.nnz, self.base.nnz());
-        crate::obs::counter("stream.compaction").inc();
+        crate::obs::counter("stream.compaction.applied").inc();
     }
 }
 

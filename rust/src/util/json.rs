@@ -297,6 +297,12 @@ fn write_into(value: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
+            // JSON has no NaN/Infinity literal: `{n}` would emit a bare
+            // `NaN` that no parser (ours included) reads back. A
+            // non-finite number reaching serialization is a writer bug
+            // upstream — fail here with the field-free context we have
+            // rather than persist an unreadable artifact.
+            assert!(n.is_finite(), "cannot serialize non-finite number {n} as JSON");
             if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
@@ -346,6 +352,26 @@ fn write_into(value: &Json, out: &mut String) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn refuses_to_write_nan() {
+        write(&Json::Num(f64::NAN));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn refuses_to_write_infinity() {
+        write(&Json::obj(vec![("w", Json::Num(f64::INFINITY))]));
+    }
+
+    #[test]
+    fn overflowing_literal_still_parses_as_infinity() {
+        // Rust's f64 parser saturates `1e999` to +inf, so non-finite
+        // values CAN still enter through `parse` from foreign writers —
+        // that ingress path is what lint AG003 audits semantically.
+        assert_eq!(parse("1e999").unwrap(), Json::Num(f64::INFINITY));
+    }
 
     #[test]
     fn parses_scalars() {

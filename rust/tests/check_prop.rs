@@ -1,0 +1,397 @@
+//! Property + mutation tests for `adaptgear check` (DESIGN.md Sec. 13).
+//!
+//! The property side pins the writer/checker contract from the outside:
+//! every artifact the system persists through its public writers — a
+//! plan via [`PlanStore::save`], a serialized [`DeltaLog`], a
+//! [`BenchReport`] from each of the six suites, a Chrome trace via
+//! `obs::write_trace` — must come back from `check::run_all` with zero
+//! Error diagnostics. The mutation side pins the other direction: for
+//! each analyzer, corrupting exactly one invariant in an otherwise
+//! clean artifact must surface the documented stable lint code.
+//!
+//! Tests share one process-wide lock: `obs` spans drain through a
+//! global registry (`take_trace`), so the trace-writing test must not
+//! race parallel tests whose library calls open spans mid-drain.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use adaptgear::bench::{self, BenchConfig, BenchReport};
+use adaptgear::check::{self, CheckContext, CheckReport, Diagnostics, LintCode};
+use adaptgear::coordinator::{pipeline, ModelKind};
+use adaptgear::graph::datasets;
+use adaptgear::graph::generate::planted_partition;
+use adaptgear::gpusim::A100;
+use adaptgear::partition::{Decomposition, Reorder};
+use adaptgear::plan::{GearPlan, PlanRequest, PlanStore, Planner, SimCostPlanner};
+use adaptgear::runtime::BucketInfo;
+use adaptgear::stream::{DeltaLog, DeltaOp};
+use adaptgear::util::json::{self, Json};
+use adaptgear::util::rng::Rng;
+
+/// Serializes the whole file: see module docs.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("adaptgear-checkprop-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bucket(vertices: usize, blocks: usize) -> BucketInfo {
+    BucketInfo {
+        name: format!("b{vertices}"),
+        vertices,
+        edges: 1 << 20,
+        features: 32,
+        hidden: 32,
+        classes: 8,
+        blocks,
+    }
+}
+
+/// An anonymous plan (empty dataset label): tier-1 structural audit in
+/// full, re-derivation skipped with AG000.
+fn anonymous_plan(seed: u64) -> GearPlan {
+    let g = planted_partition(256, 16, 0.5, 0.02, &mut Rng::new(seed));
+    let prop = pipeline::propagation_for(ModelKind::Gcn);
+    let d = Decomposition::build(&g, Reorder::Metis, prop, 16, seed);
+    let b = bucket(256, 16);
+    SimCostPlanner::new(&A100).plan(&PlanRequest::new(&d, ModelKind::Gcn, &b)).unwrap()
+}
+
+/// A fully labeled plan over a registered synthetic dataset: the
+/// analyzer can rebuild the topology from `(dataset, scale, seed)` and
+/// actually exercise the AG024/AG025 re-derivation tier.
+fn labeled_plan() -> GearPlan {
+    let spec = datasets::find("planted-mixed").unwrap();
+    // 512 / 524288: exactly representable, so the scale survives the
+    // JSON roundtrip bit-for-bit and the re-derived graph is identical.
+    let scale = 512.0 / spec.vertices as f64;
+    let data = spec.build_scaled(scale, 0);
+    let d = Decomposition::build(
+        &data.graph,
+        Reorder::Metis,
+        pipeline::propagation_for(ModelKind::Gcn),
+        datasets::COMMUNITY,
+        0,
+    );
+    let b = bucket(d.graph.n, d.graph.n / datasets::COMMUNITY);
+    let req =
+        PlanRequest::labeled(&d, ModelKind::Gcn, &b, "planted-mixed", scale, Reorder::Metis, 0);
+    SimCostPlanner::new(&A100).plan(&req).unwrap()
+}
+
+fn sample_log() -> DeltaLog {
+    let mut log = DeltaLog::new();
+    log.append(DeltaOp::InsertEdge { u: 0, v: 5, w: 1.0 });
+    log.append(DeltaOp::Reweight { u: 0, v: 5, w: 0.5 });
+    log.append(DeltaOp::DeleteEdge { u: 2, v: 3 }); // no-op delete
+    log.append(DeltaOp::AddVertices { count: 2 });
+    log
+}
+
+fn codes(report: &CheckReport) -> Vec<&'static str> {
+    report.diagnostics.iter().map(|d| d.code.code()).collect()
+}
+
+fn error_codes(report: &CheckReport) -> Vec<&'static str> {
+    report
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity == check::Severity::Error)
+        .map(|d| d.code.code())
+        .collect()
+}
+
+fn ctx(artifacts: &Path) -> CheckContext {
+    CheckContext {
+        artifacts: artifacts.to_path_buf(),
+        plans: artifacts.join("plans").is_dir(),
+        traces: vec![],
+        deltas: vec![],
+        bench_dir: None,
+        baseline: None,
+    }
+}
+
+/// Rewrite one JSON file through `f` (parse, mutate, serialize).
+fn mutate_json(path: &Path, f: impl FnOnce(&mut BTreeMap<String, Json>)) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut doc = json::parse(&text).unwrap();
+    let Json::Obj(map) = &mut doc else { panic!("{} is not an object", path.display()) };
+    f(map);
+    std::fs::write(path, json::write(&doc)).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Property: everything the system writes passes its own audit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_written_artifact_passes_check_with_zero_errors() {
+    let _g = lock();
+    let root = tmpdir("clean");
+
+    // Plans: one anonymous (re-derivation must skip, not fail), one
+    // labeled (re-derivation must run and agree).
+    let store = PlanStore::in_artifacts(&root);
+    store.save(&anonymous_plan(1)).unwrap();
+    let labeled = labeled_plan();
+    assert!(!labeled.dataset.is_empty());
+    store.save(&labeled).unwrap();
+
+    // Delta log with all four op kinds, serialized to disk.
+    let delta_path = root.join("deltas.json");
+    std::fs::write(&delta_path, json::write(&sample_log().to_json())).unwrap();
+
+    // All six bench suites, quick profile, engine-free.
+    let bench_dir = root.join("bench");
+    let cfg = BenchConfig {
+        quick: true,
+        artifacts: root.join("no-such-artifacts").display().to_string(),
+        out: bench_dir.clone(),
+        seed: 7,
+    };
+    for suite in bench::SUITES {
+        let report = bench::run_suite(suite, &cfg).unwrap();
+        report.write_at(&bench_dir).unwrap();
+    }
+
+    // A real trace through the real exporter: nested spans + counters.
+    // (Bench suites above ran before `install`, so only the spans below
+    // are recorded; global counters ride along in the snapshot.)
+    adaptgear::obs::install();
+    {
+        let _outer = adaptgear::obs::span("train.step");
+        let _inner = adaptgear::obs::span("train.aggregate");
+        adaptgear::obs::counter("check.prop.ticks").inc();
+    }
+    let trace_path = root.join("TRACE_check.json");
+    adaptgear::obs::write_trace(&trace_path).unwrap();
+
+    let report = check::run_all(
+        &CheckContext {
+            traces: vec![trace_path],
+            deltas: vec![delta_path],
+            bench_dir: Some(bench_dir),
+            ..ctx(&root)
+        },
+        false,
+    );
+    assert_eq!(
+        report.errors(),
+        0,
+        "fresh artifacts must audit clean:\n{}",
+        report.render()
+    );
+    // The anonymous plan and the missing manifest must surface as
+    // explicit Info skips, not silence.
+    assert!(report.infos() > 0, "expected AG000 skips:\n{}", report.render());
+    assert!(codes(&report).contains(&"AG000"));
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// Mutations: one corrupted invariant per analyzer => its documented code.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_mutation_duplicate_perm_entry_is_ag006() {
+    let _g = lock();
+    let g = planted_partition(128, 16, 0.4, 0.02, &mut Rng::new(3));
+    let prop = pipeline::propagation_for(ModelKind::Gcn);
+    let mut d = Decomposition::build(&g, Reorder::Metis, prop, 16, 3);
+    d.perm[0] = d.perm[1]; // no longer a bijection
+    let mut diags = Diagnostics::new("graph");
+    check::graph::lint_decomposition(&d, &mut diags);
+    assert!(
+        diags.as_slice().iter().any(|x| x.code == LintCode::BadPermutation),
+        "{:?}",
+        diags.as_slice()
+    );
+}
+
+#[test]
+fn plan_mutation_bad_threshold_is_ag022() {
+    let _g = lock();
+    let root = tmpdir("plan-mut");
+    let store = PlanStore::in_artifacts(&root);
+    let path = store.save(&anonymous_plan(2)).unwrap();
+    assert_eq!(error_codes(&check::run_all(&ctx(&root), false)), Vec::<&str>::new());
+
+    mutate_json(&path, |map| {
+        let Some(Json::Obj(a)) = map.get_mut("assignment") else { panic!("no assignment") };
+        a.insert("threshold".into(), Json::num(-1.0));
+    });
+    let report = check::run_all(&ctx(&root), false);
+    assert!(error_codes(&report).contains(&"AG022"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn plan_mutation_renamed_file_is_ag021() {
+    let _g = lock();
+    let root = tmpdir("plan-rename");
+    let store = PlanStore::in_artifacts(&root);
+    let path = store.save(&anonymous_plan(4)).unwrap();
+    std::fs::rename(&path, store.dir().join("plan_0000000000000000.json")).unwrap();
+    let report = check::run_all(&ctx(&root), false);
+    assert!(error_codes(&report).contains(&"AG021"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn plan_mutation_tampered_fingerprint_is_ag024() {
+    let _g = lock();
+    let root = tmpdir("plan-fp");
+    let store = PlanStore::in_artifacts(&root);
+    let path = store.save(&labeled_plan()).unwrap();
+    // Keep file name and fingerprint consistent (dodging AG021) but
+    // point both at a fingerprint the labeled topology does not derive.
+    mutate_json(&path, |map| {
+        map.insert("fingerprint".into(), Json::str("00000000deadbeef"));
+    });
+    std::fs::rename(&path, store.dir().join("plan_00000000deadbeef.json")).unwrap();
+    let report = check::run_all(&ctx(&root), false);
+    assert!(error_codes(&report).contains(&"AG024"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn stream_mutation_version_gap_is_ag030() {
+    let _g = lock();
+    let root = tmpdir("stream-mut");
+    let path = root.join("deltas.json");
+    let doc = json::write(&sample_log().to_json());
+    std::fs::write(&path, doc.replace(r#""version":"4""#, r#""version":"9""#)).unwrap();
+    let report = check::run_all(
+        &CheckContext { deltas: vec![path], ..ctx(&root) },
+        false,
+    );
+    assert!(error_codes(&report).contains(&"AG030"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn obs_mutation_crossed_spans_are_ag040() {
+    let _g = lock();
+    let root = tmpdir("obs-mut");
+    let path = root.join("TRACE_bad.json");
+    std::fs::write(
+        &path,
+        r#"{"traceEvents":[
+            {"cat":"adaptgear","name":"a","ph":"B","pid":1,"tid":1,"ts":1},
+            {"cat":"adaptgear","name":"b","ph":"B","pid":1,"tid":1,"ts":2},
+            {"cat":"adaptgear","name":"a","ph":"E","pid":1,"tid":1,"ts":3},
+            {"cat":"adaptgear","name":"b","ph":"E","pid":1,"tid":1,"ts":4}]}"#,
+    )
+    .unwrap();
+    let report = check::run_all(
+        &CheckContext { traces: vec![path], ..ctx(&root) },
+        false,
+    );
+    assert!(error_codes(&report).contains(&"AG040"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn bench_mutation_foreign_schema_is_ag060() {
+    let _g = lock();
+    let root = tmpdir("bench-mut");
+    let mut r = BenchReport::new("kernels", true);
+    r.push("spmm/a", 10.0, "us", bench::Direction::Lower);
+    let path = r.write_at(&root).unwrap();
+    mutate_json(&path, |map| {
+        map.insert("schema_version".into(), Json::num(99.0));
+    });
+    let report = check::run_all(
+        &CheckContext { bench_dir: Some(root.clone()), ..ctx(&root) },
+        false,
+    );
+    assert!(error_codes(&report).contains(&"AG060"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn deny_warn_promotes_baseline_drift_to_exit_failure() {
+    let _g = lock();
+    let root = tmpdir("deny-warn");
+    let (base, cur) = (root.join("base"), root.join("cur"));
+    let mut old = BenchReport::new("kernels", true);
+    old.push("spmm/a", 10.0, "us", bench::Direction::Lower);
+    old.push("spmm/vanishing", 5.0, "us", bench::Direction::Lower);
+    old.write_at(&base).unwrap();
+    let mut new = BenchReport::new("kernels", true);
+    new.push("spmm/a", 10.0, "us", bench::Direction::Lower);
+    new.write_at(&cur).unwrap();
+
+    let relaxed = check::run_all(
+        &CheckContext { bench_dir: Some(cur.clone()), baseline: Some(base.clone()), ..ctx(&root) },
+        false,
+    );
+    assert_eq!(relaxed.errors(), 0, "{}", relaxed.render());
+    assert!(codes(&relaxed).contains(&"AG061"));
+    assert!(relaxed.warnings() > 0);
+
+    let denied = check::run_all(
+        &CheckContext { bench_dir: Some(cur), baseline: Some(base), ..ctx(&root) },
+        true,
+    );
+    assert!(denied.errors() > 0, "--deny warn must promote AG061");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// CLI exit-code contract: the exact behavior ci.sh check_smoke gates on.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn check_cli_exits_zero_on_clean_store_and_nonzero_after_corruption() {
+    let _g = lock();
+    let root = tmpdir("cli");
+    let store = PlanStore::in_artifacts(&root);
+    let path = store.save(&anonymous_plan(5)).unwrap();
+
+    let run = |tag: &str| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_adaptgear"))
+            .current_dir(&root) // hermetic TRACE_*/BENCH_* discovery
+            .args([
+                "check",
+                "--artifacts",
+                root.to_str().unwrap(),
+                "--out",
+                root.join(format!("CHECK_{tag}.json")).to_str().unwrap(),
+            ])
+            .output()
+            .expect("spawning the adaptgear binary")
+    };
+
+    let clean = run("clean");
+    assert!(
+        clean.status.success(),
+        "clean store must exit zero:\n{}{}",
+        String::from_utf8_lossy(&clean.stdout),
+        String::from_utf8_lossy(&clean.stderr)
+    );
+    let text = std::fs::read_to_string(root.join("CHECK_clean.json")).unwrap();
+    assert_eq!(json::parse(&text).unwrap().get("totals").get("errors").as_usize(), Some(0));
+
+    mutate_json(&path, |map| {
+        let Some(Json::Obj(a)) = map.get_mut("assignment") else { panic!("no assignment") };
+        a.insert("threshold".into(), Json::num(-1.0));
+    });
+    let broken = run("broken");
+    assert!(!broken.status.success(), "corrupt plan must exit non-zero");
+    let stdout = String::from_utf8_lossy(&broken.stdout);
+    assert!(stdout.contains("AG022"), "stdout must carry the lint code:\n{stdout}");
+    let _ = std::fs::remove_dir_all(&root);
+}
