@@ -146,6 +146,8 @@ EOF
         "hybrid smoke: plan did not split into two intra classes"
     expect_grep "dense_intra" "$tmp/explain.txt" "hybrid smoke: no dense_intra class"
     expect_grep "sparse_intra" "$tmp/explain.txt" "hybrid smoke: no sparse_intra class"
+    expect_grep "tile_sparse" "$tmp/explain.txt" \
+        "hybrid smoke: explain does not list the tile_sparse kernel"
     echo "==> $bin plan (hybrid replan must hit the plan cache)"
     "$bin" plan --dataset planted-mixed --artifacts "$tmp" | tee "$tmp/second.txt"
     expect_grep "cache hit" "$tmp/second.txt" \

@@ -14,8 +14,10 @@ use anyhow::Result;
 
 use crate::graph::generate::planted_partition;
 use crate::graph::{Csr, DenseBlocks};
+use crate::gpusim::kernel_cost::CostCtx;
 use crate::gpusim::{class_kernel_cost, kernel_cost, ClassDims, A100};
-use crate::kernels::{native, pack, KernelKind, INTER_CANDIDATES, INTRA_CANDIDATES};
+use crate::kernels::tile::TileSparse;
+use crate::kernels::{candidates, native, pack, KernelKind, Role};
 use crate::partition::{Decomposition, Propagation, Reorder};
 use crate::runtime::BucketInfo;
 use crate::util::rng::Rng;
@@ -109,6 +111,10 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
         spmm(KernelKind::DenseBlock, true, &mut || {
             std::hint::black_box(native::dense_block_spmm(&blocks, &x, w.f));
         });
+        let tiles = TileSparse::from_block_diagonal_csr(&d.intra, COMMUNITY);
+        spmm(KernelKind::TileSparse, true, &mut || {
+            std::hint::black_box(native::tile_sparse_spmm(&tiles, &x, w.f));
+        });
         spmm(KernelKind::CsrInter, false, &mut || {
             std::hint::black_box(native::csr_inter_spmm(&d.inter, &x, w.f));
         });
@@ -129,6 +135,7 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
         for (kind, matrix) in [
             (KernelKind::CsrIntra, &d.intra),
             (KernelKind::DenseBlock, &d.intra),
+            (KernelKind::TileSparse, &d.intra),
             (KernelKind::CsrInter, &d.inter),
             (KernelKind::Coo, &d.inter),
         ] {
@@ -143,6 +150,24 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
                 "us",
                 Direction::Lower,
             );
+            if kind == KernelKind::TileSparse {
+                // Tile translation throughput + how full the reserved
+                // grid actually is (the exact counterpart of the sweep's
+                // `est_occupied_tiles` admissibility estimate).
+                let pack_s = m.median_s().max(1e-12);
+                report.push(
+                    format!("tile/pack_per_s/{}", w.label),
+                    tiles.n_tiles().max(1) as f64 / pack_s,
+                    "tiles/s",
+                    Direction::Higher,
+                );
+                report.push(
+                    format!("tile/occupied_frac/{}", w.label),
+                    tiles.occupied_frac(),
+                    "frac",
+                    Direction::None,
+                );
+            }
         }
 
         calibrate(&mut report, &d, w.f, w.label, &measured);
@@ -200,7 +225,7 @@ fn calibrate(
     let sim_us = |kind: KernelKind, is_intra: bool| -> f64 {
         if is_intra {
             let dims = ClassDims { kind, blocks: profile.len(), rows, nnz: d.intra.nnz() };
-            class_kernel_cost(&dims, f, d.community, &A100).time_us
+            class_kernel_cost(&CostCtx::new(dims, f, d.community, &A100)).time_us
         } else {
             kernel_cost(kind, &d.inter, f, d.community, &A100).time_us
         }
@@ -224,13 +249,16 @@ fn calibrate(
         }
     }
 
-    for (role, candidates) in [
-        ("intra", &INTRA_CANDIDATES[..]),
-        ("inter", &INTER_CANDIDATES[..]),
+    // The intra role ranks everything the intra artifact slot can run —
+    // including the tile class — so argmin agreement covers the full
+    // registry, not just the uniform-selector pair.
+    for (role, cands) in [
+        ("intra", candidates(Role::IntraSlot)),
+        ("inter", candidates(Role::Inter)),
     ] {
         let is_intra = role == "intra";
         let argmin = |key: &dyn Fn(KernelKind) -> f64| -> KernelKind {
-            candidates
+            cands
                 .iter()
                 .copied()
                 .min_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap())
@@ -282,7 +310,7 @@ mod tests {
         let report = run(&cfg).unwrap();
         assert_eq!(report.suite, "kernels");
         for label in ["dense", "mixed", "sparse"] {
-            for kind in ["csr_intra", "dense_block", "csr_inter", "coo"] {
+            for kind in ["csr_intra", "dense_block", "tile_sparse", "csr_inter", "coo"] {
                 assert!(report.get(&format!("spmm/{kind}/{label}")).is_some());
                 assert!(report.get(&format!("pack/{kind}/{label}")).is_some());
                 assert!(report.get(&format!("calib/sim/{kind}/{label}")).is_some());
@@ -291,7 +319,15 @@ mod tests {
                 let m = report.get(&format!("calib/agree/{role}/{label}")).unwrap();
                 assert!(m.value == 0.0 || m.value == 1.0);
             }
+            let frac = report.get(&format!("tile/occupied_frac/{label}")).unwrap();
+            assert!(frac.value > 0.0 && frac.value <= 1.0, "occupied_frac {}", frac.value);
+            assert!(report.get(&format!("tile/pack_per_s/{label}")).unwrap().value > 0.0);
         }
+        // denser blocks occupy more of the tile grid
+        assert!(
+            report.get("tile/occupied_frac/dense").unwrap().value
+                >= report.get("tile/occupied_frac/sparse").unwrap().value
+        );
         for name in [
             "graph/gcn_normalized",
             "graph/split_block_diagonal",

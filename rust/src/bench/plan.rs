@@ -109,8 +109,16 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
         planted_partition_mixed(n_mixed, COMMUNITY, 0.9, 0.01, 3, 0.3 / n_mixed as f64, &mut rng);
     let dm = Decomposition::build(&gm, Reorder::Identity, Propagation::GcnNormalized, COMMUNITY, 0);
     let profile = dm.intra_block_profile();
+    let tile_cap = crate::kernels::tile::tile_capacity(profile.len(), COMMUNITY);
     let m = bench.bench("planner/hybrid_sweep", || {
-        std::hint::black_box(hybrid::sweep(&profile, &dm.inter, &[32, 32], usize::MAX, &A100));
+        std::hint::black_box(hybrid::sweep(
+            &profile,
+            &dm.inter,
+            &[32, 32],
+            usize::MAX,
+            tile_cap,
+            &A100,
+        ));
     });
     report.push("planner/hybrid_sweep", m.median_s() * 1e6, "us", Direction::Lower);
 

@@ -20,8 +20,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::util::json::{self, Json};
 
 /// Bump when the report shape changes incompatibly; the comparator
-/// refuses to diff across versions.
-pub const SCHEMA_VERSION: u64 = 1;
+/// refuses to diff across versions. v2: the kernels suite added the
+/// tile-sparse class (`spmm/tile_sparse/*`, `pack/tile_sparse/*`,
+/// `tile/*` metrics), so v1 kernel baselines are not comparable.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Which way a metric improves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -292,15 +294,15 @@ mod tests {
     fn rejects_malformed_reports() {
         for text in [
             "{}",
-            r#"{"schema_version":1}"#,
-            r#"{"schema_version":1,"suite":"","quick":false,"metrics":[]}"#,
-            r#"{"schema_version":1,"suite":"k","quick":false}"#,
-            r#"{"schema_version":1,"suite":"k","quick":false,
+            r#"{"schema_version":2}"#,
+            r#"{"schema_version":2,"suite":"","quick":false,"metrics":[]}"#,
+            r#"{"schema_version":2,"suite":"k","quick":false}"#,
+            r#"{"schema_version":2,"suite":"k","quick":false,
                 "metrics":[{"name":"a","value":1,"unit":"us","better":"sideways"}]}"#,
-            r#"{"schema_version":1,"suite":"k","quick":false,
+            r#"{"schema_version":2,"suite":"k","quick":false,
                 "metrics":[{"name":"a","value":1,"unit":"us","better":"lower"},
                             {"name":"a","value":2,"unit":"us","better":"lower"}]}"#,
-            r#"{"schema_version":1,"suite":"k","quick":false,
+            r#"{"schema_version":2,"suite":"k","quick":false,
                 "metrics":[{"name":"a","unit":"us","better":"lower"}]}"#,
         ] {
             let v = json::parse(text).unwrap();

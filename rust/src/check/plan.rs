@@ -28,9 +28,10 @@ use std::path::Path;
 
 use crate::check::{CheckContext, Diagnostics, LintCode, Severity};
 use crate::coordinator::pipeline::propagation_for;
+use crate::gpusim::kernel_cost::CostCtx;
 use crate::gpusim::{class_kernel_cost, ClassDims, GpuModel};
 use crate::graph::datasets;
-use crate::kernels::KernelKind;
+use crate::kernels::{candidates, KernelKind, Role};
 use crate::partition::Decomposition;
 use crate::plan::{Fingerprint, GearPlan, SubgraphClass};
 use crate::runtime::{BucketInfo, Manifest};
@@ -72,7 +73,8 @@ pub fn lint_plan_json(doc: &Json, loc: &str, diags: &mut Diagnostics) -> Option<
     Some(plan)
 }
 
-/// AG022: threshold range, class layout, dense-class kernel pin.
+/// AG022: threshold range, class layout, dense-class kernel registry
+/// membership.
 fn lint_structure(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
     let a = &plan.assignment;
     if !(0.0..=2.0).contains(&a.threshold) {
@@ -103,11 +105,16 @@ fn lint_structure(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
         }
     }
     for c in &a.classes {
-        if c.class == SubgraphClass::DenseIntra && c.kernel != KernelKind::DenseBlock {
+        if c.class == SubgraphClass::DenseIntra
+            && !candidates(Role::DenseClass).contains(&c.kernel)
+        {
             diags.emit(
                 LintCode::PlanStructure,
                 loc,
-                format!("dense_intra class runs {} (must be dense_block)", c.kernel.as_str()),
+                format!(
+                    "dense_intra class runs {} (not a dense-class kernel)",
+                    c.kernel.as_str()
+                ),
             );
         }
     }
@@ -183,10 +190,12 @@ fn lint_provenance(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
 }
 
 /// AG027: each class's chosen kernel must be the argmin of the
-/// candidate costs the sweep persisted for it. Pinned slots are
-/// exempt: the dense class always runs dense_block (AG022 owns that),
-/// and a lone sparse class is pinned to csr_intra by the two-slot
-/// lowering even when coo prices lower.
+/// candidate costs the sweep persisted for it, enumerated via the
+/// `kernels::spec::candidates` registry for the class's role. Uniform
+/// extremes are exempt: a lone class is pinned to its slot-compatible
+/// kernel by the two-slot lowering even when an alternative prices
+/// lower. Candidates without a recorded cost (a vetoed tile class, or a
+/// plan persisted before the kernel existed) simply don't participate.
 fn lint_argmin(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
     let Some(prov) = &plan.assignment.provenance else { return };
     let analytic = matches!(plan.provenance.clock.as_str(), "analytic" | "sim");
@@ -198,11 +207,12 @@ fn lint_argmin(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
         let Some(cand) = prov.class_costs.iter().find(|cc| cc.class == c.class) else {
             continue;
         };
-        let candidates: &[KernelKind] = match c.class {
-            SubgraphClass::DenseIntra => continue,
+        let audited: &[KernelKind] = match c.class {
+            SubgraphClass::DenseIntra if !plan.assignment.is_hybrid() => continue,
+            SubgraphClass::DenseIntra => candidates(Role::DenseClass),
             SubgraphClass::SparseIntra if !plan.assignment.is_hybrid() => continue,
-            SubgraphClass::SparseIntra => &[KernelKind::CsrIntra, KernelKind::Coo],
-            SubgraphClass::Inter => &[KernelKind::CsrInter, KernelKind::Coo],
+            SubgraphClass::SparseIntra => candidates(Role::SparseClass),
+            SubgraphClass::Inter => candidates(Role::Inter),
         };
         let Some(&chosen_cost) = cand.costs.get(c.kernel.as_str()) else {
             diags.emit_with(
@@ -217,7 +227,7 @@ fn lint_argmin(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
             );
             continue;
         };
-        let min = candidates
+        let min = audited
             .iter()
             .filter_map(|k| cand.costs.get(k.as_str()))
             .fold(f64::INFINITY, |m, &v| m.min(v));
@@ -337,13 +347,19 @@ fn lint_against_bucket(plan: &GearPlan, bucket: &BucketInfo, loc: &str, diags: &
     };
     let widths = [bucket.features, bucket.hidden];
     for c in plan.assignment.classes.iter().filter(|c| c.class.is_intra()) {
-        if !matches!(c.kernel, KernelKind::CsrIntra | KernelKind::DenseBlock | KernelKind::Coo) {
+        if !matches!(
+            c.kernel,
+            KernelKind::CsrIntra
+                | KernelKind::DenseBlock
+                | KernelKind::Coo
+                | KernelKind::TileSparse
+        ) {
             continue;
         }
         let dims = ClassDims { kind: c.kernel, blocks: c.blocks, rows: c.rows, nnz: c.nnz };
         let mean: f64 = widths
             .iter()
-            .map(|&w| class_kernel_cost(&dims, w, plan.community, gpu).time_us)
+            .map(|&w| class_kernel_cost(&CostCtx::new(dims, w, plan.community, gpu)).time_us)
             .sum::<f64>()
             / widths.len() as f64;
         let rel = (mean - c.time_us).abs() / mean.abs().max(1e-12);

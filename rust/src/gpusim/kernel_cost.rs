@@ -18,6 +18,12 @@ const BYTES: f64 = 4.0;
 /// Per-row loop bookkeeping for vertex-parallel CSR (cycles -> us via
 /// clock); this is the O(V) term that makes COO win at extreme sparsity.
 const ROW_OVERHEAD_CYCLES: f64 = 10.0;
+/// Bytes per adjacency element in a packed MMA tile: the tile payload is
+/// staged in half precision (bf16/fp16) for the tensor-core fragments.
+const TILE_PAYLOAD_BYTES: f64 = 2.0;
+/// Per-tile scheduling bookkeeping for the tile-sparse kernel (column-id
+/// decode + fragment load/store issue), cycles -> us via clock.
+const TILE_OVERHEAD_CYCLES: f64 = 20.0;
 
 /// Cost breakdown of one kernel launch.
 #[derive(Debug, Clone)]
@@ -399,6 +405,70 @@ pub fn coo_class_cost(rows: usize, nnz: usize, f: usize, gpu: &GpuModel) -> Kern
     .finish(gpu)
 }
 
+/// Expected occupied `16x16` tile count for a block-diagonal class under
+/// SGT-style column compaction (`kernels::tile`): per 16-row strip the
+/// distinct occupied columns condense into ceil(distinct/16) dense tiles.
+/// Closed form over `(blocks, nnz, community)` via the coupon-collector
+/// expectation of distinct columns, so threshold sweeps can price
+/// admissibility without materializing any class matrix. Deterministic —
+/// the sweep and the `adaptgear check` cost audit share it.
+pub fn est_occupied_tiles(blocks: usize, nnz: usize, community: usize) -> f64 {
+    if nnz == 0 {
+        return 0.0;
+    }
+    let c = community.max(1) as f64;
+    let t = crate::kernels::tile::MMA_TILE as f64;
+    let strips = (c / t).ceil();
+    let nb = blocks.max(1) as f64;
+    let nnz_strip = nnz as f64 / (nb * strips);
+    // expected distinct columns hit by nnz_strip uniform draws over c
+    let distinct = c * (1.0 - (1.0 - 1.0 / c).powf(nnz_strip));
+    // a non-empty strip occupies at least one tile
+    let tiles_strip = (distinct / t).max(nnz_strip.min(1.0));
+    nb * strips * tiles_strip
+}
+
+/// Tile-sparse (tensor-core) cost over a block-diagonal density class:
+/// `occupied` non-empty `16x16` tiles each pay one MMA fragment
+/// (`2*16*16*f` flops at the half-precision rate), a half-precision
+/// payload plus per-tile column index, and per-tile scheduling overhead.
+/// Features are staged once per class like the other intra schedules.
+/// `occupied = None` prices on [`est_occupied_tiles`]; the planner passes
+/// the exact extraction count when one is available ([`CostCtx::tile`]).
+pub fn tile_sparse_cost_dims(
+    blocks: usize,
+    rows: usize,
+    nnz: usize,
+    f: usize,
+    community: usize,
+    gpu: &GpuModel,
+    occupied: Option<usize>,
+) -> KernelCost {
+    let t = crate::kernels::tile::MMA_TILE as f64;
+    let occ = occupied
+        .map(|o| o as f64)
+        .unwrap_or_else(|| est_occupied_tiles(blocks, nnz, community));
+    let flops = occ * 2.0 * t * t * f as f64;
+    // per tile: bf16 payload + 16 column ids (u32) + strip row base (u32)
+    let tile_bytes = occ * (t * t * TILE_PAYLOAD_BYTES + t * 4.0 + 4.0);
+    let stage_bytes = rows as f64 * f as f64 * BYTES * 2.0; // X + Y
+    let memory_us = gpu.stream_us(tile_bytes + stage_bytes);
+    let compute_us = gpu.mma_us(flops)
+        + occ * TILE_OVERHEAD_CYCLES / (gpu.sm_count as f64 * 32.0) / (gpu.clock_ghz * 1e3);
+    KernelCost {
+        kind: KernelKind::TileSparse,
+        time_us: 0.0,
+        compute_us,
+        memory_us,
+        launch_us: 0.0,
+        flops,
+        bytes: tile_bytes + stage_bytes,
+        l2_hits: 0,
+        l2_accesses: occ.ceil() as u64,
+    }
+    .finish(gpu)
+}
+
 /// Dimensions of one intra density class, for class-level pricing.
 #[derive(Debug, Clone, Copy)]
 pub struct ClassDims {
@@ -410,20 +480,56 @@ pub struct ClassDims {
     pub nnz: usize,
 }
 
-/// Cost of one launch of `kind` over an intra density class (closed
-/// form, so threshold sweeps can price thousands of candidate splits).
-pub fn class_kernel_cost(
-    class: &ClassDims,
-    f: usize,
-    community: usize,
-    gpu: &GpuModel,
-) -> KernelCost {
+/// Everything class-level pricing depends on, in one struct — the
+/// positional `(dims, f, community, gpu)` list grew a parameter with
+/// every kernel, and TileSparse's tile geometry would have been a fifth.
+/// Build with [`CostCtx::new`]; add the exact occupied-tile count via
+/// [`CostCtx::with_tile`] when an extraction is on hand.
+#[derive(Debug, Clone, Copy)]
+pub struct CostCtx<'a> {
+    pub dims: ClassDims,
+    /// Aggregate feature width this launch runs at.
+    pub feat_dim: usize,
+    /// Community (block) size of the decomposition.
+    pub community: usize,
+    pub gpu: &'a GpuModel,
+    /// Exact occupied `16x16` tile count for TileSparse pricing; `None`
+    /// falls back to the [`est_occupied_tiles`] closed form. Ignored by
+    /// every other kernel.
+    pub tile: Option<usize>,
+}
+
+impl<'a> CostCtx<'a> {
+    pub fn new(
+        dims: ClassDims,
+        feat_dim: usize,
+        community: usize,
+        gpu: &'a GpuModel,
+    ) -> CostCtx<'a> {
+        CostCtx { dims, feat_dim, community, gpu, tile: None }
+    }
+
+    /// Price TileSparse on an exact occupied-tile count instead of the
+    /// analytic estimate.
+    pub fn with_tile(mut self, occupied: usize) -> CostCtx<'a> {
+        self.tile = Some(occupied);
+        self
+    }
+}
+
+/// Cost of one launch over an intra density class (closed form, so
+/// threshold sweeps can price thousands of candidate splits).
+pub fn class_kernel_cost(ctx: &CostCtx) -> KernelCost {
+    let (class, f, community, gpu) = (&ctx.dims, ctx.feat_dim, ctx.community, ctx.gpu);
     match class.kind {
         KernelKind::CsrIntra => csr_intra_cost_dims(class.rows, class.nnz, f, community, gpu),
         KernelKind::DenseBlock => {
             dense_block_cost_dims(class.blocks, class.rows, community, f, gpu)
         }
         KernelKind::Coo => coo_class_cost(class.rows, class.nnz, f, gpu),
+        KernelKind::TileSparse => {
+            tile_sparse_cost_dims(class.blocks, class.rows, class.nnz, f, community, gpu, ctx.tile)
+        }
         other => panic!("{other} is not an intra class candidate"),
     }
 }
@@ -431,11 +537,8 @@ pub fn class_kernel_cost(
 /// The hybrid pricing rule: the intra side of a plan costs the SUM over
 /// its density classes — each class is one kernel launch, so a split
 /// must buy back its extra `launch_us` in format savings to win.
-pub fn hybrid_intra_cost(classes: &[ClassDims], f: usize, community: usize, gpu: &GpuModel) -> f64 {
-    classes
-        .iter()
-        .map(|c| class_kernel_cost(c, f, community, gpu).time_us)
-        .sum()
+pub fn hybrid_intra_cost(classes: &[CostCtx]) -> f64 {
+    classes.iter().map(|c| class_kernel_cost(c).time_us).sum()
 }
 
 /// Joint cost of a subgraph kernel pair in one iteration: the intra
@@ -494,6 +597,15 @@ pub fn kernel_cost(
         KernelKind::Coo => coo_cost(matrix, f, gpu),
         KernelKind::DenseBlock => dense_block_cost(matrix.n_rows, community, f, gpu),
         KernelKind::DenseFull => dense_full_cost(matrix.n_rows, f, gpu),
+        KernelKind::TileSparse => tile_sparse_cost_dims(
+            matrix.n_rows.div_ceil(community.max(1)),
+            matrix.n_rows,
+            matrix.nnz(),
+            f,
+            community,
+            gpu,
+            None,
+        ),
     }
 }
 
@@ -596,11 +708,11 @@ mod tests {
             rows: intra.n_rows,
             nnz: intra.nnz(),
         };
-        let a = class_kernel_cost(&whole, 32, 16, &A100).time_us;
+        let a = class_kernel_cost(&CostCtx::new(whole, 32, 16, &A100)).time_us;
         let b = csr_intra_cost(&intra, 32, 16, &A100).time_us;
         assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         let dense = ClassDims { kind: KernelKind::DenseBlock, ..whole };
-        let c = class_kernel_cost(&dense, 32, 16, &A100).time_us;
+        let c = class_kernel_cost(&CostCtx::new(dense, 32, 16, &A100)).time_us;
         let d = dense_block_cost(intra.n_rows, 16, 32, &A100).time_us;
         assert!((c - d).abs() < 1e-9, "{c} vs {d}");
     }
@@ -609,11 +721,70 @@ mod tests {
     fn hybrid_sum_includes_one_launch_per_class() {
         let a = ClassDims { kind: KernelKind::DenseBlock, blocks: 8, rows: 128, nnz: 2000 };
         let b = ClassDims { kind: KernelKind::CsrIntra, blocks: 56, rows: 896, nnz: 1500 };
-        let two = hybrid_intra_cost(&[a, b], 32, 16, &A100);
-        let ca = class_kernel_cost(&a, 32, 16, &A100).time_us;
-        let cb = class_kernel_cost(&b, 32, 16, &A100).time_us;
+        let two = hybrid_intra_cost(&[
+            CostCtx::new(a, 32, 16, &A100),
+            CostCtx::new(b, 32, 16, &A100),
+        ]);
+        let ca = class_kernel_cost(&CostCtx::new(a, 32, 16, &A100)).time_us;
+        let cb = class_kernel_cost(&CostCtx::new(b, 32, 16, &A100)).time_us;
         assert!((two - (ca + cb)).abs() < 1e-9);
         assert!(two > 2.0 * A100.launch_us, "each class pays its launch");
+    }
+
+    /// Mean class cost at a synthetic `(blocks, density)` point — the
+    /// regime tests below probe the intra candidate surface with it.
+    fn class_us(kind: KernelKind, blocks: usize, c: usize, density: f64, f: usize) -> f64 {
+        let rows = blocks * c;
+        let nnz = (blocks as f64 * (c * c) as f64 * density).round() as usize;
+        let dims = ClassDims { kind, blocks, rows, nnz };
+        class_kernel_cost(&CostCtx::new(dims, f, c, &A100)).time_us
+    }
+
+    #[test]
+    fn tile_sparse_wins_mid_density_class() {
+        // the regime the tentpole targets: blocks too sparse for the
+        // padded batched GEMM, too dense for the 8-byte-per-edge CSR
+        for &c in &[16usize, 64] {
+            for &d in &[0.35, 0.5] {
+                let tile = class_us(KernelKind::TileSparse, 1000, c, d, 32);
+                let csr = class_us(KernelKind::CsrIntra, 1000, c, d, 32);
+                let dense = class_us(KernelKind::DenseBlock, 1000, c, d, 32);
+                assert!(tile < csr, "c={c} d={d}: tile {tile} vs csr {csr}");
+                assert!(tile < dense, "c={c} d={d}: tile {tile} vs dense {dense}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_intra_wins_sparse_class_coo_wins_extreme() {
+        // the pre-existing sweet spots survive the new candidate
+        let csr = class_us(KernelKind::CsrIntra, 1000, 64, 0.05, 32);
+        let tile = class_us(KernelKind::TileSparse, 1000, 64, 0.05, 32);
+        let coo = class_us(KernelKind::Coo, 1000, 64, 0.05, 32);
+        assert!(csr < tile && csr < coo, "csr {csr} vs tile {tile} / coo {coo}");
+        let coo2 = class_us(KernelKind::Coo, 1000, 16, 0.01, 32);
+        let csr2 = class_us(KernelKind::CsrIntra, 1000, 16, 0.01, 32);
+        assert!(coo2 < csr2, "coo {coo2} vs csr {csr2}");
+    }
+
+    #[test]
+    fn exact_tile_count_overrides_estimate() {
+        let dims = ClassDims { kind: KernelKind::TileSparse, blocks: 100, rows: 1600, nnz: 40000 };
+        let est = class_kernel_cost(&CostCtx::new(dims, 32, 16, &A100));
+        let exact = class_kernel_cost(&CostCtx::new(dims, 32, 16, &A100).with_tile(1));
+        assert!(exact.time_us < est.time_us, "1 tile must undercut the estimate");
+        assert_eq!(exact.l2_accesses, 1);
+    }
+
+    #[test]
+    fn est_occupied_tiles_is_monotone_and_bounded() {
+        let lo = est_occupied_tiles(100, 1000, 64);
+        let hi = est_occupied_tiles(100, 100000, 64);
+        assert!(lo < hi, "more nnz -> more occupied tiles");
+        // full blocks saturate at the geometric tile grid
+        let full = est_occupied_tiles(100, 100 * 64 * 64, 64);
+        assert!(full <= 100.0 * 4.0 * 4.0 + 1e-6, "{full}");
+        assert_eq!(est_occupied_tiles(100, 0, 64), 0.0);
     }
 
     #[test]

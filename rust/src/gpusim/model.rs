@@ -24,6 +24,10 @@ pub struct GpuModel {
     /// A100 rides TF32 tensor cores, the V100 falls back to CUDA cores
     /// for f32 (paper Sec. 3.2, "Dense-based kernel").
     pub dense_tflops: f64,
+    /// Half-precision MMA throughput, TFLOP/s — the tile-GEMM rate the
+    /// TileSparse kernel's 16x16 fragments execute at (fp16 tensor cores
+    /// on the V100, bf16 on the A100).
+    pub mma_tflops: f64,
     /// Kernel launch overhead, microseconds.
     pub launch_us: f64,
     /// Extra per-edge atomic-update cost, nanoseconds (COO kernel).
@@ -43,6 +47,7 @@ pub const V100: GpuModel = GpuModel {
     gather_efficiency: 0.25,
     fp32_tflops: 15.7,
     dense_tflops: 15.7, // no f32 tensor-core path before Ampere
+    mma_tflops: 125.0,  // fp16 tensor cores
     launch_us: 6.0,
     atomic_ns: 0.25,
     framework_op_us: 7.0,
@@ -58,6 +63,7 @@ pub const A100: GpuModel = GpuModel {
     gather_efficiency: 0.28,
     fp32_tflops: 19.5,
     dense_tflops: 156.0, // TF32 tensor cores
+    mma_tflops: 312.0,   // bf16 tensor cores
     launch_us: 5.0,
     atomic_ns: 0.15,
     framework_op_us: 6.0,
@@ -102,6 +108,11 @@ impl GpuModel {
     pub fn dense_us(&self, flops: f64) -> f64 {
         flops / (self.dense_tflops * 1e6)
     }
+
+    /// Time for `flops` on the half-precision MMA pipeline, microseconds.
+    pub fn mma_us(&self, flops: f64) -> f64 {
+        flops / (self.mma_tflops * 1e6)
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +140,15 @@ mod tests {
         // 156 TFLOPs -> 1 GFLOP in ~6.4 us
         let us = A100.dense_us(1e9);
         assert!((us - 6.41).abs() < 0.1, "{us}");
+    }
+
+    #[test]
+    fn mma_faster_than_dense_engine() {
+        // the headroom the TileSparse kernel banks on: half-precision
+        // fragments run ~2x the TF32 dense rate on Ampere, ~8x the CUDA
+        // cores on Volta
+        assert!(A100.mma_us(1e9) < A100.dense_us(1e9));
+        assert!(V100.mma_us(1e9) < V100.fp32_us(1e9));
     }
 
     #[test]

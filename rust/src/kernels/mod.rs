@@ -1,12 +1,16 @@
-//! Subgraph-level kernels: taxonomy ([`spec`]), native CPU executions
-//! mirroring the GPU schedules ([`native`]), a native 2-layer GCN with a
-//! hand-derived backward pass for engine-free training
-//! ([`native_model`]), and AOT operand packing ([`pack`]).
+//! Subgraph-level kernels: taxonomy and the candidate registry
+//! ([`spec`]), native CPU executions mirroring the GPU schedules
+//! ([`native`]), `16x16` MMA tile extraction for the tile-sparse class
+//! ([`tile`]), a native 2-layer GCN with a hand-derived backward pass for
+//! engine-free training ([`native_model`]), and AOT operand packing
+//! ([`pack`]).
 
 pub mod native;
 pub mod native_model;
 pub mod pack;
 pub mod spec;
+pub mod tile;
 
 pub use native::AssignmentExec;
-pub use spec::{KernelKind, KernelPair, INTER_CANDIDATES, INTRA_CANDIDATES};
+pub use spec::{candidates, KernelKind, KernelPair, Role, INTER_CANDIDATES, INTRA_CANDIDATES};
+pub use tile::TileSparse;

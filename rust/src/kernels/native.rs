@@ -8,6 +8,7 @@
 //! path.
 
 use crate::graph::{Csr, DenseBlocks};
+use crate::kernels::tile::TileSparse;
 use crate::partition::Decomposition;
 
 /// Vertex-parallel CSR aggregate (inter-community schedule): row blocks of
@@ -81,10 +82,17 @@ pub fn dense_block_spmm(blocks: &DenseBlocks, x: &[f32], f: usize) -> Vec<f32> {
     blocks.spmm(x, f)
 }
 
+/// Tile-sparse aggregate: one dense MMA fragment per non-empty `16x16`
+/// tile (the CPU twin of the tensor-core schedule).
+pub fn tile_sparse_spmm(tiles: &TileSparse, x: &[f32], f: usize) -> Vec<f32> {
+    tiles.spmm(x, f)
+}
+
 /// One pre-materialized part of a plan's class assignment, bound to its
 /// native schedule.
 enum PartExec {
     Dense(DenseBlocks),
+    Tile(TileSparse),
     IntraCsr(Csr),
     InterCsr(Csr),
     Coo { n: usize, edges: Vec<(u32, u32, f32)> },
@@ -116,6 +124,9 @@ impl AssignmentExec {
             Ok(match kind {
                 KernelKind::DenseBlock => {
                     PartExec::Dense(DenseBlocks::from_block_diagonal_csr(m, d.community))
+                }
+                KernelKind::TileSparse => {
+                    PartExec::Tile(TileSparse::from_block_diagonal_csr(m, d.community))
                 }
                 KernelKind::CsrIntra => PartExec::IntraCsr(m.clone()),
                 KernelKind::CsrInter => PartExec::InterCsr(m.clone()),
@@ -160,6 +171,7 @@ impl AssignmentExec {
         for part in &self.parts {
             let y = match part {
                 PartExec::Dense(blocks) => dense_block_spmm(blocks, x, f),
+                PartExec::Tile(tiles) => tile_sparse_spmm(tiles, x, f),
                 PartExec::IntraCsr(m) => csr_intra_spmm(m, x, f, self.community),
                 PartExec::InterCsr(m) => csr_inter_spmm(m, x, f),
                 PartExec::Coo { n, edges } => coo_spmm(*n, edges, x, f),
@@ -218,12 +230,15 @@ mod tests {
             let got_intra_csr = csr_intra_spmm(&intra, &x, f, 16);
             let blocks = DenseBlocks::from_block_diagonal_csr(&intra, 16);
             let got_intra_dense = dense_block_spmm(&blocks, &x, f);
+            let tiles = TileSparse::from_block_diagonal_csr(&intra, 16);
+            let got_intra_tile = tile_sparse_spmm(&tiles, &x, f);
 
             for (name, got, expect) in [
                 ("csr_inter", &got_inter_csr, &ref_inter),
                 ("coo", &got_inter_coo, &ref_inter),
                 ("csr_intra", &got_intra_csr, &ref_intra),
                 ("dense_block", &got_intra_dense, &ref_intra),
+                ("tile_sparse", &got_intra_tile, &ref_intra),
             ] {
                 for (a, b) in got.iter().zip(expect) {
                     prop::require_close(*a as f64, *b as f64, 1e-4, name)?;
@@ -325,6 +340,76 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn tile_sparse_class_executes_in_assignment() {
+        // a hand-built hybrid assignment routing the dense class to
+        // TileSparse must compile and match the whole-matrix reference
+        use crate::kernels::KernelKind;
+        use crate::partition::{DensityClass, Propagation, Reorder};
+        use crate::plan::{ClassAssignment, GearAssignment, SubgraphClass};
+
+        let mut rng = Rng::new(9);
+        let g = planted_partition(128, 16, 0.5, 0.02, &mut rng);
+        let d = crate::partition::Decomposition::build(
+            &g,
+            Reorder::Identity,
+            Propagation::GcnNormalized,
+            16,
+            0,
+        );
+        let profile = d.intra_block_profile();
+        let mut dens: Vec<f64> = (0..profile.len()).map(|i| profile.density(i)).collect();
+        dens.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let threshold = (dens[0] + dens[dens.len() - 1]) / 2.0;
+        let split = d.split_intra(threshold);
+        if split.classes.len() < 2 {
+            return; // degenerate sample: nothing hybrid to execute
+        }
+        let stat = |label| {
+            let c = split.class(label).unwrap();
+            (c.blocks.len(), c.rows, c.matrix.nnz())
+        };
+        let (db, dr, dn) = stat(DensityClass::Dense);
+        let (sb, sr, sn) = stat(DensityClass::Sparse);
+        let assignment = GearAssignment {
+            threshold,
+            classes: vec![
+                ClassAssignment {
+                    class: SubgraphClass::DenseIntra,
+                    kernel: KernelKind::TileSparse,
+                    blocks: db,
+                    rows: dr,
+                    nnz: dn,
+                    time_us: 1.0,
+                },
+                ClassAssignment {
+                    class: SubgraphClass::SparseIntra,
+                    kernel: KernelKind::CsrIntra,
+                    blocks: sb,
+                    rows: sr,
+                    nnz: sn,
+                    time_us: 1.0,
+                },
+                ClassAssignment {
+                    class: SubgraphClass::Inter,
+                    kernel: KernelKind::CsrInter,
+                    blocks: 0,
+                    rows: d.inter.n_rows,
+                    nnz: d.inter.nnz(),
+                    time_us: 1.0,
+                },
+            ],
+            provenance: None,
+        };
+        let exec = AssignmentExec::build(&d, &assignment).unwrap();
+        let f = 4;
+        let x: Vec<f32> = (0..128 * f).map(|_| rng.normal_f32()).collect();
+        let got = exec.aggregate(&x, f);
+        for (a, b) in got.iter().zip(&d.whole().spmm(&x, f)) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
     }
 
     #[test]

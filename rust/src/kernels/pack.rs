@@ -28,6 +28,7 @@ pub fn pack_kernel_operands(
         KernelKind::CsrIntra => pack_csr_local(matrix, community, bucket),
         KernelKind::Coo => pack_coo(matrix, bucket),
         KernelKind::DenseBlock => pack_dense_blocks(matrix, community, bucket),
+        KernelKind::TileSparse => pack_tile_class(matrix, community, bucket),
         KernelKind::DenseFull => bail!("dense_full has no AOT operand packing (Fig. 2b only)"),
     }
 }
@@ -138,6 +139,42 @@ fn pack_dense_blocks(matrix: &Csr, community: usize, bucket: &BucketInfo) -> Res
         data[(b * c + r % c) * c + cc % c] += w;
     }
     Ok(vec![Tensor::f32(data, &[nb, c, c])])
+}
+
+/// Non-empty `16x16` MMA tiles (`kernels::tile` extraction), padded to
+/// the bucket's geometric tile-grid capacity: `strip_row` `[T]`, compacted
+/// column ids `[T*16]` (`-1` pad), dense payload `[T, 16, 16]`. Padding
+/// tiles carry zero payload — exact for aggregate-sum, like every other
+/// format here.
+pub fn pack_tile_class(matrix: &Csr, community: usize, bucket: &BucketInfo) -> Result<Vec<Tensor>> {
+    use crate::kernels::tile::{tile_capacity, TileSparse, MMA_TILE};
+    if matrix.n_rows > bucket.vertices {
+        bail!("graph exceeds bucket vertex capacity");
+    }
+    let tiles = TileSparse::from_block_diagonal_csr(matrix, community);
+    let cap = tile_capacity(bucket.blocks, community);
+    if tiles.n_tiles() > cap {
+        bail!(
+            "class occupies {} tiles, bucket {} reserves {cap} tile slots",
+            tiles.n_tiles(),
+            bucket.name
+        );
+    }
+    let mut strip_row = vec![0i32; cap];
+    let mut cols = vec![-1i32; cap * MMA_TILE];
+    let mut data = vec![0f32; cap * MMA_TILE * MMA_TILE];
+    for (i, &r) in tiles.strip_row.iter().enumerate() {
+        strip_row[i] = r as i32;
+    }
+    for (i, &c) in tiles.cols.iter().enumerate() {
+        cols[i] = if c == u32::MAX { -1 } else { c as i32 };
+    }
+    data[..tiles.data.len()].copy_from_slice(&tiles.data);
+    Ok(vec![
+        Tensor::i32(strip_row, &[cap]),
+        Tensor::i32(cols, &[cap * MMA_TILE]),
+        Tensor::f32(data, &[cap, MMA_TILE, MMA_TILE]),
+    ])
 }
 
 /// Pad features `[n, f_data]` into the bucket's `[V, F]` (truncating or
@@ -358,6 +395,34 @@ mod tests {
     }
 
     #[test]
+    fn tile_class_packs_to_grid_capacity_and_roundtrips() {
+        use crate::kernels::tile::TileSparse;
+        let d = decomp();
+        let b = bucket();
+        let ops = pack_tile_class(&d.intra, 16, &b).unwrap();
+        // community 16 -> one tile slot per block
+        assert_eq!(ops[0].shape(), &[4]);
+        assert_eq!(ops[1].shape(), &[64]);
+        assert_eq!(ops[2].shape(), &[4, 16, 16]);
+        // the packed operands execute to the same aggregate
+        let back = TileSparse::from_packed(
+            d.intra.n_rows,
+            16,
+            ops[0].as_i32().unwrap(),
+            ops[1].as_i32().unwrap(),
+            ops[2].as_f32().unwrap(),
+        );
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..48 * 2).map(|_| rng.normal_f32()).collect();
+        let direct = TileSparse::from_block_diagonal_csr(&d.intra, 16).spmm(&x, 2);
+        assert_eq!(back.spmm(&x, 2), direct);
+        // a bucket with no tile slots rejects the class
+        let mut tiny = bucket();
+        tiny.blocks = 0;
+        assert!(pack_tile_class(&d.intra, 16, &tiny).is_err());
+    }
+
+    #[test]
     fn rejects_oversize() {
         let mut rng = Rng::new(2);
         let g = planted_partition(128, 16, 0.5, 0.05, &mut rng);
@@ -456,6 +521,7 @@ mod tests {
                     time_us: 1.0,
                 },
             ],
+            provenance: None,
         };
         let (iops, jops) = pack_assignment(&d, &assignment, &b).unwrap();
         // intra slot: dense tiles holding ONLY the dense class's entries

@@ -3,7 +3,7 @@
 
 use std::fmt;
 
-/// The four density-specialized kernels (plus the full-graph dense format
+/// The density-specialized kernels (plus the full-graph dense format
 /// used only by the Fig. 2b format study).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
@@ -15,6 +15,10 @@ pub enum KernelKind {
     Coo,
     /// Dense block-diagonal batched GEMM (MXU / Tensor Core) — intra.
     DenseBlock,
+    /// Non-empty `16x16` tiles column-compacted into MMA fragments
+    /// (`kernels::tile`) — the mid-density intra class regime between
+    /// `Coo`/`CsrIntra` and `DenseBlock`.
+    TileSparse,
     /// Full dense adjacency GEMM — Fig. 2b's "Dense" format curve only.
     DenseFull,
 }
@@ -26,6 +30,7 @@ impl KernelKind {
             KernelKind::CsrIntra => "csr_intra",
             KernelKind::Coo => "coo",
             KernelKind::DenseBlock => "dense_block",
+            KernelKind::TileSparse => "tile_sparse",
             KernelKind::DenseFull => "dense_full",
         }
     }
@@ -47,9 +52,10 @@ impl std::str::FromStr for KernelKind {
             "csr_intra" => Ok(KernelKind::CsrIntra),
             "coo" => Ok(KernelKind::Coo),
             "dense_block" => Ok(KernelKind::DenseBlock),
+            "tile_sparse" => Ok(KernelKind::TileSparse),
             "dense_full" => Ok(KernelKind::DenseFull),
             other => Err(anyhow::anyhow!(
-                "unknown kernel {other:?} (expected csr_inter|csr_intra|coo|dense_block|dense_full)"
+                "unknown kernel {other:?} (expected csr_inter|csr_intra|coo|dense_block|tile_sparse|dense_full)"
             )),
         }
     }
@@ -62,12 +68,56 @@ impl fmt::Display for KernelKind {
 }
 
 /// Candidate kernels for the intra-community subgraph (Sec. 3.3: "two for
-/// intra-subgraph").
+/// intra-subgraph"). The uniform-intra pair the runtime selector monitors;
+/// [`candidates`]`(Role::UniformIntra)` is the canonical accessor.
 pub const INTRA_CANDIDATES: [KernelKind; 2] = [KernelKind::CsrIntra, KernelKind::DenseBlock];
 
 /// Candidate kernels for the inter-community subgraph ("two for
-/// inter-subgraph").
+/// inter-subgraph"). [`candidates`]`(Role::Inter)` is the canonical
+/// accessor.
 pub const INTER_CANDIDATES: [KernelKind; 2] = [KernelKind::CsrInter, KernelKind::Coo];
+
+/// What part a kernel candidate would play in a plan — the key of the
+/// kernel-zoo registry. The hybrid sweep, the cost model, `plan
+/// --explain`, and the bench suite all enumerate candidates exclusively
+/// through [`candidates`]; adding a kernel is one registry entry plus its
+/// cost (`gpusim::kernel_cost`), pack (`kernels::pack`), and native
+/// (`kernels::native`) implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// Uniform (single-class) intra plans and the runtime monitor loop.
+    /// Exactly [`INTRA_CANDIDATES`] — the monitored 2x2 strategy space
+    /// is part of the artifact/selector contract.
+    UniformIntra,
+    /// The inter-community subgraph. Exactly [`INTER_CANDIDATES`].
+    Inter,
+    /// The dense class of a hybrid split (blocks at/above threshold).
+    DenseClass,
+    /// The sparse class of a hybrid split. Its operands merge into the
+    /// inter launch at pack time, so only kernels a global sparse format
+    /// absorbs exactly are eligible (TileSparse is not).
+    SparseClass,
+    /// Kernels that can execute in the intra slot of the two-slot AOT
+    /// artifact contract — the superset the argmin-agreement bench and
+    /// `--explain` enumerate.
+    IntraSlot,
+}
+
+/// The kernel-zoo registry: every candidate a role may route to. The
+/// single source of truth — no candidate array may be hard-coded outside
+/// this module (enforced by `adaptgear check`'s self-audit tests and the
+/// completeness test below).
+pub fn candidates(role: Role) -> &'static [KernelKind] {
+    match role {
+        Role::UniformIntra => &INTRA_CANDIDATES,
+        Role::Inter => &INTER_CANDIDATES,
+        Role::DenseClass => &[KernelKind::DenseBlock, KernelKind::TileSparse],
+        Role::SparseClass => &[KernelKind::CsrIntra, KernelKind::Coo],
+        Role::IntraSlot => {
+            &[KernelKind::CsrIntra, KernelKind::DenseBlock, KernelKind::TileSparse]
+        }
+    }
+}
 
 /// A (intra, inter) kernel assignment — one point in AdaptGear's strategy
 /// space. `intra == None` encodes the full-graph-level baselines where the
@@ -121,11 +171,76 @@ mod tests {
             KernelKind::CsrIntra,
             KernelKind::Coo,
             KernelKind::DenseBlock,
+            KernelKind::TileSparse,
             KernelKind::DenseFull,
         ] {
             assert_eq!(KernelKind::parse(k.as_str()), Some(k));
         }
         assert_eq!(KernelKind::parse("nope"), None);
+    }
+
+    /// The registry contract: every kernel a role may route to has a
+    /// working cost curve AND a working pack routine — adding a registry
+    /// entry without its implementations fails here, not in a planner.
+    #[test]
+    fn registry_candidates_are_complete() {
+        use crate::gpusim::kernel_cost::{class_kernel_cost, kernel_cost, ClassDims, CostCtx};
+        use crate::gpusim::A100;
+        use crate::graph::Csr;
+        use crate::runtime::BucketInfo;
+
+        // tiny 2-block block-diagonal intra part + off-diagonal inter part
+        let intra = Csr::from_triplets(
+            32,
+            32,
+            vec![(0, 1, 1.0), (3, 2, 0.5), (17, 20, 1.0), (30, 30, 0.25)],
+        );
+        let inter = Csr::from_triplets(32, 32, vec![(0, 20, 1.0), (25, 3, 0.5)]);
+        let bucket = BucketInfo {
+            name: "t".into(),
+            vertices: 32,
+            edges: 64,
+            features: 8,
+            hidden: 8,
+            classes: 4,
+            blocks: 2,
+        };
+        let roles = [
+            Role::UniformIntra,
+            Role::Inter,
+            Role::DenseClass,
+            Role::SparseClass,
+            Role::IntraSlot,
+        ];
+        for role in roles {
+            let set = candidates(role);
+            assert!(!set.is_empty(), "{role:?} has no candidates");
+            let uniq: std::collections::HashSet<_> = set.iter().collect();
+            assert_eq!(uniq.len(), set.len(), "{role:?} lists a kernel twice");
+            for &k in set {
+                assert_eq!(KernelKind::parse(k.as_str()), Some(k), "{role:?}/{k} name");
+                assert_ne!(k, KernelKind::DenseFull, "figure-only format in {role:?}");
+                let (matrix, us) = match role {
+                    Role::Inter => {
+                        (&inter, kernel_cost(k, &inter, 8, 16, &A100).time_us)
+                    }
+                    _ => {
+                        let dims = ClassDims { kind: k, blocks: 2, rows: 32, nnz: intra.nnz() };
+                        (&intra, class_kernel_cost(&CostCtx::new(dims, 8, 16, &A100)).time_us)
+                    }
+                };
+                assert!(us.is_finite() && us > 0.0, "{role:?}/{k} cost {us}");
+                crate::kernels::pack::pack_kernel_operands(k, matrix, 16, &bucket)
+                    .unwrap_or_else(|e| panic!("{role:?}/{k} has no pack routine: {e}"));
+            }
+        }
+        // slot subset rules: every dense/sparse class kernel either runs
+        // in the intra artifact slot or merges into the inter launch
+        for &k in candidates(Role::DenseClass) {
+            assert!(candidates(Role::IntraSlot).contains(&k), "{k} unexecutable");
+        }
+        assert_eq!(candidates(Role::UniformIntra), &INTRA_CANDIDATES);
+        assert_eq!(candidates(Role::Inter), &INTER_CANDIDATES);
     }
 
     #[test]

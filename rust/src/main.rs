@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 use adaptgear::coordinator::{pipeline, Clock, ModelKind, Run, Strategy};
 use adaptgear::graph::{datasets, stats};
 use adaptgear::gpusim::{kernel_cost, GpuModel};
-use adaptgear::kernels::{INTER_CANDIDATES, INTRA_CANDIDATES};
+use adaptgear::kernels::{candidates, Role};
 use adaptgear::partition::{Decomposition, Propagation};
 use adaptgear::plan::{
     CachedPlanner, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner, SimCostPlanner,
@@ -476,8 +476,8 @@ fn explain_plan(
                 );
             }
         };
-        show("intra", &d.intra, &INTRA_CANDIDATES, plan.chosen.intra_str());
-        show("inter", &d.inter, &INTER_CANDIDATES, plan.chosen.inter.as_str());
+        show("intra", &d.intra, candidates(Role::IntraSlot), plan.chosen.intra_str());
+        show("inter", &d.inter, candidates(Role::Inter), plan.chosen.inter.as_str());
     }
     let fmt_times = |m: &std::collections::BTreeMap<String, f64>| {
         m.iter()
@@ -548,8 +548,14 @@ fn explain_plan(
             print!("{}", p.render());
         }
         None => {
-            let sweep =
-                adaptgear::plan::hybrid::sweep(&profile, &d.inter, &widths, bucket.edges, gpu);
+            let sweep = adaptgear::plan::hybrid::sweep(
+                &profile,
+                &d.inter,
+                &widths,
+                bucket.edges,
+                adaptgear::kernels::tile::tile_capacity(bucket.blocks, d.community),
+                gpu,
+            );
             println!(
                 "intra+inter simulated (re-swept; plan has no provenance): chosen {:.2}us | \
                  all-dense_block {:.2}us | all-csr_intra {:.2}us",

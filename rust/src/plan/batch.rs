@@ -21,8 +21,10 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::coordinator::ModelKind;
+use crate::gpusim::kernel_cost::{est_occupied_tiles, CostCtx};
 use crate::gpusim::{class_kernel_cost, kernel_cost, ClassDims, GpuModel, IterationCost};
-use crate::kernels::{KernelKind, KernelPair};
+use crate::kernels::tile::tile_capacity;
+use crate::kernels::{candidates, KernelKind, KernelPair, Role};
 use crate::partition::{BlockProfile, Decomposition, DensityClass};
 
 use super::{
@@ -225,9 +227,15 @@ pub fn adapt_decision(
         let dims = ClassDims { kind, blocks, rows, nnz };
         widths
             .iter()
-            .map(|&w| class_kernel_cost(&dims, w, d.community, gpu).time_us)
+            .map(|&w| class_kernel_cost(&CostCtx::new(dims, w, d.community, gpu)).time_us)
             .sum::<f64>()
             / widths.len().max(1) as f64
+    };
+    // A tile-sparse class must still fit the bucket's reserved tile grid
+    // on THIS batch (same estimate the sweep vetoes with).
+    let tile_fits = |blocks: usize, nnz: usize| {
+        est_occupied_tiles(blocks, nnz, d.community)
+            <= tile_capacity(bucket.blocks, d.community) as f64
     };
     let inter_time = widths
         .iter()
@@ -248,6 +256,9 @@ pub fn adapt_decision(
         // the merged sparse+inter operand must fit the bucket.
         let (dk, sk) = (decision.dense?, decision.sparse?);
         if dense.2 > bucket.edges || sparse.2 + d.inter.nnz() > bucket.edges {
+            return None;
+        }
+        if dk == KernelKind::TileSparse && !tile_fits(dense.0, dense.2) {
             return None;
         }
         return Some(GearAssignment {
@@ -287,7 +298,10 @@ pub fn adapt_decision(
     } else {
         (decision.sparse?, sparse)
     };
-    if !crate::kernels::INTRA_CANDIDATES.contains(&kernel) {
+    if !candidates(Role::IntraSlot).contains(&kernel) {
+        return None;
+    }
+    if kernel == KernelKind::TileSparse && !tile_fits(stats.0, stats.2) {
         return None;
     }
     if stats.2 > bucket.edges || d.inter.nnz() > bucket.edges {

@@ -23,10 +23,11 @@ impl Fingerprint {
     /// Fingerprint the selection problem: topology + community + model.
     /// The salt names the plan schema generation — v2 added the per-class
     /// hybrid assignment, v3 added the graph-version component for
-    /// streaming graphs — so every pre-stream cache entry keys
-    /// differently and is recomputed rather than served against a
-    /// mutated graph. Equivalent to [`Fingerprint::of_versioned`] at
-    /// graph version 0 (a frozen graph).
+    /// streaming graphs, v4 added the tile-sparse kernel class (plans
+    /// swept without it must be re-priced, not served) — so every
+    /// pre-generation cache entry keys differently and is recomputed
+    /// rather than served against a richer candidate set. Equivalent to
+    /// [`Fingerprint::of_versioned`] at graph version 0 (a frozen graph).
     pub fn of(d: &Decomposition, model: ModelKind) -> Fingerprint {
         Fingerprint::of_versioned(d, model, 0)
     }
@@ -38,7 +39,7 @@ impl Fingerprint {
     /// pre-mutation plan can never be served from the store.
     pub fn of_versioned(d: &Decomposition, model: ModelKind, graph_version: u64) -> Fingerprint {
         let mut h = Fnv::new();
-        h.write(b"adaptgear-plan-v3");
+        h.write(b"adaptgear-plan-v4");
         h.write(&graph_version.to_le_bytes());
         h.write(model.as_str().as_bytes());
         h.write_usize(d.community);

@@ -7,11 +7,13 @@
 //! sweeps every representable density threshold over the intra block
 //! diagonal and prices each candidate split as the **sum over classes**
 //! (`gpusim::kernel_cost::class_kernel_cost`): the dense class on the
-//! `DenseBlock` batched GEMM, the sparse class on the cheaper of
-//! `CsrIntra`/`Coo`, plus the inter kernel. Every class is one launch,
-//! so a split must buy back its extra `launch_us` in format savings —
-//! small graphs therefore stay uniform and the sweep degrades to the
-//! legacy single-pair decision.
+//! cheapest admissible `Role::DenseClass` kernel (`DenseBlock` or the
+//! tile-sparse MMA schedule), the sparse class on the cheapest
+//! `Role::SparseClass` kernel (`CsrIntra`/`Coo`), plus the inter kernel
+//! — every candidate set comes from the `kernels::spec::candidates`
+//! registry. Every class is one launch, so a split must buy back its
+//! extra `launch_us` in format savings — small graphs therefore stay
+//! uniform and the sweep degrades to the legacy single-pair decision.
 //!
 //! The sweep is closed-form over `(blocks, rows, nnz)` prefix sums of the
 //! density-sorted block list, so thousands of candidate thresholds cost
@@ -25,10 +27,10 @@
 //! it can keep a borderline graph uniform, but a split it does choose is
 //! at least as good as priced under either execution shape.
 
-use crate::gpusim::kernel_cost::{class_kernel_cost, ClassDims};
+use crate::gpusim::kernel_cost::{class_kernel_cost, est_occupied_tiles, ClassDims, CostCtx};
 use crate::gpusim::{kernel_cost, GpuModel};
 use crate::graph::Csr;
-use crate::kernels::{KernelKind, INTER_CANDIDATES};
+use crate::kernels::{candidates, KernelKind, Role};
 use crate::partition::BlockProfile;
 
 use crate::obs;
@@ -55,20 +57,22 @@ pub struct HybridDecision {
     pub all_sparse_us: f64,
 }
 
-/// Sparse-class candidates (the dense class is always the batched GEMM).
-const SPARSE_CLASS_CANDIDATES: [KernelKind; 2] = [KernelKind::CsrIntra, KernelKind::Coo];
-
 /// Sweep candidate thresholds over `profile` and return the cheapest
 /// class assignment. `edge_cap` is the AOT bucket's edge capacity: a
 /// hybrid split folds its sparse class into the inter operand at pack
 /// time, so splits whose `sparse nnz + inter nnz` exceed the cap are
 /// inadmissible (the uniform extremes always are admissible — staging
-/// already fitted both whole subgraphs).
+/// already fitted both whole subgraphs). `tile_cap` is the bucket's
+/// tile-grid capacity (`kernels::tile::tile_capacity`): a dense class
+/// whose estimated occupied-tile count exceeds it cannot pack, so
+/// `TileSparse` is excluded from that class's pricing (pass `usize::MAX`
+/// when no AOT bucket constrains the plan).
 pub fn sweep(
     profile: &BlockProfile,
     inter: &Csr,
     widths: &[usize],
     edge_cap: usize,
+    tile_cap: usize,
     gpu: &'static GpuModel,
 ) -> HybridDecision {
     let community = profile.community;
@@ -80,9 +84,14 @@ pub fn sweep(
         let dims = ClassDims { kind, blocks, rows, nnz };
         widths
             .iter()
-            .map(|&w| class_kernel_cost(&dims, w, community, gpu).time_us)
+            .map(|&w| class_kernel_cost(&CostCtx::new(dims, w, community, gpu)).time_us)
             .sum::<f64>()
             / widths.len().max(1) as f64
+    };
+    // Occupancy admissibility: the same deterministic estimate the
+    // checker re-derives (AG028); exact counts only exist at pack time.
+    let tile_ok = |blocks: usize, nnz: usize| -> bool {
+        est_occupied_tiles(blocks, nnz, community) <= tile_cap as f64
     };
 
     // Inter winner on the same mean-width basis the planners use.
@@ -93,8 +102,9 @@ pub fn sweep(
             .sum::<f64>()
             / widths.len().max(1) as f64
     };
-    let inter_kernel = INTER_CANDIDATES
-        .into_iter()
+    let inter_kernel = candidates(Role::Inter)
+        .iter()
+        .copied()
         .min_by(|&a, &b| inter_cost(a).partial_cmp(&inter_cost(b)).unwrap())
         .unwrap_or(KernelKind::CsrInter);
     let inter_us = inter_cost(inter_kernel);
@@ -119,8 +129,20 @@ pub fn sweep(
     let (total_rows, total_nnz) = (rows_pfx[nb], nnz_pfx[nb]);
 
     let sparse_best = |blocks: usize, rows: usize, nnz: usize| -> (KernelKind, f64) {
-        SPARSE_CLASS_CANDIDATES
-            .into_iter()
+        candidates(Role::SparseClass)
+            .iter()
+            .copied()
+            .map(|k| (k, mean_class(k, blocks, rows, nnz)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+    };
+    // Dense-class argmin over the registry, with the tile-capacity veto
+    // (`DenseBlock` is always admissible, so the set is never empty).
+    let dense_best = |blocks: usize, rows: usize, nnz: usize| -> (KernelKind, f64) {
+        candidates(Role::DenseClass)
+            .iter()
+            .copied()
+            .filter(|&k| k != KernelKind::TileSparse || tile_ok(blocks, nnz))
             .map(|k| (k, mean_class(k, blocks, rows, nnz)))
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap()
@@ -136,21 +158,21 @@ pub fn sweep(
     struct Candidate {
         k: usize,
         threshold: f64,
-        dense_us: f64,
+        dense: Option<(KernelKind, f64)>,
         sparse: Option<(KernelKind, f64)>,
         total: f64,
     }
     let mut best = Candidate {
         k: 0,
         threshold: ALL_SPARSE_THRESHOLD,
-        dense_us: 0.0,
+        dense: None,
         sparse: Some((KernelKind::CsrIntra, all_sparse_us)),
         total: all_sparse_us,
     };
     let all_dense = Candidate {
         k: nb,
         threshold: ALL_DENSE_THRESHOLD,
-        dense_us: all_dense_us,
+        dense: Some((KernelKind::DenseBlock, all_dense_us)),
         sparse: None,
         total: all_dense_us,
     };
@@ -176,7 +198,7 @@ pub fn sweep(
             vetoed.push(threshold);
             continue; // merged inter operand would overflow the bucket
         }
-        let dense_us = mean_class(KernelKind::DenseBlock, k, rows_pfx[k], nnz_pfx[k]);
+        let (dk, dense_us) = dense_best(k, rows_pfx[k], nnz_pfx[k]);
         let (sk, sparse_us) =
             sparse_best(nb - k, total_rows - rows_pfx[k], sparse_nnz);
         let total = dense_us + sparse_us;
@@ -185,7 +207,7 @@ pub fn sweep(
             best = Candidate {
                 k,
                 threshold,
-                dense_us,
+                dense: Some((dk, dense_us)),
                 sparse: Some((sk, sparse_us)),
                 total,
             };
@@ -194,14 +216,14 @@ pub fn sweep(
 
     // Materialize the winning candidate as a class assignment.
     let mut classes = Vec::new();
-    if best.k > 0 {
+    if let Some((kernel, time_us)) = best.dense {
         classes.push(ClassAssignment {
             class: SubgraphClass::DenseIntra,
-            kernel: KernelKind::DenseBlock,
+            kernel,
             blocks: best.k,
             rows: rows_pfx[best.k],
             nnz: nnz_pfx[best.k],
-            time_us: best.dense_us,
+            time_us,
         });
     }
     if let Some((kernel, time_us)) = best.sparse {
@@ -224,20 +246,31 @@ pub fn sweep(
         time_us: inter_us,
     });
 
-    // Per-class candidate costs at the winning split: every kernel a
-    // class could have run, priced on that class's exact dimensions.
+    // Per-class candidate costs at the winning split: every registry
+    // kernel the class's role admits, priced on its exact dimensions.
+    // The tile-capacity veto applies here too, so the recorded map is
+    // exactly the set the checker may audit the argmin over (AG027).
     let class_costs = classes
         .iter()
         .map(|c| {
             let costs = match c.class {
-                SubgraphClass::Inter => INTER_CANDIDATES
-                    .into_iter()
-                    .map(|k| (k.as_str().to_string(), inter_cost(k)))
+                SubgraphClass::Inter => candidates(Role::Inter)
+                    .iter()
+                    .map(|&k| (k.as_str().to_string(), inter_cost(k)))
                     .collect(),
-                _ => [KernelKind::DenseBlock, KernelKind::CsrIntra, KernelKind::Coo]
-                    .into_iter()
-                    .map(|k| (k.as_str().to_string(), mean_class(k, c.blocks, c.rows, c.nnz)))
-                    .collect(),
+                intra => {
+                    let role = if intra == SubgraphClass::DenseIntra {
+                        Role::DenseClass
+                    } else {
+                        Role::SparseClass
+                    };
+                    candidates(role)
+                        .iter()
+                        .copied()
+                        .filter(|&k| k != KernelKind::TileSparse || tile_ok(c.blocks, c.nnz))
+                        .map(|k| (k.as_str().to_string(), mean_class(k, c.blocks, c.rows, c.nnz)))
+                        .collect()
+                }
             };
             ClassCandidates { class: c.class, costs }
         })
@@ -340,17 +373,19 @@ mod tests {
     fn mixed_profile_goes_hybrid_and_beats_both_uniforms() {
         // The acceptance shape on the analytic surface: a large mixed
         // graph (1/3 near-dense blocks at ~0.95, 2/3 near-empty) must
-        // split, route DenseBlock + a sparse kernel, and price strictly
-        // below BOTH single-kernel plans.
+        // split, route the tile-sparse MMA schedule on the dense class
+        // (it strictly beats the padded batched GEMM once tiles compact)
+        // plus a sparse kernel, and price strictly below BOTH
+        // single-kernel plans.
         let profile = fake_profile(16, 10922, 244, 21846, 20);
-        let d = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, &A100);
+        let d = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, usize::MAX, &A100);
         assert!(d.assignment.is_hybrid(), "mixed profile must split");
         assert_eq!(
             d.assignment.kernel_for(SubgraphClass::DenseIntra),
-            Some(KernelKind::DenseBlock)
+            Some(KernelKind::TileSparse)
         );
         let sparse = d.assignment.kernel_for(SubgraphClass::SparseIntra).unwrap();
-        assert!(SPARSE_CLASS_CANDIDATES.contains(&sparse));
+        assert!(candidates(Role::SparseClass).contains(&sparse));
         assert!(
             d.total_us < d.all_dense_us && d.total_us < d.all_sparse_us,
             "hybrid {:.1}us must beat all-dense {:.1}us and all-csr {:.1}us",
@@ -372,7 +407,7 @@ mod tests {
     fn small_graphs_stay_uniform() {
         // launch overhead dwarfs format savings at tiny scale: one class
         let profile = fake_profile(16, 4, 200, 12, 18);
-        let d = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, &A100);
+        let d = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, usize::MAX, &A100);
         assert!(!d.assignment.is_hybrid(), "tiny graph must not split");
         assert_eq!(d.assignment.intra_classes().count(), 1);
         let pair = d.assignment.executed_pair().unwrap();
@@ -382,7 +417,7 @@ mod tests {
     #[test]
     fn sweep_records_provenance() {
         let profile = fake_profile(16, 10922, 244, 21846, 20);
-        let d = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, &A100);
+        let d = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, usize::MAX, &A100);
         let p = d.assignment.provenance.as_ref().expect("sweep attaches provenance");
         assert_eq!(p.threshold, d.assignment.threshold);
         let chosen: Vec<_> = p.candidates.iter().filter(|c| c.outcome == "chosen").collect();
@@ -399,7 +434,7 @@ mod tests {
         }
 
         // vetoed splits are counted and sampled with the reason
-        let capped = sweep(&profile, &small_inter(), &[32, 32], 1000, &A100);
+        let capped = sweep(&profile, &small_inter(), &[32, 32], 1000, usize::MAX, &A100);
         let cp = capped.assignment.provenance.as_ref().unwrap();
         assert!(cp.rejected_edge_cap > 0);
         assert!(cp
@@ -413,14 +448,14 @@ mod tests {
         let profile = fake_profile(16, 10922, 244, 21846, 20);
         // sparse class nnz ~ 436920; a cap below that + inter nnz forces
         // the sweep back to a uniform plan
-        let capped = sweep(&profile, &small_inter(), &[32, 32], 1000, &A100);
+        let capped = sweep(&profile, &small_inter(), &[32, 32], 1000, usize::MAX, &A100);
         assert!(!capped.assignment.is_hybrid(), "cap must veto the split");
     }
 
     #[test]
     fn uniform_extremes_match_class_totals() {
         let profile = fake_profile(16, 8, 100, 8, 10);
-        let d = sweep(&profile, &small_inter(), &[32], usize::MAX, &A100);
+        let d = sweep(&profile, &small_inter(), &[32], usize::MAX, usize::MAX, &A100);
         // whichever side won, its class totals cover the whole diagonal
         let blocks: usize = d.assignment.intra_classes().map(|c| c.blocks).sum();
         assert_eq!(blocks, 16);
@@ -441,7 +476,12 @@ mod tests {
         let g = planted_partition_mixed(n, 64, 0.95, 0.005, 3, 0.3 / n as f64, &mut rng);
         let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 64, 0);
         let profile = d.intra_block_profile();
-        let decision = sweep(&profile, &d.inter, &[32, 32], usize::MAX, &A100);
+        let decision = sweep(&profile, &d.inter, &[32, 32], usize::MAX, usize::MAX, &A100);
+        assert_eq!(
+            decision.assignment.kernel_for(SubgraphClass::DenseIntra),
+            Some(KernelKind::TileSparse),
+            "near-full 64-wide blocks compact into cheap tiles"
+        );
         assert!(
             decision.assignment.is_hybrid(),
             "aligned mixed graph must split (total {:.1} vs dense {:.1} / sparse {:.1})",
@@ -465,5 +505,45 @@ mod tests {
             assert_eq!(class.blocks.len(), rec.blocks);
             assert_eq!(class.matrix.nnz(), rec.nnz);
         }
+    }
+
+    #[test]
+    fn tile_capacity_veto_falls_back_to_dense_block() {
+        // Same mixed profile that routes TileSparse with an open grid: a
+        // bucket reserving zero tile slots must veto it, and the veto has
+        // to reach the provenance so the checker audits the argmin over
+        // exactly the admissible set.
+        let profile = fake_profile(16, 10922, 244, 21846, 20);
+        let open = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, usize::MAX, &A100);
+        assert_eq!(
+            open.assignment.kernel_for(SubgraphClass::DenseIntra),
+            Some(KernelKind::TileSparse)
+        );
+        let capped = sweep(&profile, &small_inter(), &[32, 32], usize::MAX, 0, &A100);
+        assert!(capped.assignment.is_hybrid(), "veto reroutes, it must not unsplit");
+        assert_eq!(
+            capped.assignment.kernel_for(SubgraphClass::DenseIntra),
+            Some(KernelKind::DenseBlock)
+        );
+        let p = capped.assignment.provenance.as_ref().unwrap();
+        let dc = p
+            .class_costs
+            .iter()
+            .find(|cc| cc.class == SubgraphClass::DenseIntra)
+            .unwrap();
+        assert!(
+            !dc.costs.contains_key(KernelKind::TileSparse.as_str()),
+            "vetoed kernel must not be recorded as a candidate"
+        );
+        let oc = open
+            .assignment
+            .provenance
+            .as_ref()
+            .unwrap()
+            .class_costs
+            .iter()
+            .find(|cc| cc.class == SubgraphClass::DenseIntra)
+            .unwrap();
+        assert!(oc.costs.contains_key(KernelKind::TileSparse.as_str()));
     }
 }

@@ -50,7 +50,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::ModelKind;
 use crate::gpusim::IterationCost;
-use crate::kernels::{KernelKind, KernelPair, INTRA_CANDIDATES};
+use crate::kernels::{candidates, KernelKind, KernelPair, Role as KernelRole};
 use crate::partition::{Decomposition, DensityClass, Reorder};
 use crate::runtime::BucketInfo;
 use crate::util::json::Json;
@@ -414,7 +414,7 @@ impl GearAssignment {
         let intra_kernel = pair
             .intra
             .expect("uniform assignments require an intra kernel (full-graph plans have no assignment)");
-        let (threshold, class) = if intra_kernel == KernelKind::DenseBlock {
+        let (threshold, class) = if candidates(KernelRole::DenseClass).contains(&intra_kernel) {
             (ALL_DENSE_THRESHOLD, SubgraphClass::DenseIntra)
         } else {
             (ALL_SPARSE_THRESHOLD, SubgraphClass::SparseIntra)
@@ -490,7 +490,7 @@ impl GearAssignment {
             .next()
             .ok_or_else(|| anyhow!("assignment has no intra class"))?
             .kernel;
-        if !INTRA_CANDIDATES.contains(&intra) {
+        if !candidates(KernelRole::IntraSlot).contains(&intra) {
             bail!("class kernel {intra} cannot execute in the intra artifact slot");
         }
         Ok(KernelPair::new(intra, self.inter_class()?.kernel))

@@ -117,7 +117,15 @@ fn resolve_assignment(
     inter_time_us: f64,
 ) -> GearAssignment {
     let profile = req.d.intra_block_profile();
-    let decision = hybrid::sweep(&profile, &req.d.inter, &req.widths(), req.bucket.edges, gpu);
+    let tile_cap = crate::kernels::tile::tile_capacity(req.bucket.blocks, req.d.community);
+    let decision = hybrid::sweep(
+        &profile,
+        &req.d.inter,
+        &req.widths(),
+        req.bucket.edges,
+        tile_cap,
+        gpu,
+    );
     if decision.assignment.is_hybrid() {
         let mut a = decision.assignment;
         for c in &mut a.classes {
@@ -604,7 +612,11 @@ mod tests {
 
         assert!(plan.assignment.is_hybrid(), "mixed graph must plan hybrid");
         assert_eq!(plan.assignment.intra_kernels().len(), 2, "two distinct intra kernels");
-        assert_eq!(plan.chosen.intra, Some(KernelKind::DenseBlock), "dense class lowers to the intra slot");
+        assert_eq!(
+            plan.chosen.intra,
+            Some(KernelKind::TileSparse),
+            "dense class lowers to the intra slot"
+        );
         assert!(plan.validate(&d, crate::coordinator::ModelKind::Gcn).is_ok());
 
         // strictly below both uniforms on the same surface
@@ -613,6 +625,7 @@ mod tests {
             &d.inter,
             &req.widths(),
             bucket.edges,
+            crate::kernels::tile::tile_capacity(bucket.blocks, 64),
             &A100,
         );
         assert!(decision.total_us < decision.all_dense_us);
@@ -634,6 +647,59 @@ mod tests {
         assert_eq!(warm.assignment.threshold, plan.assignment.threshold);
         assert_eq!(warm.chosen, plan.chosen);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mid_density_regime_selects_tile_sparse_and_executes() {
+        // PR 9 acceptance: a planted mid-density regime (45%-full blocks
+        // alternating with near-empty ones at community 64) must make the
+        // analytic planner route the dense class to TileSparse, the plan
+        // must cover its decomposition, the hybrid assignment must pack
+        // into the bucket's reserved tile grid, and the native adaptive
+        // executor must reproduce the whole-graph SpMM.
+        use crate::graph::generate::planted_partition_mixed;
+        use crate::partition::{Propagation, Reorder};
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(11);
+        let n = 262144;
+        let g = planted_partition_mixed(n, 64, 0.45, 0.004, 2, 0.3 / n as f64, &mut rng);
+        let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, 64, 0);
+        let bucket = crate::runtime::BucketInfo {
+            name: "b256k".to_string(),
+            vertices: n,
+            edges: 16 * 1024 * 1024,
+            features: 8,
+            hidden: 8,
+            classes: 4,
+            blocks: n / 64,
+        };
+        let req = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+        let plan = SimCostPlanner::new(&A100).plan(&req).unwrap();
+        assert!(plan.assignment.is_hybrid(), "mid-density regime must split");
+        assert_eq!(
+            plan.assignment.kernel_for(crate::plan::SubgraphClass::DenseIntra),
+            Some(KernelKind::TileSparse),
+            "45%-full blocks are the tile-sparse niche"
+        );
+        assert_eq!(plan.chosen.intra, Some(KernelKind::TileSparse));
+        assert!(plan.assignment.covers(&d).is_ok());
+
+        // native adaptive execution == whole-graph SpMM
+        let f = 8;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+        let got =
+            crate::kernels::native::aggregate_assignment(&d, &plan.assignment, &x, f).unwrap();
+        let want = d.whole().spmm(&x, f);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "adaptive {a} vs whole {b}");
+        }
+
+        // the tile class fits the grid the bucket reserves and packs
+        let (intra_ops, inter_ops) =
+            crate::kernels::pack::pack_assignment(&d, &plan.assignment, &bucket).unwrap();
+        assert_eq!(intra_ops.len(), 3, "strip_row + cols + tile payload");
+        assert!(!inter_ops.is_empty());
     }
 
     #[test]

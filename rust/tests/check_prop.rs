@@ -238,6 +238,70 @@ fn plan_mutation_bad_threshold_is_ag022() {
 }
 
 #[test]
+fn plan_mutation_nondense_kernel_on_tile_plan_is_ag022() {
+    let _g = lock();
+    let root = tmpdir("plan-tile");
+    let store = PlanStore::in_artifacts(&root);
+
+    // A mid-density planted graph prices its dense class onto the
+    // tile-sparse schedule; the clean pass proves `check` DECODES a
+    // tile_sparse plan end to end (AG020 structural tier + the AG027
+    // argmin-agreement audit over the persisted candidate costs).
+    let n = 131072;
+    let g = adaptgear::graph::generate::planted_partition_mixed(
+        n,
+        64,
+        0.95,
+        0.005,
+        3,
+        0.3 / n as f64,
+        &mut Rng::new(5),
+    );
+    let d = Decomposition::build(
+        &g,
+        Reorder::Identity,
+        pipeline::propagation_for(ModelKind::Gcn),
+        64,
+        0,
+    );
+    let b = BucketInfo {
+        name: "b128k".to_string(),
+        vertices: n,
+        edges: 8 * 1024 * 1024,
+        features: 32,
+        hidden: 32,
+        classes: 4,
+        blocks: n / 64,
+    };
+    let plan =
+        SimCostPlanner::new(&A100).plan(&PlanRequest::new(&d, ModelKind::Gcn, &b)).unwrap();
+    assert!(plan.assignment.is_hybrid(), "mid-density graph must plan hybrid");
+    assert!(
+        plan.assignment.classes.iter().any(|c| c.kernel.as_str() == "tile_sparse"),
+        "dense class must price onto the tile schedule"
+    );
+    let path = store.save(&plan).unwrap();
+    let clean = check::run_all(&ctx(&root), false);
+    assert_eq!(error_codes(&clean), Vec::<&str>::new(), "{}", clean.render());
+
+    // One corrupted invariant: re-point the dense class at a kernel
+    // outside the dense-class registry => AG022.
+    mutate_json(&path, |map| {
+        let Some(Json::Obj(a)) = map.get_mut("assignment") else { panic!("no assignment") };
+        let Some(Json::Arr(classes)) = a.get_mut("classes") else { panic!("no classes") };
+        let dense = classes
+            .iter_mut()
+            .find(|c| c.get("class").as_str() == Some("dense_intra"))
+            .expect("hybrid plan carries a dense_intra class");
+        let Json::Obj(cm) = dense else { panic!("class entry is not an object") };
+        cm.insert("kernel".into(), Json::str("coo"));
+    });
+    let report = check::run_all(&ctx(&root), false);
+    assert!(error_codes(&report).contains(&"AG022"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
 fn plan_mutation_renamed_file_is_ag021() {
     let _g = lock();
     let root = tmpdir("plan-rename");

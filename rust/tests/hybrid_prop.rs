@@ -12,6 +12,7 @@
 use adaptgear::graph::generate::planted_partition_mixed;
 use adaptgear::graph::DenseBlocks;
 use adaptgear::kernels::native;
+use adaptgear::kernels::TileSparse;
 use adaptgear::partition::{Decomposition, DensityClass, Propagation, Reorder};
 use adaptgear::util::prop;
 use adaptgear::util::rng::Rng;
@@ -75,6 +76,65 @@ fn hybrid_class_execution_matches_whole_graph_spmm() {
                 1e-4,
                 "hybrid classes + coo",
             )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tile_sparse_class_execution_matches_whole_graph_spmm() {
+    // The same exactness contract for the tile-sparse schedule: swept
+    // over random densities and ragged sizes, running EITHER intra class
+    // on compacted 16x16 tiles (dense class on tiles + sparse on its CSR
+    // schedule, and both classes on tiles) plus inter must reproduce the
+    // whole-graph CSR spmm within 1e-4.
+    prop::check("tile class(es) + inter == whole", 25, |rng| {
+        let n = rng.usize_below(300) + 20;
+        let p_dense = 0.3 + rng.f64() * 0.65;
+        let p_sparse = rng.f64() * 0.1;
+        let p_inter = rng.f64() * 0.02;
+        let g = planted_partition_mixed(n, 16, p_dense, p_sparse, 3, p_inter, rng);
+        let reorder = if rng.chance(0.5) { Reorder::Identity } else { Reorder::Metis };
+        let d = Decomposition::build(&g, reorder, Propagation::GcnNormalized, 16, 5);
+        let threshold = rng.f64() * 1.1;
+        let split = d.split_intra(threshold);
+
+        let f = rng.usize_below(5) + 1;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+        let inter_part = native::csr_inter_spmm(&d.inter, &x, f);
+        let expect = d.whole().spmm(&x, f);
+
+        // dense class on the tile schedule, sparse on its CSR schedule
+        let mut mixed = inter_part.clone();
+        // every class on the tile schedule (the uniform-collapse case)
+        let mut all_tiles = inter_part;
+        if let Some(dense) = split.class(DensityClass::Dense) {
+            let tiles = TileSparse::from_block_diagonal_csr(&dense.matrix, 16);
+            for ((m, t), got) in mixed
+                .iter_mut()
+                .zip(all_tiles.iter_mut())
+                .zip(native::tile_sparse_spmm(&tiles, &x, f))
+            {
+                *m += got;
+                *t += got;
+            }
+        }
+        if let Some(sparse) = split.class(DensityClass::Sparse) {
+            let tiles = TileSparse::from_block_diagonal_csr(&sparse.matrix, 16);
+            let via_tiles = native::tile_sparse_spmm(&tiles, &x, f);
+            let via_csr = native::csr_intra_spmm(&sparse.matrix, &x, f, 16);
+            for ((m, t), (a, b)) in mixed
+                .iter_mut()
+                .zip(all_tiles.iter_mut())
+                .zip(via_csr.iter().zip(via_tiles))
+            {
+                *m += a;
+                *t += b;
+            }
+        }
+        for (i, &e) in expect.iter().enumerate() {
+            prop::require_close(mixed[i] as f64, e as f64, 1e-4, "tile dense + csr sparse")?;
+            prop::require_close(all_tiles[i] as f64, e as f64, 1e-4, "all classes on tiles")?;
         }
         Ok(())
     });
