@@ -5,10 +5,10 @@
 # all against synthetic bucket-only manifests.
 #
 #   ./ci.sh          # build + test + fmt + clippy + rustdoc (warnings
-#                    # denied) + plan/hybrid/sampled/trace/stream/check/
-#                    # help smokes
+#                    # denied) + plan/hybrid/sampled/topk/trace/stream/
+#                    # check/help smokes
 #   ./ci.sh bench    # additionally run the quick bench suite: emit the
-#                    # six BENCH_*.json reports, schema-validate them,
+#                    # seven BENCH_*.json reports, schema-validate them,
 #                    # self-check the comparator, and gate against
 #                    # committed baselines/ when present
 #
@@ -148,6 +148,8 @@ EOF
     expect_grep "sparse_intra" "$tmp/explain.txt" "hybrid smoke: no sparse_intra class"
     expect_grep "tile_sparse" "$tmp/explain.txt" \
         "hybrid smoke: explain does not list the tile_sparse kernel"
+    expect_grep "feature density" "$tmp/explain.txt" \
+        "hybrid smoke: explain does not print the feature-density term"
     echo "==> $bin plan (hybrid replan must hit the plan cache)"
     "$bin" plan --dataset planted-mixed --artifacts "$tmp" | tee "$tmp/second.txt"
     expect_grep "cache hit" "$tmp/second.txt" \
@@ -179,6 +181,31 @@ sampled_smoke() {
         "sampled smoke: no epoch loss line"
 }
 sampled_smoke
+
+# --- top-k smoke: the fused feature-sparsity mode must complete a
+# native epoch and report the k it trained with; the dense-equivalence
+# and gradient contracts are pinned by tests/feat_prop.rs, so the smoke
+# only asserts the flag drives the loop end to end.
+topk_smoke() {
+    local bin
+    if ! bin="$(find_bin)"; then
+        echo "topk smoke: adaptgear binary not found, skipping"
+        return 0
+    fi
+    new_tmpdir
+    local tmp="$NEW_TMPDIR"
+    echo "==> $bin train --sampled --topk 16 (native backend, one epoch)"
+    "$bin" train --dataset planted-mixed --sampled --fanout 10,10 \
+        --batch-size 128 --scale 0.004 --topk 16 --artifacts "$tmp/none" \
+        | tee "$tmp/topk.txt"
+    expect_grep "sampled training \[native\]" "$tmp/topk.txt" \
+        "topk smoke: the sampled loop did not complete"
+    expect_grep "topk 16" "$tmp/topk.txt" \
+        "topk smoke: the report does not record the top-k width"
+    expect_grep "epoch   0" "$tmp/topk.txt" \
+        "topk smoke: no epoch loss line"
+}
+topk_smoke
 
 # --- trace smoke: `train --sampled --trace-out` must emit a parseable
 # Chrome trace (Perfetto-loadable) carrying the sampled-loop span
@@ -322,12 +349,16 @@ help_smoke() {
         "help smoke: top-level help does not mention --sampled"
     expect_grep "sample" "$tmp/help_top.txt" \
         "help smoke: top-level help does not mention the sample suite"
+    expect_grep "feat" "$tmp/help_top.txt" \
+        "help smoke: top-level help does not mention the feat suite"
+    expect_grep "feat" "$tmp/help_bench.txt" \
+        "help smoke: bench --help does not list the feat suite"
 }
 help_smoke
 
 # --- `./ci.sh bench`: the quick benchmark suite end to end.
-# Emits BENCH_{kernels,plan,train,serve,sample,stream}.json at the repo
-# root, schema-validates all six, proves the comparator on a
+# Emits BENCH_{kernels,plan,train,serve,sample,stream,feat}.json at the
+# repo root, schema-validates all seven, proves the comparator on a
 # known-identical baseline (must pass), and gates against committed
 # baselines/ when they exist.
 bench_mode() {

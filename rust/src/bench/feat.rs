@@ -1,0 +1,213 @@
+//! Feat suite: feature-dimension sparsity end to end — top-k selection
+//! throughput, sparse-vs-dense native aggregation across k/F ratios, and
+//! the density-aware cost model's pricing of the same trade (DESIGN.md
+//! Sec. 15).
+//!
+//! Workloads are planted-partition graphs with wide feature matrices
+//! compressed to their per-row top-k lanes. Each ratio reports the
+//! measured wall-time speedup of the SpGEMM-style sparse aggregation
+//! over the dense reference, the deterministic cost-model speedup at the
+//! same density, and whether the cost model's intra argmin agrees with
+//! the measured ranking. The `f256_k32` row is the acceptance workload:
+//! F >= 256 at k = F/8 must price (and measure) sparse cheaper than
+//! dense, or the density term in `kernel_cost_density` has drifted.
+
+use anyhow::Result;
+
+use crate::graph::generate::planted_partition;
+use crate::graph::{Csr, DenseBlocks};
+use crate::gpusim::kernel_cost::CostCtx;
+use crate::gpusim::{class_kernel_cost, kernel_cost, kernel_cost_density, ClassDims, A100};
+use crate::kernels::native::{dense_block_spmm, sparse_aggregate, SparseFeat};
+use crate::kernels::native_model::topk_mask_rows;
+use crate::kernels::KernelKind;
+use crate::partition::{Decomposition, Propagation, Reorder};
+use crate::util::rng::Rng;
+
+use super::report::{BenchReport, Direction};
+use super::BenchConfig;
+
+/// One k/F ratio workload. The label is part of the suite contract —
+/// baselines key on it.
+struct Ratio {
+    label: &'static str,
+    f: usize,
+    k: usize,
+}
+
+const COMMUNITY: usize = 16;
+
+fn ratios(quick: bool) -> Vec<Ratio> {
+    let mut v = vec![
+        // Acceptance workload: wide features, k = F/8.
+        Ratio { label: "f256_k32", f: 256, k: 32 },
+        // Narrow features at the same 1/8 live fraction.
+        Ratio { label: "f64_k8", f: 64, k: 8 },
+    ];
+    if !quick {
+        // Mild compression: the regime where the dense engines stay
+        // competitive and the argmin is allowed to flip.
+        v.push(Ratio { label: "f256_k128", f: 256, k: 128 });
+    }
+    v
+}
+
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::new("feat", cfg.quick);
+    report.note("engine", "native-only");
+    let bench = super::measurer(cfg.quick);
+
+    let n = if cfg.quick { 1024 } else { 4096 };
+    // Deterministic workload: the seed is part of the suite contract.
+    let mut rng = Rng::new(cfg.seed ^ 0xfea7);
+    let g = planted_partition(n, COMMUNITY, 0.25, 16.0 / n as f64, &mut rng);
+    let a = Csr::gcn_normalized(&g);
+    let d = Decomposition::build(&g, Reorder::Identity, Propagation::GcnNormalized, COMMUNITY, 0);
+    let blocks = DenseBlocks::from_block_diagonal_csr(&d.intra, COMMUNITY);
+    let profile = d.intra_block_profile();
+    let intra_rows: usize = profile.blocks.iter().map(|&(r, _)| r).sum();
+    report.note(
+        "workload",
+        format!("n={n} nnz={} intra_nnz={} inter_nnz={}", a.nnz(), d.intra.nnz(), d.inter.nnz()),
+    );
+
+    for r in ratios(cfg.quick) {
+        let rho = r.k as f64 / r.f as f64;
+        let x: Vec<f32> = (0..n * r.f).map(|_| rng.normal_f32()).collect();
+        println!("\n-- feat/{}: n={n} f={} k={} rho={rho:.4} --", r.label, r.f, r.k);
+
+        // ---- top-k selection throughput (the fused activation's cost)
+        let m = bench.bench(&format!("select/from_dense/{}", r.label), || {
+            std::hint::black_box(SparseFeat::from_dense(&x, n, r.f, r.k));
+        });
+        report.push(
+            format!("select/from_dense/{}", r.label),
+            n as f64 / m.median_s().max(1e-12),
+            "rows/s",
+            Direction::Higher,
+        );
+        let m = bench.bench(&format!("select/mask_rows/{}", r.label), || {
+            let mut h = x.clone();
+            topk_mask_rows(&mut h, r.f, r.k);
+            std::hint::black_box(h);
+        });
+        report.push(
+            format!("select/mask_rows/{}", r.label),
+            n as f64 / m.median_s().max(1e-12),
+            "rows/s",
+            Direction::Higher,
+        );
+
+        // ---- sparse vs dense native aggregation on the full adjacency
+        let sf = SparseFeat::from_dense(&x, n, r.f, r.k);
+        let m = bench.bench(&format!("agg/sparse/{}", r.label), || {
+            std::hint::black_box(sparse_aggregate(&a, &sf));
+        });
+        let sparse_us = m.median_s() * 1e6;
+        report.push(format!("agg/sparse/{}", r.label), sparse_us, "us", Direction::Lower);
+        let m = bench.bench(&format!("agg/dense/{}", r.label), || {
+            std::hint::black_box(a.spmm(&x, r.f));
+        });
+        let dense_us = m.median_s() * 1e6;
+        report.push(format!("agg/dense/{}", r.label), dense_us, "us", Direction::Lower);
+        let speedup = dense_us / sparse_us.max(1e-9);
+        report.push(format!("agg/speedup/{}", r.label), speedup, "x", Direction::Higher);
+        println!("feat: {} measured sparse-vs-dense speedup {speedup:.2}x", r.label);
+
+        // ---- cost-model pricing of the same trade (deterministic)
+        let sim_sparse =
+            kernel_cost_density(KernelKind::CsrInter, &a, r.f, COMMUNITY, &A100, rho).time_us;
+        let sim_dense = kernel_cost(KernelKind::CsrInter, &a, r.f, COMMUNITY, &A100).time_us;
+        report.push(
+            format!("cost/speedup/{}", r.label),
+            sim_dense / sim_sparse.max(1e-9),
+            "x",
+            Direction::Higher,
+        );
+
+        // ---- argmin agreement: does the density-aware model rank the
+        // sparse-feature CSR schedule against the lane-oblivious dense
+        // engine the same way the measured times do?
+        let m = bench.bench(&format!("agg/intra_sparse/{}", r.label), || {
+            std::hint::black_box(sparse_aggregate(&d.intra, &sf));
+        });
+        let meas_sparse_us = m.median_s() * 1e6;
+        let m = bench.bench(&format!("agg/intra_dense_block/{}", r.label), || {
+            std::hint::black_box(dense_block_spmm(&blocks, &x, r.f));
+        });
+        let meas_dense_us = m.median_s() * 1e6;
+        let sim = |kind: KernelKind, density: f64| -> f64 {
+            let dims =
+                ClassDims { kind, blocks: profile.len(), rows: intra_rows, nnz: d.intra.nnz() };
+            let ctx = CostCtx::new(dims, r.f, d.community, &A100).with_feat_density(density);
+            class_kernel_cost(&ctx).time_us
+        };
+        let sim_csr = sim(KernelKind::CsrIntra, rho);
+        let sim_blk = sim(KernelKind::DenseBlock, rho);
+        let agree = (sim_csr < sim_blk) == (meas_sparse_us < meas_dense_us);
+        report.push(
+            format!("cost/argmin_agree/{}", r.label),
+            if agree { 1.0 } else { 0.0 },
+            "bool",
+            Direction::None,
+        );
+        if !agree {
+            println!(
+                "feat: {} ARGMIN DISAGREES — sim prices csr_intra {sim_csr:.1}us vs \
+                 dense_block {sim_blk:.1}us, measurement says {meas_sparse_us:.1}us vs \
+                 {meas_dense_us:.1}us",
+                r.label
+            );
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// One full quick run emits a schema-valid report covering every
+    /// k/F ratio, and the acceptance workload (F=256, k=F/8) shows both
+    /// the measured aggregation and the cost model pricing sparse
+    /// features cheaper than dense.
+    #[test]
+    fn quick_run_prices_wide_sparse_features_cheaper() {
+        let cfg = BenchConfig {
+            quick: true,
+            out: PathBuf::from("."),
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.suite, "feat");
+        for label in ["f256_k32", "f64_k8"] {
+            for metric in [
+                "select/from_dense",
+                "select/mask_rows",
+                "agg/sparse",
+                "agg/dense",
+                "agg/speedup",
+                "cost/speedup",
+                "cost/argmin_agree",
+            ] {
+                assert!(
+                    report.get(&format!("{metric}/{label}")).is_some(),
+                    "missing metric {metric}/{label}"
+                );
+            }
+            let agree = report.get(&format!("cost/argmin_agree/{label}")).unwrap();
+            assert!(agree.value == 0.0 || agree.value == 1.0);
+        }
+        // Acceptance bar: at F=256, k=F/8 the sparse path must win on
+        // both axes — measured wall time and simulated cost.
+        let meas = report.get("agg/speedup/f256_k32").unwrap().value;
+        assert!(meas > 1.0, "measured sparse aggregation speedup {meas} <= 1 at k=F/8");
+        let sim = report.get("cost/speedup/f256_k32").unwrap().value;
+        assert!(sim > 1.0, "cost model prices sparse features no cheaper than dense: {sim}");
+        // strict decode of its own serialization
+        let text = crate::util::json::write(&report.to_json());
+        let back = BenchReport::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, report);
+    }
+}

@@ -15,7 +15,7 @@ use anyhow::Result;
 use crate::graph::generate::planted_partition;
 use crate::graph::{Csr, DenseBlocks};
 use crate::gpusim::kernel_cost::CostCtx;
-use crate::gpusim::{class_kernel_cost, kernel_cost, ClassDims, A100};
+use crate::gpusim::{class_kernel_cost, kernel_cost, kernel_cost_density, ClassDims, A100};
 use crate::kernels::tile::TileSparse;
 use crate::kernels::{candidates, native, pack, KernelKind, Role};
 use crate::partition::{Decomposition, Propagation, Reorder};
@@ -220,16 +220,21 @@ fn calibrate(
     label: &str,
     measured: &[(KernelKind, bool, f64)],
 ) {
+    // The feat-density the sparse-feature agreement rows re-rank at
+    // (k = F/8, the feat suite's acceptance ratio).
+    const SPARSE_RHO: f64 = 0.125;
     let profile = d.intra_block_profile();
     let rows: usize = profile.blocks.iter().map(|&(r, _)| r).sum();
-    let sim_us = |kind: KernelKind, is_intra: bool| -> f64 {
+    let sim_us_rho = |kind: KernelKind, is_intra: bool, rho: f64| -> f64 {
         if is_intra {
             let dims = ClassDims { kind, blocks: profile.len(), rows, nnz: d.intra.nnz() };
-            class_kernel_cost(&CostCtx::new(dims, f, d.community, &A100)).time_us
+            let ctx = CostCtx::new(dims, f, d.community, &A100).with_feat_density(rho);
+            class_kernel_cost(&ctx).time_us
         } else {
-            kernel_cost(kind, &d.inter, f, d.community, &A100).time_us
+            kernel_cost_density(kind, &d.inter, f, d.community, &A100, rho).time_us
         }
     };
+    let sim_us = |kind: KernelKind, is_intra: bool| -> f64 { sim_us_rho(kind, is_intra, 1.0) };
 
     for &(kind, is_intra, meas) in measured {
         let sim = sim_us(kind, is_intra);
@@ -279,6 +284,25 @@ fn calibrate(
             "bool",
             Direction::None,
         );
+        // Sparse-feature variant: re-rank the same candidates with the
+        // cost model at rho = 1/8 live lanes. The measurement side stays
+        // the dense-feature mirror, so a disagreement here flags exactly
+        // the roles where top-k features would flip the kernel choice —
+        // a calibration lead for the feat suite, not a gate.
+        let sparse_winner = argmin(&|k| sim_us_rho(k, is_intra, SPARSE_RHO));
+        report.push(
+            format!("calib/agree/{role}/{label}/sparsefeat"),
+            if sparse_winner == meas_winner { 1.0 } else { 0.0 },
+            "bool",
+            Direction::None,
+        );
+        if sparse_winner != sim_winner {
+            println!(
+                "calibration: {role}/{label} density {SPARSE_RHO} shifts the sim argmin {} -> {}",
+                sim_winner.as_str(),
+                sparse_winner.as_str()
+            );
+        }
         if agree {
             println!("calibration: {role}/{label} argmin agrees ({})", sim_winner.as_str());
         } else {
@@ -317,6 +341,8 @@ mod tests {
             }
             for role in ["intra", "inter"] {
                 let m = report.get(&format!("calib/agree/{role}/{label}")).unwrap();
+                assert!(m.value == 0.0 || m.value == 1.0);
+                let m = report.get(&format!("calib/agree/{role}/{label}/sparsefeat")).unwrap();
                 assert!(m.value == 0.0 || m.value == 1.0);
             }
             let frac = report.get(&format!("tile/occupied_frac/{label}")).unwrap();

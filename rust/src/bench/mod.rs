@@ -1,7 +1,7 @@
 //! Deterministic benchmark subsystem — the measurement backbone every
 //! perf PR gates on (DESIGN.md Sec. 9).
 //!
-//! Six fixed-workload suites emit schema-versioned `BENCH_*.json`
+//! Seven fixed-workload suites emit schema-versioned `BENCH_*.json`
 //! reports through one writer ([`report::BenchReport`]):
 //!
 //! | suite     | covers                                                |
@@ -17,6 +17,8 @@
 //! |           | hit rate, sampled vs full-graph epoch cost            |
 //! | `stream`  | delta-apply throughput, overlay read overhead, drift- |
 //! |           | triggered replan rate, live plan-swap latency         |
+//! | `feat`    | top-k select throughput, sparse-vs-dense aggregation  |
+//! |           | across k/F ratios, density-aware cost-model agreement |
 //!
 //! The `adaptgear bench` subcommand runs them; `bench --check --baseline
 //! <dir>` diffs fresh reports against committed baselines with
@@ -32,6 +34,7 @@
 //! against each other.
 
 pub mod compare;
+pub mod feat;
 pub mod kernels;
 pub mod plan;
 pub mod report;
@@ -50,7 +53,7 @@ pub use report::{BenchReport, Direction, Metric, SCHEMA_VERSION};
 use crate::util::bench::Bench;
 
 /// The suites `bench` runs (and `--validate`/`--check` expect) by default.
-pub const SUITES: [&str; 6] = ["kernels", "plan", "train", "serve", "sample", "stream"];
+pub const SUITES: [&str; 7] = ["kernels", "plan", "train", "serve", "sample", "stream", "feat"];
 
 /// Shared knobs for one suite invocation.
 #[derive(Debug, Clone)]
@@ -97,6 +100,7 @@ pub fn run_suite(name: &str, cfg: &BenchConfig) -> Result<BenchReport> {
         "serve" => serve::run(cfg),
         "sample" => sample::run(cfg),
         "stream" => stream::run(cfg),
+        "feat" => feat::run(cfg),
         other => bail!("unknown bench suite {other:?} (expected one of {SUITES:?})"),
     }?;
     let counters = crate::obs::snapshot().counters_line();

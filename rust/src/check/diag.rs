@@ -107,6 +107,14 @@ pub enum LintCode {
     /// AG034 — overlay stages more rows than the ops address (no-op
     /// deletes or reweights staged copies).
     DeltaOverStaging,
+    /// AG035 — plan `feat_density` missing on a versioned (v4+) plan
+    /// file or outside [0, 1]. A density-blind entry in a v4 document
+    /// cannot be priced or re-keyed correctly.
+    PlanFeatDensity,
+    /// AG036 — the plan's assumed feature density drifts from the
+    /// density measured on the re-derived features beyond tolerance
+    /// (the plan was priced for a sparsity the workload does not have).
+    PlanFeatDensityDrift,
     /// AG040 — trace unparseable or B/E pairing violated.
     TraceMalformed,
     /// AG041 — per-thread trace timestamps are non-monotone.
@@ -147,6 +155,8 @@ impl LintCode {
             LintCode::DeltaReplayFailure => "AG032",
             LintCode::DeltaAsymmetry => "AG033",
             LintCode::DeltaOverStaging => "AG034",
+            LintCode::PlanFeatDensity => "AG035",
+            LintCode::PlanFeatDensityDrift => "AG036",
             LintCode::TraceMalformed => "AG040",
             LintCode::TraceNonMonotonic => "AG041",
             LintCode::CounterNaming => "AG042",
@@ -163,6 +173,7 @@ impl LintCode {
         match self {
             LintCode::AuditSkipped => Severity::Info,
             LintCode::PlanCostDrift
+            | LintCode::PlanFeatDensityDrift
             | LintCode::CounterNaming
             | LintCode::BenchBaselineDrift
             | LintCode::BenchQuickMismatch => Severity::Warn,
@@ -194,6 +205,8 @@ impl LintCode {
             LintCode::DeltaReplayFailure => "delta replay failed",
             LintCode::DeltaAsymmetry => "replayed overlay is asymmetric",
             LintCode::DeltaOverStaging => "overlay staged more rows than ops address",
+            LintCode::PlanFeatDensity => "plan feat_density missing or out of [0,1]",
+            LintCode::PlanFeatDensityDrift => "assumed feature density drifts from measured",
             LintCode::TraceMalformed => "trace unparseable or B/E pairing violated",
             LintCode::TraceNonMonotonic => "trace timestamps non-monotone per thread",
             LintCode::CounterNaming => "counter name not subsystem.noun.verb",
@@ -441,6 +454,8 @@ mod tests {
             LintCode::DeltaReplayFailure,
             LintCode::DeltaAsymmetry,
             LintCode::DeltaOverStaging,
+            LintCode::PlanFeatDensity,
+            LintCode::PlanFeatDensityDrift,
             LintCode::TraceMalformed,
             LintCode::TraceNonMonotonic,
             LintCode::CounterNaming,

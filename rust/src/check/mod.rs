@@ -17,7 +17,7 @@
 //! | analyzer | artifact family | codes |
 //! |---|---|---|
 //! | `graph`  | CSR / [`Decomposition`] well-formedness | AG001–AG006 |
-//! | `plan`   | plan store files, provenance, cost drift | AG020–AG029 |
+//! | `plan`   | plan store files, provenance, cost drift, feature density | AG020–AG029, AG035–AG036 |
 //! | `stream` | delta logs + static replay | AG030–AG034 |
 //! | `obs`    | Chrome traces + counter naming | AG040–AG042 |
 //! | `bench`  | `BENCH_*.json` + baseline stability | AG060–AG062 |

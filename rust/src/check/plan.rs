@@ -1,5 +1,5 @@
 //! Plan analyzer: audits every plan in the `PlanStore` (AG020–AG029,
-//! AG003).
+//! AG035/AG036, AG003).
 //!
 //! Three audit tiers, each gated on what can actually be re-derived:
 //!
@@ -49,6 +49,8 @@ pub const CODES: &[LintCode] = &[
     LintCode::PlanNotArgmin,
     LintCode::PlanCostDrift,
     LintCode::PlanProvenance,
+    LintCode::PlanFeatDensity,
+    LintCode::PlanFeatDensityDrift,
 ];
 
 /// Candidate outcome labels `SweepProvenance` is allowed to record.
@@ -70,7 +72,34 @@ pub fn lint_plan_json(doc: &Json, loc: &str, diags: &mut Diagnostics) -> Option<
     lint_finite(&plan, loc, diags);
     lint_provenance(&plan, loc, diags);
     lint_argmin(&plan, loc, diags);
+    lint_feat_density(doc, loc, diags);
     Some(plan)
+}
+
+/// AG035: a versioned (v4+) plan document must carry a `feat_density`
+/// in [0, 1]. The decoder is deliberately tolerant — an absent field
+/// reads as dense so density-blind (v3 and older) files keep loading —
+/// which is exactly why this must be a raw-document check: a v4 writer
+/// that dropped or corrupted the field persisted a plan whose cache key
+/// and pricing cannot be re-derived.
+fn lint_feat_density(doc: &Json, loc: &str, diags: &mut Diagnostics) {
+    let version = doc.get("version").as_f64().unwrap_or(0.0);
+    if version < 4.0 {
+        return; // pre-density generations legitimately lack the field
+    }
+    match doc.get("feat_density").as_f64() {
+        None => diags.emit(
+            LintCode::PlanFeatDensity,
+            loc,
+            format!("version {version} plan carries no feat_density field"),
+        ),
+        Some(rho) if !(0.0..=1.0).contains(&rho) => diags.emit(
+            LintCode::PlanFeatDensity,
+            loc,
+            format!("feat_density {rho} outside [0, 1]"),
+        ),
+        Some(_) => {}
+    }
 }
 
 /// AG022: threshold range, class layout, dense-class kernel registry
@@ -284,7 +313,30 @@ fn lint_rederive(plan: &GearPlan, loc: &str, diags: &mut Diagnostics) {
         plan.community,
         plan.seed,
     );
-    let fp = Fingerprint::of_versioned(&d, plan.model, plan.graph_version);
+    // AG036 — the plan's assumed feature density vs the density measured
+    // on the re-derived synthetic features (nonzero fraction). The wide
+    // 0.75 absolute tolerance only catches plans priced for a sparsity
+    // the workload clearly does not have (rho ~ 0 against dense data);
+    // top-k plans keyed off the hidden width legitimately sit below the
+    // raw-input density. Runs before the fingerprint gate: drift is
+    // observable even when the fingerprint no longer recomputes.
+    let x = data.features(16);
+    let measured = if x.is_empty() {
+        1.0
+    } else {
+        x.iter().filter(|&&v| v != 0.0).count() as f64 / x.len() as f64
+    };
+    if (plan.feat_density - measured).abs() > 0.75 {
+        diags.emit(
+            LintCode::PlanFeatDensityDrift,
+            loc,
+            format!(
+                "plan assumes feature density {:.4} but re-derived features measure {measured:.4}",
+                plan.feat_density
+            ),
+        );
+    }
+    let fp = Fingerprint::of_full(&d, plan.model, plan.graph_version, plan.feat_density);
     if fp != plan.fingerprint {
         diags.emit(
             LintCode::PlanFingerprintMismatch,
@@ -359,7 +411,13 @@ fn lint_against_bucket(plan: &GearPlan, bucket: &BucketInfo, loc: &str, diags: &
         let dims = ClassDims { kind: c.kernel, blocks: c.blocks, rows: c.rows, nnz: c.nnz };
         let mean: f64 = widths
             .iter()
-            .map(|&w| class_kernel_cost(&CostCtx::new(dims, w, plan.community, gpu)).time_us)
+            .map(|&w| {
+                // reprice at the density the sweep assumed, or the drift
+                // check would flag every sparse-feature plan
+                let ctx = CostCtx::new(dims, w, plan.community, gpu)
+                    .with_feat_density(plan.feat_density);
+                class_kernel_cost(&ctx).time_us
+            })
             .sum::<f64>()
             / widths.len() as f64;
         let rel = (mean - c.time_us).abs() / mean.abs().max(1e-12);

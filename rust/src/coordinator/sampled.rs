@@ -26,7 +26,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::gpusim::A100;
-use crate::kernels::native_model::GcnModel;
+use crate::kernels::native_model::{FeatMode, GcnModel};
 use crate::kernels::pack::{pack_assignment, pack_features, pack_labels_masked};
 use crate::kernels::AssignmentExec;
 use crate::obs;
@@ -50,6 +50,11 @@ pub struct SampleConfig {
     pub epochs: usize,
     /// Reordering applied to each batch subgraph before splitting.
     pub reorder: Reorder,
+    /// Top-k activation sparsity (`--topk K`): keep only the K largest
+    /// hidden lanes per row after ReLU, so the second aggregation runs at
+    /// feature density `K / hidden` and the planner prices kernels at
+    /// that density. `None` trains dense. Native backend only.
+    pub topk: Option<usize>,
 }
 
 impl Default for SampleConfig {
@@ -59,6 +64,7 @@ impl Default for SampleConfig {
             batch_size: 256,
             epochs: 1,
             reorder: Reorder::Metis,
+            topk: None,
         }
     }
 }
@@ -190,6 +196,17 @@ pub fn train_sampled(
     if matches!(backend, SampledBackend::Native { .. }) && cfg.model != ModelKind::Gcn {
         bail!("the native sampled backend supports gcn only (build artifacts for gin)");
     }
+    if let Some(k) = scfg.topk {
+        if k == 0 {
+            bail!("--topk needs k > 0 (omit it to train dense)");
+        }
+        if matches!(backend, SampledBackend::Pjrt(_)) {
+            bail!(
+                "--topk runs on the native backend only: the AOT train-step \
+                 artifacts are compiled dense (drop --topk or drop the manifest)"
+            );
+        }
+    }
 
     let prop = d_full.whole();
     let sampler = NeighborSampler::new(&prop, scfg.fanouts.clone())?;
@@ -233,7 +250,7 @@ pub fn train_sampled(
             let bucket = bucket_for(backend, &bd, f_data)?;
             let plan = {
                 let _sp = obs::span("train.plan");
-                let req = PlanRequest::labeled(
+                let mut req = PlanRequest::labeled(
                     &bd,
                     cfg.model,
                     &bucket,
@@ -242,6 +259,12 @@ pub fn train_sampled(
                     scfg.reorder,
                     cfg.seed,
                 );
+                if let Some(k) = scfg.topk {
+                    // price the second aggregation's operand: k live lanes
+                    // out of `hidden` (also re-keys the plan cache, so a
+                    // dense-feature plan is never served for this run)
+                    req.feat_density = (k as f64 / bucket.hidden.max(1) as f64).min(1.0);
+                }
                 planner.plan(&req).context("planning a sampled batch")?
             };
             es.plan += t1.elapsed().as_secs_f64();
@@ -254,7 +277,11 @@ pub fn train_sampled(
                 )?,
                 SampledBackend::Native { hidden, classes } => {
                     let model = native.get_or_insert_with(|| {
-                        GcnModel::init(f_data, *hidden, *classes, cfg.seed)
+                        let m = GcnModel::init(f_data, *hidden, *classes, cfg.seed);
+                        match scfg.topk {
+                            Some(k) => m.with_feat_mode(FeatMode::TopK(k)),
+                            None => m,
+                        }
                     });
                     native_step(model, &bd, &plan, &bx, &blabels, &bmask, cfg.lr)?
                 }
@@ -514,6 +541,7 @@ mod tests {
             batch_size: 64,
             epochs: 2,
             reorder: Reorder::Metis,
+            topk: None,
         };
         let mut backend = SampledBackend::Native { hidden: 16, classes: 7 };
         let report = train_sampled(&mut backend, &d, &x, f, &labels, &cfg, &scfg).unwrap();
@@ -559,6 +587,7 @@ mod tests {
             batch_size: 48,
             epochs: 1,
             reorder: Reorder::Metis,
+            topk: None,
         };
         let run = |seed: u64| {
             let cfg = TrainConfig { seed, ..cfg.clone() };
@@ -584,5 +613,37 @@ mod tests {
                 .is_err(),
             "native backend must reject gin"
         );
+        let k0 = SampleConfig { topk: Some(0), ..SampleConfig::default() };
+        assert!(
+            train_sampled(&mut backend, &d, &x, f, &labels, &cfg, &k0).is_err(),
+            "topk 0 must be rejected"
+        );
+    }
+
+    #[test]
+    fn topk_epoch_trains_and_full_width_matches_dense() {
+        let (d, x, labels, f) = staged(0.2, 9);
+        let cfg = TrainConfig { model: ModelKind::Gcn, steps: 0, lr: 0.1, seed: 5 };
+        let hidden = 16;
+        let run = |topk: Option<usize>| {
+            let scfg = SampleConfig {
+                fanouts: vec![Fanout::Uniform(6)],
+                batch_size: 64,
+                epochs: 1,
+                reorder: Reorder::Metis,
+                topk,
+            };
+            let mut backend = SampledBackend::Native { hidden, classes: 7 };
+            train_sampled(&mut backend, &d, &x, f, &labels, &cfg, &scfg).unwrap()
+        };
+        // k = hidden keeps every lane: the whole run (same seed, same
+        // sampler stream) must reproduce the dense losses bitwise
+        let dense = run(None);
+        let full = run(Some(hidden));
+        assert_eq!(dense.losses, full.losses, "TopK(k = hidden) must equal dense");
+        // a genuinely sparse run still trains to finite losses
+        let sparse = run(Some(hidden / 4));
+        assert_eq!(sparse.batches, dense.batches);
+        assert!(sparse.losses.iter().all(|l| l.is_finite()));
     }
 }

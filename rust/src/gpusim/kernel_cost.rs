@@ -25,6 +25,16 @@ const TILE_PAYLOAD_BYTES: f64 = 2.0;
 /// decode + fragment load/store issue), cycles -> us via clock.
 const TILE_OVERHEAD_CYCLES: f64 = 20.0;
 
+/// Feature-byte scaling for a top-k compressed feature operand at
+/// density `rho = k/f`: each kept lane carries a 4-byte value plus a
+/// 4-byte column index, so traffic is `2*rho` of the dense row until the
+/// index overhead eats the savings (`rho >= 0.5`), where the kernel
+/// falls back to dense rows. Exactly 1.0 at `rho = 1.0`, which keeps
+/// dense-feature costs bit-identical to the density-blind model.
+fn feat_bytes_factor(rho: f64) -> f64 {
+    (2.0 * rho).min(1.0)
+}
+
 /// Cost breakdown of one kernel launch.
 #[derive(Debug, Clone)]
 pub struct KernelCost {
@@ -113,7 +123,7 @@ fn replay_gathers(a: &Csr, f: usize, gpu: &GpuModel, l2: Option<&mut CacheSim>) 
 
 /// Vertex-parallel CSR over an arbitrary-sparsity matrix.
 pub fn csr_inter_cost(a: &Csr, f: usize, gpu: &GpuModel) -> KernelCost {
-    csr_inter_cost_full(a, f, gpu, None, None)
+    csr_inter_cost_full(a, f, gpu, None, None, 1.0)
 }
 
 /// Like [`csr_inter_cost`] but with the divergence factor overridden —
@@ -124,26 +134,32 @@ pub fn csr_inter_cost_with_imb(
     gpu: &GpuModel,
     imb_override: Option<f64>,
 ) -> KernelCost {
-    csr_inter_cost_full(a, f, gpu, imb_override, None)
+    csr_inter_cost_full(a, f, gpu, imb_override, None, 1.0)
 }
 
-/// Full-control variant: optional divergence override and an optional
+/// Full-control variant: optional divergence override, an optional
 /// pre-warmed shared L2 (back-to-back kernels in one iteration see each
-/// other's residency — see [`subgraph_pair_cost`]).
+/// other's residency — see [`subgraph_pair_cost`]), and the feature
+/// density `rho = k/f` of a top-k compressed operand. Sparse features
+/// shrink the per-edge gather (each source row carries `k` lanes) and
+/// the multiply count, but NOT the topology stream or the dense output.
 pub fn csr_inter_cost_full(
     a: &Csr,
     f: usize,
     gpu: &GpuModel,
     imb_override: Option<f64>,
     l2: Option<&mut CacheSim>,
+    feat_density: f64,
 ) -> KernelCost {
     let e = a.nnz() as f64;
     let v = a.n_rows as f64;
-    let flops = 2.0 * e * f as f64;
+    let rho = feat_density.clamp(0.0, 1.0);
+    let fb = feat_bytes_factor(rho);
+    let flops = 2.0 * e * f as f64 * rho;
     let (h, acc) = replay_gathers(a, f, gpu, l2);
     let row_bytes = f as f64 * BYTES;
-    let miss_bytes = (acc - h) as f64 * row_bytes;
-    let hit_bytes = h as f64 * row_bytes;
+    let miss_bytes = (acc - h) as f64 * row_bytes * fb;
+    let hit_bytes = h as f64 * row_bytes * fb;
     let topo_bytes = (v + 1.0) * 4.0 + e * 8.0 + v * row_bytes; // rp + (col,val) + output
     // L2 hits are served at ~4x stream bandwidth; misses pay the gather
     // (non-coalesced) path. Degree skew divergence serializes the warp's
@@ -173,25 +189,30 @@ pub fn csr_inter_cost_full(
 /// is staged once per community ("shared memory"), so per-edge gathers
 /// generate no L2 traffic.
 pub fn csr_intra_cost(a: &Csr, f: usize, community: usize, gpu: &GpuModel) -> KernelCost {
-    csr_intra_cost_dims(a.n_rows, a.nnz(), f, community, gpu)
+    csr_intra_cost_dims(a.n_rows, a.nnz(), f, community, gpu, 1.0)
 }
 
 /// [`csr_intra_cost`] from dimensions alone — a density *class* keeps
 /// global row ids (empty rows outside its blocks), so its cost must be
 /// priced on the class's real rows/nnz, not the container matrix's.
+/// `feat_density` is the top-k feature density `rho = k/f`: it scales
+/// the staged input tile and the multiply count; topology bytes and the
+/// dense output row are unaffected.
 pub fn csr_intra_cost_dims(
     rows: usize,
     nnz: usize,
     f: usize,
     community: usize,
     gpu: &GpuModel,
+    feat_density: f64,
 ) -> KernelCost {
     let e = nnz as f64;
     let v = rows as f64;
-    let flops = 2.0 * e * f as f64;
+    let rho = feat_density.clamp(0.0, 1.0);
+    let flops = 2.0 * e * f as f64 * rho;
     let row_bytes = f as f64 * BYTES;
     // one streamed tile load per community + topology + output
-    let tile_bytes = v * row_bytes;
+    let tile_bytes = v * row_bytes * feat_bytes_factor(rho);
     let topo_bytes = (v + 1.0) * 4.0 + e * 8.0 + v * row_bytes;
     let memory_us = gpu.stream_us(tile_bytes + topo_bytes);
     // shared-memory operand access is near-register speed; mild multiplier
@@ -217,22 +238,33 @@ pub fn csr_intra_cost_dims(
 /// Edge-parallel COO: perfect balance, no O(V) term, but every edge pays
 /// an atomic read-modify-write on the destination row.
 pub fn coo_cost(a: &Csr, f: usize, gpu: &GpuModel) -> KernelCost {
-    coo_cost_full(a, f, gpu, None)
+    coo_cost_full(a, f, gpu, None, 1.0)
 }
 
-/// COO with an optional pre-warmed shared L2.
-pub fn coo_cost_full(a: &Csr, f: usize, gpu: &GpuModel, l2: Option<&mut CacheSim>) -> KernelCost {
+/// COO with an optional pre-warmed shared L2 and a top-k feature density
+/// `rho = k/f`: gathered source rows, scattered accumulations, and the
+/// atomic lane count all shrink with `rho` (each edge only touches the
+/// source row's `k` live lanes); the edge list does not.
+pub fn coo_cost_full(
+    a: &Csr,
+    f: usize,
+    gpu: &GpuModel,
+    l2: Option<&mut CacheSim>,
+    feat_density: f64,
+) -> KernelCost {
     let e = a.nnz() as f64;
-    let flops = 2.0 * e * f as f64;
+    let rho = feat_density.clamp(0.0, 1.0);
+    let fb = feat_bytes_factor(rho);
+    let flops = 2.0 * e * f as f64 * rho;
     let (h, acc) = replay_gathers(a, f, gpu, l2);
     let row_bytes = f as f64 * BYTES;
-    let miss_bytes = (acc - h) as f64 * row_bytes;
-    let hit_bytes = h as f64 * row_bytes;
+    let miss_bytes = (acc - h) as f64 * row_bytes * fb;
+    let hit_bytes = h as f64 * row_bytes * fb;
     let topo_bytes = e * 12.0; // (src, dst, val)
     // scattered atomic writes: destination rows travel the gather path on
     // L2 misses and the hit path when resident (same locality as reads)
     let hr = if acc == 0 { 0.0 } else { h as f64 / acc as f64 };
-    let write_bytes = e * row_bytes * 0.5;
+    let write_bytes = e * row_bytes * 0.5 * fb;
     let memory_us = gpu.stream_us(topo_bytes)
         + gpu.gather_us(miss_bytes)
         + gpu.stream_us(hit_bytes) / 2.0
@@ -243,7 +275,7 @@ pub fn coo_cost_full(a: &Csr, f: usize, gpu: &GpuModel, l2: Option<&mut CacheSim
     // COO is "more appropriate" for — and at high density hot rows
     // serialize.
     let collisions = (e / a.n_rows.max(1) as f64).clamp(0.1, 4.0);
-    let atomic_us = e * gpu.atomic_ns * 1e-3 * collisions * (f as f64 / 32.0).max(1.0);
+    let atomic_us = e * gpu.atomic_ns * 1e-3 * collisions * (f as f64 * rho / 32.0).max(1.0);
     let compute_us = gpu.fp32_us(flops) + atomic_us;
     KernelCost {
         kind: KernelKind::Coo,
@@ -375,22 +407,30 @@ pub fn coo_cost_analytic(nnz: usize, f: usize, hit_rate: f64, gpu: &GpuModel) ->
 /// stays inside its community tile, so the assumed L2 hit rate is the
 /// tile-reuse bound `1 - rows/nnz` (one compulsory miss per resident
 /// feature row, everything else hits).
-pub fn coo_class_cost(rows: usize, nnz: usize, f: usize, gpu: &GpuModel) -> KernelCost {
+pub fn coo_class_cost(
+    rows: usize,
+    nnz: usize,
+    f: usize,
+    gpu: &GpuModel,
+    feat_density: f64,
+) -> KernelCost {
     let e = nnz as f64;
+    let rho = feat_density.clamp(0.0, 1.0);
+    let fb = feat_bytes_factor(rho);
     let hr = (1.0 - rows as f64 / e.max(1.0)).clamp(0.0, 0.98);
     let row_bytes = f as f64 * BYTES;
-    let flops = 2.0 * e * f as f64;
-    let miss_bytes = e * (1.0 - hr) * row_bytes;
-    let hit_bytes = e * hr * row_bytes;
+    let flops = 2.0 * e * f as f64 * rho;
+    let miss_bytes = e * (1.0 - hr) * row_bytes * fb;
+    let hit_bytes = e * hr * row_bytes * fb;
     let topo_bytes = e * 12.0; // (src, dst, val)
-    let write_bytes = e * row_bytes * 0.5;
+    let write_bytes = e * row_bytes * 0.5 * fb;
     let memory_us = gpu.stream_us(topo_bytes)
         + gpu.gather_us(miss_bytes)
         + gpu.stream_us(hit_bytes) / 2.0
         + gpu.gather_us(write_bytes * (1.0 - hr))
         + gpu.stream_us(write_bytes * hr) / 2.0;
     let collisions = (e / rows.max(1) as f64).clamp(0.1, 4.0);
-    let atomic_us = e * gpu.atomic_ns * 1e-3 * collisions * (f as f64 / 32.0).max(1.0);
+    let atomic_us = e * gpu.atomic_ns * 1e-3 * collisions * (f as f64 * rho / 32.0).max(1.0);
     KernelCost {
         kind: KernelKind::Coo,
         time_us: 0.0,
@@ -497,6 +537,12 @@ pub struct CostCtx<'a> {
     /// falls back to the [`est_occupied_tiles`] closed form. Ignored by
     /// every other kernel.
     pub tile: Option<usize>,
+    /// Feature density `rho = k/f` of a top-k compressed operand; 1.0
+    /// (dense features) reproduces the density-blind costs bit-exactly.
+    /// The sparse schedules (CsrIntra/Coo) shrink gathers and multiplies
+    /// with `rho`; the dense engines (DenseBlock/TileSparse) traverse
+    /// every lane and are invariant in it.
+    pub feat_density: f64,
 }
 
 impl<'a> CostCtx<'a> {
@@ -506,7 +552,7 @@ impl<'a> CostCtx<'a> {
         community: usize,
         gpu: &'a GpuModel,
     ) -> CostCtx<'a> {
-        CostCtx { dims, feat_dim, community, gpu, tile: None }
+        CostCtx { dims, feat_dim, community, gpu, tile: None, feat_density: 1.0 }
     }
 
     /// Price TileSparse on an exact occupied-tile count instead of the
@@ -515,18 +561,26 @@ impl<'a> CostCtx<'a> {
         self.tile = Some(occupied);
         self
     }
+
+    /// Price the class at a top-k feature density `rho = k/f`.
+    pub fn with_feat_density(mut self, rho: f64) -> CostCtx<'a> {
+        self.feat_density = rho;
+        self
+    }
 }
 
 /// Cost of one launch over an intra density class (closed form, so
 /// threshold sweeps can price thousands of candidate splits).
 pub fn class_kernel_cost(ctx: &CostCtx) -> KernelCost {
     let (class, f, community, gpu) = (&ctx.dims, ctx.feat_dim, ctx.community, ctx.gpu);
+    let rho = ctx.feat_density;
     match class.kind {
-        KernelKind::CsrIntra => csr_intra_cost_dims(class.rows, class.nnz, f, community, gpu),
+        KernelKind::CsrIntra => csr_intra_cost_dims(class.rows, class.nnz, f, community, gpu, rho),
+        // dense engines traverse every lane — invariant in feat_density
         KernelKind::DenseBlock => {
             dense_block_cost_dims(class.blocks, class.rows, community, f, gpu)
         }
-        KernelKind::Coo => coo_class_cost(class.rows, class.nnz, f, gpu),
+        KernelKind::Coo => coo_class_cost(class.rows, class.nnz, f, gpu, rho),
         KernelKind::TileSparse => {
             tile_sparse_cost_dims(class.blocks, class.rows, class.nnz, f, community, gpu, ctx.tile)
         }
@@ -572,15 +626,18 @@ pub fn subgraph_pair_cost(
             // AdaptGear's inter kernel is hand-tuned like GNNAdvisor's
             // (CTA->row-block mapping, shared-memory topology): bounded
             // divergence, same 1.15 as the GNNA baseline.
-            KernelKind::CsrInter => csr_inter_cost_full(inter, f, gpu, Some(1.15), Some(&mut l2)),
-            KernelKind::Coo => coo_cost_full(inter, f, gpu, Some(&mut l2)),
+            KernelKind::CsrInter => {
+                csr_inter_cost_full(inter, f, gpu, Some(1.15), Some(&mut l2), 1.0)
+            }
+            KernelKind::Coo => coo_cost_full(inter, f, gpu, Some(&mut l2), 1.0),
             other => panic!("{other} is not an inter candidate"),
         }
     };
     (intra_cost, inter_cost)
 }
 
-/// Cost of one aggregate launch for `kind` over `matrix`.
+/// Cost of one aggregate launch for `kind` over `matrix` with dense
+/// features — [`kernel_cost_density`] at `feat_density = 1.0`.
 pub fn kernel_cost(
     kind: KernelKind,
     matrix: &Csr,
@@ -588,13 +645,30 @@ pub fn kernel_cost(
     community: usize,
     gpu: &GpuModel,
 ) -> KernelCost {
+    kernel_cost_density(kind, matrix, f, community, gpu, 1.0)
+}
+
+/// Cost of one aggregate launch for `kind` over `matrix` at a top-k
+/// feature density `rho = k/f`. The sparse schedules (CSR/COO) price
+/// gathers, scatters, and multiplies on the `k` live lanes per source
+/// row; the dense engines cannot skip lanes and ignore `rho`.
+pub fn kernel_cost_density(
+    kind: KernelKind,
+    matrix: &Csr,
+    f: usize,
+    community: usize,
+    gpu: &GpuModel,
+    feat_density: f64,
+) -> KernelCost {
     if matrix.nnz() == 0 && !matches!(kind, KernelKind::DenseBlock | KernelKind::DenseFull) {
         return KernelCost::noop(kind, gpu);
     }
     match kind {
-        KernelKind::CsrInter => csr_inter_cost(matrix, f, gpu),
-        KernelKind::CsrIntra => csr_intra_cost(matrix, f, community, gpu),
-        KernelKind::Coo => coo_cost(matrix, f, gpu),
+        KernelKind::CsrInter => csr_inter_cost_full(matrix, f, gpu, None, None, feat_density),
+        KernelKind::CsrIntra => {
+            csr_intra_cost_dims(matrix.n_rows, matrix.nnz(), f, community, gpu, feat_density)
+        }
+        KernelKind::Coo => coo_cost_full(matrix, f, gpu, None, feat_density),
         KernelKind::DenseBlock => dense_block_cost(matrix.n_rows, community, f, gpu),
         KernelKind::DenseFull => dense_full_cost(matrix.n_rows, f, gpu),
         KernelKind::TileSparse => tile_sparse_cost_dims(
@@ -802,5 +876,106 @@ mod tests {
         let cb = csr_inter_cost(&big, 32, &A100);
         assert!(cb.time_us > cs.time_us);
         assert!(cb.flops > cs.flops * 5.0);
+    }
+
+    const INTRA_KINDS: [KernelKind; 4] = [
+        KernelKind::CsrIntra,
+        KernelKind::DenseBlock,
+        KernelKind::Coo,
+        KernelKind::TileSparse,
+    ];
+
+    #[test]
+    fn feat_density_one_reproduces_density_blind_costs_exactly() {
+        // the density path at rho = 1.0 must be BIT-identical to the
+        // pre-density model, so dense-feature plans re-derive byte-equal
+        let dims = ClassDims { kind: KernelKind::CsrIntra, blocks: 200, rows: 3200, nnz: 60000 };
+        for kind in INTRA_KINDS {
+            let d = ClassDims { kind, ..dims };
+            let blind = class_kernel_cost(&CostCtx::new(d, 64, 16, &A100));
+            let one = class_kernel_cost(&CostCtx::new(d, 64, 16, &A100).with_feat_density(1.0));
+            assert_eq!(blind.time_us, one.time_us, "{kind}");
+            assert_eq!(blind.flops, one.flops, "{kind}");
+            assert_eq!(blind.bytes, one.bytes, "{kind}");
+        }
+        let m = whole(2048, 0.01, 40);
+        for kind in [KernelKind::CsrInter, KernelKind::CsrIntra, KernelKind::Coo] {
+            let blind = kernel_cost(kind, &m, 64, 16, &A100);
+            let one = kernel_cost_density(kind, &m, 64, 16, &A100, 1.0);
+            assert_eq!(blind.time_us, one.time_us, "{kind}");
+            assert_eq!(blind.bytes, one.bytes, "{kind}");
+        }
+        // the scaling factor itself is exactly 1 at rho = 1
+        assert_eq!(feat_bytes_factor(1.0), 1.0);
+    }
+
+    #[test]
+    fn class_costs_monotone_nonincreasing_as_density_drops() {
+        // lower feature density never costs more, for EVERY class — the
+        // dense engines are invariant (weakly monotone), the sparse
+        // schedules strictly shrink
+        let grid = [0.05, 0.125, 0.25, 0.4, 0.5, 0.75, 1.0];
+        for kind in INTRA_KINDS {
+            for &(blocks, c, density) in &[(1000usize, 16usize, 0.05), (200, 64, 0.4)] {
+                let rows = blocks * c;
+                let nnz = (blocks as f64 * (c * c) as f64 * density).round() as usize;
+                let dims = ClassDims { kind, blocks, rows, nnz };
+                for w in grid.windows(2) {
+                    let lo = class_kernel_cost(
+                        &CostCtx::new(dims, 256, c, &A100).with_feat_density(w[0]),
+                    );
+                    let hi = class_kernel_cost(
+                        &CostCtx::new(dims, 256, c, &A100).with_feat_density(w[1]),
+                    );
+                    assert!(
+                        lo.time_us <= hi.time_us + 1e-12,
+                        "{kind} rho {} -> {}: {} vs {}",
+                        w[0],
+                        w[1],
+                        lo.time_us,
+                        hi.time_us
+                    );
+                }
+            }
+        }
+        let m = whole(2048, 0.01, 41);
+        for kind in [KernelKind::CsrInter, KernelKind::Coo] {
+            for w in grid.windows(2) {
+                let lo = kernel_cost_density(kind, &m, 256, 16, &A100, w[0]);
+                let hi = kernel_cost_density(kind, &m, 256, 16, &A100, w[1]);
+                assert!(lo.time_us <= hi.time_us + 1e-12, "{kind} rho {} -> {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_features_cheapen_sparse_kernels_at_wide_f() {
+        // the acceptance regime: F = 256, k = F/8 => rho = 0.125. The
+        // CSR/COO schedules must get strictly cheaper; the dense engines
+        // must not move at all.
+        let rho = 0.125;
+        for kind in [KernelKind::CsrIntra, KernelKind::Coo] {
+            let dims = ClassDims { kind, blocks: 1000, rows: 16000, nnz: 12800 };
+            let dense = class_kernel_cost(&CostCtx::new(dims, 256, 16, &A100));
+            let sparse =
+                class_kernel_cost(&CostCtx::new(dims, 256, 16, &A100).with_feat_density(rho));
+            assert!(
+                sparse.time_us < dense.time_us,
+                "{kind}: sparse {} vs dense {}",
+                sparse.time_us,
+                dense.time_us
+            );
+        }
+        for kind in [KernelKind::DenseBlock, KernelKind::TileSparse] {
+            let dims = ClassDims { kind, blocks: 1000, rows: 16000, nnz: 12800 };
+            let dense = class_kernel_cost(&CostCtx::new(dims, 256, 16, &A100));
+            let sparse =
+                class_kernel_cost(&CostCtx::new(dims, 256, 16, &A100).with_feat_density(rho));
+            assert_eq!(sparse.time_us, dense.time_us, "{kind} must ignore feat_density");
+        }
+        let m = whole(4096, 0.005, 42);
+        let dense = kernel_cost_density(KernelKind::CsrInter, &m, 256, 16, &A100, 1.0);
+        let sparse = kernel_cost_density(KernelKind::CsrInter, &m, 256, 16, &A100, rho);
+        assert!(sparse.time_us < dense.time_us, "inter: {} vs {}", sparse.time_us, dense.time_us);
     }
 }

@@ -13,6 +13,9 @@ pub mod model;
 pub mod timeline;
 
 pub use cache::CacheSim;
-pub use kernel_cost::{class_kernel_cost, hybrid_intra_cost, kernel_cost, ClassDims, KernelCost};
+pub use kernel_cost::{
+    class_kernel_cost, hybrid_intra_cost, kernel_cost, kernel_cost_density, ClassDims, CostCtx,
+    KernelCost,
+};
 pub use model::{GpuModel, A100, V100};
 pub use timeline::{elementwise_us, gemm_us, merge_us, IterationCost};

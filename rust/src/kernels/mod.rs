@@ -11,6 +11,10 @@ pub mod pack;
 pub mod spec;
 pub mod tile;
 
-pub use native::AssignmentExec;
-pub use spec::{candidates, KernelKind, KernelPair, Role, INTER_CANDIDATES, INTRA_CANDIDATES};
+pub use native::{sparse_aggregate, AssignmentExec, SparseFeat};
+pub use native_model::{FeatMode, GcnModel};
+pub use spec::{
+    benefits_from_sparse_features, candidates, KernelKind, KernelPair, Role, INTER_CANDIDATES,
+    INTRA_CANDIDATES,
+};
 pub use tile::TileSparse;

@@ -88,6 +88,100 @@ pub fn tile_sparse_spmm(tiles: &TileSparse, x: &[f32], f: usize) -> Vec<f32> {
     tiles.spmm(x, f)
 }
 
+/// Per-row top-k compressed feature matrix: each of `n` rows keeps its `k`
+/// largest-by-value lanes out of `f`, stored as `(vals, cols)` pairs in
+/// ascending column order. This is the MaxK-style activation-sparsity
+/// layout — the second (feature-dimension) axis the density-aware cost
+/// model prices alongside topology.
+#[derive(Debug, Clone)]
+pub struct SparseFeat {
+    /// Row count.
+    pub n: usize,
+    /// Logical (dense) feature width.
+    pub f: usize,
+    /// Kept lanes per row (`k <= f`).
+    pub k: usize,
+    /// Row-major kept values, `n * k` entries.
+    pub vals: Vec<f32>,
+    /// Row-major kept column indices, `n * k` entries, ascending per row.
+    pub cols: Vec<u32>,
+}
+
+impl SparseFeat {
+    /// Compress `x` (dense `n x f`, row-major) to its per-row top-k lanes
+    /// by value. Ties break toward the lower column index, so the
+    /// selection is deterministic and matches the fused top-k inside
+    /// `GcnModel::forward`.
+    pub fn from_dense(x: &[f32], n: usize, f: usize, k: usize) -> SparseFeat {
+        assert_eq!(x.len(), n * f);
+        let k = k.min(f);
+        let mut vals = Vec::with_capacity(n * k);
+        let mut cols = Vec::with_capacity(n * k);
+        let mut order: Vec<u32> = Vec::with_capacity(f);
+        for r in 0..n {
+            let row = &x[r * f..(r + 1) * f];
+            order.clear();
+            order.extend(0..f as u32);
+            // descending by value, ascending index on ties — then keep k
+            order.sort_by(|&a, &b| {
+                row[b as usize]
+                    .partial_cmp(&row[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            let mut kept: Vec<u32> = order[..k].to_vec();
+            kept.sort_unstable(); // ascending column order within the row
+            for &c in &kept {
+                cols.push(c);
+                vals.push(row[c as usize]);
+            }
+        }
+        SparseFeat { n, f, k, vals, cols }
+    }
+
+    /// Expand back to a dense `n x f` matrix with zeros in the dropped
+    /// lanes. Exact: kept lanes round-trip bitwise.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut x = vec![0.0f32; self.n * self.f];
+        for r in 0..self.n {
+            let out = &mut x[r * self.f..(r + 1) * self.f];
+            for i in 0..self.k {
+                out[self.cols[r * self.k + i] as usize] = self.vals[r * self.k + i];
+            }
+        }
+        x
+    }
+
+    /// Fraction of lanes materialized — the `feat_density` the cost model
+    /// prices (`rho = k / f`).
+    pub fn density(&self) -> f64 {
+        if self.f == 0 { 1.0 } else { self.k as f64 / self.f as f64 }
+    }
+}
+
+/// SpGEMM-style sparse-feature aggregate: `y = A @ to_dense(sf)` computed
+/// without materializing the dense operand. Per row of `A`, each neighbor
+/// contributes only its `k` live lanes, scattered into the dense output
+/// row by stored column index — the CPU twin of the MaxK gather-scatter
+/// kernel, exact (not approximate) because the dropped lanes are true
+/// zeros.
+pub fn sparse_aggregate(a: &Csr, sf: &SparseFeat) -> Vec<f32> {
+    assert_eq!(a.n_cols, sf.n);
+    let (f, k) = (sf.f, sf.k);
+    let mut y = vec![0.0f32; a.n_rows * f];
+    for r in 0..a.n_rows {
+        let (cols, vals) = a.row(r);
+        let out = &mut y[r * f..(r + 1) * f];
+        for (&c, &w) in cols.iter().zip(vals) {
+            let base = c as usize * k;
+            for i in 0..k {
+                out[sf.cols[base + i] as usize] += w * sf.vals[base + i];
+            }
+        }
+    }
+    y
+}
+
 /// One pre-materialized part of a plan's class assignment, bound to its
 /// native schedule.
 enum PartExec {
@@ -419,5 +513,49 @@ mod tests {
         let x = vec![1.0f32; 32 * 3];
         assert!(csr_inter_spmm(&a, &x, 3).iter().all(|&v| v == 0.0));
         assert!(coo_spmm(32, &[], &x, 3).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sparse_feat_full_k_roundtrips_bitwise() {
+        let mut rng = Rng::new(11);
+        let (n, f) = (17, 5);
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+        let sf = SparseFeat::from_dense(&x, n, f, f);
+        assert_eq!(sf.density(), 1.0);
+        assert_eq!(sf.to_dense(), x, "k = f must keep every lane bitwise");
+    }
+
+    #[test]
+    fn sparse_feat_keeps_topk_with_lower_index_ties() {
+        // row [3, 1, 3, 2] at k=2: ties on 3 break toward index 0, so
+        // columns {0, 2} survive
+        let x = vec![3.0, 1.0, 3.0, 2.0];
+        let sf = SparseFeat::from_dense(&x, 1, 4, 2);
+        assert_eq!(sf.cols, vec![0, 2]);
+        assert_eq!(sf.vals, vec![3.0, 3.0]);
+        assert_eq!(sf.to_dense(), vec![3.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_aggregate_matches_dense_on_compressed_operand() {
+        prop::check("sparse_aggregate == spmm(to_dense)", 15, |rng| {
+            let n = rng.usize_below(70) + 3;
+            let m = rng.usize_below(3 * n);
+            let g = Graph::from_edges(
+                n,
+                (0..m).map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32)),
+            );
+            let a = Csr::gcn_normalized(&g);
+            let f = rng.usize_below(7) + 1;
+            let k = rng.usize_below(f) + 1;
+            let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+            let sf = SparseFeat::from_dense(&x, n, f, k);
+            let got = sparse_aggregate(&a, &sf);
+            let expect = a.spmm(&sf.to_dense(), f);
+            for (gv, ev) in got.iter().zip(&expect) {
+                prop::require_close(*gv as f64, *ev as f64, 1e-4, "sparse agg elem")?;
+            }
+            Ok(())
+        });
     }
 }

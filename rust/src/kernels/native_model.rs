@@ -79,12 +79,52 @@ fn matmul_nt(x: &[f32], n: usize, m: usize, w: &[f32], k: usize) -> Vec<f32> {
     out
 }
 
+/// How the hidden activation treats the feature dimension.
+///
+/// `TopK(k)` fuses a MaxK-style selection into the nonlinearity: after
+/// ReLU, each row keeps only its `k` largest lanes (lower index wins
+/// ties) and zeroes the rest, so the second aggregation runs at feature
+/// density `k / h`. `TopK(k >= h)` is exactly `Dense` — every lane
+/// survives — and the trainer relies on that being bitwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatMode {
+    /// Plain ReLU: every hidden lane propagates.
+    Dense,
+    /// ReLU then keep the top-`k` lanes per row, zero the rest.
+    TopK(usize),
+}
+
+/// Zero every lane of each `f`-wide row except its `k` largest by value
+/// (ties break toward the lower index — the same deterministic rule as
+/// [`crate::kernels::native::SparseFeat::from_dense`]).
+pub fn topk_mask_rows(x: &mut [f32], f: usize, k: usize) {
+    if k >= f {
+        return;
+    }
+    let mut order: Vec<u32> = Vec::with_capacity(f);
+    for row in x.chunks_mut(f) {
+        order.clear();
+        order.extend(0..f as u32);
+        order.sort_by(|&a, &b| {
+            row[b as usize]
+                .partial_cmp(&row[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &c in &order[k..] {
+            row[c as usize] = 0.0;
+        }
+    }
+}
+
 /// A 2-layer GCN's parameters on the host.
 #[derive(Debug, Clone)]
 pub struct GcnModel {
     pub f: usize,
     pub h: usize,
     pub c: usize,
+    /// Hidden-activation mode: dense ReLU or fused top-k selection.
+    pub feat_mode: FeatMode,
     /// `[f, h]`
     pub w1: Vec<f32>,
     /// `[h]`
@@ -106,7 +146,22 @@ impl GcnModel {
         };
         let w1 = glorot(f, h);
         let w2 = glorot(h, c);
-        GcnModel { f, h, c, w1, b1: vec![0.0; h], w2, b2: vec![0.0; c] }
+        GcnModel {
+            f,
+            h,
+            c,
+            feat_mode: FeatMode::Dense,
+            w1,
+            b1: vec![0.0; h],
+            w2,
+            b2: vec![0.0; c],
+        }
+    }
+
+    /// Builder: set the hidden-activation feature mode.
+    pub fn with_feat_mode(mut self, mode: FeatMode) -> GcnModel {
+        self.feat_mode = mode;
+        self
     }
 
     /// `logits = agg(relu(agg(x W1) + b1) W2) + b2`, `x` is `[n, f]`.
@@ -126,7 +181,10 @@ impl GcnModel {
         z
     }
 
-    /// Shared front half: returns `(relu(h1), h1-pre-relu)`.
+    /// Shared front half: returns `(masked relu(h1), h1-pre-relu)`. Under
+    /// [`FeatMode::TopK`] the first component additionally zeroes every
+    /// lane outside each row's top-k; `k >= h` short-circuits so the
+    /// dense path's exact float sequence is preserved bitwise.
     fn forward_hidden<A: Fn(&[f32], usize) -> Vec<f32>>(
         &self,
         agg: &A,
@@ -140,7 +198,10 @@ impl GcnModel {
                 *v += b;
             }
         }
-        let h1r: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
+        let mut h1r: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
+        if let FeatMode::TopK(k) = self.feat_mode {
+            topk_mask_rows(&mut h1r, self.h, k);
+        }
         (h1r, h1)
     }
 
@@ -220,11 +281,15 @@ impl GcnModel {
         let dm2 = agg_t(&dz, self.c); // d(h1r W2)
         let dw2 = matmul_tn(&h1r, n, self.h, &dm2, self.c);
         let dh1r = matmul_nt(&dm2, n, self.c, &self.w2, self.h);
-        // relu gate on the pre-activation (bias included)
+        // relu gate on the pre-activation (bias included), AND'd with the
+        // top-k selection: a dropped lane contributed a literal zero
+        // forward, so its subgradient is zero. Under FeatMode::Dense
+        // `kept > 0.0` is exactly `pre > 0.0` (kept = max(pre, 0)), so the
+        // dense gradient is unchanged bitwise.
         let dh1: Vec<f32> = dh1r
             .iter()
-            .zip(&h1)
-            .map(|(&g, &pre)| if pre > 0.0 { g } else { 0.0 })
+            .zip(h1r.iter().zip(&h1))
+            .map(|(&g, (&kept, &pre))| if kept > 0.0 && pre > 0.0 { g } else { 0.0 })
             .collect();
         let db1: Vec<f32> = (0..self.h)
             .map(|j| (0..n).map(|i| dh1[i * self.h + j]).sum())
@@ -314,6 +379,75 @@ mod tests {
             last < first * 0.9,
             "loss did not decrease: first {first}, last {last}"
         );
+    }
+
+    #[test]
+    fn topk_mask_keeps_k_largest_with_lower_index_ties() {
+        let mut x = vec![3.0, 1.0, 3.0, 2.0, /* row 2 */ 0.0, 5.0, 4.0, 5.0];
+        topk_mask_rows(&mut x, 4, 2);
+        assert_eq!(x, vec![3.0, 0.0, 3.0, 0.0, 0.0, 5.0, 0.0, 5.0]);
+        // k >= f is the identity
+        let mut y = vec![1.0, 2.0];
+        topk_mask_rows(&mut y, 2, 5);
+        assert_eq!(y, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn topk_full_width_is_bitwise_dense() {
+        let (a, at, n) = setup(13);
+        let f = 6;
+        let x: Vec<f32> = {
+            let mut rng = Rng::new(4);
+            (0..n * f).map(|_| rng.normal_f32()).collect()
+        };
+        let labels: Vec<i32> = (0..n).map(|v| (v % 3) as i32).collect();
+        let mask = vec![1.0f32; n];
+        let agg = |t: &[f32], w: usize| a.spmm(t, w);
+        let agg_t = |t: &[f32], w: usize| at.spmm(t, w);
+        let mut dense = GcnModel::init(f, 8, 3, 2);
+        let mut topk = GcnModel::init(f, 8, 3, 2).with_feat_mode(FeatMode::TopK(8));
+        assert_eq!(dense.forward(agg, &x, n), topk.forward(agg, &x, n));
+        for _ in 0..3 {
+            let ld = dense.train_step(&agg, &agg_t, &x, n, &labels, &mask, 0.1);
+            let lt = topk.train_step(&agg, &agg_t, &x, n, &labels, &mask, 0.1);
+            assert_eq!(ld.to_bits(), lt.to_bits());
+        }
+        assert_eq!(dense.w1, topk.w1);
+        assert_eq!(dense.b1, topk.b1);
+        assert_eq!(dense.w2, topk.w2);
+        assert_eq!(dense.b2, topk.b2);
+    }
+
+    #[test]
+    fn topk_bounds_active_lanes_and_still_learns() {
+        let (a, at, n) = setup(3);
+        let mut rng = Rng::new(11);
+        let f = 8;
+        let h = 16;
+        let k = 4;
+        let labels: Vec<i32> = (0..n).map(|v| (v / 16) as i32 % 4).collect();
+        let x: Vec<f32> = (0..n * f)
+            .map(|i| {
+                let (v, j) = (i / f, i % f);
+                let signal = if j % 4 == labels[v] as usize % 4 { 1.0 } else { 0.0 };
+                signal + 0.2 * rng.normal_f32()
+            })
+            .collect();
+        let mask = vec![1.0f32; n];
+        let mut model = GcnModel::init(f, h, 4, 0).with_feat_mode(FeatMode::TopK(k));
+        let agg = |t: &[f32], w: usize| a.spmm(t, w);
+        let agg_t = |t: &[f32], w: usize| at.spmm(t, w);
+        let (h1r, _) = model.forward_hidden(&agg, &x, n);
+        for row in h1r.chunks(h) {
+            assert!(row.iter().filter(|&&v| v != 0.0).count() <= k);
+        }
+        let first = model.train_step(&agg, &agg_t, &x, n, &labels, &mask, 0.2);
+        let mut last = first;
+        for _ in 0..60 {
+            last = model.train_step(&agg, &agg_t, &x, n, &labels, &mask, 0.2);
+        }
+        assert!(last.is_finite());
+        assert!(last < first * 0.9, "top-k loss stuck: first {first}, last {last}");
     }
 
     #[test]

@@ -119,6 +119,20 @@ pub fn candidates(role: Role) -> &'static [KernelKind] {
     }
 }
 
+/// Candidate metadata: does this kernel's schedule get cheaper when the
+/// feature operand is row-sparse (per-row top-k lanes)? Gather/scatter
+/// schedules touch only the live lanes, so their flops and staging bytes
+/// scale with feature density; the dense MMA family traverses every lane
+/// regardless and is invariant. `gpusim::kernel_cost_density` prices
+/// exactly this set density-aware, and `plan --explain` annotates
+/// candidates with it.
+pub fn benefits_from_sparse_features(kind: KernelKind) -> bool {
+    match kind {
+        KernelKind::CsrInter | KernelKind::CsrIntra | KernelKind::Coo => true,
+        KernelKind::DenseBlock | KernelKind::TileSparse | KernelKind::DenseFull => false,
+    }
+}
+
 /// A (intra, inter) kernel assignment — one point in AdaptGear's strategy
 /// space. `intra == None` encodes the full-graph-level baselines where the
 /// whole propagation matrix runs through the inter kernel.
@@ -241,6 +255,52 @@ mod tests {
         }
         assert_eq!(candidates(Role::UniformIntra), &INTRA_CANDIDATES);
         assert_eq!(candidates(Role::Inter), &INTER_CANDIDATES);
+    }
+
+    /// The sparse-feature metadata agrees with the cost model: a kernel
+    /// flagged as benefiting must actually price cheaper at low feature
+    /// density (at a width where the feature term dominates), and an
+    /// unflagged kernel must price identically.
+    #[test]
+    fn sparse_feature_metadata_matches_cost_model() {
+        use crate::gpusim::kernel_cost::{
+            class_kernel_cost, kernel_cost, kernel_cost_density, ClassDims, CostCtx,
+        };
+        use crate::gpusim::A100;
+        use crate::graph::Csr;
+
+        let inter = Csr::from_triplets(
+            256,
+            256,
+            (0..512u32).map(|i| (i % 256, (i * 37) % 256, 1.0)).collect(),
+        );
+        let f = 256;
+        for role in [Role::UniformIntra, Role::Inter, Role::DenseClass, Role::SparseClass] {
+            for &k in candidates(role) {
+                let (dense_us, sparse_us) = if role == Role::Inter {
+                    (
+                        kernel_cost(k, &inter, f, 16, &A100).time_us,
+                        kernel_cost_density(k, &inter, f, 16, &A100, 0.125).time_us,
+                    )
+                } else {
+                    let dims = ClassDims { kind: k, blocks: 40, rows: 640, nnz: 4000 };
+                    let ctx = CostCtx::new(dims, f, 16, &A100);
+                    (
+                        class_kernel_cost(&ctx).time_us,
+                        class_kernel_cost(&ctx.with_feat_density(0.125)).time_us,
+                    )
+                };
+                if benefits_from_sparse_features(k) {
+                    assert!(
+                        sparse_us < dense_us,
+                        "{k} flagged sparse-friendly but {sparse_us} !< {dense_us}"
+                    );
+                } else {
+                    assert_eq!(sparse_us, dense_us, "{k} flagged invariant but moved");
+                }
+            }
+        }
+        assert!(!benefits_from_sparse_features(KernelKind::DenseFull));
     }
 
     #[test]

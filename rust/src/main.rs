@@ -29,8 +29,8 @@ use anyhow::{bail, Context, Result};
 
 use adaptgear::coordinator::{pipeline, Clock, ModelKind, Run, Strategy};
 use adaptgear::graph::{datasets, stats};
-use adaptgear::gpusim::{kernel_cost, GpuModel};
-use adaptgear::kernels::{candidates, Role};
+use adaptgear::gpusim::{kernel_cost_density, GpuModel};
+use adaptgear::kernels::{benefits_from_sparse_features, candidates, Role};
 use adaptgear::partition::{Decomposition, Propagation};
 use adaptgear::plan::{
     CachedPlanner, GearPlan, MonitorPlanner, PlanRequest, PlanStore, Planner, SimCostPlanner,
@@ -158,8 +158,12 @@ fn command_help(cmd: &str) -> Option<&'static str> {
              \x20                     every neighbor (default 10,10)\n\
              \x20 --batch-size N      target vertices per batch (default 256)\n\
              \x20 --epochs N          passes over the vertex set (default 1)\n\
+             \x20 --topk K            keep only the K largest hidden lanes per row\n\
+             \x20                     (MaxK-style activation sparsity; plans price\n\
+             \x20                     kernels at feature density K/hidden; native\n\
+             \x20                     backend only)\n\
              \x20 --trace-out FILE    write a Chrome trace (spans + metrics) of the run\n\n\
-             EXAMPLE:\n  adaptgear train --dataset planted-mixed --sampled --fanout 10,10"
+             EXAMPLE:\n  adaptgear train --dataset planted-mixed --sampled --topk 16"
         }
         "serve" => {
             "adaptgear serve — deploy (plan + train + warm) through the registry,\n\
@@ -205,7 +209,7 @@ fn command_help(cmd: &str) -> Option<&'static str> {
              BENCH_*.json reports; validate or regression-gate emitted reports.\n\n\
              FLAGS:\n\
              \x20 --quick             reduced CI workload profile\n\
-             \x20 --suite all|kernels|plan|train|serve|sample|stream  (default all)\n\
+             \x20 --suite all|kernels|plan|train|serve|sample|stream|feat  (default all)\n\
              \x20 --out DIR           report directory (default .)\n\
              \x20 --seed N            workload seed (default 7)\n\
              \x20 --artifacts DIR     artifacts directory (default artifacts)\n\
@@ -259,7 +263,8 @@ fn print_help() {
          \x20 train --dataset NAME [--model gcn|gin] [--steps N] [--lr F]\n\
          \x20       [--planner monitor|cached|sim] [--clock sim|wall]\n\
          \x20       [--gpu a100|v100] [--scale S] [--seed N]\n\
-         \x20       [--sampled [--fanout 10,10] [--batch-size N] [--epochs N]]\n\
+         \x20       [--sampled [--fanout 10,10] [--batch-size N] [--epochs N]\n\
+         \x20        [--topk K]]\n\
          \x20                                   plan (or load a cached plan), then train;\n\
          \x20                                   --sampled runs mini-batch neighbor-sampled\n\
          \x20                                   training with amortized per-batch plans\n\
@@ -271,7 +276,8 @@ fn print_help() {
          \x20 stream --dataset NAME [--reweights N] [--target-block B] [--scale S]\n\
          \x20                                   deterministic mutation workload: delta\n\
          \x20                                   log -> drift tracking -> online replan\n\
-         \x20 bench [--quick] [--suite all|kernels|plan|train|serve|sample|stream] [--out DIR]\n\
+         \x20 bench [--quick] [--suite all|kernels|plan|train|serve|sample|stream|feat]\n\
+         \x20       [--out DIR]\n\
          \x20                                   run the fixed workload suites, emit\n\
          \x20                                   schema-versioned BENCH_*.json reports\n\
          \x20 bench --validate [--out DIR]      schema-check emitted BENCH_*.json\n\
@@ -456,7 +462,16 @@ fn explain_plan(
     gpu: &'static GpuModel,
 ) {
     let widths = [bucket.features, bucket.hidden];
-    println!("\nper-candidate gpusim costs (us; * = chosen):");
+    let rho = plan.feat_density;
+    if rho < 1.0 {
+        println!(
+            "\nfeature density: {rho:.4} (top-k sparse features; candidates marked 's' \
+             are priced by live lanes, dense engines traverse every lane)"
+        );
+    } else {
+        println!("\nfeature density: {rho:.4} (dense features)");
+    }
+    println!("per-candidate gpusim costs (us; * = chosen):");
     for &w in &widths {
         println!("  width {w}:");
         let show = |role: &str,
@@ -464,10 +479,11 @@ fn explain_plan(
                         candidates: &[adaptgear::kernels::KernelKind],
                         chosen: &str| {
             for &k in candidates {
-                let c = kernel_cost(k, matrix, w, d.community, gpu);
+                let c = kernel_cost_density(k, matrix, w, d.community, gpu, rho);
                 let mark = if k.as_str() == chosen { "*" } else { " " };
+                let sparse = if benefits_from_sparse_features(k) { "s" } else { " " };
                 println!(
-                    "   {mark} {role:<5} {:<12} {:>9.2} = launch {:.2} + max(compute {:.2}, memory {:.2})",
+                    "   {mark}{sparse} {role:<5} {:<12} {:>9.2} = launch {:.2} + max(compute {:.2}, memory {:.2})",
                     k.as_str(),
                     c.time_us,
                     c.launch_us,
@@ -548,13 +564,14 @@ fn explain_plan(
             print!("{}", p.render());
         }
         None => {
-            let sweep = adaptgear::plan::hybrid::sweep(
+            let sweep = adaptgear::plan::hybrid::sweep_with_density(
                 &profile,
                 &d.inter,
                 &widths,
                 bucket.edges,
                 adaptgear::kernels::tile::tile_capacity(bucket.blocks, d.community),
                 gpu,
+                rho,
             );
             println!(
                 "intra+inter simulated (re-swept; plan has no provenance): chosen {:.2}us | \
@@ -703,6 +720,7 @@ fn cmd_train_sampled(args: &Args) -> Result<()> {
         batch_size: args.get_usize("batch-size", 256),
         epochs: args.get_usize("epochs", 1),
         reorder: Reorder::Metis,
+        topk: args.get("topk").map(|s| s.parse::<usize>()).transpose()?,
     };
     let cfg = TrainConfig {
         model,
@@ -717,7 +735,7 @@ fn cmd_train_sampled(args: &Args) -> Result<()> {
             println!("epoch {e:>3}  mean loss {mean:.5}");
         }
         println!(
-            "sampled training [{}]: {} epochs (fanout {}, batch {}) = {} batches | final loss {:.5}",
+            "sampled training [{}]: {} epochs (fanout {}, batch {}{}) = {} batches | final loss {:.5}",
             report.backend,
             report.epochs,
             scfg.fanouts
@@ -726,6 +744,10 @@ fn cmd_train_sampled(args: &Args) -> Result<()> {
                 .collect::<Vec<_>>()
                 .join(","),
             scfg.batch_size,
+            match scfg.topk {
+                Some(k) => format!(", topk {k}"),
+                None => String::new(),
+            },
             report.batches,
             report.final_loss(),
         );

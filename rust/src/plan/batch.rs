@@ -22,7 +22,7 @@ use anyhow::Result;
 
 use crate::coordinator::ModelKind;
 use crate::gpusim::kernel_cost::{est_occupied_tiles, CostCtx};
-use crate::gpusim::{class_kernel_cost, kernel_cost, ClassDims, GpuModel, IterationCost};
+use crate::gpusim::{class_kernel_cost, kernel_cost_density, ClassDims, GpuModel, IterationCost};
 use crate::kernels::tile::tile_capacity;
 use crate::kernels::{candidates, KernelKind, KernelPair, Role};
 use crate::partition::{BlockProfile, Decomposition, DensityClass};
@@ -227,7 +227,12 @@ pub fn adapt_decision(
         let dims = ClassDims { kind, blocks, rows, nnz };
         widths
             .iter()
-            .map(|&w| class_kernel_cost(&CostCtx::new(dims, w, d.community, gpu)).time_us)
+            .map(|&w| {
+                class_kernel_cost(
+                    &CostCtx::new(dims, w, d.community, gpu).with_feat_density(req.feat_density),
+                )
+                .time_us
+            })
             .sum::<f64>()
             / widths.len().max(1) as f64
     };
@@ -239,7 +244,10 @@ pub fn adapt_decision(
     };
     let inter_time = widths
         .iter()
-        .map(|&w| kernel_cost(decision.inter, &d.inter, w, d.community, gpu).time_us)
+        .map(|&w| {
+            kernel_cost_density(decision.inter, &d.inter, w, d.community, gpu, req.feat_density)
+                .time_us
+        })
         .sum::<f64>()
         / widths.len().max(1) as f64;
     let inter_class = ClassAssignment {
@@ -365,6 +373,7 @@ pub fn plan_from_decision(
         monitor_iters: 0,
         monitor_overhead_us: 0.0,
         graph_version: req.graph_version,
+        feat_density: req.feat_density,
         provenance: Provenance {
             planner: planner_label.to_string(),
             clock: "analytic".to_string(),

@@ -23,11 +23,12 @@ impl Fingerprint {
     /// Fingerprint the selection problem: topology + community + model.
     /// The salt names the plan schema generation — v2 added the per-class
     /// hybrid assignment, v3 added the graph-version component for
-    /// streaming graphs, v4 added the tile-sparse kernel class (plans
-    /// swept without it must be re-priced, not served) — so every
-    /// pre-generation cache entry keys differently and is recomputed
-    /// rather than served against a richer candidate set. Equivalent to
-    /// [`Fingerprint::of_versioned`] at graph version 0 (a frozen graph).
+    /// streaming graphs, v4 added the tile-sparse kernel class, v5 added
+    /// the feature-density term (plans swept density-blind must be
+    /// re-priced, not served) — so every pre-generation cache entry keys
+    /// differently and is recomputed rather than served against a richer
+    /// candidate set. Equivalent to [`Fingerprint::of_full`] at graph
+    /// version 0 (a frozen graph) and dense features.
     pub fn of(d: &Decomposition, model: ModelKind) -> Fingerprint {
         Fingerprint::of_versioned(d, model, 0)
     }
@@ -36,11 +37,27 @@ impl Fingerprint {
     /// topology digest plus the monotonically increasing graph version
     /// the streaming re-planner stamps on each swap. Two plans for the
     /// same topology at different versions key differently, so a stale
-    /// pre-mutation plan can never be served from the store.
+    /// pre-mutation plan can never be served from the store. Dense
+    /// features — [`Fingerprint::of_full`] at `feat_density = 1.0`.
     pub fn of_versioned(d: &Decomposition, model: ModelKind, graph_version: u64) -> Fingerprint {
+        Fingerprint::of_full(d, model, graph_version, 1.0)
+    }
+
+    /// The full selection-problem key: topology, model, graph version,
+    /// and the assumed feature density. Density participates because the
+    /// per-class cost argmin depends on it — a plan swept at `rho = 1.0`
+    /// can pick a different winner than one swept at `rho = 1/8`, so the
+    /// two must never share a cache slot.
+    pub fn of_full(
+        d: &Decomposition,
+        model: ModelKind,
+        graph_version: u64,
+        feat_density: f64,
+    ) -> Fingerprint {
         let mut h = Fnv::new();
-        h.write(b"adaptgear-plan-v4");
+        h.write(b"adaptgear-plan-v5");
         h.write(&graph_version.to_le_bytes());
+        h.write(&feat_density.to_bits().to_le_bytes());
         h.write(model.as_str().as_bytes());
         h.write_usize(d.community);
         h.write_usize(d.graph.n);
@@ -159,6 +176,16 @@ mod tests {
         assert_ne!(v0, v1);
         assert_ne!(v1, v2);
         assert_ne!(v0, v2);
+    }
+
+    #[test]
+    fn feat_density_participates_and_dense_is_the_default() {
+        let d = decomp(7, Propagation::GcnNormalized);
+        let dense = Fingerprint::of_full(&d, ModelKind::Gcn, 0, 1.0);
+        let sparse = Fingerprint::of_full(&d, ModelKind::Gcn, 0, 0.125);
+        assert_ne!(dense, sparse, "density must re-key the cache slot");
+        assert_eq!(dense, Fingerprint::of_versioned(&d, ModelKind::Gcn, 0));
+        assert_eq!(dense, Fingerprint::of(&d, ModelKind::Gcn));
     }
 
     #[test]

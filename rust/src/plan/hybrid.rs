@@ -28,7 +28,7 @@
 //! at least as good as priced under either execution shape.
 
 use crate::gpusim::kernel_cost::{class_kernel_cost, est_occupied_tiles, ClassDims, CostCtx};
-use crate::gpusim::{kernel_cost, GpuModel};
+use crate::gpusim::{kernel_cost_density, GpuModel};
 use crate::graph::Csr;
 use crate::kernels::{candidates, KernelKind, Role};
 use crate::partition::BlockProfile;
@@ -75,16 +75,39 @@ pub fn sweep(
     tile_cap: usize,
     gpu: &'static GpuModel,
 ) -> HybridDecision {
+    sweep_with_density(profile, inter, widths, edge_cap, tile_cap, gpu, 1.0)
+}
+
+/// [`sweep`] at an assumed top-k feature density `rho = k/f`: every class
+/// candidate and the inter kernel are priced on both topology AND feature
+/// density, so the argmin can flip toward the gather-bound CSR/COO
+/// schedules once the operand rows compress (the dense engines cannot
+/// skip lanes and keep their dense-feature price).
+pub fn sweep_with_density(
+    profile: &BlockProfile,
+    inter: &Csr,
+    widths: &[usize],
+    edge_cap: usize,
+    tile_cap: usize,
+    gpu: &'static GpuModel,
+    feat_density: f64,
+) -> HybridDecision {
     let community = profile.community;
     let nb = profile.len();
     let mut sweep_span = obs::span("plan.sweep");
     sweep_span.attr_num("blocks", nb as f64);
     sweep_span.attr_num("inter_nnz", inter.nnz() as f64);
+    sweep_span.attr_num("feat_density", feat_density);
     let mean_class = |kind: KernelKind, blocks: usize, rows: usize, nnz: usize| -> f64 {
         let dims = ClassDims { kind, blocks, rows, nnz };
         widths
             .iter()
-            .map(|&w| class_kernel_cost(&CostCtx::new(dims, w, community, gpu)).time_us)
+            .map(|&w| {
+                class_kernel_cost(
+                    &CostCtx::new(dims, w, community, gpu).with_feat_density(feat_density),
+                )
+                .time_us
+            })
             .sum::<f64>()
             / widths.len().max(1) as f64
     };
@@ -98,7 +121,7 @@ pub fn sweep(
     let inter_cost = |kind: KernelKind| -> f64 {
         widths
             .iter()
-            .map(|&w| kernel_cost(kind, inter, w, community, gpu).time_us)
+            .map(|&w| kernel_cost_density(kind, inter, w, community, gpu, feat_density).time_us)
             .sum::<f64>()
             / widths.len().max(1) as f64
     };
@@ -505,6 +528,47 @@ mod tests {
             assert_eq!(class.blocks.len(), rec.blocks);
             assert_eq!(class.matrix.nnz(), rec.nnz);
         }
+    }
+
+    #[test]
+    fn sparse_features_never_raise_the_sweep_total() {
+        // the density-aware sweep at rho < 1 must price at or below the
+        // dense-feature sweep (per-candidate costs are monotone in rho,
+        // and the argmin can only improve), and rho = 1.0 must reproduce
+        // the density-blind sweep bit-exactly
+        let profile = fake_profile(16, 10922, 244, 21846, 20);
+        let dense =
+            sweep(&profile, &small_inter(), &[256, 256], usize::MAX, usize::MAX, &A100);
+        let one = sweep_with_density(
+            &profile,
+            &small_inter(),
+            &[256, 256],
+            usize::MAX,
+            usize::MAX,
+            &A100,
+            1.0,
+        );
+        assert_eq!(dense.total_us, one.total_us, "rho=1.0 must be bit-identical");
+        assert_eq!(dense.assignment.threshold, one.assignment.threshold);
+        let sparse = sweep_with_density(
+            &profile,
+            &small_inter(),
+            &[256, 256],
+            usize::MAX,
+            usize::MAX,
+            &A100,
+            0.125,
+        );
+        assert!(
+            sparse.total_us <= dense.total_us,
+            "sparse features must not cost more: {} vs {}",
+            sparse.total_us,
+            dense.total_us
+        );
+        assert!(
+            sparse.all_sparse_us < dense.all_sparse_us,
+            "the CSR uniform baseline must strictly cheapen at rho=1/8"
+        );
     }
 
     #[test]

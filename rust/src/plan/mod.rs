@@ -100,6 +100,10 @@ pub struct PlanRequest<'a> {
     /// the fingerprint: a re-planned mutation never collides with the
     /// pre-mutation plan in the store.
     pub graph_version: u64,
+    /// Assumed top-k feature density `rho = k/f` the plan prices kernels
+    /// at (1.0 = dense features). Part of the fingerprint: the cost
+    /// argmin depends on it, so a density-blind cached plan must re-key.
+    pub feat_density: f64,
 }
 
 impl<'a> PlanRequest<'a> {
@@ -113,6 +117,7 @@ impl<'a> PlanRequest<'a> {
             reorder: Reorder::Metis,
             seed: 0,
             graph_version: 0,
+            feat_density: 1.0,
         }
     }
 
@@ -136,6 +141,7 @@ impl<'a> PlanRequest<'a> {
             reorder,
             seed,
             graph_version: 0,
+            feat_density: 1.0,
         }
     }
 
@@ -147,7 +153,7 @@ impl<'a> PlanRequest<'a> {
     }
 
     pub fn fingerprint(&self) -> Fingerprint {
-        Fingerprint::of_versioned(self.d, self.model, self.graph_version)
+        Fingerprint::of_full(self.d, self.model, self.graph_version, self.feat_density)
     }
 }
 
@@ -660,6 +666,10 @@ pub struct GearPlan {
     /// graphs). Participates in the fingerprint, so `validate` can
     /// recompute the digest for versioned plans.
     pub graph_version: u64,
+    /// Top-k feature density `rho = k/f` the plan's costs assumed (1.0 =
+    /// dense features). Participates in the fingerprint; `validate` and
+    /// the checker recompute costs at this density.
+    pub feat_density: f64,
 }
 
 impl GearPlan {
@@ -672,7 +682,7 @@ impl GearPlan {
                 d.community
             );
         }
-        let fp = Fingerprint::of_versioned(d, model, self.graph_version);
+        let fp = Fingerprint::of_full(d, model, self.graph_version, self.feat_density);
         if self.fingerprint != fp {
             bail!(
                 "plan fingerprint {} does not match graph fingerprint {fp} — replan",
@@ -746,11 +756,12 @@ impl GearPlan {
                 .collect(),
         );
         Json::obj(vec![
-            ("version", Json::num(3.0)),
+            ("version", Json::num(4.0)),
             ("fingerprint", Json::str(self.fingerprint.to_string())),
             ("dataset", Json::str(self.dataset.clone())),
             ("model", Json::str(self.model.as_str())),
             ("scale", Json::num(self.scale)),
+            ("feat_density", Json::num(self.feat_density)),
             ("community", Json::num(self.community as f64)),
             ("reorder", Json::str(self.reorder.as_str())),
             // string, not number: u64 seeds above 2^53 don't survive f64
@@ -844,6 +855,8 @@ impl GearPlan {
                 .as_str()
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(0),
+            // absent in density-blind (version <= 3) files: dense features
+            feat_density: v.get("feat_density").as_f64().unwrap_or(1.0),
             provenance: Provenance {
                 planner: prov.get("planner").as_str().unwrap_or("unknown").to_string(),
                 clock: prov.get("clock").as_str().unwrap_or("unknown").to_string(),
@@ -1072,6 +1085,29 @@ mod tests {
         assert!(old.assignment.provenance.is_none());
         assert!(old.assignment.covers(&d).is_ok());
         assert!(old.validate(&d, ModelKind::Gcn).is_ok());
+    }
+
+    #[test]
+    fn density_blind_plan_files_decode_as_dense_and_validate() {
+        // a v3 file has no feat_density key: it must load as rho = 1.0
+        // (its fingerprint was computed dense) and still validate
+        let d = small_decomposition(11);
+        let bucket = small_bucket();
+        let plan = SimCostPlanner::new(&A100)
+            .plan(&PlanRequest::new(&d, ModelKind::Gcn, &bucket))
+            .unwrap();
+        assert_eq!(plan.feat_density, 1.0, "default requests assume dense features");
+        let Json::Obj(mut obj) = plan.to_json() else { unreachable!() };
+        obj.remove("feat_density");
+        obj.insert("version".to_string(), Json::num(3.0));
+        let old = GearPlan::from_json(&Json::Obj(obj)).unwrap();
+        assert_eq!(old.feat_density, 1.0);
+        assert!(old.validate(&d, ModelKind::Gcn).is_ok());
+
+        // a sparse-feature request keys a different cache slot
+        let mut sparse = PlanRequest::new(&d, ModelKind::Gcn, &bucket);
+        sparse.feat_density = 0.125;
+        assert_ne!(sparse.fingerprint(), PlanRequest::new(&d, ModelKind::Gcn, &bucket).fingerprint());
     }
 
     #[test]

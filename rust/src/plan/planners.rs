@@ -18,7 +18,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::selector::{select, KernelTimer, Role};
 use crate::coordinator::{ModelDims, Strategy};
-use crate::gpusim::{kernel_cost, GpuModel, IterationCost};
+use crate::gpusim::{kernel_cost, kernel_cost_density, GpuModel, IterationCost};
 use crate::kernels::pack::{pack_features, pack_kernel_operands};
 use crate::kernels::{KernelKind, KernelPair, INTER_CANDIDATES, INTRA_CANDIDATES};
 use crate::partition::Decomposition;
@@ -79,8 +79,9 @@ fn per_width_pairs(req: &PlanRequest, gpu: &GpuModel) -> BTreeMap<usize, KernelP
             .iter()
             .copied()
             .min_by(|&a, &b| {
-                let ca = kernel_cost(a, matrix, w, req.d.community, gpu).time_us;
-                let cb = kernel_cost(b, matrix, w, req.d.community, gpu).time_us;
+                let rho = req.feat_density;
+                let ca = kernel_cost_density(a, matrix, w, req.d.community, gpu, rho).time_us;
+                let cb = kernel_cost_density(b, matrix, w, req.d.community, gpu, rho).time_us;
                 ca.partial_cmp(&cb).unwrap()
             })
             .unwrap()
@@ -118,13 +119,14 @@ fn resolve_assignment(
 ) -> GearAssignment {
     let profile = req.d.intra_block_profile();
     let tile_cap = crate::kernels::tile::tile_capacity(req.bucket.blocks, req.d.community);
-    let decision = hybrid::sweep(
+    let decision = hybrid::sweep_with_density(
         &profile,
         &req.d.inter,
         &req.widths(),
         req.bucket.edges,
         tile_cap,
         gpu,
+        req.feat_density,
     );
     if decision.assignment.is_hybrid() {
         let mut a = decision.assignment;
@@ -178,7 +180,10 @@ impl Planner for SimCostPlanner {
         let mean = |matrix: &crate::graph::Csr, kind: KernelKind| {
             widths
                 .iter()
-                .map(|&w| kernel_cost(kind, matrix, w, req.d.community, self.gpu).time_us)
+                .map(|&w| {
+                    kernel_cost_density(kind, matrix, w, req.d.community, self.gpu, req.feat_density)
+                        .time_us
+                })
                 .sum::<f64>()
                 / widths.len() as f64
         };
@@ -229,6 +234,7 @@ impl Planner for SimCostPlanner {
             monitor_iters: 0,
             monitor_overhead_us: 0.0,
             graph_version: req.graph_version,
+            feat_density: req.feat_density,
             provenance: Provenance {
                 planner: self.name().to_string(),
                 clock: "analytic".to_string(),
@@ -435,6 +441,7 @@ impl<'e> MonitorPlanner<'e> {
             monitor_iters: report.monitor_iters,
             monitor_overhead_us: report.monitor_overhead_us,
             graph_version: req.graph_version,
+            feat_density: req.feat_density,
             provenance: Provenance {
                 planner: "monitor".to_string(),
                 clock: self.clock.as_str().to_string(),

@@ -3,7 +3,7 @@
 //! The property side pins the writer/checker contract from the outside:
 //! every artifact the system persists through its public writers — a
 //! plan via [`PlanStore::save`], a serialized [`DeltaLog`], a
-//! [`BenchReport`] from each of the six suites, a Chrome trace via
+//! [`BenchReport`] from each of the seven suites, a Chrome trace via
 //! `obs::write_trace` — must come back from `check::run_all` with zero
 //! Error diagnostics. The mutation side pins the other direction: for
 //! each analyzer, corrupting exactly one invariant in an otherwise
@@ -152,7 +152,7 @@ fn every_written_artifact_passes_check_with_zero_errors() {
     let delta_path = root.join("deltas.json");
     std::fs::write(&delta_path, json::write(&sample_log().to_json())).unwrap();
 
-    // All six bench suites, quick profile, engine-free.
+    // All seven bench suites, quick profile, engine-free.
     let bench_dir = root.join("bench");
     let cfg = BenchConfig {
         quick: true,
@@ -298,6 +298,59 @@ fn plan_mutation_nondense_kernel_on_tile_plan_is_ag022() {
     });
     let report = check::run_all(&ctx(&root), false);
     assert!(error_codes(&report).contains(&"AG022"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn plan_mutation_feat_density_out_of_range_or_missing_is_ag035() {
+    let _g = lock();
+    let root = tmpdir("plan-featdensity");
+    let store = PlanStore::in_artifacts(&root);
+    let path = store.save(&anonymous_plan(6)).unwrap();
+    assert_eq!(error_codes(&check::run_all(&ctx(&root), false)), Vec::<&str>::new());
+
+    // Out of range: a density above 1 can only come from a broken writer.
+    mutate_json(&path, |map| {
+        map.insert("feat_density".into(), Json::num(1.5));
+    });
+    let report = check::run_all(&ctx(&root), false);
+    assert!(error_codes(&report).contains(&"AG035"), "{}", report.render());
+
+    // Missing entirely: the decoder is tolerant (defaults to dense), so
+    // only the raw-document lint can catch a v4+ plan that dropped the
+    // field — that is exactly what AG035 exists for.
+    mutate_json(&path, |map| {
+        map.remove("feat_density");
+    });
+    let report = check::run_all(&ctx(&root), false);
+    assert!(error_codes(&report).contains(&"AG035"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn plan_mutation_density_drift_is_ag036() {
+    let _g = lock();
+    let root = tmpdir("plan-drift");
+    let store = PlanStore::in_artifacts(&root);
+    let path = store.save(&labeled_plan()).unwrap();
+
+    // Claim near-zero feature density on a plan whose re-derivable
+    // synthetic features are dense: the drift check must flag it. The
+    // tampered field also breaks the v5 fingerprint (AG024 — density is
+    // salted into it), which is why the drift lint runs BEFORE the
+    // fingerprint gate.
+    mutate_json(&path, |map| {
+        map.insert("feat_density".into(), Json::num(0.01));
+    });
+    let report = check::run_all(&ctx(&root), false);
+    let warns: Vec<&str> = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity == check::Severity::Warn)
+        .map(|d| d.code.code())
+        .collect();
+    assert!(warns.contains(&"AG036"), "{}", report.render());
+    assert!(error_codes(&report).contains(&"AG024"), "{}", report.render());
     let _ = std::fs::remove_dir_all(&root);
 }
 

@@ -1,0 +1,183 @@
+//! Property tests for the feature-dimension sparsity path (DESIGN.md
+//! Sec. 15): top-k selection fused into the native GCN, the SparseFeat
+//! aggregation schedule, and the hand-derived backward masking.
+//!
+//! Three contracts:
+//!
+//! * `TopK(k = F)` is the dense model — bitwise, not approximately —
+//!   through the REAL execution path (`SimCostPlanner` assignment
+//!   compiled to [`AssignmentExec`]), so turning the feature axis on at
+//!   full width can never perturb a converged run;
+//! * [`sparse_aggregate`] over per-row top-k compressed features equals
+//!   the dense aggregation of the masked matrix on every lane, across
+//!   random k/F ratios, densities, and ragged (non-multiple-of-16)
+//!   sizes;
+//! * the top-k backward matches finite differences on the lanes the
+//!   selection keeps (perturbing `w2` never flips the selection, which
+//!   is what makes the numeric gradient well-defined).
+
+use adaptgear::coordinator::ModelKind;
+use adaptgear::gpusim::A100;
+use adaptgear::graph::generate::planted_partition;
+use adaptgear::graph::{Csr, Graph};
+use adaptgear::kernels::{sparse_aggregate, AssignmentExec, FeatMode, GcnModel, SparseFeat};
+use adaptgear::partition::{Decomposition, Propagation, Reorder};
+use adaptgear::plan::{PlanRequest, Planner, SimCostPlanner};
+use adaptgear::runtime::BucketInfo;
+use adaptgear::util::prop;
+use adaptgear::util::rng::Rng;
+
+/// Plan a decomposition with the real planner and compile the class
+/// assignment to native schedules — the path `train --sampled` drives.
+fn planned_exec(d: &Decomposition, f: usize, hidden: usize) -> AssignmentExec {
+    let bucket = BucketInfo {
+        name: "feat-prop".to_string(),
+        vertices: d.graph.n,
+        edges: d.intra.nnz() + d.inter.nnz() + 8,
+        features: f,
+        hidden,
+        classes: 4,
+        blocks: d.graph.n.div_ceil(16),
+    };
+    let plan = SimCostPlanner::new(&A100)
+        .plan(&PlanRequest::new(d, ModelKind::Gcn, &bucket))
+        .expect("planning");
+    AssignmentExec::build(d, &plan.assignment).expect("compiling the plan")
+}
+
+#[test]
+fn topk_full_width_is_bitwise_dense_through_planner_path() {
+    prop::check("TopK(k=F) == Dense bitwise via AssignmentExec", 8, |rng| {
+        let n = (rng.usize_below(6) + 3) * 16;
+        let g = planted_partition(n, 16, 0.3 + rng.f64() * 0.4, 0.02, rng);
+        let d = Decomposition::build(&g, Reorder::Metis, Propagation::GcnNormalized, 16, 1);
+        let f = rng.usize_below(6) + 2;
+        let h = rng.usize_below(12) + 4;
+        let exec = planned_exec(&d, f, h);
+        let at = d.whole().transpose();
+        let agg = |t: &[f32], w: usize| exec.aggregate(t, w);
+        let agg_t = |t: &[f32], w: usize| at.spmm(t, w);
+
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.usize_below(4) as i32).collect();
+        let mask: Vec<f32> = (0..n).map(|_| if rng.f64() < 0.7 { 1.0 } else { 0.0 }).collect();
+
+        let seed = rng.below(1 << 20);
+        let mut dense = GcnModel::init(f, h, 4, seed);
+        // k = h exactly, and k > h for good measure on half the cases
+        let k = h + rng.usize_below(2) * 3;
+        let mut topk = GcnModel::init(f, h, 4, seed).with_feat_mode(FeatMode::TopK(k));
+
+        let yd = dense.forward(agg, &x, n);
+        let yt = topk.forward(agg, &x, n);
+        prop::require(yd == yt, "full-width top-k forward diverged from dense")?;
+        for step in 0..3 {
+            let ld = dense.train_step(agg, agg_t, &x, n, &labels, &mask, 0.1);
+            let lt = topk.train_step(agg, agg_t, &x, n, &labels, &mask, 0.1);
+            prop::require(
+                ld.to_bits() == lt.to_bits(),
+                &format!("loss diverged at step {step}: {ld} vs {lt}"),
+            )?;
+        }
+        prop::require(
+            dense.w1 == topk.w1 && dense.b1 == topk.b1 && dense.w2 == topk.w2
+                && dense.b2 == topk.b2,
+            "parameters diverged after full-width top-k training",
+        )
+    });
+}
+
+#[test]
+fn sparse_aggregate_equals_dense_on_masked_lanes() {
+    prop::check("sparse_aggregate == spmm(to_dense)", 25, |rng| {
+        // Ragged sizes on purpose: nothing here may assume 16-alignment.
+        let n = rng.usize_below(90) + 3;
+        let m = rng.usize_below(4 * n) + n;
+        let g = Graph::from_edges(
+            n,
+            (0..m).map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32)),
+        );
+        let a = Csr::gcn_normalized(&g);
+        let f = rng.usize_below(12) + 1;
+        let k = rng.usize_below(f) + 1;
+        let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+
+        let sf = SparseFeat::from_dense(&x, n, f, k);
+        prop::require(sf.density() <= 1.0 && sf.density() > 0.0, "density out of range")?;
+        let got = sparse_aggregate(&a, &sf);
+        let expect = a.spmm(&sf.to_dense(), f);
+        prop::require(got.len() == expect.len(), "output shape mismatch")?;
+        for (i, (p, q)) in got.iter().zip(&expect).enumerate() {
+            prop::require_close(*p as f64, *q as f64, 1e-4, &format!("lane {i}"))?;
+        }
+        // k = f must reproduce the fully dense aggregation bitwise-ish
+        if k == f {
+            let dense = a.spmm(&x, f);
+            for (p, q) in got.iter().zip(&dense) {
+                prop::require_close(*p as f64, *q as f64, 1e-4, "full-k lane")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topk_backward_matches_finite_differences() {
+    // Finite-difference gradcheck of the top-k masked backward. The
+    // perturbed coordinates live in `w2`: the selection is a function of
+    // `w1`/`b1` only, so an eps-nudge of `w2` never flips which lanes
+    // survive and the loss stays differentiable at the probe point.
+    let mut rng = Rng::new(0x70f3);
+    let g = planted_partition(64, 16, 0.4, 0.03, &mut rng);
+    let a = Csr::gcn_normalized(&g);
+    let at = a.transpose();
+    let n = 64;
+    let f = 4;
+    let h = 8;
+    let k = 3;
+    let labels: Vec<i32> = (0..n).map(|v| (v % 3) as i32).collect();
+    let mut mask = vec![0.0f32; n];
+    for m in mask.iter_mut().take(20) {
+        *m = 1.0;
+    }
+    let x: Vec<f32> = (0..n * f).map(|_| rng.normal_f32()).collect();
+    let agg = |t: &[f32], w: usize| a.spmm(t, w);
+    let agg_t = |t: &[f32], w: usize| at.spmm(t, w);
+    let model0 = GcnModel::init(f, h, 3, 1).with_feat_mode(FeatMode::TopK(k));
+    let loss_of = |m: &GcnModel| {
+        let z = m.forward(agg, &x, n);
+        m.masked_ce(&z, &labels, &mask)
+    };
+    // analytic gradient via one SGD step with tiny lr: dW ≈ (W - W') / lr
+    let lr = 1e-3f32;
+    let mut stepped = model0.clone();
+    stepped.train_step(&agg, &agg_t, &x, n, &labels, &mask, lr);
+    let eps = 1e-2f32;
+    let mut nonzero_seen = false;
+    for idx in [0usize, 5, 9, 14, 23] {
+        let mut plus = model0.clone();
+        let mut minus = model0.clone();
+        plus.w2[idx] += eps;
+        minus.w2[idx] -= eps;
+        let numeric = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps);
+        let analytic = (model0.w2[idx] - stepped.w2[idx]) / lr;
+        assert!(
+            (numeric - analytic).abs() < 2e-2 + 0.2 * numeric.abs(),
+            "top-k w2 grad mismatch (idx {idx}): numeric {numeric} analytic {analytic}"
+        );
+        if analytic.abs() > 1e-6 {
+            nonzero_seen = true;
+        }
+    }
+    assert!(nonzero_seen, "every probed w2 gradient was zero — the gradcheck checked nothing");
+    // Lanes the selection dropped must carry exactly zero w1 gradient
+    // pressure from those rows; the masked model must still have SOME
+    // nonzero w1 gradient (the kept lanes).
+    let dw1_norm: f32 = model0
+        .w1
+        .iter()
+        .zip(&stepped.w1)
+        .map(|(a, b)| ((a - b) / lr).abs())
+        .sum();
+    assert!(dw1_norm > 1e-6, "top-k masked backward zeroed the entire w1 gradient");
+}
